@@ -1,0 +1,55 @@
+//! Compare all serving methods on one shared workload trace.
+//!
+//! Runs Vanilla, Self-Consistency, Rebase, SART (w/o pruning) and SART on
+//! exactly the same request trace and prints the comparison table plus
+//! headline speedups — the same-accuracy efficiency claim of §5.2.
+//!
+//!     cargo run --release --example compare_methods                 # sim
+//!     cargo run --release --example compare_methods -- --engine hlo \
+//!         --model r1mini-tiny --requests 12 --rate 1 --n 4
+
+use anyhow::Result;
+use sart::config::{Args, Method, ServeSpec};
+use sart::metrics::ServeReport;
+use sart::server;
+use sart::util::stats::render_table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let spec = ServeSpec::from_args(&args)?;
+    let n = args.usize_or("n", 8)?;
+    let m = (n / 2).max(1);
+    let trace = server::trace_for(&spec)?;
+
+    let methods = vec![
+        Method::Vanilla,
+        Method::SelfConsistency { n },
+        Method::Rebase { n },
+        Method::SartNoPrune { n, m },
+        Method::Sart { n, m, alpha: 0.5, beta: m },
+    ];
+    let mut rows = Vec::new();
+    let mut reports: Vec<ServeReport> = Vec::new();
+    for method in methods {
+        let mut s = spec.clone();
+        s.method = method;
+        eprintln!("# running {} ...", method.label());
+        let out = server::run_on_trace(&s, &trace)?;
+        rows.push(out.report.row());
+        reports.push(out.report);
+    }
+    println!("{}", render_table(&ServeReport::ROW_HEADERS, &rows));
+
+    // Headline: SART speedup vs each baseline at P97 (paper's metric).
+    let sart = reports.last().unwrap();
+    println!("SART speedups at P97 (same workload):");
+    for r in &reports[..reports.len() - 1] {
+        println!(
+            "  vs {:<24} {:>6.2}x   (acc {:+.3})",
+            r.label,
+            r.e2e.p97 / sart.e2e.p97,
+            sart.accuracy - r.accuracy
+        );
+    }
+    Ok(())
+}

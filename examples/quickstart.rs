@@ -1,0 +1,83 @@
+//! Quickstart: load the AOT artifacts, serve a handful of reasoning
+//! requests with SART on the real (HLO) engine, and print the reasoning
+//! traces + final answers.
+//!
+//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- --engine sim   # no artifacts
+//!
+//! Flags: --model r1mini-tiny|r1mini-small, --requests INT, --seed INT.
+
+use anyhow::Result;
+use sart::config::{Args, Method, ServeSpec};
+use sart::server;
+use sart::tokenizer as tok;
+use sart::workload::{Question, TaskSpec};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut spec = ServeSpec::from_args(&args)?;
+    // Quickstart defaults: small SART run on the HLO engine unless the
+    // user asked for sim.
+    if args.get("engine").is_none() {
+        spec.engine = sart::config::EngineChoice::Hlo {
+            model: args.get_or("model", "r1mini-tiny"),
+            fused: !args.flag("stepwise"),
+        };
+        spec.prm = sart::config::PrmChoice::Hlo;
+    }
+    spec.method = Method::parse(&args.get_or("method", "sart:4"), &args)?;
+    spec.n_requests = args.usize_or("requests", 4)?;
+    spec.rate = args.f64_or("rate", 0.0)?; // batch arrival
+    spec.slots = args.usize_or("slots", 8)?;
+
+    println!("== SART quickstart ==");
+    println!("engine: {:?}  method: {}", spec.engine, spec.method.label());
+
+    // Show one raw branch sample first, so the reasoning format is visible.
+    let mut engine = server::build_engine(&spec)?;
+    let task = TaskSpec::by_name(&spec.dataset)?;
+    let mut rng = sart::util::rng::Rng::new(spec.seed);
+    let q = Question::sample(&task, &mut rng);
+    println!("\n-- one question, three sampled branches --");
+    println!("prompt: {}", tok::detokenize(&q.prompt_tokens()));
+    println!("ground-truth answer: {}", q.answer());
+    let samples =
+        server::sample_branches(engine.as_mut(), &q, 3, spec.temperature, 7)?;
+    for (i, s) in samples.iter().enumerate() {
+        let ans = tok::extract_answer(s);
+        println!(
+            "branch {i}: len={:3} answer={:?} correct={}",
+            s.len(),
+            ans,
+            ans == Some(q.answer())
+        );
+        println!("  {}", tok::detokenize(s));
+    }
+    drop(engine);
+
+    // Now a real serve run through the full coordinator.
+    println!("\n-- serving {} requests with {} --", spec.n_requests,
+             spec.method.label());
+    let out = server::run(&spec)?;
+    for o in &out.outcomes {
+        println!(
+            "request {:2} [{}]: answer={:?} truth={} correct={} \
+             e2e={:.2}s (queue {:.2}s) branches={} pruned={}",
+            o.id,
+            o.dataset,
+            o.answer,
+            o.truth,
+            o.correct(),
+            o.e2e_latency(),
+            o.queue_latency(),
+            o.branches_started,
+            o.branches_pruned,
+        );
+    }
+    println!(
+        "\naccuracy {:.2} | e2e p50 {:.2}s p97 {:.2}s | engine {}",
+        out.report.accuracy, out.report.e2e.p50, out.report.e2e.p97,
+        out.engine_desc
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Loads the trained model artifacts, serves a Poisson stream of batched
+//! reasoning requests through the full stack — rust coordinator →
+//! PJRT-executed JAX graphs → Pallas kernels — and reports latency,
+//! throughput and accuracy. Proves all three layers compose with Python
+//! off the request path.
+//!
+//!     cargo run --release --example serve_workload
+//!     cargo run --release --example serve_workload -- \
+//!         --model r1mini-small --method sart:8 --requests 32 --rate 2
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use sart::config::{Args, EngineChoice, Method, PrmChoice, ServeSpec};
+use sart::metrics::ServeReport;
+use sart::server;
+use sart::util::stats::render_table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut spec = ServeSpec::from_args(&args)?;
+    if args.get("engine").is_none() {
+        spec.engine = EngineChoice::Hlo {
+            model: args.get_or("model", "r1mini-tiny"),
+            fused: !args.flag("stepwise"),
+        };
+        spec.prm = PrmChoice::Hlo;
+    }
+    spec.method = Method::parse(&args.get_or("method", "sart:8"), &args)?;
+    spec.n_requests = args.usize_or("requests", 24)?;
+    spec.rate = args.f64_or("rate", 1.0)?;
+    spec.slots = args.usize_or("slots", 8)?;
+    spec.kv_capacity_tokens = args.usize_or("kv-tokens", 4096)?;
+
+    eprintln!("# spec: {spec:?}");
+    let t0 = std::time::Instant::now();
+    let out = server::run(&spec)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("== end-to-end serve: {} ==", out.engine_desc);
+    println!(
+        "{}",
+        render_table(&ServeReport::ROW_HEADERS, &[out.report.row()])
+    );
+    let total_tokens = out.report.total_tokens;
+    println!(
+        "requests {} | accuracy {:.3} | answered {:.3}",
+        out.report.n_requests, out.report.accuracy, out.report.answered
+    );
+    println!(
+        "tokens generated {} | wall {:.1}s | throughput {:.0} tok/s \
+         ({:.2} req/s)",
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall,
+        out.report.n_requests as f64 / wall
+    );
+    println!(
+        "latency e2e   p50 {:.2}s  p90 {:.2}s  p97 {:.2}s  p99 {:.2}s",
+        out.report.e2e.p50, out.report.e2e.p90, out.report.e2e.p97,
+        out.report.e2e.p99
+    );
+    println!(
+        "latency queue p50 {:.2}s  p90 {:.2}s | inference p50 {:.2}s",
+        out.report.queue.p50, out.report.queue.p90, out.report.inference.p50
+    );
+    println!(
+        "branches/req {:.2} | pruned/req {:.2} | peak running branches {}",
+        out.report.branches_started_per_request,
+        out.report.branches_pruned_per_request,
+        out.timeline.peak_branches()
+    );
+    Ok(())
+}

@@ -1,0 +1,346 @@
+"""AOT exporter: trained L2 graphs → HLO text artifacts for the rust runtime.
+
+Emits HLO *text*, NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``:
+the image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids, ``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+
+    tokenizer.json            vocab + dataset task specs (rust mirrors these)
+    manifest.json             models, param layout, executable inventory
+    <model>.params.npz        trainer checkpoint (python-side only)
+    <model>/params.bin        f32 little-endian concat, sorted-name order
+    <model>/decode_b{B}.hlo.txt    one batched decode step
+    <model>/prefill_b{B}.hlo.txt   prompt prefill into selected slots
+    <model>/decode_chunk_b{B}_t{T}.hlo.txt  fused T-step decode (perf path)
+    prm-mini/score_b{B}.hlo.txt    PRM reward scoring
+
+Incremental: skipped when the output is newer than its inputs (the
+Makefile additionally guards the whole step).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import prm as P
+from . import train as T
+from . import vocab as V
+
+DEFAULT_BATCHES = (1, 2, 4, 8, 16)
+DEFAULT_PRM_BATCHES = (8,)
+PRM_SEQ_BUCKETS = (64, 128, 256)
+DEFAULT_CHUNK_T = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted computation to HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: every serving executable returns exactly ONE
+    # array (the packed state / the reward vector). A tuple root would come
+    # back from PJRT as a single opaque tuple buffer that cannot be re-fed
+    # as an input (the rust binding has no get_tuple_element).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str, log) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    log(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_params_bin(params, out_path: str):
+    """Flatten params (sorted names) into one f32 LE blob + layout entries."""
+    names, flat = M.flatten_params(params)
+    entries = []
+    offset = 0
+    with open(out_path, "wb") as f:
+        for name, arr in zip(names, flat):
+            a = np.asarray(arr, dtype="<f4")
+            f.write(a.tobytes())
+            entries.append({
+                "name": name,
+                "shape": list(a.shape),
+                "dtype": "f32",
+                "offset_bytes": offset,
+                "num_elements": int(a.size),
+            })
+            offset += a.nbytes
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (closures over config; params passed as flat tuple
+# so the HLO argument order matches params.bin's sorted-name layout).
+# ---------------------------------------------------------------------------
+
+def _state_spec(cfg: M.ModelConfig, batch: int, chunk_t: int):
+    return jax.ShapeDtypeStruct((M.state_size(cfg, batch, chunk_t),),
+                                jnp.float32)
+
+
+def lower_decode(cfg: M.ModelConfig, names, batch: int, chunk_t: int):
+    """Single decode step over the packed state (host-side sampling)."""
+    def fn(*args):
+        flat = args[:len(names)]
+        state, tokens, active = args[len(names):]
+        params = M.unflatten_params(names, flat)
+        return M.serve_decode(params, cfg, state, tokens, active,
+                              chunk_t=chunk_t, use_pallas=True)
+
+    specs = _param_specs(cfg, names) + [
+        _state_spec(cfg, batch, chunk_t),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    # Donate the state buffer: the KV update happens in place on device.
+    return jax.jit(fn, donate_argnums=(len(names),)).lower(*specs)
+
+
+def lower_decode_chunk(cfg: M.ModelConfig, names, batch: int, t_steps: int):
+    """Fused T-step decode with in-graph sampling (the L3 hot path)."""
+    def fn(*args):
+        flat = args[:len(names)]
+        state, active, key, inv_temp = args[len(names):]
+        params = M.unflatten_params(names, flat)
+        return M.serve_decode_chunk(params, cfg, state, active, key,
+                                    inv_temp, chunk_t=t_steps,
+                                    use_pallas=True)
+
+    specs = _param_specs(cfg, names) + [
+        _state_spec(cfg, batch, t_steps),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),  # threefry key data
+        jax.ShapeDtypeStruct((), jnp.float32),   # 1/temperature
+    ]
+    return jax.jit(fn, donate_argnums=(len(names),)).lower(*specs)
+
+
+def lower_prefill(cfg: M.ModelConfig, names, batch: int, chunk_t: int):
+    """Prompt prefill into selected slots of the packed state."""
+    def fn(*args):
+        flat = args[:len(names)]
+        state, tokens, lengths, slot_mask = args[len(names):]
+        params = M.unflatten_params(names, flat)
+        return M.serve_prefill(params, cfg, state, tokens, lengths,
+                               slot_mask, chunk_t=chunk_t, use_pallas=True)
+
+    specs = _param_specs(cfg, names) + [
+        _state_spec(cfg, batch, chunk_t),
+        jax.ShapeDtypeStruct((batch, cfg.prompt_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return jax.jit(fn, donate_argnums=(len(names),)).lower(*specs)
+
+
+def lower_peek(cfg: M.ModelConfig, batch: int, chunk_t: int):
+    """Control-prefix readback: state -> [tokens_out|logits|lengths|alive].
+
+    The CPU PJRT client lacks CopyRawToHost, so partial readback is done
+    on device: this param-free executable slices the small control prefix
+    off the packed state; the host then fetches its (tiny) literal.
+    """
+    control = M.state_size(cfg, batch, chunk_t) - M.state_offsets(
+        cfg, batch, chunk_t)["kv"][1]
+
+    def fn(state):
+        return state[:control]
+
+    return jax.jit(fn).lower(_state_spec(cfg, batch, chunk_t))
+
+
+def lower_prm(cfg: P.PrmConfig, names, batch: int, seq: int):
+    """PRM scorer at a (batch, seq) bucket.
+
+    Sequence buckets matter for serving cost: most pruning queries carry
+    short prefixes, and scoring them in a 256-position executable wastes
+    4x the FLOPs (see EXPERIMENTS.md §Perf L3).
+    """
+    def fn(*args):
+        flat = args[:len(names)]
+        tokens, lengths = args[len(names):]
+        params = M.unflatten_params(names, flat)
+        return P.prm_score(params, cfg, tokens, lengths, use_pallas=True)
+
+    specs = _prm_param_specs(cfg, names) + [
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def _param_specs(cfg: M.ModelConfig, names):
+    shapes = {k: v.shape for k, v in M.init_params(cfg, seed=0).items()}
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+
+
+def _prm_param_specs(cfg: P.PrmConfig, names):
+    shapes = {k: v.shape for k, v in P.init_params(cfg, seed=0).items()}
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+
+
+# ---------------------------------------------------------------------------
+# Orchestration.
+# ---------------------------------------------------------------------------
+
+def ensure_trained(out_dir: str, model_names, lm_steps: int, prm_steps: int,
+                   corpus_size: int, log):
+    """Train any missing checkpoint (idempotent across reruns)."""
+    corpus = None
+
+    def get_corpus():
+        nonlocal corpus
+        if corpus is None:
+            log(f"building corpus (n={corpus_size})...")
+            corpus = D.build_corpus(corpus_size, seed=0)
+        return corpus
+
+    for name in model_names:
+        path = f"{out_dir}/{name}.params.npz"
+        if not os.path.exists(path):
+            cfg = M.MODELS[name]
+            log(f"training {name} ({lm_steps} steps)...")
+            params = T.train_lm(cfg, get_corpus(), steps=lm_steps, log=log)
+            T.save_params(path, params)
+            for spec in (D.SYNTH_GAOKAO, D.SYNTH_GPQA):
+                stats = T.eval_serving_properties(params, cfg, spec,
+                                                  n_questions=12,
+                                                  samples_per_q=8)
+                log(f"  [{name}] {stats}")
+    prm_path = f"{out_dir}/{P.PRM_MINI.name}.params.npz"
+    if not os.path.exists(prm_path):
+        log(f"training {P.PRM_MINI.name} ({prm_steps} steps)...")
+        prm_params = T.train_prm(P.PRM_MINI, get_corpus(), steps=prm_steps,
+                                 log=log)
+        auc = T.prm_auc(prm_params, P.PRM_MINI, get_corpus())
+        log(f"  [{P.PRM_MINI.name}] held-out AUC: {auc:.3f}")
+        T.save_params(prm_path, prm_params)
+
+
+def export_all(out_dir: str, model_names, batches, prm_batches, chunk_t,
+               log=print):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "models": {},
+        "prm": {},
+        "datasets": {k: s.to_json() for k, s in D.DATASETS.items()},
+    }
+
+    for name in model_names:
+        cfg = M.MODELS[name]
+        params = T.load_params(f"{out_dir}/{name}.params.npz")
+        names, _ = M.flatten_params(params)
+        mdir = f"{out_dir}/{name}"
+        os.makedirs(mdir, exist_ok=True)
+        entries = export_params_bin(params, f"{mdir}/params.bin")
+        execs = {"decode": {}, "prefill": {}, "decode_chunk": {}, "peek": {}}
+        state_sizes = {}
+        for b in batches:
+            t0 = time.time()
+            _write(f"{mdir}/decode_b{b}.hlo.txt",
+                   to_hlo_text(lower_decode(cfg, names, b, chunk_t)), log)
+            _write(f"{mdir}/prefill_b{b}.hlo.txt",
+                   to_hlo_text(lower_prefill(cfg, names, b, chunk_t)), log)
+            _write(f"{mdir}/decode_chunk_b{b}_t{chunk_t}.hlo.txt",
+                   to_hlo_text(lower_decode_chunk(cfg, names, b, chunk_t)),
+                   log)
+            _write(f"{mdir}/peek_b{b}.hlo.txt",
+                   to_hlo_text(lower_peek(cfg, b, chunk_t)), log)
+            execs["decode"][str(b)] = f"{name}/decode_b{b}.hlo.txt"
+            execs["prefill"][str(b)] = f"{name}/prefill_b{b}.hlo.txt"
+            execs["decode_chunk"][str(b)] = (
+                f"{name}/decode_chunk_b{b}_t{chunk_t}.hlo.txt")
+            execs["peek"][str(b)] = f"{name}/peek_b{b}.hlo.txt"
+            state_sizes[str(b)] = M.state_size(cfg, b, chunk_t)
+            log(f"  [{name}] batch {b} lowered in {time.time() - t0:.1f}s")
+        manifest["models"][name] = {
+            "config": cfg.to_json(),
+            "params_bin": f"{name}/params.bin",
+            "params": entries,
+            "kv_shape_per_batch": list(M.kv_shape(cfg, 1)),
+            "chunk_t": chunk_t,
+            # Cross-check values: rust recomputes the packed-state layout
+            # from the config and asserts these totals match.
+            "state_sizes": state_sizes,
+            "executables": execs,
+        }
+
+    # PRM.
+    prm_cfg = P.PRM_MINI
+    prm_params = T.load_params(f"{out_dir}/{prm_cfg.name}.params.npz")
+    pnames, _ = M.flatten_params(prm_params)
+    pdir = f"{out_dir}/{prm_cfg.name}"
+    os.makedirs(pdir, exist_ok=True)
+    prm_entries = export_params_bin(prm_params, f"{pdir}/params.bin")
+    prm_execs = {}
+    prm_batch = max(prm_batches)
+    for s_bucket in PRM_SEQ_BUCKETS:
+        _write(f"{pdir}/score_b{prm_batch}_s{s_bucket}.hlo.txt",
+               to_hlo_text(lower_prm(prm_cfg, pnames, prm_batch, s_bucket)),
+               log)
+        prm_execs[str(s_bucket)] = (
+            f"{prm_cfg.name}/score_b{prm_batch}_s{s_bucket}.hlo.txt")
+    manifest["prm"] = {
+        "config": prm_cfg.to_json(),
+        "params_bin": f"{prm_cfg.name}/params.bin",
+        "params": prm_entries,
+        "batch": prm_batch,
+        # Keyed by SEQUENCE bucket (batch is fixed): the scorer picks the
+        # smallest bucket that fits the longest prefix in a chunk.
+        "executables": {"score": prm_execs},
+    }
+
+    with open(f"{out_dir}/tokenizer.json", "w") as f:
+        json.dump(V.tokenizer_spec(), f, indent=1)
+    with open(f"{out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"manifest written: {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts dir (also accepts the Makefile's "
+                         "../artifacts/model.hlo.txt sentinel path)")
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS))
+    ap.add_argument("--batches", type=int, nargs="*",
+                    default=list(DEFAULT_BATCHES))
+    ap.add_argument("--prm-batches", type=int, nargs="*",
+                    default=list(DEFAULT_PRM_BATCHES))
+    ap.add_argument("--chunk-t", type=int, default=DEFAULT_CHUNK_T)
+    ap.add_argument("--lm-steps", type=int, default=1400)
+    ap.add_argument("--prm-steps", type=int, default=600)
+    ap.add_argument("--corpus-size", type=int, default=12000)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):  # Makefile sentinel file
+        out_dir = os.path.dirname(out_dir)
+
+    ensure_trained(out_dir, args.models, args.lm_steps, args.prm_steps,
+                   args.corpus_size, print)
+    export_all(out_dir, args.models, args.batches, args.prm_batches,
+               args.chunk_t, print)
+    # Makefile sentinel so `make artifacts` is a cheap no-op when fresh.
+    if args.out.endswith(".hlo.txt"):
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Procedural SynthHop corpus: questions, reasoning trajectories, datasets.
+
+A *question* is a multi-hop pointer-chasing problem (the multi-hop QA
+setting the paper's introduction motivates): the prompt lists a key→value
+map over digits plus a start digit and a hop count,
+
+    <q> k1 v1 k2 v2 ... k10 v10 + start hops </q>
+
+and the answer is the digit reached after following the map `hops` times
+from `start`. A *trajectory* derives the answer one hop per step:
+
+    <bos> <question> <think>
+        <step> cur = next  <step> cur' = next' ...
+        [<recheck> ...full re-derivation...]*      # over-thinking loops
+    </think> <ans> final <eos>
+
+Each hop is an in-context key lookup — learnable by a tiny 2-layer
+attention model on a 1-core build budget (unlike mod-10 arithmetic, which
+exhibits grokking-scale training times; see DESIGN.md §2).
+
+Two knobs make the corpus reproduce the phenomena SART exploits:
+
+* ``p_err``  — per-hop probability of an off-by-one slip that is carried
+  forward; the trajectory's *final* answer comes from the last derivation,
+  so correctness is (approximately) independent of how many <recheck>
+  loops happened → the paper's Observation 1 (weak length/quality
+  correlation).
+* ``p_rethink`` / ``p_continue`` — geometric number of full re-derivations
+  → heavy-tailed response lengths → the over-thinking dilemma that
+  redundant sampling with early stopping (Lemma 1) addresses.
+
+Dataset presets mirror the paper's two benchmarks: ``synth-gaokao``
+(moderate) and ``synth-gpqa`` (hard: more hops, more re-thinking, higher
+slip rate).
+"""
+
+import dataclasses
+import random
+from typing import List, Optional, Tuple
+
+from . import vocab as V
+
+NUM_KEYS = 10  # keys are the digits 0..9, each present exactly once
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """Difficulty profile of a dataset (mirrored by rust/src/workload)."""
+
+    name: str
+    min_hops: int
+    max_hops: int
+    p_err: float
+    p_rethink: float
+    p_continue: float
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# The two evaluation datasets (paper: GAOKAO and GPQA).
+SYNTH_GAOKAO = TaskSpec(
+    name="synth-gaokao",
+    min_hops=3,
+    max_hops=5,
+    p_err=0.08,
+    p_rethink=0.35,
+    p_continue=0.55,
+)
+SYNTH_GPQA = TaskSpec(
+    name="synth-gpqa",
+    min_hops=5,
+    max_hops=8,
+    p_err=0.13,
+    p_rethink=0.6,
+    p_continue=0.6,
+)
+DATASETS = {s.name: s for s in (SYNTH_GAOKAO, SYNTH_GPQA)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Question:
+    """A single request: digit map, start digit, hop count."""
+
+    mapping: Tuple[int, ...]  # mapping[k] = value of key k, len 10
+    start: int
+    hops: int
+
+    @property
+    def answer(self) -> int:
+        cur = self.start
+        for _ in range(self.hops):
+            cur = self.mapping[cur]
+        return cur
+
+    def tokens(self) -> List[int]:
+        """``<q> k v k v ... + start hops </q>`` (keys in shuffled order —
+        the shuffle is part of the instance, derived from the mapping)."""
+        out = [V.Q]
+        # Deterministic per-instance key order: sort keys by (value, key)
+        # hash-ish permutation so the key order varies across instances
+        # without storing extra state.
+        order = sorted(range(NUM_KEYS),
+                       key=lambda k: (self.mapping[k] * 7 + k * 3) % NUM_KEYS)
+        for k in order:
+            out.append(V.digit(k))
+            out.append(V.digit(self.mapping[k]))
+        out.append(V.PLUS)
+        out.append(V.digit(self.start))
+        out.append(V.digit(self.hops % 10))
+        out.append(V.EQ)
+        return out
+
+    def prompt_tokens(self) -> List[int]:
+        """Serving prompt: ``<bos> <question> <think>``."""
+        return [V.BOS] + self.tokens() + [V.THINK]
+
+
+def sample_question(spec: TaskSpec, rng: random.Random) -> Question:
+    mapping = tuple(rng.randrange(10) for _ in range(NUM_KEYS))
+    start = rng.randrange(10)
+    hops = rng.randint(spec.min_hops, spec.max_hops)
+    return Question(mapping=mapping, start=start, hops=hops)
+
+
+def _derivation(
+    q: Question, spec: TaskSpec, rng: random.Random
+) -> Tuple[List[int], int]:
+    """One full hop-by-hop derivation with stochastic off-by-one slips.
+
+    Returns (tokens, derived_answer). Tokens per hop:
+    ``<step> cur = next`` (4 tokens).
+    """
+    toks: List[int] = []
+    cur = q.start
+    for _ in range(q.hops):
+        nxt = q.mapping[cur]
+        if rng.random() < spec.p_err:
+            nxt = (nxt + rng.choice((-1, 1))) % 10  # carried slip
+        toks += [V.STEP, V.digit(cur), V.EQUALS, V.digit(nxt)]
+        cur = nxt
+    return toks, cur
+
+
+def sample_trajectory(
+    q: Question,
+    spec: TaskSpec,
+    rng: random.Random,
+    max_len: int = 256,
+) -> Tuple[List[int], int, int]:
+    """Sample one full training trajectory for question ``q``.
+
+    Returns (tokens, final_answer, num_rechecks). The sequence always fits
+    in ``max_len`` (re-think loops are truncated to fit, mirroring a
+    context-length cap).
+    """
+    prefix = [V.BOS] + q.tokens() + [V.THINK]
+    deriv, ans = _derivation(q, spec, rng)
+    body = list(deriv)
+    # Over-thinking: geometric number of full re-derivations.
+    rechecks = 0
+    if rng.random() < spec.p_rethink:
+        while True:
+            extra, ans2 = _derivation(q, spec, rng)
+            candidate = body + [V.RECHECK] + extra
+            # +4: </think> <ans> digit <eos>.
+            if len(prefix) + len(candidate) + 4 > max_len:
+                break
+            body = candidate
+            ans = ans2
+            rechecks += 1
+            if rng.random() >= spec.p_continue:
+                break
+    tokens = prefix + body + [V.ETHINK, V.ANS, V.digit(ans), V.EOS]
+    assert len(tokens) <= max_len, (len(tokens), max_len)
+    return tokens, ans, rechecks
+
+
+def extract_answer(tokens: List[int]) -> Optional[int]:
+    """Parse the answered digit out of a (generated) token sequence.
+
+    Mirrors rust/src/tokenizer answer extraction: the digit following the
+    *last* ``<ans>`` marker. Returns None if absent/malformed.
+    """
+    ans_pos = None
+    for i, t in enumerate(tokens):
+        if t == V.ANS:
+            ans_pos = i
+    if ans_pos is None or ans_pos + 1 >= len(tokens):
+        return None
+    nxt = tokens[ans_pos + 1]
+    return V.digit_value(nxt) if V.is_digit(nxt) else None
+
+
+@dataclasses.dataclass
+class Corpus:
+    """Padded training batch material."""
+
+    tokens: "list"  # List[List[int]] padded to max_len with PAD
+    lengths: List[int]
+    answers: List[int]  # derived (possibly wrong) final answer per traj
+    truths: List[int]  # ground-truth answer per traj
+    rechecks: List[int]
+
+    def __len__(self) -> int:
+        return len(self.lengths)
+
+
+def build_corpus(
+    n: int,
+    specs: Tuple[TaskSpec, ...] = (SYNTH_GAOKAO, SYNTH_GPQA),
+    seed: int = 0,
+    max_len: int = 256,
+) -> Corpus:
+    """Mixed-difficulty corpus the LM is trained on."""
+    rng = random.Random(seed)
+    toks, lens, answers, truths, rc = [], [], [], [], []
+    for i in range(n):
+        spec = specs[i % len(specs)]
+        q = sample_question(spec, rng)
+        t, ans, r = sample_trajectory(q, spec, rng, max_len=max_len)
+        lens.append(len(t))
+        toks.append(t + [V.PAD] * (max_len - len(t)))
+        answers.append(ans)
+        truths.append(q.answer)
+        rc.append(r)
+    return Corpus(tokens=toks, lengths=lens, answers=answers, truths=truths,
+                  rechecks=rc)
+
+
+def build_eval_questions(spec: TaskSpec, n: int, seed: int) -> List[Question]:
+    rng = random.Random(seed)
+    return [sample_question(spec, rng) for _ in range(n)]
+
+
+def prm_examples(
+    corpus: Corpus, per_traj: int, seed: int, max_len: int = 256
+) -> Tuple[list, list, list]:
+    """(prefix_tokens, prefix_len, label) triples for PRM training.
+
+    Prefixes are cut at <step>/<recheck> boundaries (the natural "process"
+    granularity); label = 1 iff the trajectory's final answer equals ground
+    truth. This matches how trajectory-level supervision is commonly used to
+    train PRMs when step labels are unavailable.
+    """
+    rng = random.Random(seed)
+    xs, ls, ys = [], [], []
+    for toks, length, ans, truth in zip(
+        corpus.tokens, corpus.lengths, corpus.answers, corpus.truths
+    ):
+        seq = toks[:length]
+        cuts = [i for i, t in enumerate(seq) if t in (V.STEP, V.RECHECK)]
+        cuts.append(length)  # include the full trajectory
+        chosen = rng.sample(cuts, min(per_traj, len(cuts)))
+        for c in chosen:
+            prefix = seq[:c] if c < length else seq
+            xs.append(prefix + [V.PAD] * (max_len - len(prefix)))
+            ls.append(len(prefix))
+            ys.append(1.0 if ans == truth else 0.0)
+    return xs, ls, ys

@@ -1,0 +1,104 @@
+"""Pallas flash-decoding attention kernel.
+
+One decode step attends a single query per (slot, head) against the KV
+cache. Tiling (see DESIGN.md §3 and §Perf):
+
+* grid = (S // block_s,): KV is streamed HBM→VMEM in ``block_s``-position
+  tiles via ``BlockSpec``; each tile is **batch-dense** ([B, H, block_s,
+  D]), so every grid step issues one large MXU-shaped contraction instead
+  of B small ones. (First revision used a (B, S//block_s) grid; the
+  batch-dense re-tiling was the §Perf L1 iteration that recovered ~2x —
+  interpret-mode lowering preserves the batched einsum, and on TPU the
+  tile still fits VMEM comfortably: B·H·block_s·D·4B ≈ 0.5 MB at the
+  largest exported shapes.)
+* online softmax with running (m, l, acc) carried in f32 VMEM scratch
+  across KV tiles — the flash-decoding recurrence, so the full [S] score
+  row never materializes;
+* length masking (positions >= lengths[b] are garbage) makes fixed-shape
+  slots correct for ragged branches.
+
+Under ``interpret=True`` this lowers to plain HLO so the rust CPU PJRT
+client can execute it; on a real TPU the same BlockSpec schedule targets
+VMEM/MXU directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, num_blocks: int, scale: float):
+    s_idx = pl.program_id(0)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)        # [B, H, D]
+    k = k_ref[...].astype(jnp.float32)        # [B, H, block_s, D]
+    v = v_ref[...].astype(jnp.float32)        # [B, H, block_s, D]
+    lengths = len_ref[...]                    # [B]
+
+    # Scores for this KV tile: [B, H, block_s].
+    s = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos < lengths[:, None, None], s, _NEG_INF)
+
+    # Online-softmax update.
+    m_prev = m_ref[...]                       # [B, H, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                    # [B, H, block_s]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("bhs,bhsd->bhd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == num_blocks - 1)
+    def _finalize():
+        # lengths >= 1 always (the current token is in the cache), so l > 0.
+        o_ref[...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, lengths, *, block_s: int = 256):
+    """Flash-decoding attention. Shapes as in ``ref.decode_attention``.
+
+    Args:
+      q: [B, H, D]; k, v: [B, H, S, D]; lengths: [B] int32 (>= 1).
+      block_s: KV tile size along the sequence axis (must divide S).
+    """
+    b, h, s, d = k.shape
+    block_s = min(block_s, s)
+    if s % block_s != 0:
+        raise ValueError(f"seq len {s} not divisible by block_s {block_s}")
+    num_blocks = s // block_s
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _kernel, block_s=block_s, num_blocks=num_blocks, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda j: (0,)),                 # lengths
+            pl.BlockSpec((b, h, d), lambda j: (0, 0, 0)),       # q
+            pl.BlockSpec((b, h, block_s, d), lambda j: (0, 0, j, 0)),
+            pl.BlockSpec((b, h, block_s, d), lambda j: (0, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h, d), lambda j: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((b, h, 1), jnp.float32),  # running max  m
+            pltpu.VMEM((b, h, 1), jnp.float32),  # running norm l
+            pltpu.VMEM((b, h, d), jnp.float32),  # running acc
+        ],
+        interpret=True,
+    )(lengths, q, k, v)

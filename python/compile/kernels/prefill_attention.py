@@ -1,0 +1,97 @@
+"""Pallas flash-style causal prefill attention kernel.
+
+Grid = (B, Sq // block_q): each step computes one query tile for one slot
+against KV tiles streamed across the sequence, with the standard
+flash-attention online-softmax recurrence carried in f32 VMEM scratch.
+Causality is enforced at tile granularity (KV tiles strictly above the
+query tile's diagonal are skipped by masking) plus an element mask inside
+the diagonal tile; per-slot prompt-length masking handles the ragged batch.
+
+Rows at positions >= lengths[b] would have an all-masked score row; they
+are forced to attend position 0 (uniform over one key) so no NaNs are
+produced — callers never read those rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_q: int, block_kv: int, num_kv: int, scale: float):
+    q_idx = pl.program_id(1)
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, block_q, D]
+    k = k_ref[0].astype(jnp.float32)  # [H, block_kv, D]
+    v = v_ref[0].astype(jnp.float32)
+    length = len_ref[0]
+
+    s = jnp.einsum("hid,hjd->hij", q, k) * scale  # [H, bq, bkv]
+    rows = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    cols = kv_idx * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    mask = (cols <= rows) & (cols < length)
+    # Keep column 0 open for out-of-range rows so softmax stays finite.
+    mask = mask | (cols == 0)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]  # [H, block_q, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hij,hjd->hid", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == num_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv"))
+def prefill_attention(q, k, v, lengths, *, block_q: int = 16,
+                      block_kv: int = 32):
+    """Causal prefill attention. Shapes as in ``ref.prefill_attention``.
+
+    Args:
+      q, k, v: [B, H, S, D]; lengths: [B] int32.
+      block_q/block_kv: query/key tile sizes (must divide S).
+    """
+    b, h, s, d = q.shape
+    if s % block_q != 0 or s % block_kv != 0:
+        raise ValueError(f"S={s} must be divisible by tiles "
+                         f"({block_q}, {block_kv})")
+    num_kv = s // block_kv
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, num_kv=num_kv,
+        scale=1.0 / (d ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s // block_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, t: (i,)),
+            pl.BlockSpec((1, h, block_q, d), lambda i, j, t: (i, 0, j, 0)),
+            pl.BlockSpec((1, h, block_kv, d), lambda i, j, t: (i, 0, t, 0)),
+            pl.BlockSpec((1, h, block_kv, d), lambda i, j, t: (i, 0, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, block_q, d), lambda i, j, t: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, block_q, 1), jnp.float32),
+            pltpu.VMEM((h, block_q, 1), jnp.float32),
+            pltpu.VMEM((h, block_q, d), jnp.float32),
+        ],
+        interpret=True,
+    )(lengths, q, k, v)

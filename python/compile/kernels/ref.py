@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these to tight tolerances. They are also used by the build-time trainer
+(`train.py`) where interpret-mode Pallas would be needlessly slow — the
+AOT-exported serving graphs use the Pallas kernels, and the equivalence is
+what the kernel tests establish.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS-normalize the last axis and scale: ``x / rms(x) * w``."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * w).astype(x.dtype)
+
+
+def ffn(x, w1, b1, w2, b2):
+    """Fused position-wise feed-forward: ``gelu(x @ w1 + b1) @ w2 + b2``."""
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def decode_attention(q, k, v, lengths):
+    """Single-position attention against a (padded) KV cache.
+
+    Args:
+      q: [B, H, D]    query at the current decode position.
+      k: [B, H, S, D] key cache (positions >= lengths[b] are garbage).
+      v: [B, H, S, D] value cache.
+      lengths: [B] int32, number of *valid* cache positions per slot
+        (inclusive of the current token, whose k/v were just written).
+
+    Returns [B, H, D].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(k.shape[2])[None, None, :]
+    mask = pos < lengths[:, None, None]
+    scores = jnp.where(mask, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p.astype(v.dtype), v)
+
+
+def prefill_attention(q, k, v, lengths):
+    """Causal self-attention over a padded prompt block.
+
+    Args:
+      q, k, v: [B, H, S, D].
+      lengths: [B] int32 valid prompt length per slot.
+
+    Returns [B, H, S, D]. Rows at positions >= lengths[b] attend only to
+    the valid prefix, so they never contain NaNs, but their values are
+    unused by the caller.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k).astype(jnp.float32) * scale
+    s = q.shape[2]
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    causal = j <= i
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(causal[None, None] & valid, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", p.astype(v.dtype), v)

@@ -1,0 +1,53 @@
+"""Pallas fused RMSNorm kernel.
+
+Normalizes the last axis and applies the learned scale in one VMEM pass.
+Grid tiles the (flattened) row axis so arbitrarily large activations
+stream through a fixed VMEM footprint; the model dimension stays resident
+per tile. Reduction is performed in f32 regardless of input dtype.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "eps"))
+def rmsnorm(x, w, *, block_t: int = 128, eps: float = 1e-6):
+    """Fused RMSNorm over the last axis.
+
+    Args:
+      x: [..., D] activations.
+      w: [D] scale.
+      block_t: row-tile size (rows are the flattened leading axes).
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    t = 1
+    for s in orig_shape[:-1]:
+        t *= s
+    x2 = x.reshape(t, d)
+    bt = min(block_t, t)
+    # Pad rows up to a multiple of the tile.
+    t_pad = (t + bt - 1) // bt * bt
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d), x.dtype),
+        interpret=True,
+    )(x2, w)
+    return out[:t].reshape(orig_shape)

@@ -1,0 +1,385 @@
+"""L2: the reasoning LM — a decoder-only transformer in JAX.
+
+Three entry points are AOT-exported per model size (see ``aot.py``):
+
+* ``prefill_into_slots`` — batched prompt prefill that writes prompt KV
+  into a *subset* of slots of the fixed-shape KV cache (slot_mask selects
+  which slots are being (re)initialized; other slots' cache is preserved).
+  This is how continuous batching admits new branches mid-flight with
+  fixed-shape AOT executables.
+* ``decode_step`` — one batched decode step over all slots: embeds the
+  sampled tokens, updates the KV cache in place (functionally), and
+  returns next-token logits. Sampling itself is host-side (rust), so the
+  per-branch RNG is owned by the coordinator.
+* ``lm_forward`` — full-sequence logits; used by the build-time trainer
+  and the PRM trunk, never exported for serving.
+
+The KV cache layout is a single packed tensor ``[L, 2, B, H, S, Dh]``
+(layers × k/v × slot × head × position × head-dim) that lives in a
+device-resident PJRT buffer on the rust side and is threaded through
+``execute_b`` calls without host round-trips.
+
+All compute-heavy ops route through the L1 Pallas kernels when
+``use_pallas=True`` (the exported path); the trainer uses the pure-jnp
+references (``kernels/ref.py``) for speed, and the kernel test suite
+establishes their equivalence.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import vocab as V
+from .kernels import ref
+from .kernels.decode_attention import decode_attention as pl_decode_attention
+from .kernels.ffn import ffn as pl_ffn
+from .kernels.prefill_attention import prefill_attention as pl_prefill_attention
+from .kernels.rmsnorm import rmsnorm as pl_rmsnorm
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of one model size."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int = V.VOCAB_SIZE
+    max_seq: int = 256  # KV cache positions per slot (S)
+    prompt_len: int = 32  # prefill bucket (Sp)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self, params: Params) -> int:
+        return sum(int(p.size) for p in params.values())
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+# The two serving model sizes (paper: R1-Distill 14B and 70B).
+TINY = ModelConfig(name="r1mini-tiny", d_model=64, n_layers=2, n_heads=2,
+                   d_ff=256)
+SMALL = ModelConfig(name="r1mini-small", d_model=128, n_layers=4, n_heads=4,
+                    d_ff=512)
+MODELS = {m.name: m for m in (TINY, SMALL)}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal initialization; output head is tied to tok_emb."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+    n_mats = 6 * cfg.n_layers + 2
+    keys = jax.random.split(key, n_mats)
+    ki = iter(range(n_mats))
+    d, f = cfg.d_model, cfg.d_ff
+    params["tok_emb"] = nrm(keys[next(ki)], (cfg.vocab_size, d), 0.02)
+    params["pos_emb"] = nrm(keys[next(ki)], (cfg.max_seq, d), 0.02)
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        params[p + "ln1_w"] = jnp.ones((d,), jnp.float32)
+        params[p + "wq"] = nrm(keys[next(ki)], (d, d), d ** -0.5)
+        params[p + "wk"] = nrm(keys[next(ki)], (d, d), d ** -0.5)
+        params[p + "wv"] = nrm(keys[next(ki)], (d, d), d ** -0.5)
+        params[p + "wo"] = nrm(keys[next(ki)], (d, d),
+                               (d ** -0.5) / (2 * cfg.n_layers) ** 0.5)
+        params[p + "ln2_w"] = jnp.ones((d,), jnp.float32)
+        params[p + "w1"] = nrm(keys[next(ki)], (d, f), d ** -0.5)
+        params[p + "b1"] = jnp.zeros((f,), jnp.float32)
+        params[p + "w2"] = nrm(keys[next(ki)], (f, d),
+                               (f ** -0.5) / (2 * cfg.n_layers) ** 0.5)
+        params[p + "b2"] = jnp.zeros((d,), jnp.float32)
+    params["lnf_w"] = jnp.ones((d,), jnp.float32)
+    return params
+
+
+def flatten_params(params: Params) -> Tuple[List[str], Tuple[jax.Array, ...]]:
+    """Deterministic (sorted-name) flattening; this order IS the HLO
+    argument order and the `params.bin` layout the rust runtime loads."""
+    names = sorted(params.keys())
+    return names, tuple(params[n] for n in names)
+
+
+def unflatten_params(names: List[str], flat) -> Params:
+    return dict(zip(names, flat))
+
+
+def kv_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+
+def _ops(use_pallas: bool):
+    if use_pallas:
+        return (pl_rmsnorm, pl_ffn, pl_decode_attention, pl_prefill_attention)
+    return (ref.rmsnorm, ref.ffn, ref.decode_attention, ref.prefill_attention)
+
+
+def _split_heads(x, cfg: ModelConfig):
+    """[..., D] -> [..., H, Dh] -> moved to [B, H, ..., Dh]."""
+    b = x.shape[0]
+    if x.ndim == 2:  # [B, D] -> [B, H, Dh]
+        return x.reshape(b, cfg.n_heads, cfg.d_head)
+    s = x.shape[1]  # [B, S, D] -> [B, H, S, Dh]
+    return x.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def decode_step(params: Params, cfg: ModelConfig, kv, tokens, lengths,
+                *, use_pallas: bool = True):
+    """One batched decode step.
+
+    Args:
+      kv: [L, 2, B, H, S, Dh] cache; positions >= lengths[b] are garbage.
+      tokens: [B] int32 token sampled for each slot (PAD for idle slots).
+      lengths: [B] int32 number of tokens already in the cache — i.e. the
+        position index this step writes.
+
+    Returns (logits [B, V], updated kv). Idle slots produce garbage logits
+    and write garbage KV at their current position; the coordinator never
+    reads either (a slot is re-prefilled before reuse).
+    """
+    rmsnorm, ffn, dec_attn, _ = _ops(use_pallas)
+    b = tokens.shape[0]
+    s = cfg.max_seq
+    pos = jnp.clip(lengths, 0, s - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [B, D]
+    slot_idx = jnp.arange(b)
+    new_kv = []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1_w"])
+        q = _split_heads(h @ params[p + "wq"], cfg)  # [B, H, Dh]
+        k_new = _split_heads(h @ params[p + "wk"], cfg)
+        v_new = _split_heads(h @ params[p + "wv"], cfg)
+        # Scatter the new position into the cache (lowers to an in-place
+        # update under buffer donation, unlike a full-tensor select).
+        k_cache = kv[l, 0].at[slot_idx, :, pos, :].set(k_new)
+        v_cache = kv[l, 1].at[slot_idx, :, pos, :].set(v_new)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        attn = dec_attn(q, k_cache, v_cache, pos + 1)  # [B, H, Dh]
+        x = x + attn.reshape(b, cfg.d_model) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2_w"])
+        x = x + ffn(h, params[p + "w1"], params[p + "b1"],
+                    params[p + "w2"], params[p + "b2"])
+    x = rmsnorm(x, params["lnf_w"])
+    logits = x @ params["tok_emb"].T
+    return logits, jnp.stack(new_kv)
+
+
+def prefill_into_slots(params: Params, cfg: ModelConfig, kv, tokens, lengths,
+                       slot_mask, *, use_pallas: bool = True):
+    """Prefill prompts into the selected slots of the KV cache.
+
+    Args:
+      kv: [L, 2, B, H, S, Dh] existing cache.
+      tokens: [B, Sp] padded prompt tokens (rows of unselected slots are
+        ignored — conventionally PAD).
+      lengths: [B] int32 prompt length per slot (>= 1 for selected slots).
+      slot_mask: [B] bool/int32; 1 = (re)initialize this slot.
+
+    Returns (last_logits [B, V], updated kv): logits at each selected
+    slot's last prompt position. Unselected slots keep their cache and get
+    garbage logits. The computation runs for all B rows (masked select at
+    the end) — batch-dense prefill keeps the executable shape fixed.
+    """
+    rmsnorm, ffn, _, pre_attn = _ops(use_pallas)
+    b, sp = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:sp][None]  # [B,Sp,D]
+    computed_kv = []  # per layer [2, B, H, Sp, Dh]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1_w"])
+        q = _split_heads(h @ params[p + "wq"], cfg)  # [B, H, Sp, Dh]
+        k = _split_heads(h @ params[p + "wk"], cfg)
+        v = _split_heads(h @ params[p + "wv"], cfg)
+        computed_kv.append(jnp.stack([k, v]))
+        attn = pre_attn(q, k, v, lengths)  # [B, H, Sp, Dh]
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, sp, cfg.d_model)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2_w"])
+        x = x + ffn(h, params[p + "w1"], params[p + "b1"],
+                    params[p + "w2"], params[p + "b2"])
+    x = rmsnorm(x, params["lnf_w"])
+    last = jnp.take_along_axis(
+        x, jnp.clip(lengths - 1, 0, sp - 1)[:, None, None], axis=1)[:, 0]
+    logits = last @ params["tok_emb"].T  # [B, V]
+
+    # Merge computed prompt KV into the cache for selected slots.
+    new = jnp.stack(computed_kv)  # [L, 2, B, H, Sp, Dh]
+    sel = slot_mask.astype(bool)[None, None, :, None, None, None]
+    head = jnp.where(sel, new, kv[:, :, :, :, :sp, :])
+    kv = jnp.concatenate([head, kv[:, :, :, :, sp:, :]], axis=4)
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# Packed serving state.
+#
+# The rust runtime executes AOT HLO via PJRT, whose rust binding returns
+# multi-output (tuple-rooted) executables as a single opaque tuple buffer
+# that cannot be re-fed as an input. Every serving executable therefore
+# takes and returns ONE packed f32 "state" array holding all mutable
+# engine state; rust threads the device buffer through `execute_b` calls
+# and reads back only the small control segments (tokens/logits/lengths/
+# alive) via partial `copy_raw_to_host_sync`. The KV cache — by far the
+# largest segment — never crosses the host boundary.
+# ---------------------------------------------------------------------------
+
+
+def state_layout(cfg: ModelConfig, batch: int, chunk_t: int):
+    """Ordered (name, num_elements) segments of the packed state array."""
+    kv_elems = 1
+    for d in kv_shape(cfg, batch):
+        kv_elems *= d
+    return [
+        ("tokens_out", batch * chunk_t),
+        ("logits", batch * cfg.vocab_size),
+        ("lengths", batch),
+        ("alive", batch),
+        ("kv", kv_elems),
+    ]
+
+
+def state_size(cfg: ModelConfig, batch: int, chunk_t: int) -> int:
+    return sum(n for _, n in state_layout(cfg, batch, chunk_t))
+
+
+def state_offsets(cfg: ModelConfig, batch: int, chunk_t: int):
+    out = {}
+    off = 0
+    for name, n in state_layout(cfg, batch, chunk_t):
+        out[name] = (off, n)
+        off += n
+    return out
+
+
+def _unpack_state(state, cfg: ModelConfig, batch: int, chunk_t: int):
+    offs = state_offsets(cfg, batch, chunk_t)
+    seg = {name: state[o:o + n] for name, (o, n) in offs.items()}
+    return {
+        "tokens_out": seg["tokens_out"].reshape(batch, chunk_t),
+        "logits": seg["logits"].reshape(batch, cfg.vocab_size),
+        "lengths": seg["lengths"].astype(jnp.int32),
+        "alive": seg["alive"].astype(jnp.int32),
+        "kv": seg["kv"].reshape(kv_shape(cfg, batch)),
+    }
+
+
+def _pack_state(parts, cfg: ModelConfig, batch: int, chunk_t: int):
+    return jnp.concatenate([
+        parts["tokens_out"].astype(jnp.float32).reshape(-1),
+        parts["logits"].astype(jnp.float32).reshape(-1),
+        parts["lengths"].astype(jnp.float32).reshape(-1),
+        parts["alive"].astype(jnp.float32).reshape(-1),
+        parts["kv"].reshape(-1),
+    ])
+
+
+def serve_prefill(params: Params, cfg: ModelConfig, state, tokens, lengths,
+                  slot_mask, *, chunk_t: int, use_pallas: bool = True):
+    """State-based prefill: (re)initialize the selected slots."""
+    batch = tokens.shape[0]
+    st = _unpack_state(state, cfg, batch, chunk_t)
+    logits_new, kv = prefill_into_slots(params, cfg, st["kv"], tokens,
+                                        lengths, slot_mask,
+                                        use_pallas=use_pallas)
+    mask = slot_mask.astype(bool)
+    st["logits"] = jnp.where(mask[:, None], logits_new, st["logits"])
+    st["lengths"] = jnp.where(mask, lengths, st["lengths"])
+    st["alive"] = jnp.where(mask, 1, st["alive"])
+    st["kv"] = kv
+    return _pack_state(st, cfg, batch, chunk_t)
+
+
+def serve_decode(params: Params, cfg: ModelConfig, state, tokens, active,
+                 *, chunk_t: int, use_pallas: bool = True):
+    """State-based single decode step; host samples from the logits."""
+    batch = tokens.shape[0]
+    st = _unpack_state(state, cfg, batch, chunk_t)
+    logits_new, kv = decode_step(params, cfg, st["kv"], tokens,
+                                 st["lengths"], use_pallas=use_pallas)
+    act = active.astype(bool)
+    st["logits"] = jnp.where(act[:, None], logits_new, st["logits"])
+    st["lengths"] = jnp.where(
+        act, jnp.minimum(st["lengths"] + 1, cfg.max_seq - 1), st["lengths"])
+    st["kv"] = kv  # alive is host-managed in single-step mode
+    return _pack_state(st, cfg, batch, chunk_t)
+
+
+def serve_decode_chunk(params: Params, cfg: ModelConfig, state, active, key,
+                       inv_temp, *, chunk_t: int, use_pallas: bool = True):
+    """Fused T-step decode with in-graph sampling (the hot path).
+
+    Per step: gumbel-sample from the current logits, freeze slots that have
+    emitted EOS, run one decode step for the rest. The sampled tokens land
+    in the `tokens_out` segment (PAD after a slot's EOS); host reads
+    tokens/lengths/alive back and re-derives completions.
+    """
+    from . import vocab as V
+
+    batch = active.shape[0]
+    st = _unpack_state(state, cfg, batch, chunk_t)
+
+    def step(carry, subkey):
+        kv, logits, lengths, alive = carry
+        g = -jnp.log(-jnp.log(
+            jax.random.uniform(subkey, logits.shape, minval=1e-9,
+                               maxval=1.0)))
+        # PAD is never a legal generation (it is only loss-masked filler at
+        # training time), so exclude it from sampling — mirrors the host
+        # sampler's mask in rust/src/sampler.
+        masked = logits.at[:, V.PAD].set(-1e30)
+        tok = jnp.argmax(masked * inv_temp + g, axis=-1).astype(jnp.int32)
+        tok = jnp.where(alive, tok, V.PAD)
+        new_logits, new_kv = decode_step(params, cfg, kv, tok, lengths,
+                                         use_pallas=use_pallas)
+        logits = jnp.where(alive[:, None], new_logits, logits)
+        lengths = jnp.where(alive & (tok != V.PAD),
+                            jnp.minimum(lengths + 1, cfg.max_seq - 1),
+                            lengths)
+        alive = alive & (tok != V.EOS)
+        return (new_kv, logits, lengths, alive), tok
+
+    keys = jax.random.split(jax.random.wrap_key_data(key), chunk_t)
+    alive0 = active.astype(bool)
+    (kv, logits, lengths, alive), toks = jax.lax.scan(
+        step, (st["kv"], st["logits"], st["lengths"], alive0), keys)
+    st.update(tokens_out=toks.T, logits=logits, lengths=lengths,
+              alive=alive.astype(jnp.int32), kv=kv)
+    return _pack_state(st, cfg, batch, chunk_t)
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens, lengths,
+               *, use_pallas: bool = False):
+    """Full-sequence logits [B, S, V] (training / PRM trunk path)."""
+    rmsnorm, ffn, _, pre_attn = _ops(use_pallas)
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1_w"])
+        q = _split_heads(h @ params[p + "wq"], cfg)
+        k = _split_heads(h @ params[p + "wk"], cfg)
+        v = _split_heads(h @ params[p + "wv"], cfg)
+        attn = pre_attn(q, k, v, lengths)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2_w"])
+        x = x + ffn(h, params[p + "w1"], params[p + "b1"],
+                    params[p + "w2"], params[p + "b2"])
+    x = rmsnorm(x, params["lnf_w"])
+    return x @ params["tok_emb"].T

@@ -1,0 +1,108 @@
+"""L2: the Process Reward Model (PRM).
+
+Stand-in for Qwen2.5-Math-PRM-7B (see DESIGN.md §2): a small transformer
+trunk over the branch's token prefix, mean-pooled over valid positions,
+followed by a 2-layer MLP head with a sigmoid — producing a scalar
+"this reasoning process will end correctly" reward in [0, 1].
+
+The serving-side contract matches the paper's: the coordinator calls
+``prm_score(prefix_tokens, prefix_len) -> reward`` in batch every T decode
+steps and compares rewards against the dynamic pruning threshold.
+
+Trained at build time on trajectory-level labels (prefix of a trajectory
+whose final answer is correct → 1, else 0) — the common approximation when
+per-step labels are unavailable. Exported as its own HLO executable.
+"""
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import vocab as V
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrmConfig:
+    """PRM trunk + head hyper-parameters."""
+
+    name: str = "prm-mini"
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    d_head_hidden: int = 64  # MLP head hidden width
+    vocab_size: int = V.VOCAB_SIZE
+    max_seq: int = 256
+
+    def trunk(self) -> M.ModelConfig:
+        return M.ModelConfig(
+            name=self.name + "-trunk", d_model=self.d_model,
+            n_layers=self.n_layers, n_heads=self.n_heads, d_ff=self.d_ff,
+            vocab_size=self.vocab_size, max_seq=self.max_seq)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+PRM_MINI = PrmConfig()
+
+
+def init_params(cfg: PrmConfig, seed: int = 1) -> Params:
+    params = M.init_params(cfg.trunk(), seed=seed)
+    key = jax.random.PRNGKey(seed + 1000)
+    k1, k2 = jax.random.split(key)
+    d, dh = cfg.d_model, cfg.d_head_hidden
+    params["head.w1"] = (jax.random.normal(k1, (d, dh)) * d ** -0.5
+                         ).astype(jnp.float32)
+    params["head.b1"] = jnp.zeros((dh,), jnp.float32)
+    params["head.w2"] = (jax.random.normal(k2, (dh, 1)) * dh ** -0.5
+                         ).astype(jnp.float32)
+    params["head.b2"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def _trunk_hidden(params: Params, cfg: PrmConfig, tokens, lengths,
+                  *, use_pallas: bool):
+    """Mean-pooled trunk representation [B, D] over valid positions."""
+    trunk_cfg = cfg.trunk()
+    rmsnorm, ffn, _, pre_attn = M._ops(use_pallas)
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None]
+    for l in range(trunk_cfg.n_layers):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1_w"])
+        q = M._split_heads(h @ params[p + "wq"], trunk_cfg)
+        k = M._split_heads(h @ params[p + "wk"], trunk_cfg)
+        v = M._split_heads(h @ params[p + "wv"], trunk_cfg)
+        attn = pre_attn(q, k, v, lengths)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, trunk_cfg.d_model)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2_w"])
+        x = x + ffn(h, params[p + "w1"], params[p + "b1"],
+                    params[p + "w2"], params[p + "b2"])
+    x = rmsnorm(x, params["lnf_w"])  # [B, S, D]
+    valid = (jnp.arange(s)[None, :] < lengths[:, None]).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1.0)
+    return jnp.sum(x * valid[:, :, None], axis=1) / denom
+
+
+def prm_logit(params: Params, cfg: PrmConfig, tokens, lengths,
+              *, use_pallas: bool = False):
+    """Pre-sigmoid score [B] (training objective uses the logit)."""
+    pooled = _trunk_hidden(params, cfg, tokens, lengths,
+                           use_pallas=use_pallas)
+    h = jax.nn.gelu(pooled @ params["head.w1"] + params["head.b1"],
+                    approximate=True)
+    return (h @ params["head.w2"] + params["head.b2"])[:, 0]
+
+
+def prm_score(params: Params, cfg: PrmConfig, tokens, lengths,
+              *, use_pallas: bool = True):
+    """Reward in [0, 1] per branch prefix — the exported serving entry."""
+    return jax.nn.sigmoid(
+        prm_logit(params, cfg, tokens, lengths, use_pallas=use_pallas))

@@ -1,0 +1,314 @@
+"""Build-time trainer for the reasoning LM and the PRM.
+
+Runs once inside ``make artifacts`` (CPU, a few minutes): trains each model
+size on the SynthMath corpus with a hand-rolled AdamW (optax is not in the
+image), trains the PRM on trajectory-labelled prefixes, evaluates the
+serving-relevant properties (completion rate, greedy/sampled accuracy,
+response-length distribution), and saves parameters as ``.npz``.
+
+Python never runs at serving time: ``aot.py`` turns the trained parameters
++ the L2 graphs into HLO text artifacts the rust runtime loads.
+"""
+
+import argparse
+import time
+from typing import Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import prm as P
+from . import vocab as V
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled AdamW (tree-mapped over the params dict).
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Params, grads: Params, state, lr,
+                 b1=0.9, b2=0.98, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k])
+         for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new_params = {}
+    for k in params:
+        update = (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps)
+        new_params[k] = params[k] - lr * (update + wd * params[k])
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total_steps, peak, warmup=50):
+    warm = peak * (step + 1) / warmup
+    progress = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+    cos = peak * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# LM training.
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: M.ModelConfig, tokens, lengths):
+    """Next-token CE over valid (non-pad) target positions."""
+    logits = M.lm_forward(params, cfg, tokens, lengths, use_pallas=False)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (jnp.arange(tokens.shape[1] - 1)[None, :] + 1
+            < lengths[:, None]).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _batches(tokens: np.ndarray, lengths: np.ndarray, bs: int,
+             seed: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = len(lengths)
+    while True:
+        idx = rng.integers(0, n, size=bs)
+        yield tokens[idx], lengths[idx]
+
+
+def train_lm(cfg: M.ModelConfig, corpus: D.Corpus, steps: int, bs: int = 32,
+             peak_lr: float = 1e-3, seed: int = 0,
+             log: Callable[[str], None] = print) -> Params:
+    tokens = np.asarray(corpus.tokens, np.int32)
+    lengths = np.asarray(corpus.lengths, np.int32)
+    params = M.init_params(cfg, seed=seed)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lens, step):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, toks, lens)
+        lr = cosine_lr(step, steps, peak_lr)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    it = _batches(tokens, lengths, bs, seed)
+    t0 = time.time()
+    for s in range(steps):
+        toks, lens = next(it)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks),
+                                    jnp.asarray(lens), jnp.asarray(s))
+        if s % max(steps // 10, 1) == 0 or s == steps - 1:
+            log(f"[{cfg.name}] step {s:5d}/{steps} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# PRM training.
+# ---------------------------------------------------------------------------
+
+def prm_loss(params: Params, cfg: P.PrmConfig, tokens, lengths, labels):
+    logit = P.prm_logit(params, cfg, tokens, lengths, use_pallas=False)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * labels + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def train_prm(cfg: P.PrmConfig, corpus: D.Corpus, steps: int, bs: int = 32,
+              peak_lr: float = 1e-3, seed: int = 1, per_traj: int = 3,
+              log: Callable[[str], None] = print) -> Params:
+    xs, ls, ys = D.prm_examples(corpus, per_traj=per_traj, seed=seed)
+    xs = np.asarray(xs, np.int32)
+    ls = np.asarray(ls, np.int32)
+    ys = np.asarray(ys, np.float32)
+    params = P.init_params(cfg, seed=seed)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lens, labels, step):
+        loss, grads = jax.value_and_grad(prm_loss)(params, cfg, toks, lens,
+                                                   labels)
+        lr = cosine_lr(step, steps, peak_lr)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, len(ys), size=bs)
+        params, opt, loss = step_fn(
+            params, opt, jnp.asarray(xs[idx]), jnp.asarray(ls[idx]),
+            jnp.asarray(ys[idx]), jnp.asarray(s))
+        if s % max(steps // 10, 1) == 0 or s == steps - 1:
+            log(f"[{cfg.name}] step {s:5d}/{steps} bce {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params
+
+
+def prm_auc(params: Params, cfg: P.PrmConfig, corpus: D.Corpus,
+            n: int = 512, seed: int = 7) -> float:
+    """ROC-AUC of the trained PRM on held-out full trajectories."""
+    xs, ls, ys = D.prm_examples(corpus, per_traj=1, seed=seed)
+    xs, ls, ys = (np.asarray(xs[:n], np.int32), np.asarray(ls[:n], np.int32),
+                  np.asarray(ys[:n]))
+    scores = np.asarray(P.prm_score(params, cfg, jnp.asarray(xs),
+                                    jnp.asarray(ls), use_pallas=False))
+    pos, neg = scores[ys == 1], scores[ys == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    wins = (pos[:, None] > neg[None, :]).mean()
+    ties = (pos[:, None] == neg[None, :]).mean()
+    return float(wins + 0.5 * ties)
+
+
+# ---------------------------------------------------------------------------
+# Serving-property evaluation (sampled generation with the decode path).
+# ---------------------------------------------------------------------------
+
+def sample_responses(params: Params, cfg: M.ModelConfig,
+                     questions, samples_per_q: int, temp: float = 1.0,
+                     seed: int = 0, max_new: int = 224):
+    """Batch-sample responses via the decode path (ref ops, jitted).
+
+    Returns list of (question_idx, gen_tokens, completed) — used by the
+    build-time eval and by `test_train.py` to verify the trained model has
+    the serving-relevant properties the experiments rely on.
+    """
+    jobs = [(qi, s) for qi in range(len(questions))
+            for s in range(samples_per_q)]
+    b = min(64, len(jobs))
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def prefill_fn(params, kv, toks, lens, mask):
+        return M.prefill_into_slots(params, cfg, kv, toks, lens, mask,
+                                    use_pallas=False)
+
+    @jax.jit
+    def decode_fn(params, kv, toks, lens):
+        return M.decode_step(params, cfg, kv, toks, lens, use_pallas=False)
+
+    results = []
+    for start in range(0, len(jobs), b):
+        chunk = jobs[start:start + b]
+        nb = len(chunk)
+        kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+        toks = np.zeros((b, cfg.prompt_len), np.int32)
+        lens = np.zeros((b,), np.int32)
+        for i, (qi, _) in enumerate(chunk):
+            pt = questions[qi].prompt_tokens()
+            toks[i, :len(pt)] = pt
+            lens[i] = len(pt)
+        lens_j = jnp.asarray(np.maximum(lens, 1))
+        logits, kv = prefill_fn(params, kv, jnp.asarray(toks), lens_j,
+                                jnp.ones((b,), jnp.int32))
+        gen = [[] for _ in range(nb)]
+        done = np.zeros(b, bool)
+        done[nb:] = True
+        cur_len = lens.copy()
+        for step in range(max_new):
+            key, sk = jax.random.split(key)
+            next_tok = jax.random.categorical(sk, logits / temp, axis=-1)
+            next_tok = np.asarray(next_tok, np.int32)
+            for i in range(nb):
+                if not done[i]:
+                    gen[i].append(int(next_tok[i]))
+                    if next_tok[i] == V.EOS or cur_len[i] + 1 >= cfg.max_seq:
+                        done[i] = True
+            if done.all():
+                break
+            logits, kv = decode_fn(params, kv, jnp.asarray(next_tok),
+                                   jnp.asarray(cur_len))
+            cur_len = np.minimum(cur_len + 1, cfg.max_seq - 1)
+        for i, (qi, _) in enumerate(chunk):
+            completed = bool(gen[i]) and gen[i][-1] == V.EOS
+            results.append((qi, gen[i], completed))
+    return results
+
+
+def eval_serving_properties(params: Params, cfg: M.ModelConfig,
+                            spec: D.TaskSpec, n_questions: int = 16,
+                            samples_per_q: int = 8, temp: float = 1.0,
+                            seed: int = 3) -> dict:
+    qs = D.build_eval_questions(spec, n_questions, seed=seed)
+    res = sample_responses(params, cfg, qs, samples_per_q, temp=temp,
+                           seed=seed)
+    lengths = [len(g) for _, g, _ in res]
+    completed = [c for _, _, c in res]
+    correct = []
+    for qi, g, c in res:
+        ans = D.extract_answer(g)
+        correct.append(bool(c) and ans == qs[qi].answer)
+    # Majority vote per question (the Self-Consistency decision rule).
+    votes = {}
+    for qi, g, c in res:
+        ans = D.extract_answer(g) if c else None
+        votes.setdefault(qi, []).append(ans)
+    maj_correct = 0
+    for qi, vs in votes.items():
+        vs = [v for v in vs if v is not None]
+        if not vs:
+            continue
+        best = max(set(vs), key=vs.count)
+        maj_correct += int(best == qs[qi].answer)
+    return {
+        "dataset": spec.name,
+        "completion_rate": float(np.mean(completed)),
+        "sample_accuracy": float(np.mean(correct)),
+        "majority_accuracy": maj_correct / len(qs),
+        "len_mean": float(np.mean(lengths)),
+        "len_p50": float(np.percentile(lengths, 50)),
+        "len_p95": float(np.percentile(lengths, 95)),
+        "len_max": int(np.max(lengths)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Entry point (invoked by aot.py / Makefile).
+# ---------------------------------------------------------------------------
+
+def save_params(path: str, params: Params) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> Params:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--lm-steps", type=int, default=1400)
+    ap.add_argument("--prm-steps", type=int, default=700)
+    ap.add_argument("--corpus-size", type=int, default=16000)
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS))
+    args = ap.parse_args()
+
+    corpus = D.build_corpus(args.corpus_size, seed=0)
+    import os
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name in args.models:
+        cfg = M.MODELS[name]
+        params = train_lm(cfg, corpus, steps=args.lm_steps)
+        save_params(f"{args.out_dir}/{cfg.name}.params.npz", params)
+        for spec in (D.SYNTH_GAOKAO, D.SYNTH_GPQA):
+            stats = eval_serving_properties(params, cfg, spec)
+            print(f"[{cfg.name}] {stats}")
+
+    prm_cfg = P.PRM_MINI
+    prm_params = train_prm(prm_cfg, corpus, steps=args.prm_steps)
+    print(f"[{prm_cfg.name}] held-out AUC: "
+          f"{prm_auc(prm_params, prm_cfg, corpus):.3f}")
+    save_params(f"{args.out_dir}/{prm_cfg.name}.params.npz", prm_params)
+
+
+if __name__ == "__main__":
+    main()

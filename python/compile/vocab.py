@@ -1,0 +1,98 @@
+"""Token vocabulary for the synthetic reasoning language (SynthMath).
+
+The serving stack reproduces SART's dynamics with a tiny reasoning LM
+trained on a procedural corpus of step-by-step modular arithmetic. The
+vocabulary is deliberately small (32 ids) so the build-time training run
+is fast while the *serving-side* phenomena the paper studies — heavy-tail
+response lengths, imperfect per-branch accuracy, over-thinking loops —
+all emerge from real autoregressive sampling.
+
+This file is the single source of truth for token ids; `aot.py` exports it
+as `artifacts/tokenizer.json`, which the rust tokenizer mirrors.
+"""
+
+# Special / structural tokens.
+PAD = 0  # padding (never trained as a target)
+BOS = 1  # beginning of sequence
+EOS = 2  # end of sequence; a branch is "completed" when it samples EOS
+Q = 3  # question open
+EQ = 4  # question close
+THINK = 5  # reasoning open  (serving prompts end right after THINK)
+ETHINK = 6  # reasoning close
+ANS = 7  # answer marker
+STEP = 8  # one derivation step follows
+RECHECK = 9  # the model re-verifies the whole chain (over-thinking loop)
+
+# Digits 0..9 -> ids 10..19.
+DIGIT_BASE = 10
+
+# Operators.
+PLUS = 20
+MUL = 21
+EQUALS = 22
+
+VOCAB_SIZE = 32  # ids 23..31 reserved (keeps shapes MXU/lane friendly)
+
+TOKEN_NAMES = {
+    PAD: "<pad>",
+    BOS: "<bos>",
+    EOS: "<eos>",
+    Q: "<q>",
+    EQ: "</q>",
+    THINK: "<think>",
+    ETHINK: "</think>",
+    ANS: "<ans>",
+    STEP: "<step>",
+    RECHECK: "<recheck>",
+    PLUS: "+",
+    MUL: "*",
+    EQUALS: "=",
+}
+for _d in range(10):
+    TOKEN_NAMES[DIGIT_BASE + _d] = str(_d)
+
+
+def digit(d: int) -> int:
+    """Token id of digit ``d`` (0..9)."""
+    assert 0 <= d <= 9
+    return DIGIT_BASE + d
+
+
+def is_digit(tok: int) -> bool:
+    return DIGIT_BASE <= tok < DIGIT_BASE + 10
+
+
+def digit_value(tok: int) -> int:
+    assert is_digit(tok)
+    return tok - DIGIT_BASE
+
+
+def op_token(op: str) -> int:
+    return PLUS if op == "+" else MUL
+
+
+def detokenize(tokens) -> str:
+    """Human-readable rendering of a token sequence (debugging / logs)."""
+    return " ".join(TOKEN_NAMES.get(int(t), f"<{int(t)}?>") for t in tokens)
+
+
+def tokenizer_spec() -> dict:
+    """JSON-serializable spec consumed by the rust tokenizer."""
+    return {
+        "vocab_size": VOCAB_SIZE,
+        "pad": PAD,
+        "bos": BOS,
+        "eos": EOS,
+        "q": Q,
+        "eq": EQ,
+        "think": THINK,
+        "ethink": ETHINK,
+        "ans": ANS,
+        "step": STEP,
+        "recheck": RECHECK,
+        "digit_base": DIGIT_BASE,
+        "plus": PLUS,
+        "mul": MUL,
+        "equals": EQUALS,
+        "names": {str(k): v for k, v in TOKEN_NAMES.items()},
+    }

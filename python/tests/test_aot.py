@@ -1,0 +1,110 @@
+"""AOT export contract tests.
+
+Lowering smoke-tests run always (no artifacts needed); manifest validation
+runs against `artifacts/` when present (after `make artifacts`).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import prm as P
+from compile import vocab as V
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_state_size_matches_layout():
+    for cfg in M.MODELS.values():
+        for b in (1, 4):
+            total = M.state_size(cfg, b, 16)
+            offs = M.state_offsets(cfg, b, 16)
+            assert total == offs["kv"][0] + offs["kv"][1]
+
+
+def test_lower_decode_is_single_output_no_mosaic():
+    cfg = M.TINY
+    names, _ = M.flatten_params(M.init_params(cfg, 0))
+    text = aot.to_hlo_text(aot.lower_decode(cfg, names, 2, 8))
+    assert "mosaic" not in text.lower()
+    # Single flat f32 output of the packed-state size.
+    assert f"f32[{M.state_size(cfg, 2, 8)}]" in text
+
+
+def test_lower_prm_single_output():
+    cfg = P.PRM_MINI
+    names, _ = M.flatten_params(P.init_params(cfg, 0))
+    text = aot.to_hlo_text(aot.lower_prm(cfg, names, 2, 64))
+    assert "f32[2]" in text
+
+
+def test_params_bin_layout(tmp_path):
+    params = M.init_params(M.TINY, 0)
+    path = tmp_path / "params.bin"
+    entries = aot.export_params_bin(params, str(path))
+    names, flat = M.flatten_params(params)
+    assert [e["name"] for e in entries] == names
+    # Offsets contiguous; blob round-trips.
+    blob = path.read_bytes()
+    off = 0
+    for e, arr in zip(entries, flat):
+        assert e["offset_bytes"] == off
+        n = e["num_elements"] * 4
+        got = np.frombuffer(blob[off:off + n], "<f4").reshape(e["shape"])
+        np.testing.assert_array_equal(got, np.asarray(arr, "<f4"))
+        off += n
+    assert off == len(blob)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_well_formed():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert man["models"], "no models exported"
+    for name, m in man["models"].items():
+        cfg = M.MODELS[name]
+        for b_str, size in m["state_sizes"].items():
+            assert size == M.state_size(cfg, int(b_str), m["chunk_t"])
+        for kind in ("decode", "prefill", "decode_chunk"):
+            for rel in m["executables"][kind].values():
+                assert os.path.exists(os.path.join(ART, rel)), rel
+        bin_path = os.path.join(ART, m["params_bin"])
+        expected = sum(p["num_elements"] * 4 for p in m["params"])
+        assert os.path.getsize(bin_path) == expected
+    for rel in man["prm"]["executables"]["score"].values():
+        assert os.path.exists(os.path.join(ART, rel))
+
+
+@needs_artifacts
+def test_tokenizer_json_matches_vocab():
+    with open(os.path.join(ART, "tokenizer.json")) as f:
+        spec = json.load(f)
+    gen = V.tokenizer_spec()
+    for key in ("vocab_size", "pad", "bos", "eos", "ans", "step",
+                "recheck", "digit_base"):
+        assert spec[key] == gen[key]
+
+
+@needs_artifacts
+def test_exported_hlo_has_no_serialized_proto_markers():
+    # We ship HLO *text*; make sure files parse as text and mention the
+    # expected entry computation.
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    name, m = next(iter(man["models"].items()))
+    rel = next(iter(m["executables"]["decode"].values()))
+    text = open(os.path.join(ART, rel)).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,97 @@
+"""SynthHop corpus properties: the statistical shape the serving
+experiments rely on (Observations 1 & 2 of the paper)."""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import vocab as V
+
+
+def test_question_answer_follows_chain():
+    q = D.Question(mapping=tuple((k + 1) % 10 for k in range(10)),
+                   start=3, hops=4)
+    assert q.answer == 7
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trajectory_well_formed(seed):
+    rng = random.Random(seed)
+    spec = D.SYNTH_GPQA if seed % 2 else D.SYNTH_GAOKAO
+    q = D.sample_question(spec, rng)
+    toks, ans, rechecks = D.sample_trajectory(q, spec, rng)
+    assert toks[0] == V.BOS
+    assert toks[-1] == V.EOS
+    assert toks[-4] == V.ETHINK
+    assert toks[-3] == V.ANS
+    assert len(toks) <= 256
+    assert D.extract_answer(toks) == ans
+    assert rechecks >= 0
+
+
+def test_error_free_trajectories_always_correct():
+    import dataclasses
+    spec = dataclasses.replace(D.SYNTH_GAOKAO, p_err=0.0)
+    rng = random.Random(0)
+    for _ in range(100):
+        q = D.sample_question(spec, rng)
+        _, ans, _ = D.sample_trajectory(q, spec, rng)
+        assert ans == q.answer
+
+
+def test_corpus_weak_length_quality_correlation():
+    """Observation 1: correctness ~ independent of length (|r| small)."""
+    corpus = D.build_corpus(4000, seed=1)
+    lens = np.asarray(corpus.lengths, float)
+    correct = (np.asarray(corpus.answers) == np.asarray(corpus.truths))
+    r = np.corrcoef(lens, correct.astype(float))[0, 1]
+    assert abs(r) < 0.25, f"length/quality correlation too strong: {r}"
+
+
+def test_corpus_heavy_tail_lengths():
+    """Over-thinking: p99 length should far exceed the median."""
+    corpus = D.build_corpus(4000, seed=2)
+    lens = np.asarray(corpus.lengths, float)
+    p50, p99 = np.percentile(lens, [50, 99])
+    assert p99 > 2.0 * p50, (p50, p99)
+
+
+def test_gpqa_harder_than_gaokao():
+    g1 = D.build_corpus(2000, specs=(D.SYNTH_GAOKAO,), seed=3)
+    g2 = D.build_corpus(2000, specs=(D.SYNTH_GPQA,), seed=3)
+    acc1 = np.mean(np.asarray(g1.answers) == np.asarray(g1.truths))
+    acc2 = np.mean(np.asarray(g2.answers) == np.asarray(g2.truths))
+    assert acc2 < acc1, (acc1, acc2)
+    assert np.mean(g2.lengths) > np.mean(g1.lengths)
+
+
+def test_prompt_fits_bucket():
+    rng = random.Random(4)
+    for spec in (D.SYNTH_GAOKAO, D.SYNTH_GPQA):
+        for _ in range(50):
+            q = D.sample_question(spec, rng)
+            assert len(q.prompt_tokens()) == 27 <= 32
+
+
+def test_extract_answer_edge_cases():
+    assert D.extract_answer([]) is None
+    assert D.extract_answer([V.ANS]) is None
+    assert D.extract_answer([V.ANS, V.PLUS]) is None
+    assert D.extract_answer([V.ANS, V.digit(3), V.RECHECK,
+                             V.ANS, V.digit(5), V.EOS]) == 5
+
+
+def test_prm_examples_labels_match_truth():
+    corpus = D.build_corpus(200, seed=5)
+    xs, ls, ys = D.prm_examples(corpus, per_traj=2, seed=5)
+    assert len(xs) == len(ls) == len(ys)
+    assert set(np.unique(ys)) <= {0.0, 1.0}
+    # Both classes present in a 200-trajectory mixed corpus.
+    assert 0.0 in ys and 1.0 in ys
+    for x, l in zip(xs[:50], ls[:50]):
+        assert len(x) == 256
+        assert all(t == V.PAD for t in x[l:])

@@ -1,0 +1,207 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes; every kernel must match `ref.py` to tight
+tolerances under interpret mode — this equivalence is what lets the
+trainer use the fast jnp path while serving uses the Pallas path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ffn import ffn
+from compile.kernels.prefill_attention import prefill_attention
+from compile.kernels.rmsnorm import rmsnorm
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 200),
+    d=st.sampled_from([16, 64, 128]),
+    block=st.sampled_from([32, 128]),
+    dtype=st.sampled_from([jnp.float32]),
+)
+def test_rmsnorm_matches_ref(rows, d, block, dtype):
+    x = rand(0, (rows, d), dtype)
+    w = rand(1, (d,), dtype)
+    out = rmsnorm(x, w, block_t=block)
+    np.testing.assert_allclose(out, ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_3d_shapes():
+    x = rand(2, (3, 17, 64), jnp.float32)
+    w = rand(3, (64,), jnp.float32)
+    np.testing.assert_allclose(
+        rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_extreme_magnitudes():
+    # f32 reduction stability: huge and tiny inputs.
+    for scale in (1e-4, 1e4):
+        x = rand(4, (8, 64), jnp.float32, scale)
+        w = jnp.ones((64,), jnp.float32)
+        np.testing.assert_allclose(
+            rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 150),
+    d=st.sampled_from([32, 64]),
+    f=st.sampled_from([128, 256]),
+)
+def test_ffn_matches_ref(rows, d, f):
+    x = rand(5, (rows, d), jnp.float32)
+    w1 = rand(6, (d, f), jnp.float32, 0.05)
+    b1 = rand(7, (f,), jnp.float32)
+    w2 = rand(8, (f, d), jnp.float32, 0.05)
+    b2 = rand(9, (d,), jnp.float32)
+    out = ffn(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(
+        out, ref.ffn(x, w1, b1, w2, b2), rtol=2e-4, atol=2e-4)
+
+
+def test_ffn_row_padding_exact():
+    # Rows not divisible by the tile must not leak padding garbage.
+    x = rand(10, (5, 32), jnp.float32)
+    w1 = rand(11, (32, 64), jnp.float32, 0.1)
+    b1 = jnp.zeros((64,))
+    w2 = rand(12, (64, 32), jnp.float32, 0.1)
+    b2 = jnp.zeros((32,))
+    out = ffn(x, w1, b1, w2, b2, block_t=4)
+    np.testing.assert_allclose(
+        out, ref.ffn(x, w1, b1, w2, b2), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([128, 256]),
+    d=st.sampled_from([16, 32]),
+    block=st.sampled_from([64, 128]),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(b, h, s, d, block, data):
+    q = rand(13, (b, h, d), jnp.float32)
+    k = rand(14, (b, h, s, d), jnp.float32)
+    v = rand(15, (b, h, s, d), jnp.float32)
+    lens = jnp.asarray(
+        data.draw(st.lists(st.integers(1, s), min_size=b, max_size=b)),
+        jnp.int32,
+    )
+    out = decode_attention(q, k, v, lens, block_s=block)
+    exp = ref.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_masks_garbage_cache():
+    # Positions beyond lengths hold garbage; result must ignore them.
+    b, h, s, d = 2, 2, 128, 16
+    q = rand(16, (b, h, d), jnp.float32)
+    k = rand(17, (b, h, s, d), jnp.float32)
+    v = rand(18, (b, h, s, d), jnp.float32)
+    lens = jnp.asarray([5, 9], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    # Poison the invalid region.
+    k2 = k.at[:, :, 10:, :].set(1e9)
+    v2 = v.at[:, :, 10:, :].set(-1e9)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_single_valid_position():
+    b, h, s, d = 1, 2, 128, 16
+    q = rand(19, (b, h, d), jnp.float32)
+    k = rand(20, (b, h, s, d), jnp.float32)
+    v = rand(21, (b, h, s, d), jnp.float32)
+    lens = jnp.asarray([1], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    # With one valid position, output == v[:, :, 0, :].
+    np.testing.assert_allclose(out, v[:, :, 0, :], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([32, 64]),
+    d=st.sampled_from([16, 32]),
+    bq=st.sampled_from([8, 16]),
+    bkv=st.sampled_from([16, 32]),
+    data=st.data(),
+)
+def test_prefill_attention_matches_ref(b, h, s, d, bq, bkv, data):
+    q = rand(22, (b, h, s, d), jnp.float32)
+    k = rand(23, (b, h, s, d), jnp.float32)
+    v = rand(24, (b, h, s, d), jnp.float32)
+    lens = jnp.asarray(
+        data.draw(st.lists(st.integers(1, s), min_size=b, max_size=b)),
+        jnp.int32,
+    )
+    out = prefill_attention(q, k, v, lens, block_q=bq, block_kv=bkv)
+    exp = ref.prefill_attention(q, k, v, lens)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_prefill_attention_causality():
+    # Future tokens must not influence earlier positions: perturb position
+    # j and check rows < j unchanged.
+    b, h, s, d = 1, 2, 32, 16
+    q = rand(25, (b, h, s, d), jnp.float32)
+    k = rand(26, (b, h, s, d), jnp.float32)
+    v = rand(27, (b, h, s, d), jnp.float32)
+    lens = jnp.asarray([s], jnp.int32)
+    out1 = prefill_attention(q, k, v, lens)
+    j = 20
+    k2 = k.at[:, :, j:, :].add(3.0)
+    v2 = v.at[:, :, j:, :].add(-2.0)
+    out2 = prefill_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(
+        out1[:, :, :j], out2[:, :, :j], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[:, :, j:], out2[:, :, j:])
+
+
+def test_kernels_no_custom_calls_in_hlo():
+    """Interpret-mode Pallas must lower to plain HLO (rust CPU PJRT
+    cannot run Mosaic custom-calls)."""
+
+    def fn(q, k, v, lens):
+        return decode_attention(q, k, v, lens)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((2, 2, 16), jnp.float32),       # q [B,H,D]
+        jax.ShapeDtypeStruct((2, 2, 128, 16), jnp.float32),  # k
+        jax.ShapeDtypeStruct((2, 2, 128, 16), jnp.float32),  # v
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+    )
+    text = str(lowered.compiler_ir("stablehlo")).lower()
+    assert "mosaic" not in text
+    assert "tpu_custom_call" not in text

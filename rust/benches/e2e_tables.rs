@@ -1,0 +1,56 @@
+//! Bench: end-to-end method comparison tables (the paper's §5.2 numbers
+//! at bench scale) — prints the same rows as Fig. 5's harness plus wall
+//! time per method, over the virtual-time engine by default.
+//!
+//!     cargo bench --bench e2e_tables
+
+use sart::config::{EngineChoice, Method, PrmChoice, ServeSpec};
+use sart::metrics::ServeReport;
+use sart::server;
+use sart::util::stats::render_table;
+
+fn spec() -> ServeSpec {
+    ServeSpec {
+        method: Method::Vanilla,
+        dataset: "synth-gaokao".into(),
+        n_requests: 64,
+        rate: 2.0,
+        engine: EngineChoice::Sim,
+        prm: PrmChoice::Oracle { sigma: 0.08 },
+        slots: 16,
+        kv_capacity_tokens: 8192,
+        kv_page_tokens: 16,
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        seed: 42,
+    }
+}
+
+fn main() {
+    println!("== e2e_tables (sim, 64 requests @ 2/s, 16 slots) ==");
+    let base = spec();
+    let trace = server::trace_for(&base).unwrap();
+    let n = 8;
+    let m = 4;
+    let methods = [
+        Method::Vanilla,
+        Method::SelfConsistency { n },
+        Method::Rebase { n },
+        Method::SartNoPrune { n, m },
+        Method::Sart { n, m, alpha: 0.5, beta: m },
+    ];
+    let mut rows = Vec::new();
+    for method in methods {
+        let mut s = base.clone();
+        s.method = method;
+        let t0 = std::time::Instant::now();
+        let out = server::run_on_trace(&s, &trace).unwrap();
+        let mut row = out.report.row();
+        row.push(format!("{:.0} ms", t0.elapsed().as_secs_f64() * 1e3));
+        rows.push(row);
+    }
+    let mut headers: Vec<&str> = ServeReport::ROW_HEADERS.to_vec();
+    headers.push("bench-wall");
+    println!("{}", render_table(&headers, &rows));
+}

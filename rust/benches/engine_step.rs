@@ -1,0 +1,87 @@
+//! Bench: HLO engine hot path — prefill, fused-chunk decode, stepwise
+//! decode, PRM scoring (requires `make artifacts`; skips gracefully).
+//!
+//! This is the L1/L2/runtime measurement used in EXPERIMENTS.md §Perf:
+//! per-token decode latency of the fused path vs the stepwise baseline.
+//!
+//!     cargo bench --bench engine_step
+
+use sart::engine::hlo::{DecodeMode, HloEngine};
+use sart::engine::{Engine, PrefillEntry};
+use sart::prm::{HloPrm, PrmScorer};
+use sart::runtime::{Manifest, Runtime};
+use sart::testkit::bench;
+use sart::util::rng::Rng;
+use sart::workload::{Question, TaskSpec};
+
+fn main() {
+    let dir = sart::runtime::artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("== engine_step: SKIPPED (no artifacts: {e}) ==");
+            return;
+        }
+    };
+    let model = std::env::var("SART_BENCH_MODEL")
+        .unwrap_or_else(|_| "r1mini-tiny".into());
+    println!("== engine_step ({model}) ==");
+    let spec = TaskSpec::synth_gaokao();
+    let mut rng = Rng::new(1);
+
+    for &batch in &[1usize, 8] {
+        for (mode_label, mode) in
+            [("fused", DecodeMode::Fused), ("stepwise", DecodeMode::Stepwise)]
+        {
+            let rt = Runtime::cpu().unwrap();
+            let mut eng =
+                HloEngine::load(rt, &manifest, &model, batch, mode, 7).unwrap();
+            let entries: Vec<PrefillEntry> = (0..batch)
+                .map(|s| PrefillEntry {
+                    slot: s,
+                    prompt: Question::sample(&spec, &mut rng).prompt_tokens(),
+                    seed: s as u64,
+                })
+                .collect();
+            let slots: Vec<usize> = (0..batch).collect();
+            bench::run_result(
+                &format!("prefill b{batch}"),
+                2,
+                20,
+                || eng.prefill(&entries).map(|_| ()),
+            );
+            let chunk = eng.caps().chunk_t;
+            // Re-prefill between rounds so lengths never overflow max_seq.
+            let mut rounds = 0usize;
+            bench::run_result(
+                &format!("decode {chunk}-step round b{batch} ({mode_label})"),
+                2,
+                30,
+                || {
+                    rounds += 1;
+                    if rounds % 8 == 0 {
+                        eng.prefill(&entries)?;
+                    }
+                    eng.decode(&slots, chunk, 1.0).map(|_| ())
+                },
+            );
+        }
+    }
+
+    // PRM scoring batch.
+    let rt = Runtime::cpu().unwrap();
+    let mut prm = HloPrm::load(rt, &manifest, 8).unwrap();
+    let seqs: Vec<Vec<i32>> = (0..8)
+        .map(|i| {
+            let mut r = Rng::new(i);
+            let q = Question::sample(&spec, &mut r);
+            let mut s = q.prompt_tokens();
+            s.extend(sart::workload::sample_response(&q, &spec, &mut r, 256));
+            s
+        })
+        .collect();
+    let refs: Vec<&[i32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    bench::run_result("prm score batch of 8", 2, 20, || {
+        prm.score(&refs).map(|_| ())
+    });
+}

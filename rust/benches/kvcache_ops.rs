@@ -1,0 +1,51 @@
+//! Bench: KV-cache manager hot-path operations.
+//!
+//! The manager is consulted on every admission decision and every
+//! branch termination; these must be far off the engine-step critical
+//! path (<1 µs).
+//!
+//!     cargo bench --bench kvcache_ops
+
+use sart::kvcache::KvCacheManager;
+use sart::testkit::bench;
+use sart::util::rng::Rng;
+
+fn main() {
+    println!("== kvcache_ops ==");
+
+    bench::run("admit+release 8-branch request", 100, 5000, || {
+        let mut kv = KvCacheManager::new(16384, 16);
+        let (_, bs) = kv.admit(27, 224, 8).unwrap();
+        for b in bs {
+            kv.release_branch(b).unwrap();
+        }
+    });
+
+    // Steady-state churn at ~70% occupancy (the serving regime).
+    let mut kv = KvCacheManager::new(65536, 16);
+    let mut live = Vec::new();
+    let mut rng = Rng::new(0);
+    for _ in 0..40 {
+        if let Ok((_, bs)) = kv.admit(27, 224, 4) {
+            live.extend(bs);
+        }
+    }
+    bench::run("steady-state admit/release churn", 100, 5000, || {
+        if rng.chance(0.5) && !live.is_empty() {
+            let i = rng.below(live.len());
+            let b = live.swap_remove(i);
+            kv.release_branch(b).unwrap();
+        } else if kv.can_admit(27, 224, 4) {
+            let (_, bs) = kv.admit(27, 224, 4).unwrap();
+            live.extend(bs);
+        }
+    });
+
+    bench::run("can_admit check", 100, 20000, || {
+        std::hint::black_box(kv.can_admit(27, 224, 8));
+    });
+
+    bench::run("invariant check (diagnostic path)", 10, 2000, || {
+        kv.check_invariants().unwrap();
+    });
+}

@@ -1,0 +1,59 @@
+//! Bench: L3 coordinator overhead per scheduling round.
+//!
+//! Serves a standing workload on the virtual-time SimEngine, so the
+//! measured *wall* time is almost entirely scheduler bookkeeping
+//! (fill_batch, round processing, PRM batching, metrics) — the paper's
+//! requirement is that coordination is negligible next to decoding.
+//!
+//!     cargo bench --bench scheduler_tick
+
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::prm::OraclePrm;
+use sart::testkit::bench;
+use sart::util::clock::SimClock;
+use sart::workload::{poisson_trace, TaskSpec};
+
+fn serve_once(policy: Policy, n_req: usize, slots: usize) -> (usize, f64) {
+    let spec = TaskSpec::synth_gaokao();
+    let trace = poisson_trace(&spec, n_req, 4.0, 42);
+    let mut engine = SimEngine::new(slots, 256, spec, SimCostModel::default());
+    let mut prm = OraclePrm::new(0.08, 7);
+    let cfg = SchedConfig {
+        policy,
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: 16384,
+        kv_page_tokens: 16,
+        seed: 42,
+    };
+    let mut sched =
+        Scheduler::new(cfg, &mut engine, &mut prm, ClockHandle::Sim(SimClock::new()));
+    let res = sched.serve(&trace).unwrap();
+    (res.rounds, res.wall_seconds)
+}
+
+fn main() {
+    println!("== scheduler_tick ==");
+    for (label, policy) in [
+        ("vanilla", Policy::Vanilla),
+        ("self-consistency N=8", Policy::SelfConsistency { n: 8 }),
+        ("sart N=8 M=4", Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 }),
+    ] {
+        bench::run(&format!("serve 32 reqs ({label})"), 2, 20, || {
+            std::hint::black_box(serve_once(policy, 32, 16));
+        });
+    }
+    // Per-round cost (the tick): rounds/sec from one big run.
+    let (rounds, wall) = serve_once(
+        Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+        256,
+        16,
+    );
+    println!(
+        "sart 256-request run: {rounds} rounds in {wall:.3}s wall → \
+         {:.1} µs/round of pure coordination",
+        wall / rounds as f64 * 1e6
+    );
+}

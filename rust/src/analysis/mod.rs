@@ -1,0 +1,180 @@
+//! Order-statistics analysis behind redundant sampling (paper Lemma 1).
+//!
+//! Let response length X have CDF `F_X`. With N parallel branches and
+//! early stopping after the M-th completion, the decoding steps needed is
+//! the M-th order statistic `X_(M)`, whose CDF is
+//!
+//! ```text
+//! F_{X_(M)}(x; N) = Σ_{i=M}^{N}  C(N, i) · F(x)^i · (1 − F(x))^{N−i}
+//! ```
+//!
+//! which is *increasing in N* for fixed M — sampling more branches makes
+//! M completions arrive sooner. This module evaluates the formula, checks
+//! the monotonicity claim (property-tested in `rust/tests/properties.rs`),
+//! and runs the Monte-Carlo verification printed by
+//! `examples/paper_figures --lemma1`.
+
+use crate::util::rng::Rng;
+
+/// log(C(n, k)) via lgamma-free accumulation (exact enough for n ≤ 1e4).
+fn ln_choose(n: u64, k: u64) -> f64 {
+    debug_assert!(k <= n);
+    let k = k.min(n - k);
+    let mut acc = 0.0f64;
+    for i in 0..k {
+        acc += ((n - i) as f64).ln() - ((i + 1) as f64).ln();
+    }
+    acc
+}
+
+/// Binomial tail: P(Bin(n, p) >= m).
+pub fn binomial_tail(n: u64, m: u64, p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "p out of range");
+    if m == 0 {
+        return 1.0;
+    }
+    if m > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return 1.0;
+    }
+    let mut total = 0.0;
+    for i in m..=n {
+        let ln_term = ln_choose(n, i)
+            + i as f64 * p.ln()
+            + (n - i) as f64 * (1.0 - p).ln();
+        total += ln_term.exp();
+    }
+    total.min(1.0)
+}
+
+/// Lemma 1: CDF of the M-th order statistic at a point where the base CDF
+/// equals `f_x`.
+pub fn order_statistic_cdf(f_x: f64, m: u64, n: u64) -> f64 {
+    binomial_tail(n, m, f_x)
+}
+
+/// Expected decoding steps to collect M completions out of N branches,
+/// where per-branch length is sampled by `sampler`. Monte-Carlo.
+pub fn expected_mth_completion<F: FnMut(&mut Rng) -> f64>(
+    mut sampler: F,
+    m: usize,
+    n: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    assert!(m >= 1 && m <= n && trials > 0);
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut lens = Vec::with_capacity(n);
+    for _ in 0..trials {
+        lens.clear();
+        for _ in 0..n {
+            lens.push(sampler(&mut rng));
+        }
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        total += lens[m - 1];
+    }
+    total / trials as f64
+}
+
+/// Empirical CDF of the M-th order statistic at threshold `x`.
+pub fn empirical_order_cdf<F: FnMut(&mut Rng) -> f64>(
+    mut sampler: F,
+    m: usize,
+    n: usize,
+    x: f64,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut hits = 0usize;
+    for _ in 0..trials {
+        let mut count = 0usize;
+        for _ in 0..n {
+            if sampler(&mut rng) <= x {
+                count += 1;
+            }
+        }
+        if count >= m {
+            hits += 1;
+        }
+    }
+    hits as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_small_values() {
+        assert!((ln_choose(5, 2).exp() - 10.0).abs() < 1e-9);
+        assert!((ln_choose(10, 0).exp() - 1.0).abs() < 1e-12);
+        assert!((ln_choose(52, 5).exp() - 2_598_960.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn binomial_tail_edges() {
+        assert_eq!(binomial_tail(10, 0, 0.3), 1.0);
+        assert_eq!(binomial_tail(10, 11, 0.3), 0.0);
+        assert_eq!(binomial_tail(10, 5, 0.0), 0.0);
+        assert_eq!(binomial_tail(10, 5, 1.0), 1.0);
+        // P(Bin(2, 0.5) >= 1) = 0.75.
+        assert!((binomial_tail(2, 1, 0.5) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma1_increasing_in_n() {
+        // F_{X_(M)}(x; N) increases with N for fixed M and fixed F(x).
+        for &f in &[0.1, 0.3, 0.5, 0.7] {
+            for m in 1..=4u64 {
+                let mut prev = 0.0;
+                for n in m..=12 {
+                    let cur = order_statistic_cdf(f, m, n);
+                    assert!(
+                        cur >= prev - 1e-12,
+                        "not increasing: f={f} m={m} n={n}: {cur} < {prev}"
+                    );
+                    prev = cur;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lemma1_matches_monte_carlo() {
+        // Uniform(0,1) lengths: F(x) = x.
+        let x = 0.4;
+        let (m, n) = (2u64, 6u64);
+        let analytic = order_statistic_cdf(x, m, n);
+        let empirical = empirical_order_cdf(
+            |rng| rng.f64(),
+            m as usize,
+            n as usize,
+            x,
+            200_000,
+            42,
+        );
+        assert!(
+            (analytic - empirical).abs() < 5e-3,
+            "analytic {analytic} vs empirical {empirical}"
+        );
+    }
+
+    #[test]
+    fn more_branches_complete_sooner() {
+        // E[X_(M); N] decreases in N — the operational content of
+        // redundant sampling with early stopping.
+        let heavy = |rng: &mut Rng| rng.lognormal(4.0, 0.8);
+        let e4 = expected_mth_completion(heavy, 4, 4, 20_000, 7);
+        let e6 = expected_mth_completion(heavy, 4, 6, 20_000, 7);
+        let e8 = expected_mth_completion(heavy, 4, 8, 20_000, 7);
+        assert!(e6 < e4, "{e6} !< {e4}");
+        assert!(e8 < e6, "{e8} !< {e6}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline serving methods.
+//!
+//! Vanilla and Self-Consistency are degenerate [`Policy`] configurations
+//! of the main SART scheduler (same continuous-batching loop, fair
+//! comparison — see `crate::coordinator`). Rebase, the tree-search
+//! baseline, has a structurally different scheduler implemented in
+//! [`rebase`].
+//!
+//! [`Policy`]: crate::coordinator::Policy
+
+pub mod rebase;
+
+pub use rebase::{RebaseConfig, RebaseScheduler};

@@ -1,0 +1,319 @@
+//! Serve configuration and a std-only CLI argument parser.
+//!
+//! Every binary (the `sart` server, the examples, the figure harnesses)
+//! shares [`Args`] for flag parsing and [`ServeSpec`] as the full
+//! description of one serving run: method × workload × engine × budgets.
+//! Defaults mirror the paper (§5.1): M = N/2, α = 0.5, β = N/2, with T
+//! and lengths scaled to this testbed's token scale (paper T=400 at
+//! ~4-8k-token responses ≈ T=16 at our ~40-200-token responses).
+
+use crate::coordinator::Policy;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Boolean flags (never consume a following value). Everything else
+/// written as `--key value` or `--key=value` is a key/value pair.
+const KNOWN_FLAGS: &[&str] =
+    &["stepwise", "quiet", "verbose", "csv", "no-header", "help"];
+
+/// Minimal `--key value` / `--key=value` / `--flag` parser.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.values
+                        .insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_or(name, default as usize)? as u64)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Serving method (CLI surface of the policies + Rebase).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Vanilla,
+    SelfConsistency { n: usize },
+    Sart { n: usize, m: usize, alpha: f32, beta: usize },
+    SartNoPrune { n: usize, m: usize },
+    Rebase { n: usize },
+}
+
+impl Method {
+    /// Parse e.g. `sart`, `sart:8`, `self-consistency:4`, `rebase:8`,
+    /// `vanilla`, `sart-noprune:8`. `n` defaults to 8; SART's M/α/β follow
+    /// the paper defaults (N/2, 0.5, N/2) unless overridden by flags.
+    pub fn parse(s: &str, args: &Args) -> Result<Method> {
+        let (name, n_str) = s.split_once(':').unwrap_or((s, ""));
+        let n = if n_str.is_empty() {
+            args.usize_or("n", 8)?
+        } else {
+            n_str.parse().context("method :N suffix")?
+        };
+        if n == 0 {
+            bail!("N must be positive");
+        }
+        let m = args.usize_or("m", (n / 2).max(1))?;
+        let alpha = args.f64_or("alpha", 0.5)? as f32;
+        let beta = args.usize_or("beta", (n / 2).max(1))?;
+        if m > n {
+            bail!("M={m} cannot exceed N={n}");
+        }
+        Ok(match name {
+            "vanilla" => Method::Vanilla,
+            "self-consistency" | "sc" => Method::SelfConsistency { n },
+            "sart" => Method::Sart { n, m, alpha, beta },
+            "sart-noprune" => Method::SartNoPrune { n, m },
+            "rebase" => Method::Rebase { n },
+            _ => bail!(
+                "unknown method `{name}` (vanilla|self-consistency|sart|\
+                 sart-noprune|rebase)"
+            ),
+        })
+    }
+
+    pub fn policy(&self) -> Option<Policy> {
+        Some(match *self {
+            Method::Vanilla => Policy::Vanilla,
+            Method::SelfConsistency { n } => Policy::SelfConsistency { n },
+            Method::Sart { n, m, alpha, beta } => {
+                Policy::Sart { n, m, alpha, beta }
+            }
+            Method::SartNoPrune { n, m } => Policy::SartNoPrune { n, m },
+            Method::Rebase { .. } => return None,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Method::Vanilla => "vanilla".into(),
+            Method::SelfConsistency { n } => format!("self-consistency(N={n})"),
+            Method::Sart { n, m, .. } => format!("sart(N={n},M={m})"),
+            Method::SartNoPrune { n, m } => format!("sart-noprune(N={n},M={m})"),
+            Method::Rebase { n } => format!("rebase(N={n})"),
+        }
+    }
+}
+
+/// Engine selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineChoice {
+    /// Virtual-time simulation (full-scale figure sweeps, tests).
+    Sim,
+    /// AOT artifacts via PJRT; `model` is a manifest model name,
+    /// `fused` picks the fused-chunk decode path.
+    Hlo { model: String, fused: bool },
+}
+
+/// PRM selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrmChoice {
+    Oracle { sigma: f64 },
+    Hlo,
+}
+
+/// Everything one serving run needs.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub method: Method,
+    pub dataset: String,
+    pub n_requests: usize,
+    /// Requests/second Poisson rate; 0 = all at t=0.
+    pub rate: f64,
+    pub engine: EngineChoice,
+    pub prm: PrmChoice,
+    pub slots: usize,
+    pub kv_capacity_tokens: usize,
+    pub kv_page_tokens: usize,
+    pub t_round: usize,
+    pub temperature: f32,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl ServeSpec {
+    /// Build from CLI args with paper-scaled defaults.
+    pub fn from_args(args: &Args) -> Result<ServeSpec> {
+        let method = Method::parse(&args.get_or("method", "sart"), args)?;
+        let engine = match args.get_or("engine", "sim").as_str() {
+            "sim" => EngineChoice::Sim,
+            "hlo" => EngineChoice::Hlo {
+                model: args.get_or("model", "r1mini-tiny"),
+                fused: !args.flag("stepwise"),
+            },
+            other => bail!("unknown engine `{other}` (sim|hlo)"),
+        };
+        let prm = match args.get_or("prm", "auto").as_str() {
+            "oracle" => PrmChoice::Oracle { sigma: args.f64_or("prm-sigma", 0.08)? },
+            "hlo" => PrmChoice::Hlo,
+            // auto: match the engine.
+            "auto" => match &engine {
+                EngineChoice::Sim => {
+                    PrmChoice::Oracle { sigma: args.f64_or("prm-sigma", 0.08)? }
+                }
+                EngineChoice::Hlo { .. } => PrmChoice::Hlo,
+            },
+            other => bail!("unknown prm `{other}` (oracle|hlo|auto)"),
+        };
+        Ok(ServeSpec {
+            method,
+            dataset: args.get_or("dataset", "synth-gaokao"),
+            n_requests: args.usize_or("requests", 32)?,
+            rate: args.f64_or("rate", 1.0)?,
+            engine,
+            prm,
+            slots: args.usize_or("slots", 8)?,
+            kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
+            kv_page_tokens: args.usize_or("kv-page", 16)?,
+            t_round: args.usize_or("t-round", 16)?,
+            temperature: args.f64_or("temp", 1.0)? as f32,
+            max_new: args.usize_or("max-new", 224)?,
+            seed: args.u64_or("seed", 0)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args("--n 8 --alpha=0.6 --stepwise pos1");
+        assert_eq!(a.get("n"), Some("8"));
+        assert_eq!(a.get("alpha"), Some("0.6"));
+        assert!(a.flag("stepwise"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn method_parsing_defaults() {
+        let a = args("");
+        assert_eq!(Method::parse("vanilla", &a).unwrap(), Method::Vanilla);
+        assert_eq!(
+            Method::parse("sc:4", &a).unwrap(),
+            Method::SelfConsistency { n: 4 }
+        );
+        match Method::parse("sart:8", &a).unwrap() {
+            Method::Sart { n, m, alpha, beta } => {
+                assert_eq!((n, m, beta), (8, 4, 4));
+                assert!((alpha - 0.5).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn method_overrides() {
+        let a = args("--m 3 --alpha 0.7 --beta 2");
+        match Method::parse("sart:8", &a).unwrap() {
+            Method::Sart { n, m, alpha, beta } => {
+                assert_eq!((n, m, beta), (8, 3, 2));
+                assert!((alpha - 0.7).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn method_rejects_bad() {
+        let a = args("");
+        assert!(Method::parse("wat", &a).is_err());
+        assert!(Method::parse("sart:0", &a).is_err());
+        let a = args("--m 9");
+        assert!(Method::parse("sart:4", &a).is_err());
+    }
+
+    #[test]
+    fn spec_defaults() {
+        let a = args("");
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(s.engine, EngineChoice::Sim);
+        assert_eq!(s.prm, PrmChoice::Oracle { sigma: 0.08 });
+        assert_eq!(s.slots, 8);
+        assert_eq!(s.dataset, "synth-gaokao");
+    }
+
+    #[test]
+    fn spec_hlo_auto_prm() {
+        let a = args("--engine hlo --model r1mini-small");
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(
+            s.engine,
+            EngineChoice::Hlo { model: "r1mini-small".into(), fused: true }
+        );
+        assert_eq!(s.prm, PrmChoice::Hlo);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's L3 contribution: SART's scheduling workflow.
+//!
+//! [`types`] defines the request/branch state machines and Algorithm 1's
+//! per-request metadata; [`scheduler`] implements the continuous-batching
+//! loop with redundant sampling, early stopping and two-phase dynamic
+//! pruning. Baseline policies (Vanilla, Self-Consistency) run through the
+//! same loop as degenerate configurations for a fair comparison; Rebase
+//! has its own tree scheduler in `crate::baselines`.
+
+pub mod scheduler;
+pub mod types;
+
+pub use scheduler::{ClockHandle, SchedConfig, Scheduler, ServeResult};
+pub use types::{
+    Branch, BranchStatus, CompletedResponse, Policy, PrunePhase, RequestMeta,
+    RequestOutcome, RequestState,
+};

@@ -1,0 +1,605 @@
+//! The SART scheduling workflow (paper Algorithm 1) with continuous
+//! batching, plus the Vanilla / Self-Consistency policies as degenerate
+//! configurations of the same loop (the Rebase baseline lives in
+//! `baselines::rebase`, sharing the same engine substrate).
+//!
+//! One loop iteration = one *round*:
+//!
+//! 1. admit arrivals into the request queue (FCFS);
+//! 2. fill free engine slots from the branch queue, else by prefilling
+//!    the request at the head of the request queue (which enqueues its N
+//!    branches) — Algorithm 1 lines 3-11;
+//! 3. batch-decode up to T steps (line 12 / 22);
+//! 4. per involved request: phase transition explore→exploit on first
+//!    completion (lines 24-27), harvest completed branches (28-31),
+//!    prune low-reward branches (32-37), finalize on early stopping or
+//!    exhaustion (38-40).
+//!
+//! KV-cache accounting (prefix sharing, reservation admission) gates
+//! request admission; engine-slot availability gates branch starts. Both
+//! scarcities produce the queuing behaviour the paper measures.
+
+use super::types::*;
+use crate::engine::{Engine, PrefillEntry, SlotId};
+use crate::kvcache::KvCacheManager;
+use crate::metrics::{Timeline, TimelinePoint};
+use crate::prm::PrmScorer;
+use crate::sampler;
+use crate::tokenizer as tok;
+use crate::util::clock::{Clock, RealClock, SimClock};
+use crate::util::rng::Rng;
+use crate::workload::Request;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+
+/// Scheduler knobs (paper defaults: M = N/2, alpha = 0.5, beta = N/2,
+/// T = 400 — scaled to this testbed's token scale in `config`).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub policy: Policy,
+    /// Decode steps per round (the paper's T).
+    pub t_round: usize,
+    pub temperature: f32,
+    /// Per-branch generation cap (tokens after the prompt).
+    pub max_new: usize,
+    pub kv_capacity_tokens: usize,
+    pub kv_page_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+            t_round: 16,
+            temperature: 1.0,
+            max_new: 224,
+            kv_capacity_tokens: 4096,
+            kv_page_tokens: 16,
+            seed: 0,
+        }
+    }
+}
+
+/// Real or virtual time.
+pub enum ClockHandle {
+    Real(RealClock),
+    Sim(SimClock),
+}
+
+impl ClockHandle {
+    pub fn now(&self) -> f64 {
+        match self {
+            ClockHandle::Real(c) => c.now(),
+            ClockHandle::Sim(c) => c.now(),
+        }
+    }
+
+    /// Charge engine cost (virtual clocks only — wall time passed anyway).
+    fn charge(&self, cost: f64) {
+        if let ClockHandle::Sim(c) = self {
+            c.advance(cost);
+        }
+    }
+
+    fn idle_until(&self, t: f64) {
+        match self {
+            ClockHandle::Sim(c) => c.advance_to(t),
+            ClockHandle::Real(c) => {
+                let dt = t - c.now();
+                if dt > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        dt.min(0.01),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Result of a serve run.
+pub struct ServeResult {
+    pub outcomes: Vec<RequestOutcome>,
+    pub timeline: Timeline,
+    pub rounds: usize,
+    pub engine_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+/// The continuous-batching scheduler (Algorithm 1).
+pub struct Scheduler<'e> {
+    cfg: SchedConfig,
+    engine: &'e mut dyn Engine,
+    prm: &'e mut dyn PrmScorer,
+    pub clock: ClockHandle,
+    kv: KvCacheManager,
+    requests: Vec<RequestState>,
+    truths: Vec<u8>,
+    request_queue: VecDeque<usize>,
+    branch_queue: VecDeque<(usize, usize)>,
+    slots: Vec<Option<(usize, usize)>>,
+    rng: Rng,
+}
+
+impl<'e> Scheduler<'e> {
+    pub fn new(
+        cfg: SchedConfig,
+        engine: &'e mut dyn Engine,
+        prm: &'e mut dyn PrmScorer,
+        clock: ClockHandle,
+    ) -> Scheduler<'e> {
+        let slots = engine.caps().slots;
+        let kv = KvCacheManager::new(cfg.kv_capacity_tokens, cfg.kv_page_tokens);
+        let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        Scheduler {
+            cfg,
+            engine,
+            prm,
+            clock,
+            kv,
+            requests: Vec::new(),
+            truths: Vec::new(),
+            request_queue: VecDeque::new(),
+            branch_queue: VecDeque::new(),
+            slots: vec![None; slots],
+            rng,
+        }
+    }
+
+    /// Serve a full trace to completion; requests must be sorted by
+    /// arrival time.
+    pub fn serve(&mut self, trace: &[Request]) -> Result<ServeResult> {
+        let wall0 = std::time::Instant::now();
+        let mut pending: VecDeque<&Request> = trace.iter().collect();
+        for w in trace.windows(2) {
+            if w[1].arrival < w[0].arrival {
+                bail!("trace not sorted by arrival");
+            }
+        }
+        let mut timeline = Timeline::default();
+        let mut rounds = 0usize;
+        let mut engine_seconds = 0.0;
+
+        loop {
+            let now = self.clock.now();
+            // 1. Move arrived requests into the FCFS queue.
+            while pending
+                .front()
+                .map(|r| r.arrival <= now)
+                .unwrap_or(false)
+            {
+                let r = pending.pop_front().unwrap();
+                let idx = self.requests.len();
+                self.truths.push(r.question.answer());
+                self.requests.push(RequestState {
+                    id: r.id,
+                    question: r.question.clone(),
+                    dataset: r.dataset.clone(),
+                    arrival: r.arrival,
+                    admitted_at: None,
+                    finished_at: None,
+                    meta: self.initial_meta(),
+                    branches: Vec::new(),
+                    completed: Vec::new(),
+                    prefix: None,
+                    final_answer: None,
+                });
+                self.request_queue.push_back(idx);
+            }
+
+            // 2. Fill the batch (Algorithm 1 lines 3-11).
+            let prefills = self.fill_batch()?;
+            if !prefills.is_empty() {
+                let cost = self.engine.prefill(&prefills)?;
+                engine_seconds += cost;
+                self.clock.charge(cost);
+            }
+
+            let active: Vec<SlotId> = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(s, o)| o.map(|_| s))
+                .collect();
+
+            if active.is_empty() {
+                if let Some(next) = pending.front() {
+                    self.clock.idle_until(next.arrival);
+                    continue;
+                }
+                if self.request_queue.is_empty() && self.branch_queue.is_empty()
+                {
+                    break; // fully drained
+                }
+                // Queued work but nothing admissible: this can only mean a
+                // deadlock (e.g. a single request too large for the budget).
+                bail!(
+                    "scheduler stalled: {} queued requests cannot be admitted \
+                     (kv capacity {} pages, {} free)",
+                    self.request_queue.len(),
+                    self.kv.capacity_pages(),
+                    self.kv.free_pages()
+                );
+            }
+
+            // 3. Decode up to T steps (line 12).
+            let res =
+                self.engine
+                    .decode(&active, self.cfg.t_round, self.cfg.temperature)?;
+            engine_seconds += res.cost;
+            self.clock.charge(res.cost);
+            rounds += 1;
+
+            // Append emitted tokens; classify completions.
+            let mut involved: Vec<usize> = Vec::new();
+            for (slot, toks) in &res.emitted {
+                let Some((ridx, bidx)) = self.slots[*slot] else {
+                    bail!("engine emitted for empty slot {slot}");
+                };
+                if !involved.contains(&ridx) {
+                    involved.push(ridx);
+                }
+                let branch = &mut self.requests[ridx].branches[bidx];
+                branch.generated.extend_from_slice(toks);
+                if let Some(kvb) = branch.kv {
+                    self.kv.note_decode(kvb, toks.len())?;
+                }
+            }
+
+            // 4. Per-request round processing (lines 23-41).
+            self.process_round(&involved, &mut timeline)?;
+
+            timeline.points.push(TimelinePoint {
+                t: self.clock.now(),
+                running_branches: self
+                    .slots
+                    .iter()
+                    .filter(|s| s.is_some())
+                    .count(),
+                running_tokens: self
+                    .requests
+                    .iter()
+                    .filter(|r| !r.is_finished())
+                    .map(|r| r.running_tokens())
+                    .sum(),
+                kv_pages_used: self.kv.used_pages(),
+                queued_requests: self.request_queue.len(),
+            });
+        }
+
+        // Assemble outcomes in arrival order.
+        let mut outcomes = Vec::with_capacity(self.requests.len());
+        for (i, r) in self.requests.iter().enumerate() {
+            let finished_at = r
+                .finished_at
+                .with_context(|| format!("request {} never finished", r.id))?;
+            outcomes.push(RequestOutcome {
+                id: r.id,
+                dataset: r.dataset.clone(),
+                arrival: r.arrival,
+                admitted_at: r.admitted_at.unwrap_or(finished_at),
+                finished_at,
+                answer: r.final_answer,
+                truth: self.truths[i],
+                branches_started: r
+                    .branches
+                    .iter()
+                    .filter(|b| b.started_at.is_some())
+                    .count(),
+                branches_pruned: r.meta.num_pruned,
+                branches_completed: r.meta.num_completed,
+                tokens_generated: r
+                    .branches
+                    .iter()
+                    .map(|b| b.generated.len())
+                    .sum(),
+                response_lengths: r
+                    .completed
+                    .iter()
+                    .map(|c| c.length)
+                    .collect(),
+            });
+        }
+        self.kv.check_invariants()?;
+        Ok(ServeResult {
+            outcomes,
+            timeline,
+            rounds,
+            engine_seconds,
+            wall_seconds: wall0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn initial_meta(&self) -> RequestMeta {
+        let (threshold, max_pruned) = match self.cfg.policy {
+            Policy::Sart { alpha, beta, .. } => (alpha, beta),
+            _ => (f32::NEG_INFINITY, 0),
+        };
+        RequestMeta {
+            phase: PrunePhase::Explore,
+            threshold,
+            max_num_pruned: max_pruned,
+            num_completed: 0,
+            num_pruned: 0,
+        }
+    }
+
+    /// Algorithm 1 lines 3-11: fill free slots from the branch queue,
+    /// else by admitting + prefilling the head request.
+    fn fill_batch(&mut self) -> Result<Vec<PrefillEntry>> {
+        let mut entries = Vec::new();
+        let now = self.clock.now();
+        loop {
+            let Some(free_slot) =
+                self.slots.iter().position(|s| s.is_none())
+            else {
+                break;
+            };
+            // Prefer an awaiting branch (lines 4-5); skip stale entries of
+            // already-finalized requests.
+            let mut assigned = false;
+            while let Some((ridx, bidx)) = self.branch_queue.pop_front() {
+                if self.requests[ridx].is_finished()
+                    || self.requests[ridx].branches[bidx].status
+                        != BranchStatus::Queued
+                {
+                    continue; // lazily dropped
+                }
+                let prompt = self.requests[ridx].question.prompt_tokens();
+                let seed = self.requests[ridx].branches[bidx].seed;
+                let b = &mut self.requests[ridx].branches[bidx];
+                b.status = BranchStatus::Running;
+                b.slot = Some(free_slot);
+                b.started_at = Some(now);
+                self.slots[free_slot] = Some((ridx, bidx));
+                entries.push(PrefillEntry { slot: free_slot, prompt, seed });
+                assigned = true;
+                break;
+            }
+            if assigned {
+                continue;
+            }
+            // Lines 6-7: admit the head request (FCFS, blocking on budget).
+            let Some(&ridx) = self.request_queue.front() else {
+                break;
+            };
+            let n = self.cfg.policy.n_branches();
+            let prompt_len =
+                self.requests[ridx].question.prompt_tokens().len();
+            if !self.kv.can_admit(prompt_len, self.cfg.max_new, n) {
+                break; // head-of-line blocks until memory frees up
+            }
+            self.request_queue.pop_front();
+            let (prefix, kv_branches) =
+                self.kv.admit(prompt_len, self.cfg.max_new, n)?;
+            let req = &mut self.requests[ridx];
+            req.admitted_at = Some(now);
+            req.prefix = Some(prefix);
+            for kvb in kv_branches {
+                let seed = self.rng.next_u64();
+                let mut b = Branch::new(seed);
+                b.kv = Some(kvb);
+                req.branches.push(b);
+                self.branch_queue.push_back((ridx, req.branches.len() - 1));
+            }
+        }
+        Ok(entries)
+    }
+
+    /// Algorithm 1 lines 23-41 for every involved request.
+    fn process_round(
+        &mut self,
+        involved: &[usize],
+        _timeline: &mut Timeline,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        // Classify branch completions first (EOS / cap).
+        let mut completed_now: Vec<(usize, usize)> = Vec::new();
+        for &ridx in involved {
+            for bidx in 0..self.requests[ridx].branches.len() {
+                let b = &self.requests[ridx].branches[bidx];
+                if b.status != BranchStatus::Running {
+                    continue;
+                }
+                let done = b.generated.last() == Some(&tok::EOS);
+                let capped = b.generated.len() >= self.cfg.max_new;
+                if done || capped {
+                    completed_now.push((ridx, bidx));
+                    let b = &mut self.requests[ridx].branches[bidx];
+                    b.status = if done {
+                        BranchStatus::Completed
+                    } else {
+                        BranchStatus::Capped
+                    };
+                    b.finished_at = Some(now);
+                }
+            }
+        }
+
+        // Batch all PRM queries for this round: completed branches (final
+        // rewards) + running branches of pruning requests.
+        let needs_prm = self.cfg.policy.needs_prm();
+        let mut queries: Vec<(usize, usize)> = Vec::new();
+        if needs_prm {
+            for &(ridx, bidx) in &completed_now {
+                queries.push((ridx, bidx));
+            }
+            if self.cfg.policy.prunes() {
+                for &ridx in involved {
+                    if self.requests[ridx].is_finished() {
+                        continue;
+                    }
+                    for bidx in 0..self.requests[ridx].branches.len() {
+                        if self.requests[ridx].branches[bidx].status
+                            == BranchStatus::Running
+                        {
+                            queries.push((ridx, bidx));
+                        }
+                    }
+                }
+            }
+        }
+        if !queries.is_empty() {
+            let seqs: Vec<Vec<tok::Token>> = queries
+                .iter()
+                .map(|&(ridx, bidx)| {
+                    let r = &self.requests[ridx];
+                    let mut s = r.question.prompt_tokens();
+                    s.extend_from_slice(&r.branches[bidx].generated);
+                    s
+                })
+                .collect();
+            let refs: Vec<&[tok::Token]> =
+                seqs.iter().map(|s| s.as_slice()).collect();
+            let scores = self.prm.score(&refs)?;
+            for (&(ridx, bidx), score) in queries.iter().zip(scores) {
+                self.requests[ridx].branches[bidx].reward = score;
+            }
+        }
+
+        for &ridx in involved {
+            if self.requests[ridx].is_finished() {
+                continue;
+            }
+            // Phase transition (lines 24-27): first completion flips to
+            // exploitation with threshold = that branch's reward.
+            let first_completed_reward = completed_now
+                .iter()
+                .filter(|&&(r, _)| r == ridx)
+                .map(|&(r, b)| self.requests[r].branches[b].reward)
+                .next();
+            if needs_prm
+                && self.cfg.policy.prunes()
+                && self.requests[ridx].meta.phase == PrunePhase::Explore
+            {
+                if let Some(alpha_prime) = first_completed_reward {
+                    let n = self.cfg.policy.n_branches();
+                    let meta = &mut self.requests[ridx].meta;
+                    meta.phase = PrunePhase::Exploit;
+                    meta.threshold = alpha_prime;
+                    meta.max_num_pruned = n - 1;
+                }
+            }
+
+            // Harvest completions (lines 28-31).
+            for &(r, bidx) in
+                completed_now.iter().filter(|&&(r, _)| r == ridx)
+            {
+                self.harvest(r, bidx, now)?;
+            }
+
+            // Prune low-reward running branches (lines 32-37).
+            if self.cfg.policy.prunes() {
+                for bidx in 0..self.requests[ridx].branches.len() {
+                    let meta = &self.requests[ridx].meta;
+                    if meta.num_pruned >= meta.max_num_pruned {
+                        break;
+                    }
+                    let b = &self.requests[ridx].branches[bidx];
+                    if b.status != BranchStatus::Running {
+                        continue;
+                    }
+                    if b.reward.is_nan() || b.reward >= meta.threshold {
+                        continue;
+                    }
+                    self.terminate_branch(ridx, bidx, BranchStatus::Pruned, now)?;
+                    self.requests[ridx].meta.num_pruned += 1;
+                }
+            }
+
+            // Finalize (lines 38-40).
+            let n = self.cfg.policy.n_branches();
+            let m = self.cfg.policy.m_required();
+            let meta = &self.requests[ridx].meta;
+            if meta.num_completed >= m
+                || meta.num_completed + meta.num_pruned >= n
+            {
+                self.finalize(ridx, now)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove a completed/capped branch from the batch and record its
+    /// response.
+    fn harvest(&mut self, ridx: usize, bidx: usize, now: f64) -> Result<()> {
+        let (answer, reward, length) = {
+            let b = &self.requests[ridx].branches[bidx];
+            (tok::extract_answer(&b.generated), b.reward, b.generated.len())
+        };
+        // Free the slot and the kv reservation immediately.
+        let b = &mut self.requests[ridx].branches[bidx];
+        if let Some(slot) = b.slot.take() {
+            self.slots[slot] = None;
+            self.engine.release(slot);
+        }
+        if let Some(kvb) = b.kv.take() {
+            self.kv.release_branch(kvb)?;
+        }
+        self.requests[ridx].meta.num_completed += 1;
+        self.requests[ridx].completed.push(CompletedResponse {
+            answer,
+            reward,
+            length,
+            at: now,
+        });
+        Ok(())
+    }
+
+    fn terminate_branch(
+        &mut self,
+        ridx: usize,
+        bidx: usize,
+        status: BranchStatus,
+        now: f64,
+    ) -> Result<()> {
+        let b = &mut self.requests[ridx].branches[bidx];
+        debug_assert!(!b.is_terminal());
+        b.status = status;
+        b.finished_at = Some(now);
+        if let Some(slot) = b.slot.take() {
+            self.slots[slot] = None;
+            self.engine.release(slot);
+        }
+        if let Some(kvb) = b.kv.take() {
+            self.kv.release_branch(kvb)?;
+        }
+        Ok(())
+    }
+
+    /// Early stopping: emit the final answer and release every remaining
+    /// resource of the request.
+    fn finalize(&mut self, ridx: usize, now: f64) -> Result<()> {
+        let answer = match self.cfg.policy {
+            Policy::Vanilla => {
+                self.requests[ridx].completed.first().and_then(|c| c.answer)
+            }
+            Policy::SelfConsistency { .. } => {
+                let answers: Vec<Option<u8>> = self.requests[ridx]
+                    .completed
+                    .iter()
+                    .map(|c| c.answer)
+                    .collect();
+                sampler::majority_vote(&answers)
+            }
+            Policy::Sart { .. } | Policy::SartNoPrune { .. } => {
+                let pairs: Vec<(Option<u8>, f32)> = self.requests[ridx]
+                    .completed
+                    .iter()
+                    .map(|c| (c.answer, c.reward))
+                    .collect();
+                sampler::best_reward_vote(&pairs)
+            }
+        };
+        // Terminate all remaining branches (early stopping, line 39).
+        for bidx in 0..self.requests[ridx].branches.len() {
+            if !self.requests[ridx].branches[bidx].is_terminal() {
+                self.terminate_branch(ridx, bidx, BranchStatus::Stopped, now)?;
+            }
+        }
+        let req = &mut self.requests[ridx];
+        req.final_answer = answer;
+        req.finished_at = Some(now);
+        Ok(())
+    }
+}

@@ -1,0 +1,288 @@
+//! Request/branch state machines and SART metadata (Algorithm 1's `meta`).
+
+use crate::kvcache;
+use crate::tokenizer::Token;
+use crate::workload::Question;
+
+/// Scheduling policy — which method serves the request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// No branch sampling (N = 1).
+    Vanilla,
+    /// Sample N branches, wait for all N, majority vote. Completed
+    /// branches release their resources immediately (fair-comparison
+    /// variant the paper uses).
+    SelfConsistency { n: usize },
+    /// Redundant sampling with early stopping + two-phase dynamic pruning
+    /// (the paper's system). `m` completions finalize; pruning thresholds
+    /// per Algorithm 1.
+    Sart { n: usize, m: usize, alpha: f32, beta: usize },
+    /// Ablation: redundant sampling with early stopping only (Fig. 6's
+    /// "SART (w/o Pruning)").
+    SartNoPrune { n: usize, m: usize },
+}
+
+impl Policy {
+    pub fn n_branches(&self) -> usize {
+        match *self {
+            Policy::Vanilla => 1,
+            Policy::SelfConsistency { n } => n,
+            Policy::Sart { n, .. } => n,
+            Policy::SartNoPrune { n, .. } => n,
+        }
+    }
+
+    /// Completions required to finalize.
+    pub fn m_required(&self) -> usize {
+        match *self {
+            Policy::Vanilla => 1,
+            Policy::SelfConsistency { n } => n,
+            Policy::Sart { m, .. } => m,
+            Policy::SartNoPrune { m, .. } => m,
+        }
+    }
+
+    pub fn prunes(&self) -> bool {
+        matches!(self, Policy::Sart { .. })
+    }
+
+    /// Does this policy need PRM rewards? (SART needs them for pruning and
+    /// final selection; Self-Consistency and Vanilla do not.)
+    pub fn needs_prm(&self) -> bool {
+        matches!(self, Policy::Sart { .. } | Policy::SartNoPrune { .. })
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Policy::Vanilla => "vanilla".into(),
+            Policy::SelfConsistency { n } => format!("self-consistency(N={n})"),
+            Policy::Sart { n, m, .. } => format!("sart(N={n},M={m})"),
+            Policy::SartNoPrune { n, m } => {
+                format!("sart-noprune(N={n},M={m})")
+            }
+        }
+    }
+}
+
+/// Two-phase pruning state (Algorithm 1 lines 16, 24-26).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrunePhase {
+    /// Exploration: low threshold alpha, at most beta prunes.
+    Explore,
+    /// Exploitation: threshold alpha' = reward of first completed branch,
+    /// prune cap lifted to N-1.
+    Exploit,
+}
+
+/// Per-request scheduling metadata (Algorithm 1's `meta[i]`).
+#[derive(Debug, Clone)]
+pub struct RequestMeta {
+    pub phase: PrunePhase,
+    pub threshold: f32,
+    pub max_num_pruned: usize,
+    pub num_completed: usize,
+    pub num_pruned: usize,
+}
+
+/// Lifecycle of one branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchStatus {
+    /// Waiting in the branch queue for a slot.
+    Queued,
+    /// Decoding in an engine slot.
+    Running,
+    /// Emitted EOS (a usable response).
+    Completed,
+    /// Pruned by the two-phase policy (resources released).
+    Pruned,
+    /// Terminated by request finalization (early stopping).
+    Stopped,
+    /// Hit the generation cap without EOS (counts as completed-invalid).
+    Capped,
+}
+
+/// One reasoning branch.
+#[derive(Debug)]
+pub struct Branch {
+    pub status: BranchStatus,
+    pub slot: Option<crate::engine::SlotId>,
+    pub kv: Option<kvcache::BranchId>,
+    pub seed: u64,
+    pub generated: Vec<Token>,
+    pub reward: f32,
+    pub started_at: Option<f64>,
+    pub finished_at: Option<f64>,
+}
+
+impl Branch {
+    pub fn new(seed: u64) -> Branch {
+        Branch {
+            status: BranchStatus::Queued,
+            slot: None,
+            kv: None,
+            seed,
+            generated: Vec::new(),
+            reward: f32::NAN,
+            started_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.status,
+            BranchStatus::Completed
+                | BranchStatus::Pruned
+                | BranchStatus::Stopped
+                | BranchStatus::Capped
+        )
+    }
+}
+
+/// A usable (completed or capped) response collected for final selection.
+#[derive(Debug, Clone)]
+pub struct CompletedResponse {
+    pub answer: Option<u8>,
+    pub reward: f32,
+    pub length: usize,
+    pub at: f64,
+}
+
+/// One in-flight request.
+#[derive(Debug)]
+pub struct RequestState {
+    pub id: usize,
+    pub question: Question,
+    pub dataset: String,
+    pub arrival: f64,
+    pub admitted_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub meta: RequestMeta,
+    pub branches: Vec<Branch>,
+    pub completed: Vec<CompletedResponse>,
+    pub prefix: Option<kvcache::PrefixId>,
+    pub final_answer: Option<u8>,
+}
+
+impl RequestState {
+    pub fn running_branches(&self) -> usize {
+        self.branches
+            .iter()
+            .filter(|b| b.status == BranchStatus::Running)
+            .count()
+    }
+
+    pub fn queued_branches(&self) -> usize {
+        self.branches
+            .iter()
+            .filter(|b| b.status == BranchStatus::Queued)
+            .count()
+    }
+
+    pub fn running_tokens(&self) -> usize {
+        self.branches
+            .iter()
+            .filter(|b| b.status == BranchStatus::Running)
+            .map(|b| b.generated.len())
+            .sum()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished_at.is_some()
+    }
+}
+
+/// Final per-request record handed to metrics.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub dataset: String,
+    pub arrival: f64,
+    pub admitted_at: f64,
+    pub finished_at: f64,
+    pub answer: Option<u8>,
+    pub truth: u8,
+    pub branches_started: usize,
+    pub branches_pruned: usize,
+    pub branches_completed: usize,
+    pub tokens_generated: usize,
+    pub response_lengths: Vec<usize>,
+}
+
+impl RequestOutcome {
+    pub fn correct(&self) -> bool {
+        self.answer == Some(self.truth)
+    }
+
+    pub fn e2e_latency(&self) -> f64 {
+        self.finished_at - self.arrival
+    }
+
+    pub fn queue_latency(&self) -> f64 {
+        self.admitted_at - self.arrival
+    }
+
+    pub fn inference_latency(&self) -> f64 {
+        self.finished_at - self.admitted_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_shapes() {
+        assert_eq!(Policy::Vanilla.n_branches(), 1);
+        assert_eq!(Policy::Vanilla.m_required(), 1);
+        let sc = Policy::SelfConsistency { n: 8 };
+        assert_eq!(sc.n_branches(), 8);
+        assert_eq!(sc.m_required(), 8);
+        assert!(!sc.prunes() && !sc.needs_prm());
+        let sart = Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 };
+        assert_eq!(sart.m_required(), 4);
+        assert!(sart.prunes() && sart.needs_prm());
+        let np = Policy::SartNoPrune { n: 8, m: 4 };
+        assert!(!np.prunes() && np.needs_prm());
+    }
+
+    #[test]
+    fn branch_lifecycle() {
+        let mut b = Branch::new(1);
+        assert_eq!(b.status, BranchStatus::Queued);
+        assert!(!b.is_terminal());
+        b.status = BranchStatus::Running;
+        assert!(!b.is_terminal());
+        for s in [
+            BranchStatus::Completed,
+            BranchStatus::Pruned,
+            BranchStatus::Stopped,
+            BranchStatus::Capped,
+        ] {
+            b.status = s;
+            assert!(b.is_terminal());
+        }
+    }
+
+    #[test]
+    fn outcome_latencies() {
+        let o = RequestOutcome {
+            id: 0,
+            dataset: "d".into(),
+            arrival: 1.0,
+            admitted_at: 3.0,
+            finished_at: 10.0,
+            answer: Some(4),
+            truth: 4,
+            branches_started: 8,
+            branches_pruned: 2,
+            branches_completed: 4,
+            tokens_generated: 100,
+            response_lengths: vec![10, 20],
+        };
+        assert!(o.correct());
+        assert_eq!(o.e2e_latency(), 9.0);
+        assert_eq!(o.queue_latency(), 2.0);
+        assert_eq!(o.inference_latency(), 7.0);
+    }
+}

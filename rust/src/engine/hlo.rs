@@ -1,0 +1,368 @@
+//! The real engine: AOT-compiled JAX/Pallas graphs executed via PJRT.
+//!
+//! All mutable engine state lives in ONE device-resident packed f32 buffer
+//! (see `python/compile/model.py` "Packed serving state"): each call
+//! passes the state buffer in and keeps the returned buffer for the next
+//! call, so the KV cache never crosses the host boundary. Host readbacks
+//! are limited to the small control segments (logits / tokens / lengths /
+//! alive) via partial `copy_raw_to_host_sync`.
+//!
+//! Two decode paths exist (the §Perf ablation):
+//!
+//! * **Fused** (default): one `decode_chunk` executable runs `chunk_t`
+//!   steps with in-graph gumbel sampling — one PJRT dispatch + one small
+//!   readback per T tokens per slot.
+//! * **Stepwise**: one `decode` dispatch per token with host-side
+//!   sampling — the pre-optimization baseline, also used when a round is
+//!   not a multiple of `chunk_t`.
+
+use super::{ChunkResult, Engine, EngineCaps, PrefillEntry, SlotId};
+use crate::runtime::{read_f32, Manifest, ModelExecutables, Runtime, StateLayout};
+use crate::sampler::sample_token;
+use crate::tokenizer as tok;
+use crate::tokenizer::Token;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Which decode path to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    Fused,
+    Stepwise,
+}
+
+/// PJRT-backed engine over a fixed slot batch.
+pub struct HloEngine {
+    rt: Runtime,
+    exes: ModelExecutables,
+    layout: StateLayout,
+    caps: EngineCaps,
+    mode: DecodeMode,
+    temp_top_k: usize,
+    state: xla::PjRtBuffer,
+    /// Host mirror of per-slot cache lengths (authoritative copy is the
+    /// state buffer; mirror is for bookkeeping/assertions).
+    lengths: Vec<usize>,
+    occupied: Vec<bool>,
+    /// Host logits cache for the stepwise path (refreshed per dispatch).
+    host_logits: Vec<Vec<f32>>,
+    logits_fresh: bool,
+    /// Per-slot sampling streams (stepwise) and the fused-key stream.
+    rngs: Vec<Rng>,
+    chunk_rng: Rng,
+}
+
+impl HloEngine {
+    /// Load a model from the manifest at a compiled batch-size bucket.
+    pub fn load(
+        rt: Runtime,
+        manifest: &Manifest,
+        model: &str,
+        batch: usize,
+        mode: DecodeMode,
+        seed: u64,
+    ) -> Result<HloEngine> {
+        let art = manifest.model(model)?;
+        let exes = rt.load_model(art, batch)?;
+        let layout = StateLayout::new(&art.config, batch, art.chunk_t);
+        let zeros = vec![0f32; layout.total];
+        let state = rt.upload_f32(&zeros, &[layout.total])?;
+        Ok(HloEngine {
+            caps: EngineCaps {
+                slots: batch,
+                max_seq: art.config.max_seq,
+                prompt_len: art.config.prompt_len,
+                chunk_t: art.chunk_t,
+            },
+            layout,
+            exes,
+            mode,
+            temp_top_k: 0,
+            state,
+            lengths: vec![0; batch],
+            occupied: vec![false; batch],
+            host_logits: vec![vec![0.0; art.config.vocab_size]; batch],
+            logits_fresh: false,
+            rngs: (0..batch).map(|i| Rng::new(seed ^ i as u64)).collect(),
+            chunk_rng: Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            rt,
+        })
+    }
+
+    /// Total compile time of the three executables (startup metric).
+    pub fn compile_seconds(&self) -> f64 {
+        self.exes.decode.compile_seconds
+            + self.exes.prefill.compile_seconds
+            + self.exes.decode_chunk.compile_seconds
+    }
+
+    fn vocab(&self) -> usize {
+        self.layout.logits.1 / self.caps.slots
+    }
+
+    /// Fetch the control prefix [tokens_out|logits|lengths|alive] via the
+    /// param-free `peek` executable (on-device slice + small literal copy;
+    /// the CPU PJRT client cannot partially read the big state buffer).
+    fn read_control(&self) -> Result<Vec<f32>> {
+        let control_len = self.layout.kv.0;
+        let out = self.exes.peek.run(&[&self.state])?;
+        read_f32(&out, 0, control_len)
+    }
+
+    fn refresh_logits(&mut self) -> Result<()> {
+        let control = self.read_control()?;
+        let (off, _) = self.layout.logits;
+        let v = self.vocab();
+        for s in 0..self.caps.slots {
+            self.host_logits[s]
+                .copy_from_slice(&control[off + s * v..off + (s + 1) * v]);
+        }
+        self.logits_fresh = true;
+        Ok(())
+    }
+
+    fn decode_fused(
+        &mut self,
+        active: &[SlotId],
+        steps: usize,
+        temp: f32,
+    ) -> Result<ChunkResult> {
+        let t0 = Instant::now();
+        let b = self.caps.slots;
+        let ct = self.caps.chunk_t;
+        let chunks = steps.div_ceil(ct);
+        let mut emitted: Vec<(SlotId, Vec<Token>)> =
+            active.iter().map(|&s| (s, Vec::new())).collect();
+        let mut alive: Vec<bool> = vec![true; active.len()];
+        let inv_temp = self.rt.upload_f32(&[1.0 / temp.max(1e-6)], &[])?;
+        for _ in 0..chunks {
+            if !alive.iter().any(|&a| a) {
+                break;
+            }
+            let mut mask = vec![0i32; b];
+            for (i, &s) in active.iter().enumerate() {
+                if alive[i] {
+                    mask[s] = 1;
+                }
+            }
+            let mask_buf = self.rt.upload_i32(&mask, &[b])?;
+            let k = self.chunk_rng.next_u64();
+            let key = self
+                .rt
+                .upload_u32(&[(k >> 32) as u32, k as u32], &[2])?;
+            let new_state = self.exes.decode_chunk.run(&[
+                &self.state,
+                &mask_buf,
+                &key,
+                &inv_temp,
+            ])?;
+            self.state = new_state;
+            // Small readback of the control prefix: tokens, lengths, alive.
+            let control = self.read_control()?;
+            let toks = &control[self.layout.tokens_out.0
+                ..self.layout.tokens_out.0 + self.layout.tokens_out.1];
+            let lens = &control[self.layout.lengths.0
+                ..self.layout.lengths.0 + self.layout.lengths.1];
+            for (i, &s) in active.iter().enumerate() {
+                if !alive[i] {
+                    continue;
+                }
+                self.lengths[s] = lens[s] as usize;
+                for t_idx in 0..ct {
+                    let t = toks[s * ct + t_idx] as Token;
+                    if t == tok::PAD {
+                        break; // this slot finished earlier in the chunk
+                    }
+                    emitted[i].1.push(t);
+                    if t == tok::EOS {
+                        alive[i] = false;
+                        break;
+                    }
+                }
+            }
+        }
+        self.logits_fresh = false; // host cache stale after device sampling
+        Ok(ChunkResult { emitted, cost: t0.elapsed().as_secs_f64() })
+    }
+
+    fn decode_stepwise(
+        &mut self,
+        active: &[SlotId],
+        steps: usize,
+        temp: f32,
+    ) -> Result<ChunkResult> {
+        let t0 = Instant::now();
+        let b = self.caps.slots;
+        if !self.logits_fresh {
+            self.refresh_logits()?;
+        }
+        let mut emitted: Vec<(SlotId, Vec<Token>)> =
+            active.iter().map(|&s| (s, Vec::new())).collect();
+        let mut alive: Vec<bool> = vec![true; active.len()];
+        for _ in 0..steps {
+            // Sample one token per alive slot from the cached logits.
+            let mut toks = vec![tok::PAD; b];
+            let mut mask = vec![0i32; b];
+            let mut any = false;
+            for (i, &s) in active.iter().enumerate() {
+                if !alive[i] {
+                    continue;
+                }
+                let t = sample_token(&self.host_logits[s], temp,
+                                     self.temp_top_k, &mut self.rngs[s]);
+                emitted[i].1.push(t);
+                if t == tok::EOS {
+                    alive[i] = false;
+                    continue;
+                }
+                toks[s] = t;
+                mask[s] = 1;
+                any = true;
+            }
+            if !any {
+                break;
+            }
+            let toks_buf = self.rt.upload_i32(&toks, &[b])?;
+            let mask_buf = self.rt.upload_i32(&mask, &[b])?;
+            let new_state =
+                self.exes.decode.run(&[&self.state, &toks_buf, &mask_buf])?;
+            self.state = new_state;
+            self.refresh_logits()?;
+            for &s in active.iter() {
+                if mask[s] == 1 {
+                    self.lengths[s] += 1;
+                }
+            }
+        }
+        Ok(ChunkResult { emitted, cost: t0.elapsed().as_secs_f64() })
+    }
+}
+
+impl Engine for HloEngine {
+    fn caps(&self) -> EngineCaps {
+        self.caps
+    }
+
+    fn prefill(&mut self, entries: &[PrefillEntry]) -> Result<f64> {
+        if entries.is_empty() {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        let b = self.caps.slots;
+        let sp = self.caps.prompt_len;
+        let mut toks = vec![tok::PAD; b * sp];
+        let mut lens = vec![0i32; b];
+        let mut mask = vec![0i32; b];
+        for e in entries {
+            if e.slot >= b {
+                bail!("slot {} out of range", e.slot);
+            }
+            if e.prompt.len() > sp {
+                bail!("prompt len {} > bucket {sp}", e.prompt.len());
+            }
+            if e.prompt.is_empty() {
+                bail!("empty prompt");
+            }
+            for (j, &t) in e.prompt.iter().enumerate() {
+                toks[e.slot * sp + j] = t;
+            }
+            lens[e.slot] = e.prompt.len() as i32;
+            mask[e.slot] = 1;
+            self.lengths[e.slot] = e.prompt.len();
+            self.occupied[e.slot] = true;
+            self.rngs[e.slot] = Rng::new(e.seed);
+        }
+        let toks_buf = self.rt.upload_i32(&toks, &[b, sp])?;
+        let lens_buf = self.rt.upload_i32(&lens, &[b])?;
+        let mask_buf = self.rt.upload_i32(&mask, &[b])?;
+        let new_state = self
+            .exes
+            .prefill
+            .run(&[&self.state, &toks_buf, &lens_buf, &mask_buf])
+            .context("prefill execute")?;
+        self.state = new_state;
+        self.logits_fresh = false;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn decode(
+        &mut self,
+        active: &[SlotId],
+        steps: usize,
+        temp: f32,
+    ) -> Result<ChunkResult> {
+        for &s in active {
+            if s >= self.caps.slots {
+                bail!("slot {s} out of range");
+            }
+            if !self.occupied[s] {
+                bail!("decode on empty slot {s}");
+            }
+        }
+        if active.is_empty() || steps == 0 {
+            return Ok(ChunkResult::default());
+        }
+        match self.mode {
+            DecodeMode::Fused => self.decode_fused(active, steps, temp),
+            DecodeMode::Stepwise => self.decode_stepwise(active, steps, temp),
+        }
+    }
+
+    fn replay(&mut self, entries: &[super::ReplayEntry]) -> Result<f64> {
+        if entries.is_empty() {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        // 1. Prefill the prompts.
+        let prefills: Vec<PrefillEntry> = entries
+            .iter()
+            .map(|e| PrefillEntry {
+                slot: e.slot,
+                prompt: e.prompt.clone(),
+                seed: e.seed,
+            })
+            .collect();
+        self.prefill(&prefills)?;
+        // 2. Teacher-force the prefixes with batched single-step decodes.
+        let b = self.caps.slots;
+        let max_forced = entries.iter().map(|e| e.forced.len()).max().unwrap();
+        for step in 0..max_forced {
+            let mut toks = vec![tok::PAD; b];
+            let mut mask = vec![0i32; b];
+            let mut any = false;
+            for e in entries {
+                if let Some(&t) = e.forced.get(step) {
+                    toks[e.slot] = t;
+                    mask[e.slot] = 1;
+                    self.lengths[e.slot] += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            let toks_buf = self.rt.upload_i32(&toks, &[b])?;
+            let mask_buf = self.rt.upload_i32(&mask, &[b])?;
+            let new_state =
+                self.exes.decode.run(&[&self.state, &toks_buf, &mask_buf])?;
+            self.state = new_state;
+        }
+        self.logits_fresh = false;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        if slot < self.caps.slots {
+            self.occupied[slot] = false;
+            self.lengths[slot] = 0;
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "HloEngine(slots={}, chunk_t={}, mode={:?})",
+            self.caps.slots, self.caps.chunk_t, self.mode
+        )
+    }
+}

@@ -1,0 +1,94 @@
+//! The batched decode engine: fixed KV slots, continuous refill.
+//!
+//! The coordinator talks to a slot-oriented [`Engine`]: it prefus prompts
+//! into free slots, runs decode rounds over the active slots, and releases
+//! slots when branches terminate. Two implementations share the trait:
+//!
+//! * [`hlo::HloEngine`] — the real thing: executes the AOT-compiled
+//!   JAX/Pallas graphs via PJRT with the KV cache resident on device.
+//! * [`sim::SimEngine`] — a virtual-time twin that replays the corpus
+//!   generative process; used by unit/property tests and the full-scale
+//!   figure sweeps (deterministic, no artifacts needed).
+//!
+//! Engine methods return their compute *cost* in seconds — wall-clock for
+//! the HLO engine, modeled for the sim — and the caller owns the clock.
+
+pub mod hlo;
+pub mod sim;
+
+use crate::tokenizer::Token;
+use anyhow::Result;
+
+/// Index of a KV slot in the engine's fixed batch.
+pub type SlotId = usize;
+
+/// Static shape information the scheduler needs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineCaps {
+    /// Number of KV slots == compiled batch size.
+    pub slots: usize,
+    /// KV positions per slot (prompt + generation).
+    pub max_seq: usize,
+    /// Prompt bucket (prompts longer than this are rejected).
+    pub prompt_len: usize,
+    /// Fused-chunk length (decode rounds should be multiples of this for
+    /// the fused path to be used).
+    pub chunk_t: usize,
+}
+
+/// A prompt to install into a slot.
+#[derive(Debug, Clone)]
+pub struct PrefillEntry {
+    pub slot: SlotId,
+    pub prompt: Vec<Token>,
+    /// Per-branch RNG stream seed (sampling determinism).
+    pub seed: u64,
+}
+
+/// A fork to install into a slot: prompt + a teacher-forced prefix the
+/// branch continues from (Rebase tree expansion). Forced prefixes must end
+/// at a derivation-step boundary.
+#[derive(Debug, Clone)]
+pub struct ReplayEntry {
+    pub slot: SlotId,
+    pub prompt: Vec<Token>,
+    pub forced: Vec<Token>,
+    pub seed: u64,
+}
+
+/// Outcome of a decode round.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkResult {
+    /// Newly generated tokens per slot, in slot order of the `active`
+    /// argument. A branch that completes mid-round ends with EOS and emits
+    /// nothing further.
+    pub emitted: Vec<(SlotId, Vec<Token>)>,
+    /// Engine compute seconds (wall for HLO, modeled for sim).
+    pub cost: f64,
+}
+
+/// Batched decode engine over fixed KV slots.
+pub trait Engine {
+    fn caps(&self) -> EngineCaps;
+
+    /// (Re)initialize slots with prompts. Returns compute cost (seconds).
+    fn prefill(&mut self, entries: &[PrefillEntry]) -> Result<f64>;
+
+    /// Run up to `steps` decode steps for `active` slots. Slots not listed
+    /// are frozen. A slot that emits EOS stops generating within the round.
+    fn decode(&mut self, active: &[SlotId], steps: usize, temp: f32)
+        -> Result<ChunkResult>;
+
+    /// Install forks: prefill the prompt then teacher-force a prefix, so
+    /// the slot continues generation from mid-trajectory. This is how
+    /// tree-search baselines expand a node without KV-fork support — and
+    /// the replay cost is exactly the inefficiency the paper observes for
+    /// Rebase on long responses.
+    fn replay(&mut self, entries: &[ReplayEntry]) -> Result<f64>;
+
+    /// Mark a slot reusable without further decoding (prune/early-stop).
+    fn release(&mut self, slot: SlotId);
+
+    /// Human-readable identity for logs/metrics.
+    fn describe(&self) -> String;
+}

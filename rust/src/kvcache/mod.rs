@@ -1,0 +1,340 @@
+//! Paged KV-cache manager with prefix sharing and refcounting.
+//!
+//! This is the memory-accounting substrate that turns branch
+//! over-subscription into queuing delay — the second challenge the paper
+//! studies. Physically the engine stores KV in fixed slots of a packed
+//! device tensor; *logically* this manager accounts pages the way a
+//! vLLM-style paged allocator would:
+//!
+//! * a request's prompt KV is a **shared prefix**: one set of pages,
+//!   refcounted by its N branches (paper §4: "we share prefix KV cache
+//!   across branches");
+//! * each branch **reserves** its worst-case decode pages at admission
+//!   (conservative Orca-style reservation — no mid-flight preemption, so
+//!   a branch can always run to completion once admitted);
+//! * pruning / early stopping / completion releases the branch pages
+//!   immediately, and the prefix pages when the last sibling terminates —
+//!   this is exactly the release path that lets SART batch more requests.
+//!
+//! Admission control asks `can_admit`; the scheduler combines this with
+//! engine-slot availability.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Handle for a request's shared prompt pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixId(pub u64);
+
+/// Handle for one branch's reserved decode pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BranchId(pub u64);
+
+#[derive(Debug)]
+struct Prefix {
+    pages: usize,
+    refcount: usize,
+}
+
+#[derive(Debug)]
+struct BranchAlloc {
+    prefix: PrefixId,
+    reserved_pages: usize,
+    /// Tokens actually decoded so far (informational — the budget is
+    /// charged at reservation time).
+    grown_tokens: usize,
+}
+
+/// Paged KV accounting with a hard page budget.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    page_tokens: usize,
+    capacity_pages: usize,
+    used_pages: usize,
+    prefixes: HashMap<u64, Prefix>,
+    branches: HashMap<u64, BranchAlloc>,
+    next_id: u64,
+    /// High-water mark, for metrics.
+    peak_pages: usize,
+}
+
+fn pages_for(tokens: usize, page_tokens: usize) -> usize {
+    tokens.div_ceil(page_tokens)
+}
+
+impl KvCacheManager {
+    pub fn new(capacity_tokens: usize, page_tokens: usize) -> KvCacheManager {
+        assert!(page_tokens > 0 && capacity_tokens >= page_tokens);
+        KvCacheManager {
+            page_tokens,
+            capacity_pages: capacity_tokens / page_tokens,
+            used_pages: 0,
+            prefixes: HashMap::new(),
+            branches: HashMap::new(),
+            next_id: 0,
+            peak_pages: 0,
+        }
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    pub fn used_tokens_upper_bound(&self) -> usize {
+        self.used_pages * self.page_tokens
+    }
+
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.capacity_pages - self.used_pages
+    }
+
+    fn admission_pages(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> usize {
+        pages_for(prompt_len, self.page_tokens)
+            + n_branches * pages_for(max_new, self.page_tokens)
+    }
+
+    /// Would admitting a request with `n_branches` branches fit the budget?
+    pub fn can_admit(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> bool {
+        self.admission_pages(prompt_len, max_new, n_branches) <= self.free_pages()
+    }
+
+    /// Can `n_more` additional branches be attached to an existing prefix?
+    pub fn can_grow(&self, max_new: usize, n_more: usize) -> bool {
+        n_more * pages_for(max_new, self.page_tokens) <= self.free_pages()
+    }
+
+    /// Admit a request: allocate the shared prefix plus one reservation per
+    /// branch. Fails (without side effects) if over budget.
+    pub fn admit(
+        &mut self,
+        prompt_len: usize,
+        max_new: usize,
+        n_branches: usize,
+    ) -> Result<(PrefixId, Vec<BranchId>)> {
+        if !self.can_admit(prompt_len, max_new, n_branches) {
+            bail!(
+                "kv budget exceeded: need {} pages, {} free",
+                self.admission_pages(prompt_len, max_new, n_branches),
+                self.free_pages()
+            );
+        }
+        let prefix_pages = pages_for(prompt_len, self.page_tokens);
+        let branch_pages = pages_for(max_new, self.page_tokens);
+        let pid = self.next_id;
+        self.next_id += 1;
+        self.prefixes
+            .insert(pid, Prefix { pages: prefix_pages, refcount: n_branches });
+        self.used_pages += prefix_pages;
+        let mut branch_ids = Vec::with_capacity(n_branches);
+        for _ in 0..n_branches {
+            let bid = self.next_id;
+            self.next_id += 1;
+            self.branches.insert(
+                bid,
+                BranchAlloc {
+                    prefix: PrefixId(pid),
+                    reserved_pages: branch_pages,
+                    grown_tokens: 0,
+                },
+            );
+            self.used_pages += branch_pages;
+            branch_ids.push(BranchId(bid));
+        }
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        Ok((PrefixId(pid), branch_ids))
+    }
+
+    /// Attach `n_more` branches to an existing shared prefix (Rebase tree
+    /// expansion: a fork reuses the prompt pages and reserves fresh decode
+    /// pages). Fails without side effects if over budget.
+    pub fn grow(
+        &mut self,
+        prefix: PrefixId,
+        max_new: usize,
+        n_more: usize,
+    ) -> Result<Vec<BranchId>> {
+        if !self.prefixes.contains_key(&prefix.0) {
+            bail!("grow on unknown prefix {prefix:?}");
+        }
+        if !self.can_grow(max_new, n_more) {
+            bail!(
+                "kv budget exceeded on grow: need {} pages, {} free",
+                n_more * pages_for(max_new, self.page_tokens),
+                self.free_pages()
+            );
+        }
+        let branch_pages = pages_for(max_new, self.page_tokens);
+        let mut out = Vec::with_capacity(n_more);
+        for _ in 0..n_more {
+            let bid = self.next_id;
+            self.next_id += 1;
+            self.branches.insert(
+                bid,
+                BranchAlloc {
+                    prefix,
+                    reserved_pages: branch_pages,
+                    grown_tokens: 0,
+                },
+            );
+            self.used_pages += branch_pages;
+            out.push(BranchId(bid));
+        }
+        self.prefixes.get_mut(&prefix.0).unwrap().refcount += n_more;
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        Ok(out)
+    }
+
+    /// Record decode progress (informational; reservation already charged).
+    pub fn note_decode(&mut self, branch: BranchId, new_tokens: usize) -> Result<()> {
+        match self.branches.get_mut(&branch.0) {
+            Some(b) => {
+                b.grown_tokens += new_tokens;
+                Ok(())
+            }
+            None => bail!("note_decode on unknown branch {branch:?}"),
+        }
+    }
+
+    /// Tokens actually decoded by live branches (Fig. 3's "running tokens").
+    pub fn live_decoded_tokens(&self) -> usize {
+        self.branches.values().map(|b| b.grown_tokens).sum()
+    }
+
+    /// Release a branch (pruned / early-stopped / completed). Frees its
+    /// reservation immediately; frees the prefix when the last sibling
+    /// terminates. Double release is an error (caught by tests).
+    pub fn release_branch(&mut self, branch: BranchId) -> Result<()> {
+        let Some(b) = self.branches.remove(&branch.0) else {
+            bail!("double release of branch {branch:?}");
+        };
+        debug_assert!(self.used_pages >= b.reserved_pages);
+        self.used_pages -= b.reserved_pages;
+        let prefix = self
+            .prefixes
+            .get_mut(&b.prefix.0)
+            .expect("branch with dangling prefix");
+        prefix.refcount -= 1;
+        if prefix.refcount == 0 {
+            let p = self.prefixes.remove(&b.prefix.0).unwrap();
+            debug_assert!(self.used_pages >= p.pages);
+            self.used_pages -= p.pages;
+        }
+        Ok(())
+    }
+
+    /// Number of live branches (for invariant checks).
+    pub fn live_branches(&self) -> usize {
+        self.branches.len()
+    }
+
+    pub fn live_prefixes(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// Internal invariant: used_pages equals the sum of all live
+    /// allocations. Exposed for property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        let computed: usize = self.prefixes.values().map(|p| p.pages).sum::<usize>()
+            + self.branches.values().map(|b| b.reserved_pages).sum::<usize>();
+        if computed != self.used_pages {
+            bail!("accounting drift: computed {computed} != used {}", self.used_pages);
+        }
+        if self.used_pages > self.capacity_pages {
+            bail!("over budget: {} > {}", self.used_pages, self.capacity_pages);
+        }
+        for b in self.branches.values() {
+            if !self.prefixes.contains_key(&b.prefix.0) {
+                bail!("branch references dead prefix");
+            }
+        }
+        let refsum: usize = self.prefixes.values().map(|p| p.refcount).sum();
+        if refsum != self.branches.len() {
+            bail!("refcount drift: {} != {}", refsum, self.branches.len());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut kv = KvCacheManager::new(1024, 16);
+        let (_, branches) = kv.admit(30, 100, 4).unwrap();
+        // prefix: ceil(30/16)=2, branch: ceil(100/16)=7 → 2 + 28 = 30.
+        assert_eq!(kv.used_pages(), 30);
+        kv.check_invariants().unwrap();
+        for b in &branches[..3] {
+            kv.release_branch(*b).unwrap();
+        }
+        // prefix still held by last branch.
+        assert_eq!(kv.used_pages(), 2 + 7);
+        assert_eq!(kv.live_prefixes(), 1);
+        kv.release_branch(branches[3]).unwrap();
+        assert_eq!(kv.used_pages(), 0);
+        assert_eq!(kv.live_prefixes(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control_blocks() {
+        let mut kv = KvCacheManager::new(160, 16); // 10 pages
+        assert!(kv.can_admit(16, 32, 4)); // 1 + 4*2 = 9
+        let (_, _b) = kv.admit(16, 32, 4).unwrap();
+        assert!(!kv.can_admit(16, 32, 1)); // needs 3 more, only 1 free
+        assert!(kv.admit(16, 32, 1).is_err());
+        assert_eq!(kv.used_pages(), 9); // failed admit has no side effects
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut kv = KvCacheManager::new(1024, 16);
+        let (_, branches) = kv.admit(10, 10, 1).unwrap();
+        kv.release_branch(branches[0]).unwrap();
+        assert!(kv.release_branch(branches[0]).is_err());
+    }
+
+    #[test]
+    fn prefix_sharing_saves_pages() {
+        let mut shared = KvCacheManager::new(10_000, 16);
+        shared.admit(64, 64, 8).unwrap(); // 4 + 8*4 = 36
+        let mut unshared = KvCacheManager::new(10_000, 16);
+        for _ in 0..8 {
+            unshared.admit(64, 64, 1).unwrap(); // 8 * (4+4) = 64
+        }
+        assert!(shared.used_pages() < unshared.used_pages());
+        assert_eq!(shared.used_pages(), 36);
+        assert_eq!(unshared.used_pages(), 64);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut kv = KvCacheManager::new(1024, 16);
+        let (_, b) = kv.admit(16, 16, 2).unwrap();
+        let peak = kv.used_pages();
+        for bid in b {
+            kv.release_branch(bid).unwrap();
+        }
+        assert_eq!(kv.peak_pages(), peak);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn page_rounding() {
+        assert_eq!(pages_for(0, 16), 0);
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
+    }
+}

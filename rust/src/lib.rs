@@ -1,0 +1,46 @@
+//! # SART — Serving LLM Reasoning Efficiently and Accurately
+//!
+//! Rust L3 coordinator of the three-layer reproduction of
+//! *"Thinking Short and Right Over Thinking Long"* (2025). The paper's
+//! contribution — **redundant sampling with early stopping** plus
+//! **two-phase dynamic pruning** integrated with continuous batching
+//! (Algorithm 1) — lives in [`coordinator`]; everything below it is the
+//! serving substrate built from scratch for this repo:
+//!
+//! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them on
+//!   device-resident buffers (Python is never on the request path).
+//! * [`engine`] — the batched decode engine over fixed KV-cache slots,
+//!   with an HLO-backed implementation and a virtual-time simulation twin
+//!   used by tests and full-scale figure sweeps.
+//! * [`kvcache`] — paged KV-cache accounting with prefix sharing and
+//!   refcounts; its token budget is what turns branch over-subscription
+//!   into queuing delay, exactly the effect the paper studies.
+//! * [`sampler`], [`tokenizer`] — host-side sampling (per-branch RNG) and
+//!   the SynthMath token vocabulary mirrored from `python/compile/vocab.py`.
+//! * [`prm`] — the process-reward-model client used by dynamic pruning.
+//! * [`baselines`] — Vanilla, Self-Consistency and Rebase, each running on
+//!   the same engine/batcher substrate for fair comparison.
+//! * [`workload`], [`metrics`], [`server`] — request generation (Poisson
+//!   arrivals over the synthetic datasets), percentile/accuracy/timeline
+//!   metrics, and the serving front-end.
+//! * [`analysis`] — the order-statistics machinery behind Lemma 1.
+//! * [`util`], [`testkit`] — std-only JSON/npy/RNG/stats substrates and an
+//!   in-repo property-testing helper (the offline registry has no
+//!   proptest; see DESIGN.md §2).
+
+pub mod analysis;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod prm;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

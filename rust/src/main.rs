@@ -1,0 +1,135 @@
+//! `sart` — the serving CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve     run one serving experiment and print the report
+//!   bench     run all methods on one shared workload (comparison table)
+//!   inspect   print artifact manifest / model inventory
+//!
+//! Examples:
+//!   sart serve --method sart:8 --dataset synth-gpqa --rate 4 --requests 64
+//!   sart serve --engine hlo --model r1mini-tiny --method sart:4 --slots 8
+//!   sart bench --requests 32 --rate 2
+//!   sart inspect
+
+use anyhow::{bail, Result};
+use sart::config::{Args, Method, ServeSpec};
+use sart::metrics::ServeReport;
+use sart::server;
+use sart::util::stats::render_table;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match all.split_first() {
+        Some((c, r)) if !c.starts_with("--") => (c.clone(), r.to_vec()),
+        _ => ("serve".to_string(), all),
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (serve|bench|inspect)"),
+    }
+}
+
+const HELP: &str = "sart <serve|bench|inspect> [flags]
+  --method   vanilla|self-consistency|sart|sart-noprune|rebase (suffix :N)
+  --n/--m/--alpha/--beta   SART knobs (defaults N=8, M=N/2, 0.5, N/2)
+  --engine   sim|hlo        --model  r1mini-tiny|r1mini-small
+  --dataset  synth-gaokao|synth-gpqa
+  --requests INT  --rate REQ/S (0=batch)  --slots INT  --kv-tokens INT
+  --t-round INT  --temp F  --seed INT  --stepwise (disable fused decode)";
+
+fn print_report(r: &ServeReport) {
+    let rows = vec![r.row()];
+    println!("{}", render_table(&ServeReport::ROW_HEADERS, &rows));
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spec = ServeSpec::from_args(args)?;
+    eprintln!("# spec: {spec:?}");
+    let out = server::run(&spec)?;
+    eprintln!("# engine: {}", out.engine_desc);
+    print_report(&out.report);
+    println!(
+        "answered={:.3} tokens/req={:.1} branches/req={:.2} pruned/req={:.2}",
+        out.report.answered,
+        out.report.tokens_per_request,
+        out.report.branches_started_per_request,
+        out.report.branches_pruned_per_request,
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let base = ServeSpec::from_args(args)?;
+    let n = args.usize_or("n", 8)?;
+    let trace = server::trace_for(&base)?;
+    let methods = [
+        Method::Vanilla,
+        Method::SelfConsistency { n },
+        Method::Rebase { n },
+        Method::Sart {
+            n,
+            m: (n / 2).max(1),
+            alpha: 0.5,
+            beta: (n / 2).max(1),
+        },
+    ];
+    let mut rows = Vec::new();
+    for m in methods {
+        let mut spec = base.clone();
+        spec.method = m;
+        let out = server::run_on_trace(&spec, &trace)?;
+        rows.push(out.report.row());
+    }
+    println!("{}", render_table(&ServeReport::ROW_HEADERS, &rows));
+    Ok(())
+}
+
+fn cmd_inspect(_args: &Args) -> Result<()> {
+    let dir = sart::runtime::artifacts_dir();
+    let manifest = sart::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: d={} L={} H={} ff={} vocab={} max_seq={} \
+             prompt={} chunk_t={}",
+            m.config.d_model,
+            m.config.n_layers,
+            m.config.n_heads,
+            m.config.d_ff,
+            m.config.vocab_size,
+            m.config.max_seq,
+            m.config.prompt_len,
+            m.chunk_t
+        );
+        println!(
+            "  params: {} tensors, {} elements",
+            m.params.len(),
+            m.params.iter().map(|p| p.num_elements).sum::<usize>()
+        );
+        println!("  decode buckets: {:?}", m.decode.batches());
+    }
+    println!(
+        "prm {}: {} tensors; score buckets {:?}",
+        manifest.prm.name,
+        manifest.prm.params.len(),
+        manifest.prm.score.batches()
+    );
+    for (name, d) in &manifest.datasets {
+        println!("dataset {name}: {d:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Serving metrics: latency percentiles, accuracy, resource timelines.
+//!
+//! Produces exactly the quantities the paper's evaluation section reports:
+//! P50/P90/P97/P99 end-to-end and inference latencies (Figs. 5, 7),
+//! accuracy (ratio of correctly answered requests), response-length and
+//! queuing-time distributions (Figs. 2, 6), and the running-branch /
+//! running-token timelines of Fig. 3.
+
+use crate::coordinator::RequestOutcome;
+use crate::util::stats::{percentile, Summary};
+
+/// One sample of engine/queue occupancy (taken once per decode round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelinePoint {
+    pub t: f64,
+    pub running_branches: usize,
+    pub running_tokens: usize,
+    pub kv_pages_used: usize,
+    pub queued_requests: usize,
+}
+
+/// Occupancy over a serve run (Fig. 3's x-axis is `t`).
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub points: Vec<TimelinePoint>,
+}
+
+impl Timeline {
+    /// Down-sample to at most `n` evenly spaced points (plot-friendly).
+    pub fn downsample(&self, n: usize) -> Vec<TimelinePoint> {
+        if self.points.len() <= n || n == 0 {
+            return self.points.clone();
+        }
+        let stride = self.points.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| self.points[(i as f64 * stride) as usize])
+            .collect()
+    }
+
+    pub fn peak_branches(&self) -> usize {
+        self.points.iter().map(|p| p.running_branches).max().unwrap_or(0)
+    }
+
+    pub fn peak_tokens(&self) -> usize {
+        self.points.iter().map(|p| p.running_tokens).max().unwrap_or(0)
+    }
+
+    /// Time-weighted mean of running branches.
+    pub fn mean_branches(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|p| p.running_branches as f64)
+                .unwrap_or(0.0);
+        }
+        let mut area = 0.0;
+        let mut dur = 0.0;
+        for w in self.points.windows(2) {
+            let dt = (w[1].t - w[0].t).max(0.0);
+            area += w[0].running_branches as f64 * dt;
+            dur += dt;
+        }
+        if dur > 0.0 {
+            area / dur
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate report over one serve run (one method × one workload).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub label: String,
+    pub n_requests: usize,
+    pub accuracy: f64,
+    pub answered: f64,
+    pub e2e: Summary,
+    pub queue: Summary,
+    pub inference: Summary,
+    pub response_lengths: Vec<f64>,
+    pub queue_latencies: Vec<f64>,
+    pub e2e_latencies: Vec<f64>,
+    pub inference_latencies: Vec<f64>,
+    pub total_tokens: usize,
+    pub tokens_per_request: f64,
+    pub branches_started_per_request: f64,
+    pub branches_pruned_per_request: f64,
+}
+
+impl ServeReport {
+    pub fn from_outcomes(label: &str, outcomes: &[RequestOutcome]) -> ServeReport {
+        assert!(!outcomes.is_empty(), "empty outcome set");
+        let e2e: Vec<f64> = outcomes.iter().map(|o| o.e2e_latency()).collect();
+        let queue: Vec<f64> =
+            outcomes.iter().map(|o| o.queue_latency()).collect();
+        let inference: Vec<f64> =
+            outcomes.iter().map(|o| o.inference_latency()).collect();
+        let lengths: Vec<f64> = outcomes
+            .iter()
+            .flat_map(|o| o.response_lengths.iter().map(|&l| l as f64))
+            .collect();
+        let correct =
+            outcomes.iter().filter(|o| o.correct()).count() as f64;
+        let answered =
+            outcomes.iter().filter(|o| o.answer.is_some()).count() as f64;
+        let total_tokens: usize =
+            outcomes.iter().map(|o| o.tokens_generated).sum();
+        let n = outcomes.len() as f64;
+        ServeReport {
+            label: label.to_string(),
+            n_requests: outcomes.len(),
+            accuracy: correct / n,
+            answered: answered / n,
+            e2e: Summary::of(&e2e),
+            queue: Summary::of(&queue),
+            inference: Summary::of(&inference),
+            response_lengths: lengths,
+            queue_latencies: queue.clone(),
+            e2e_latencies: e2e,
+            inference_latencies: inference,
+            total_tokens,
+            tokens_per_request: total_tokens as f64 / n,
+            branches_started_per_request: outcomes
+                .iter()
+                .map(|o| o.branches_started as f64)
+                .sum::<f64>()
+                / n,
+            branches_pruned_per_request: outcomes
+                .iter()
+                .map(|o| o.branches_pruned as f64)
+                .sum::<f64>()
+                / n,
+        }
+    }
+
+    /// Percentile of the E2E latency distribution.
+    pub fn e2e_percentile(&self, p: f64) -> f64 {
+        percentile(&self.e2e_latencies, p)
+    }
+
+    /// One-line summary (comparison tables).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            format!("{}", self.n_requests),
+            format!("{:.3}", self.accuracy),
+            format!("{:.2}", self.e2e.p50),
+            format!("{:.2}", self.e2e.p90),
+            format!("{:.2}", self.e2e.p97),
+            format!("{:.2}", self.e2e.p99),
+            format!("{:.2}", self.queue.p50),
+            format!("{:.1}", self.tokens_per_request),
+        ]
+    }
+
+    pub const ROW_HEADERS: [&'static str; 9] = [
+        "method", "reqs", "acc", "e2e-p50", "e2e-p90", "e2e-p97", "e2e-p99",
+        "queue-p50", "tok/req",
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: usize, arrival: f64, admit: f64, finish: f64,
+               correct: bool) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            dataset: "d".into(),
+            arrival,
+            admitted_at: admit,
+            finished_at: finish,
+            answer: Some(if correct { 1 } else { 2 }),
+            truth: 1,
+            branches_started: 4,
+            branches_pruned: 1,
+            branches_completed: 2,
+            tokens_generated: 50,
+            response_lengths: vec![10, 30],
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let outs = vec![
+            outcome(0, 0.0, 1.0, 5.0, true),
+            outcome(1, 0.0, 2.0, 8.0, false),
+        ];
+        let r = ServeReport::from_outcomes("x", &outs);
+        assert_eq!(r.n_requests, 2);
+        assert_eq!(r.accuracy, 0.5);
+        assert_eq!(r.answered, 1.0);
+        assert_eq!(r.total_tokens, 100);
+        assert_eq!(r.response_lengths.len(), 4);
+        assert!((r.e2e.mean - 6.5).abs() < 1e-12);
+        assert!((r.queue.mean - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_stats() {
+        let tl = Timeline {
+            points: vec![
+                TimelinePoint { t: 0.0, running_branches: 2,
+                                running_tokens: 10, kv_pages_used: 3,
+                                queued_requests: 0 },
+                TimelinePoint { t: 1.0, running_branches: 6,
+                                running_tokens: 50, kv_pages_used: 9,
+                                queued_requests: 2 },
+                TimelinePoint { t: 3.0, running_branches: 1,
+                                running_tokens: 5, kv_pages_used: 1,
+                                queued_requests: 0 },
+            ],
+        };
+        assert_eq!(tl.peak_branches(), 6);
+        assert_eq!(tl.peak_tokens(), 50);
+        // (2*1 + 6*2) / 3 = 14/3
+        assert!((tl.mean_branches() - 14.0 / 3.0).abs() < 1e-12);
+        assert_eq!(tl.downsample(2).len(), 2);
+        assert_eq!(tl.downsample(100).len(), 3);
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT client wrapper: compile HLO-text artifacts, manage device buffers.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute_b`. All serving
+//! executables are single-output (the packed state array — see
+//! `python/compile/model.py` "Packed serving state"), so the
+//! tuple-buffer limitation of the binding never bites.
+
+use super::manifest::{ModelArtifacts, ParamEntry, PrmArtifacts};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Shared PJRT CPU client (cheap to clone — refcounted C++ handle).
+#[derive(Clone)]
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled single-output executable plus its uploaded weights.
+///
+/// Calling convention (matches `aot.py` lowering order): the flattened
+/// sorted-name parameters first, then the entry-specific operands.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Uploaded once; shared across all executables of the same model.
+    params: Rc<Vec<xla::PjRtBuffer>>,
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a model's `params.bin` as device buffers (once per model).
+    pub fn load_params(
+        &self,
+        bin_path: &Path,
+        entries: &[ParamEntry],
+    ) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        let bytes = std::fs::read(bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let expected: usize =
+            entries.iter().map(|e| e.num_elements * 4).sum();
+        if bytes.len() != expected {
+            bail!(
+                "{}: size {} != manifest total {}",
+                bin_path.display(),
+                bytes.len(),
+                expected
+            );
+        }
+        let mut bufs = Vec::with_capacity(entries.len());
+        for e in entries {
+            let start = e.offset_bytes;
+            let end = start + e.num_elements * 4;
+            let mut host = vec![0f32; e.num_elements];
+            byte_to_f32(&bytes[start..end], &mut host);
+            // Scalars/1-d/N-d all upload with their manifest shape.
+            let dims: Vec<usize> = if e.shape.is_empty() {
+                vec![]
+            } else {
+                e.shape.clone()
+            };
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&host, &dims, None)
+                .map_err(|err| {
+                    anyhow::anyhow!("uploading param `{}`: {err}", e.name)
+                })?;
+            bufs.push(buf);
+        }
+        Ok(Rc::new(bufs))
+    }
+
+    /// Compile one HLO-text artifact.
+    pub fn compile(
+        &self,
+        hlo_path: &Path,
+        params: Rc<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("parsing {}: {e}", hlo_path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", hlo_path.display()))?;
+        Ok(Executable {
+            exe,
+            params,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Upload an f32 host array.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+    }
+
+    /// Upload an i32 host array.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+    }
+
+    /// Upload a u32 host array (PRNG key data).
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload u32: {e}"))
+    }
+}
+
+impl Executable {
+    /// Execute with the model params followed by `operands`; returns the
+    /// single output buffer.
+    pub fn run(&self, operands: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.params.len() + operands.len());
+        args.extend(self.params.iter());
+        args.extend(operands.iter().copied());
+        let mut outs = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        if outs.is_empty() {
+            bail!("no replicas in execute output");
+        }
+        let mut replica0 = outs.remove(0);
+        if replica0.len() != 1 {
+            bail!(
+                "expected single-output executable, got {} outputs \
+                 (tuple roots are unsupported by the runtime — see model.py)",
+                replica0.len()
+            );
+        }
+        Ok(replica0.remove(0))
+    }
+}
+
+/// Read back a whole (small) device buffer as f32 via its literal.
+/// NOTE: the CPU PJRT client does not implement CopyRawToHost, so partial
+/// readback of big buffers must go through a `peek` executable that
+/// slices on device first.
+pub fn read_f32(buf: &xla::PjRtBuffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("readback: {e}"))?;
+    let all: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal decode: {e}"))?;
+    if offset + len > all.len() {
+        anyhow::bail!("readback out of range: {}+{} > {}", offset, len,
+                      all.len());
+    }
+    Ok(all[offset..offset + len].to_vec())
+}
+
+fn byte_to_f32(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len() * 4);
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+/// Convenience bundle: a model's compiled entry points at one batch size.
+pub struct ModelExecutables {
+    pub batch: usize,
+    pub decode: Executable,
+    pub prefill: Executable,
+    pub decode_chunk: Executable,
+    /// Param-free control-prefix readback (the CPU PJRT client lacks
+    /// CopyRawToHost, so partial readback slices on device).
+    pub peek: Executable,
+}
+
+impl Runtime {
+    /// Compile a model's three entry points at (bucketed) batch size `b`.
+    pub fn load_model(
+        &self,
+        art: &ModelArtifacts,
+        batch: usize,
+    ) -> Result<ModelExecutables> {
+        let params = self.load_params(&art.params_bin, &art.params)?;
+        let pick = |set: &super::manifest::ExecutableSet,
+                    what: &str|
+         -> Result<std::path::PathBuf> {
+            let b = set.bucket_for(batch).with_context(|| {
+                format!("no {what} executable for batch {batch}")
+            })?;
+            if b != batch {
+                bail!(
+                    "{what}: requested batch {batch} but only buckets {:?} \
+                     exported — pass a compiled batch size",
+                    set.batches()
+                );
+            }
+            Ok(set.by_batch[&b].clone())
+        };
+        Ok(ModelExecutables {
+            batch,
+            decode: self.compile(&pick(&art.decode, "decode")?, params.clone())?,
+            prefill: self
+                .compile(&pick(&art.prefill, "prefill")?, params.clone())?,
+            decode_chunk: self
+                .compile(&pick(&art.decode_chunk, "decode_chunk")?,
+                         params.clone())?,
+            peek: self.compile(&pick(&art.peek, "peek")?,
+                               Rc::new(Vec::new()))?,
+        })
+    }
+
+    /// Compile the PRM scorer's sequence-bucket executables (fixed batch).
+    pub fn load_prm(
+        &self,
+        art: &PrmArtifacts,
+    ) -> Result<std::collections::BTreeMap<usize, Executable>> {
+        let params = self.load_params(&art.params_bin, &art.params)?;
+        let mut out = std::collections::BTreeMap::new();
+        for (&seq, path) in &art.score.by_batch {
+            out.insert(seq, self.compile(path, params.clone())?);
+        }
+        if out.is_empty() {
+            bail!("no PRM executable buckets");
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_conversion_roundtrip() {
+        let vals = [0.0f32, 1.5, -2.25, f32::MAX];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = [0f32; 4];
+        byte_to_f32(&bytes, &mut out);
+        assert_eq!(out, vals);
+    }
+}

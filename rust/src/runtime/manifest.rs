@@ -1,0 +1,352 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `artifacts/manifest.json` describes, per model: the architecture
+//! config, the parameter layout inside `params.bin`, the packed serving
+//! state layout, and which HLO files implement which entry point at which
+//! batch size. Everything is validated here so a stale or inconsistent
+//! artifacts directory fails at load, not mid-serve.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Architecture of one LM (mirror of `model.ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .with_context(|| format!("config `{k}` not an int"))
+        };
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_head: u("d_head")?,
+            d_ff: u("d_ff")?,
+            vocab_size: u("vocab_size")?,
+            max_seq: u("max_seq")?,
+            prompt_len: u("prompt_len")?,
+        })
+    }
+
+    /// Elements in the packed KV cache for `batch` slots.
+    pub fn kv_elements(&self, batch: usize) -> usize {
+        self.n_layers * 2 * batch * self.n_heads * self.max_seq * self.d_head
+    }
+}
+
+/// One tensor inside `params.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub num_elements: usize,
+}
+
+/// Offsets (elements) of the packed serving-state segments, for one
+/// (model, batch) pair. Mirror of `model.state_offsets`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StateLayout {
+    pub batch: usize,
+    pub chunk_t: usize,
+    pub tokens_out: (usize, usize),
+    pub logits: (usize, usize),
+    pub lengths: (usize, usize),
+    pub alive: (usize, usize),
+    pub kv: (usize, usize),
+    pub total: usize,
+}
+
+impl StateLayout {
+    pub fn new(cfg: &ModelConfig, batch: usize, chunk_t: usize) -> StateLayout {
+        let mut off = 0;
+        let mut seg = |n: usize| {
+            let s = (off, n);
+            off += n;
+            s
+        };
+        let tokens_out = seg(batch * chunk_t);
+        let logits = seg(batch * cfg.vocab_size);
+        let lengths = seg(batch);
+        let alive = seg(batch);
+        let kv = seg(cfg.kv_elements(batch));
+        StateLayout {
+            batch,
+            chunk_t,
+            tokens_out,
+            logits,
+            lengths,
+            alive,
+            kv,
+            total: off,
+        }
+    }
+}
+
+/// Executable inventory for one model: entry-point -> batch -> HLO path.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutableSet {
+    pub by_batch: BTreeMap<usize, PathBuf>,
+}
+
+impl ExecutableSet {
+    fn from_json(root: &Path, j: &Json) -> Result<ExecutableSet> {
+        let mut by_batch = BTreeMap::new();
+        for (k, v) in j.as_obj().context("executable set not an object")? {
+            let b: usize = k.parse().context("batch key not an int")?;
+            let rel = v.as_str().context("executable path not a string")?;
+            by_batch.insert(b, root.join(rel));
+        }
+        Ok(ExecutableSet { by_batch })
+    }
+
+    /// Smallest compiled batch bucket that fits `n` (or the largest one).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.by_batch
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .or_else(|| self.by_batch.keys().copied().last())
+    }
+
+    pub fn batches(&self) -> Vec<usize> {
+        self.by_batch.keys().copied().collect()
+    }
+}
+
+/// Everything about one servable model.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub params_bin: PathBuf,
+    pub params: Vec<ParamEntry>,
+    pub chunk_t: usize,
+    pub decode: ExecutableSet,
+    pub prefill: ExecutableSet,
+    pub decode_chunk: ExecutableSet,
+    pub peek: ExecutableSet,
+}
+
+/// PRM artifacts (trunk config is opaque to rust; only shapes matter).
+#[derive(Debug, Clone)]
+pub struct PrmArtifacts {
+    pub name: String,
+    pub max_seq: usize,
+    pub params_bin: PathBuf,
+    pub params: Vec<ParamEntry>,
+    /// Fixed scoring batch size.
+    pub batch: usize,
+    /// Keyed by SEQUENCE bucket (not batch): pick the smallest bucket
+    /// that fits the longest prefix in a chunk.
+    pub score: ExecutableSet,
+}
+
+/// The parsed artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub prm: PrmArtifacts,
+    pub datasets: BTreeMap<String, crate::workload::TaskSpec>,
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamEntry>> {
+    let mut out = Vec::new();
+    let mut expected_offset = 0usize;
+    for p in j.as_arr().context("params not an array")? {
+        let e = ParamEntry {
+            name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: p
+                .req("shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            offset_bytes: p.req("offset_bytes")?.as_usize().unwrap_or(0),
+            num_elements: p.req("num_elements")?.as_usize().unwrap_or(0),
+        };
+        if e.offset_bytes != expected_offset {
+            bail!("param `{}` offset {} != expected {} (params.bin layout \
+                   must be contiguous)", e.name, e.offset_bytes, expected_offset);
+        }
+        let shape_elems: usize = e.shape.iter().product();
+        if shape_elems != e.num_elements {
+            bail!("param `{}` shape/size mismatch", e.name);
+        }
+        expected_offset += e.num_elements * 4;
+        out.push(e);
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json` (+ tokenizer drift check).
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "cannot read {}/manifest.json — run `make artifacts` first",
+                    root.display()
+                )
+            })?;
+        let j = Json::parse(&text).context("manifest.json parse error")?;
+
+        let tok_text = std::fs::read_to_string(root.join("tokenizer.json"))
+            .context("cannot read tokenizer.json")?;
+        let tok = Json::parse(&tok_text).context("tokenizer.json parse error")?;
+        crate::tokenizer::verify_spec(&tok)?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let config = ModelConfig::from_json(m.req("config")?)?;
+            let execs = m.req("executables")?;
+            let art = ModelArtifacts {
+                config,
+                params_bin: root
+                    .join(m.req("params_bin")?.as_str().unwrap_or_default()),
+                params: parse_params(m.req("params")?)?,
+                chunk_t: m.req("chunk_t")?.as_usize().unwrap_or(0),
+                decode: ExecutableSet::from_json(&root, execs.req("decode")?)?,
+                prefill: ExecutableSet::from_json(&root, execs.req("prefill")?)?,
+                decode_chunk: ExecutableSet::from_json(
+                    &root,
+                    execs.req("decode_chunk")?,
+                )?,
+                peek: ExecutableSet::from_json(&root, execs.req("peek")?)?,
+            };
+            if art.chunk_t == 0 {
+                bail!("model `{name}`: chunk_t missing/zero");
+            }
+            models.insert(name.clone(), art);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+
+        let pj = j.req("prm")?;
+        let prm = PrmArtifacts {
+            name: pj
+                .req("config")?
+                .req("name")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            max_seq: pj.req("config")?.req("max_seq")?.as_usize().unwrap_or(0),
+            params_bin: root
+                .join(pj.req("params_bin")?.as_str().unwrap_or_default()),
+            params: parse_params(pj.req("params")?)?,
+            batch: pj.get("batch").and_then(|b| b.as_usize()).unwrap_or(8),
+            score: ExecutableSet::from_json(
+                &root,
+                pj.req("executables")?.req("score")?,
+            )?,
+        };
+
+        let mut datasets = BTreeMap::new();
+        if let Some(ds) = j.get("datasets").and_then(|d| d.as_obj()) {
+            for (k, v) in ds {
+                datasets
+                    .insert(k.clone(), crate::workload::TaskSpec::from_json(v)?);
+            }
+        }
+
+        Ok(Manifest { root, models, prm, datasets })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model `{name}` not in artifacts (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            d_ff: 256,
+            vocab_size: 32,
+            max_seq: 256,
+            prompt_len: 32,
+        }
+    }
+
+    #[test]
+    fn state_layout_contiguous() {
+        let l = StateLayout::new(&cfg(), 8, 16);
+        assert_eq!(l.tokens_out, (0, 128));
+        assert_eq!(l.logits.0, 128);
+        assert_eq!(l.logits.1, 8 * 32);
+        assert_eq!(l.lengths.1, 8);
+        assert_eq!(l.alive.1, 8);
+        assert_eq!(l.kv.1, 2 * 2 * 8 * 2 * 256 * 32);
+        assert_eq!(l.total, l.kv.0 + l.kv.1);
+    }
+
+    #[test]
+    fn kv_elements_formula() {
+        assert_eq!(cfg().kv_elements(1), 2 * 2 * 1 * 2 * 256 * 32);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let mut s = ExecutableSet::default();
+        for b in [1usize, 4, 16] {
+            s.by_batch.insert(b, PathBuf::from(format!("x{b}")));
+        }
+        assert_eq!(s.bucket_for(1), Some(1));
+        assert_eq!(s.bucket_for(3), Some(4));
+        assert_eq!(s.bucket_for(5), Some(16));
+        assert_eq!(s.bucket_for(99), Some(16)); // clamped to largest
+    }
+
+    #[test]
+    fn params_layout_validation() {
+        let good = Json::parse(
+            r#"[{"name":"a","shape":[2,3],"offset_bytes":0,"num_elements":6},
+                {"name":"b","shape":[4],"offset_bytes":24,"num_elements":4}]"#,
+        )
+        .unwrap();
+        assert_eq!(parse_params(&good).unwrap().len(), 2);
+        let gap = Json::parse(
+            r#"[{"name":"a","shape":[2,3],"offset_bytes":8,"num_elements":6}]"#,
+        )
+        .unwrap();
+        assert!(parse_params(&gap).is_err());
+        let mismatch = Json::parse(
+            r#"[{"name":"a","shape":[2,3],"offset_bytes":0,"num_elements":5}]"#,
+        )
+        .unwrap();
+        assert!(parse_params(&mismatch).is_err());
+    }
+}

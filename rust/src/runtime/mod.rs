@@ -1,0 +1,24 @@
+//! PJRT runtime: artifact loading and AOT-executable execution.
+//!
+//! This is the bridge between the rust coordinator (L3) and the
+//! AOT-compiled JAX/Pallas graphs (L2/L1): [`manifest`] parses the
+//! artifacts contract, [`client`] compiles the HLO text on the PJRT CPU
+//! client and executes it on device-resident buffers. Python is never
+//! invoked from here — the artifacts directory is the entire interface.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{read_f32, Executable, ModelExecutables, Runtime};
+pub use manifest::{
+    ExecutableSet, Manifest, ModelArtifacts, ModelConfig, ParamEntry,
+    PrmArtifacts, StateLayout,
+};
+
+/// Default artifacts location (relative to the repo root); overridable via
+/// `SART_ARTIFACTS` for tests and installed deployments.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SART_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}

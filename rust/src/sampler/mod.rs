@@ -1,0 +1,177 @@
+//! Host-side token sampling and answer aggregation.
+//!
+//! In single-step mode the coordinator samples from the logits the engine
+//! reads back, with one deterministic RNG stream per branch. In fused-chunk
+//! mode sampling happens in-graph (gumbel argmax with the same
+//! temperature semantics); both paths mask PAD, which is never a legal
+//! generation. Aggregation implements the two decision rules the paper
+//! uses: majority voting (Self-Consistency) and highest-reward (SART,
+//! Best-of-N).
+
+use crate::tokenizer::Token;
+use crate::util::rng::Rng;
+
+/// Temperature + top-k sampling over a logits row. `top_k == 0` disables
+/// the top-k filter. PAD (token 0) is always masked.
+pub fn sample_token(logits: &[f32], temp: f32, top_k: usize, rng: &mut Rng) -> Token {
+    debug_assert!(!logits.is_empty());
+    if temp <= 0.0 {
+        return argmax_nonpad(logits);
+    }
+    let inv = 1.0 / temp;
+    // Scaled logits with PAD masked.
+    let mut scaled: Vec<(usize, f32)> = logits
+        .iter()
+        .enumerate()
+        .skip(1) // PAD = 0
+        .map(|(i, &l)| (i, l * inv))
+        .collect();
+    if top_k > 0 && top_k < scaled.len() {
+        scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scaled.truncate(top_k);
+    }
+    let max = scaled
+        .iter()
+        .map(|&(_, l)| l)
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = scaled
+        .iter()
+        .map(|&(_, l)| ((l - max) as f64).exp())
+        .collect();
+    scaled[rng.weighted(&weights)].0 as Token
+}
+
+fn argmax_nonpad(logits: &[f32]) -> Token {
+    let mut best = 1usize;
+    for (i, &l) in logits.iter().enumerate().skip(1) {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best as Token
+}
+
+/// Majority vote over per-branch answers (None = no/invalid answer).
+/// Ties break toward the answer that reached the count first, which is
+/// also the earliest-completed branch — matching Self-Consistency's
+/// behaviour under streaming completion.
+pub fn majority_vote(answers: &[Option<u8>]) -> Option<u8> {
+    let mut counts = [0usize; 10];
+    let mut best: Option<u8> = None;
+    let mut best_count = 0usize;
+    for a in answers.iter().flatten() {
+        let c = &mut counts[*a as usize];
+        *c += 1;
+        if *c > best_count {
+            best_count = *c;
+            best = Some(*a);
+        }
+    }
+    best
+}
+
+/// Highest-reward completed answer (SART's final decision rule).
+pub fn best_reward_vote(answers: &[(Option<u8>, f32)]) -> Option<u8> {
+    let mut best: Option<(u8, f32)> = None;
+    for (a, r) in answers {
+        if let Some(a) = a {
+            match best {
+                Some((_, br)) if *r <= br => {}
+                _ => best = Some((*a, *r)),
+            }
+        }
+    }
+    best.map(|(a, _)| a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_with_peak(peak: usize, v: f32) -> Vec<f32> {
+        let mut l = vec![0.0f32; 32];
+        l[peak] = v;
+        l
+    }
+
+    #[test]
+    fn greedy_when_temp_zero() {
+        let l = logits_with_peak(7, 3.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(sample_token(&l, 0.0, 0, &mut rng), 7);
+        }
+    }
+
+    #[test]
+    fn never_samples_pad() {
+        // PAD has a huge logit but must be masked.
+        let mut l = vec![-5.0f32; 32];
+        l[0] = 100.0;
+        l[3] = 1.0;
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            assert_ne!(sample_token(&l, 1.0, 0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let mut l = vec![0.0f32; 8];
+        l[2] = 2.0;
+        l[5] = 1.5;
+        let mut rng = Rng::new(2);
+        let mut count_hot = |temp: f32, rng: &mut Rng| {
+            (0..2000)
+                .filter(|_| sample_token(&l, temp, 0, rng) == 2)
+                .count()
+        };
+        let cold = count_hot(0.2, &mut rng);
+        let hot = count_hot(2.0, &mut rng);
+        assert!(cold > hot, "cold={cold} hot={hot}");
+    }
+
+    #[test]
+    fn top_k_filters() {
+        let mut l = vec![0.0f32; 8];
+        l[2] = 3.0;
+        l[5] = 2.0;
+        l[6] = 1.0;
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let t = sample_token(&l, 5.0, 2, &mut rng);
+            assert!(t == 2 || t == 5, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let l: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..50 {
+            assert_eq!(
+                sample_token(&l, 0.9, 0, &mut a),
+                sample_token(&l, 0.9, 0, &mut b)
+            );
+        }
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        assert_eq!(
+            majority_vote(&[Some(3), Some(3), Some(7), None]),
+            Some(3)
+        );
+        assert_eq!(majority_vote(&[None, None]), None);
+        // First-to-count tie-break.
+        assert_eq!(majority_vote(&[Some(1), Some(2)]), Some(1));
+    }
+
+    #[test]
+    fn best_reward_picks_max() {
+        let v = [(Some(4u8), 0.2f32), (Some(9), 0.8), (None, 0.99)];
+        assert_eq!(best_reward_vote(&v), Some(9));
+        assert_eq!(best_reward_vote(&[(None, 1.0)]), None);
+    }
+}

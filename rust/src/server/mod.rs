@@ -1,0 +1,240 @@
+//! Serving front-end: builds the engine/PRM/scheduler stack from a
+//! [`ServeSpec`] and runs a trace to a [`ServeReport`].
+//!
+//! This is the single entry point every binary uses (the `sart` CLI, the
+//! examples, and the figure harnesses), guaranteeing that all experiments
+//! exercise the same code path the server does.
+
+use crate::baselines::{RebaseConfig, RebaseScheduler};
+use crate::config::{EngineChoice, Method, PrmChoice, ServeSpec};
+use crate::coordinator::{ClockHandle, SchedConfig, Scheduler};
+use crate::engine::hlo::{DecodeMode, HloEngine};
+use crate::engine::sim::{SimCostModel, SimEngine};
+use crate::engine::Engine;
+use crate::metrics::{ServeReport, Timeline};
+use crate::prm::{HloPrm, OraclePrm, PrmScorer};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::clock::{RealClock, SimClock};
+use crate::workload::{batch_trace, poisson_trace, Request, TaskSpec};
+use anyhow::{Context, Result};
+
+/// Everything produced by one serve run.
+pub struct RunOutput {
+    pub report: ServeReport,
+    pub timeline: Timeline,
+    pub outcomes: Vec<crate::coordinator::RequestOutcome>,
+    /// Engine identity string (log/record provenance).
+    pub engine_desc: String,
+}
+
+/// Generate the workload trace for a spec.
+pub fn trace_for(spec: &ServeSpec) -> Result<Vec<Request>> {
+    let task = TaskSpec::by_name(&spec.dataset)?;
+    Ok(if spec.rate > 0.0 {
+        poisson_trace(&task, spec.n_requests, spec.rate, spec.seed)
+    } else {
+        batch_trace(&task, spec.n_requests, spec.seed)
+    })
+}
+
+/// Build the engine for a spec. HLO engines load `artifacts/` via the
+/// `SART_ARTIFACTS` override or the default path.
+pub fn build_engine(spec: &ServeSpec) -> Result<Box<dyn Engine>> {
+    match &spec.engine {
+        EngineChoice::Sim => {
+            let task = TaskSpec::by_name(&spec.dataset)?;
+            Ok(Box::new(SimEngine::new(
+                spec.slots,
+                256,
+                task,
+                SimCostModel::default(),
+            )))
+        }
+        EngineChoice::Hlo { model, fused } => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(crate::runtime::artifacts_dir())?;
+            let mode = if *fused {
+                DecodeMode::Fused
+            } else {
+                DecodeMode::Stepwise
+            };
+            let engine =
+                HloEngine::load(rt, &manifest, model, spec.slots, mode,
+                                spec.seed)
+                    .with_context(|| format!("loading HLO engine `{model}`"))?;
+            Ok(Box::new(engine))
+        }
+    }
+}
+
+/// Build the PRM scorer for a spec.
+pub fn build_prm(spec: &ServeSpec) -> Result<Box<dyn PrmScorer>> {
+    match &spec.prm {
+        PrmChoice::Oracle { sigma } => {
+            Ok(Box::new(OraclePrm::new(*sigma, spec.seed ^ 0x9137)))
+        }
+        PrmChoice::Hlo => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(crate::runtime::artifacts_dir())?;
+            Ok(Box::new(HloPrm::load(rt, &manifest, spec.slots.min(16))?))
+        }
+    }
+}
+
+fn clock_for(spec: &ServeSpec) -> ClockHandle {
+    match spec.engine {
+        EngineChoice::Sim => ClockHandle::Sim(SimClock::new()),
+        EngineChoice::Hlo { .. } => ClockHandle::Real(RealClock::new()),
+    }
+}
+
+/// Run one full serving experiment.
+pub fn run(spec: &ServeSpec) -> Result<RunOutput> {
+    let trace = trace_for(spec)?;
+    run_on_trace(spec, &trace)
+}
+
+/// Run a spec against an explicit trace (shared-workload comparisons).
+pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
+    let mut engine = build_engine(spec)?;
+    let mut prm = build_prm(spec)?;
+    let engine_desc = engine.describe();
+    let label = spec.method.label();
+
+    let (outcomes, timeline) = match spec.method {
+        Method::Rebase { n } => {
+            let cfg = RebaseConfig {
+                n_leaves: n,
+                t_round: spec.t_round,
+                temperature: spec.temperature,
+                max_new: spec.max_new,
+                reward_tau: 0.2,
+                spawn_cap: 3 * n,
+                kv_capacity_tokens: spec.kv_capacity_tokens,
+                kv_page_tokens: spec.kv_page_tokens,
+                seed: spec.seed,
+            };
+            let mut sched = RebaseScheduler::new(
+                cfg,
+                engine.as_mut(),
+                prm.as_mut(),
+                clock_for(spec),
+            );
+            sched.serve(trace)?
+        }
+        _ => {
+            let policy = spec
+                .method
+                .policy()
+                .context("non-rebase method must map to a policy")?;
+            let cfg = SchedConfig {
+                policy,
+                t_round: spec.t_round,
+                temperature: spec.temperature,
+                max_new: spec.max_new,
+                kv_capacity_tokens: spec.kv_capacity_tokens,
+                kv_page_tokens: spec.kv_page_tokens,
+                seed: spec.seed,
+            };
+            let mut sched = Scheduler::new(
+                cfg,
+                engine.as_mut(),
+                prm.as_mut(),
+                clock_for(spec),
+            );
+            let res = sched.serve(trace)?;
+            (res.outcomes, res.timeline)
+        }
+    };
+    let report = ServeReport::from_outcomes(&label, &outcomes);
+    Ok(RunOutput { report, timeline, outcomes, engine_desc })
+}
+
+/// Sample `n` independent full responses for one question directly through
+/// an engine (no scheduler) — the probe used by the Fig. 2 length/quality
+/// study and the quickstart.
+pub fn sample_branches(
+    engine: &mut dyn Engine,
+    question: &crate::workload::Question,
+    n: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<Vec<Vec<crate::tokenizer::Token>>> {
+    use crate::engine::PrefillEntry;
+    let slots = engine.caps().slots;
+    let max_new = engine.caps().max_seq - engine.caps().prompt_len;
+    let mut out = Vec::with_capacity(n);
+    let mut next = 0usize;
+    while next < n {
+        let wave = (n - next).min(slots);
+        let entries: Vec<PrefillEntry> = (0..wave)
+            .map(|i| PrefillEntry {
+                slot: i,
+                prompt: question.prompt_tokens(),
+                seed: seed ^ ((next + i) as u64).wrapping_mul(0x9E37),
+            })
+            .collect();
+        engine.prefill(&entries)?;
+        let mut done = vec![false; wave];
+        let mut gens: Vec<Vec<crate::tokenizer::Token>> =
+            vec![Vec::new(); wave];
+        while !done.iter().all(|&d| d) {
+            let active: Vec<usize> =
+                (0..wave).filter(|&i| !done[i]).collect();
+            let res = engine.decode(&active, 16, temp)?;
+            for (slot, toks) in &res.emitted {
+                gens[*slot].extend_from_slice(toks);
+                if gens[*slot].last() == Some(&crate::tokenizer::EOS)
+                    || gens[*slot].len() >= max_new
+                {
+                    done[*slot] = true;
+                    engine.release(*slot);
+                }
+            }
+        }
+        out.extend(gens);
+        next += wave;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Args;
+
+    fn spec(extra: &str) -> ServeSpec {
+        let args = Args::parse(
+            format!("--requests 8 --rate 2 {extra}")
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        ServeSpec::from_args(&args).unwrap()
+    }
+
+    #[test]
+    fn sim_run_all_methods() {
+        for m in ["vanilla", "sc:4", "sart:4", "sart-noprune:4", "rebase:4"] {
+            let mut s = spec(&format!("--method {m}"));
+            s.kv_capacity_tokens = 8192;
+            let out = run(&s).unwrap_or_else(|e| panic!("{m}: {e}"));
+            assert_eq!(out.report.n_requests, 8, "{m}");
+        }
+    }
+
+    #[test]
+    fn shared_trace_comparison_is_fair() {
+        let s1 = spec("--method sc:4");
+        let trace = trace_for(&s1).unwrap();
+        let out1 = run_on_trace(&s1, &trace).unwrap();
+        let s2 = spec("--method sart:4");
+        let out2 = run_on_trace(&s2, &trace).unwrap();
+        // Same workload: same request count, same arrival times.
+        assert_eq!(out1.report.n_requests, out2.report.n_requests);
+        assert_eq!(
+            out1.outcomes.last().unwrap().arrival,
+            out2.outcomes.last().unwrap().arrival
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! In-repo property-testing helper.
+//!
+//! The offline registry has no `proptest`, so this provides the subset we
+//! need: seeded random case generation, a fixed case budget, and
+//! shrink-lite reporting (on failure, the failing seed is printed so the
+//! case replays deterministically — `SART_PROP_SEED=<seed>` reruns just
+//! that case). Property tests over coordinator invariants live in
+//! `rust/tests/properties.rs`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via `SART_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("SART_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded inputs. On failure, panics with the
+/// case seed for replay. If `SART_PROP_SEED` is set, runs only that case.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(seed_str) = std::env::var("SART_PROP_SEED") {
+        let seed: u64 = seed_str.parse().expect("SART_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Decorrelate case seeds; keep them printable/replayable.
+        let seed = case
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(0x5851_F42D_4C95_7F2D);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} \
+                 (replay with SART_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Micro-benchmark support for the `harness = false` bench targets
+/// (criterion is unavailable offline; this prints the same headline
+/// numbers: mean / p50 / p95 per iteration).
+pub mod bench {
+    use crate::util::stats::{percentile, mean};
+    use std::time::Instant;
+
+    /// Time `iters` runs of `f` after `warmup` runs; print a stats row.
+    pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6); // µs
+        }
+        println!(
+            "{name:<44} {:>10.1} µs/iter  p50 {:>10.1}  p95 {:>10.1}  (n={iters})",
+            mean(&samples),
+            percentile(&samples, 50.0),
+            percentile(&samples, 95.0),
+        );
+    }
+
+    /// Like [`run`] but for fallible bodies; panics on error.
+    pub fn run_result<F: FnMut() -> anyhow::Result<()>>(
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) {
+        run(name, warmup, iters, || f().expect("bench body failed"));
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("trivial", 16, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `bad` failed")]
+    fn check_fails_with_seed_report() {
+        check("bad", 16, |rng| {
+            let x = rng.below(10);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! SynthMath tokenizer — the rust mirror of `python/compile/vocab.py`.
+//!
+//! Token ids are compiled in as constants (they define the wire format of
+//! the trained model) and *verified* against `artifacts/tokenizer.json` at
+//! load time, so a drift between the python and rust sides fails fast
+//! instead of silently mis-decoding.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+pub type Token = i32;
+
+pub const PAD: Token = 0;
+pub const BOS: Token = 1;
+pub const EOS: Token = 2;
+pub const Q: Token = 3;
+pub const EQ: Token = 4;
+pub const THINK: Token = 5;
+pub const ETHINK: Token = 6;
+pub const ANS: Token = 7;
+pub const STEP: Token = 8;
+pub const RECHECK: Token = 9;
+pub const DIGIT_BASE: Token = 10;
+pub const PLUS: Token = 20;
+pub const MUL: Token = 21;
+pub const EQUALS: Token = 22;
+pub const VOCAB_SIZE: usize = 32;
+
+/// Token id of digit `d` (0..=9).
+#[inline]
+pub fn digit(d: u8) -> Token {
+    debug_assert!(d <= 9);
+    DIGIT_BASE + d as Token
+}
+
+#[inline]
+pub fn is_digit(tok: Token) -> bool {
+    (DIGIT_BASE..DIGIT_BASE + 10).contains(&tok)
+}
+
+#[inline]
+pub fn digit_value(tok: Token) -> Option<u8> {
+    if is_digit(tok) {
+        Some((tok - DIGIT_BASE) as u8)
+    } else {
+        None
+    }
+}
+
+/// Extract the answered digit: the digit following the *last* `<ans>`
+/// marker (mirrors `data.extract_answer`).
+pub fn extract_answer(tokens: &[Token]) -> Option<u8> {
+    let mut ans_idx = None;
+    for (i, &t) in tokens.iter().enumerate() {
+        if t == ANS {
+            ans_idx = Some(i);
+        }
+    }
+    let i = ans_idx?;
+    tokens.get(i + 1).copied().and_then(digit_value)
+}
+
+/// Human-readable rendering (logs / quickstart output).
+pub fn detokenize(tokens: &[Token]) -> String {
+    tokens
+        .iter()
+        .map(|&t| name(t))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+pub fn name(tok: Token) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        Q => "<q>".into(),
+        EQ => "</q>".into(),
+        THINK => "<think>".into(),
+        ETHINK => "</think>".into(),
+        ANS => "<ans>".into(),
+        STEP => "<step>".into(),
+        RECHECK => "<recheck>".into(),
+        PLUS => "+".into(),
+        MUL => "*".into(),
+        EQUALS => "=".into(),
+        t if is_digit(t) => format!("{}", t - DIGIT_BASE),
+        t => format!("<{t}?>"),
+    }
+}
+
+/// Verify the compiled-in constants against `artifacts/tokenizer.json`.
+pub fn verify_spec(spec: &Json) -> Result<()> {
+    let checks: &[(&str, Token)] = &[
+        ("pad", PAD),
+        ("bos", BOS),
+        ("eos", EOS),
+        ("q", Q),
+        ("eq", EQ),
+        ("think", THINK),
+        ("ethink", ETHINK),
+        ("ans", ANS),
+        ("step", STEP),
+        ("recheck", RECHECK),
+        ("digit_base", DIGIT_BASE),
+        ("plus", PLUS),
+        ("mul", MUL),
+        ("equals", EQUALS),
+    ];
+    for (key, expected) in checks {
+        let got = spec
+            .req(key)?
+            .as_i64()
+            .with_context(|| format!("tokenizer.json `{key}` not a number"))?
+            as Token;
+        if got != *expected {
+            bail!("tokenizer drift: `{key}` is {got} in artifacts but {expected} in rust");
+        }
+    }
+    let vs = spec.req("vocab_size")?.as_usize().unwrap_or(0);
+    if vs != VOCAB_SIZE {
+        bail!("tokenizer drift: vocab_size {vs} != {VOCAB_SIZE}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digit_roundtrip() {
+        for d in 0..=9u8 {
+            assert_eq!(digit_value(digit(d)), Some(d));
+        }
+        assert_eq!(digit_value(PLUS), None);
+        assert_eq!(digit_value(DIGIT_BASE + 10), None);
+    }
+
+    #[test]
+    fn extracts_last_answer() {
+        // ... <ans> 3 ... <ans> 7 <eos>
+        let toks = vec![BOS, ANS, digit(3), RECHECK, ANS, digit(7), EOS];
+        assert_eq!(extract_answer(&toks), Some(7));
+    }
+
+    #[test]
+    fn answer_missing_or_malformed() {
+        assert_eq!(extract_answer(&[BOS, EOS]), None);
+        assert_eq!(extract_answer(&[ANS]), None); // nothing after marker
+        assert_eq!(extract_answer(&[ANS, PLUS, EOS]), None); // non-digit
+    }
+
+    #[test]
+    fn verify_spec_accepts_generated() {
+        // Simulate the python-side spec.
+        let spec = Json::parse(
+            r#"{"vocab_size":32,"pad":0,"bos":1,"eos":2,"q":3,"eq":4,
+                "think":5,"ethink":6,"ans":7,"step":8,"recheck":9,
+                "digit_base":10,"plus":20,"mul":21,"equals":22}"#,
+        )
+        .unwrap();
+        verify_spec(&spec).unwrap();
+    }
+
+    #[test]
+    fn verify_spec_rejects_drift() {
+        let spec = Json::parse(
+            r#"{"vocab_size":32,"pad":0,"bos":1,"eos":3,"q":3,"eq":4,
+                "think":5,"ethink":6,"ans":7,"step":8,"recheck":9,
+                "digit_base":10,"plus":20,"mul":21,"equals":22}"#,
+        )
+        .unwrap();
+        assert!(verify_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn detokenize_readable() {
+        let s = detokenize(&[BOS, Q, digit(3), PLUS, digit(4), EQ, THINK]);
+        assert_eq!(s, "<bos> <q> 3 + 4 </q> <think>");
+    }
+}

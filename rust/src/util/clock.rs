@@ -1,0 +1,110 @@
+//! Real and virtual clocks.
+//!
+//! The coordinator is written against [`Clock`] so the exact same
+//! scheduling code runs (a) in real time against the HLO engine and (b) in
+//! virtual time against the simulation engine, where decode-step cost is
+//! modeled and time advances discretely. Virtual time makes the full-scale
+//! figure sweeps deterministic and fast.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Monotonic seconds-since-start.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock backed by `Instant`.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Discrete-event virtual clock; shared (Rc) between the simulation
+/// engine (which advances it) and the scheduler/metrics (which read it).
+#[derive(Clone)]
+pub struct SimClock {
+    t: Rc<Cell<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { t: Rc::new(Cell::new(0.0)) }
+    }
+
+    pub fn advance(&self, dt: f64) {
+        debug_assert!(dt >= 0.0, "time can only move forward");
+        self.t.set(self.t.get() + dt);
+    }
+
+    /// Jump directly to an absolute time (used when the scheduler idles
+    /// until the next arrival).
+    pub fn advance_to(&self, t: f64) {
+        if t > self.t.get() {
+            self.t.set(t);
+        }
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.t.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        let c2 = c.clone();
+        c2.advance(0.5);
+        assert_eq!(c.now(), 2.0); // shared state
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let c = SimClock::new();
+        c.advance(5.0);
+        c.advance_to(3.0);
+        assert_eq!(c.now(), 5.0);
+        c.advance_to(7.0);
+        assert_eq!(c.now(), 7.0);
+    }
+
+    #[test]
+    fn real_clock_monotone() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

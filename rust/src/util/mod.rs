@@ -1,0 +1,12 @@
+//! Std-only utility substrates.
+//!
+//! The offline build environment has no serde/rand/criterion, so the
+//! small pieces of infrastructure the coordinator needs are implemented
+//! here from scratch: a JSON parser ([`json`]), deterministic RNGs
+//! ([`rng`]), descriptive statistics ([`stats`]) and a real/virtual clock
+//! abstraction ([`clock`]).
+
+pub mod clock;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,184 @@
+//! Descriptive statistics: percentiles, histograms, summaries.
+//!
+//! The paper reports percentile latencies (P50/P90/P97/P99) and
+//! length/queuing-time distributions; this module computes them and
+//! renders the aligned text tables the figure harnesses print.
+
+/// Percentile by linear interpolation on the sorted sample (numpy
+/// `percentile(..., method="linear")`), matching how the paper's plots
+/// are typically produced.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+pub fn std_dev(samples: &[f64]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(samples);
+    (samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+        / (samples.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Standard latency summary used across all experiment tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p97: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        Summary {
+            n: samples.len(),
+            mean: mean(samples),
+            p50: percentile(samples, 50.0),
+            p90: percentile(samples, 90.0),
+            p97: percentile(samples, 97.0),
+            p99: percentile(samples, 99.0),
+            max: samples.iter().cloned().fold(f64::MIN, f64::max),
+        }
+    }
+}
+
+/// Fixed-width bucket histogram over [0, bucket_width * n_buckets); the
+/// last bucket absorbs overflow (paper Fig. 2 length buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bucket_width: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(bucket_width: f64, n_buckets: usize) -> Histogram {
+        assert!(bucket_width > 0.0 && n_buckets > 0);
+        Histogram { bucket_width, counts: vec![0; n_buckets] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = ((x / self.bucket_width) as usize)
+            .min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Label like "2-3" for bucket i (units of bucket_width).
+    pub fn label(&self, i: usize) -> String {
+        format!("{}-{}", i, i + 1)
+    }
+}
+
+/// Render an aligned text table (the figure harness output format).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:>w$}", cell, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    let header_cells: Vec<String> =
+        headers.iter().map(|s| s.to_string()).collect();
+    fmt_row(&header_cells, &widths, &mut out);
+    let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        fmt_row(row, &widths, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p97 && s.p97 <= s.p99);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(10.0, 3);
+        h.add(5.0);
+        h.add(15.0);
+        h.add(999.0); // overflow -> last bucket
+        assert_eq!(h.counts, vec![1, 1, 1]);
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.label(2), "2-3");
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = render_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["10".into(), "x".into()]],
+        );
+        assert!(t.contains("a"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn std_dev_known() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((std_dev(&v) - 2.138089935).abs() < 1e-6);
+    }
+}

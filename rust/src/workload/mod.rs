@@ -1,0 +1,466 @@
+//! Workload generation: questions, datasets, arrival processes, traces.
+//!
+//! Rust mirror of `python/compile/data.py` (SynthHop: multi-hop pointer
+//! chasing over an in-context digit map). The *question* generator
+//! produces the serving requests (with ground-truth answers so accuracy is
+//! measurable); the *trajectory* sampler reproduces the corpus generative
+//! process and powers the simulation engine's scripted branches (the HLO
+//! engine generates tokens from the trained model instead).
+
+use crate::tokenizer as tok;
+use crate::tokenizer::Token;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+pub const NUM_KEYS: usize = 10;
+
+/// Difficulty profile of a dataset (mirror of `data.TaskSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub name: String,
+    pub min_hops: u32,
+    pub max_hops: u32,
+    pub p_err: f64,
+    pub p_rethink: f64,
+    pub p_continue: f64,
+}
+
+impl TaskSpec {
+    pub fn synth_gaokao() -> TaskSpec {
+        TaskSpec {
+            name: "synth-gaokao".into(),
+            min_hops: 3,
+            max_hops: 5,
+            p_err: 0.08,
+            p_rethink: 0.35,
+            p_continue: 0.55,
+        }
+    }
+
+    pub fn synth_gpqa() -> TaskSpec {
+        TaskSpec {
+            name: "synth-gpqa".into(),
+            min_hops: 5,
+            max_hops: 8,
+            p_err: 0.13,
+            p_rethink: 0.6,
+            p_continue: 0.6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<TaskSpec> {
+        match name {
+            "synth-gaokao" => Ok(Self::synth_gaokao()),
+            "synth-gpqa" => Ok(Self::synth_gpqa()),
+            _ => bail!("unknown dataset `{name}`"),
+        }
+    }
+
+    /// Parse from the manifest's `datasets` section (keeps python and rust
+    /// presets in lockstep; integration tests assert equality).
+    pub fn from_json(j: &Json) -> Result<TaskSpec> {
+        Ok(TaskSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            min_hops: j.req("min_hops")?.as_usize().unwrap_or(0) as u32,
+            max_hops: j.req("max_hops")?.as_usize().unwrap_or(0) as u32,
+            p_err: j.req("p_err")?.as_f64().unwrap_or(0.0),
+            p_rethink: j.req("p_rethink")?.as_f64().unwrap_or(0.0),
+            p_continue: j.req("p_continue")?.as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// One request: a digit map, a start digit and a hop count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Question {
+    pub mapping: [u8; NUM_KEYS], // mapping[k] = value of key k
+    pub start: u8,
+    pub hops: u8,
+}
+
+impl Question {
+    pub fn answer(&self) -> u8 {
+        let mut cur = self.start;
+        for _ in 0..self.hops {
+            cur = self.mapping[cur as usize];
+        }
+        cur
+    }
+
+    /// `<q> k v k v ... + start hops </q>` — key order must match
+    /// `data.Question.tokens()` exactly (the trained model saw that order).
+    pub fn tokens(&self) -> Vec<Token> {
+        let mut order: Vec<usize> = (0..NUM_KEYS).collect();
+        order.sort_by_key(|&k| {
+            ((self.mapping[k] as usize * 7 + k * 3) % NUM_KEYS, k)
+        });
+        let mut out = vec![tok::Q];
+        for k in order {
+            out.push(tok::digit(k as u8));
+            out.push(tok::digit(self.mapping[k]));
+        }
+        out.push(tok::PLUS);
+        out.push(tok::digit(self.start));
+        out.push(tok::digit(self.hops % 10));
+        out.push(tok::EQ);
+        out
+    }
+
+    /// Serving prompt: `<bos> <question> <think>`.
+    pub fn prompt_tokens(&self) -> Vec<Token> {
+        let mut out = vec![tok::BOS];
+        out.extend(self.tokens());
+        out.push(tok::THINK);
+        out
+    }
+
+    /// Parse a question back out of its serving prompt — the inverse of
+    /// `prompt_tokens`. Used by the simulation engine and the oracle PRM,
+    /// which only ever see token streams (keeping their interfaces
+    /// identical to the HLO-backed implementations).
+    pub fn from_prompt(prompt: &[Token]) -> Result<Question> {
+        // <bos> <q> (k v)*10 + start hops </q> <think>
+        if prompt.len() != 27
+            || prompt[0] != tok::BOS
+            || prompt[1] != tok::Q
+            || prompt[22] != tok::PLUS
+            || prompt[25] != tok::EQ
+            || prompt[26] != tok::THINK
+        {
+            bail!("malformed prompt: {:?}", prompt);
+        }
+        let d = |t: Token| -> Result<u8> {
+            tok::digit_value(t)
+                .ok_or_else(|| anyhow::anyhow!("expected digit, got {t}"))
+        };
+        let mut mapping = [0u8; NUM_KEYS];
+        let mut seen = [false; NUM_KEYS];
+        for pair in prompt[2..22].chunks(2) {
+            let k = d(pair[0])? as usize;
+            if seen[k] {
+                bail!("duplicate key {k} in prompt");
+            }
+            seen[k] = true;
+            mapping[k] = d(pair[1])?;
+        }
+        Ok(Question {
+            mapping,
+            start: d(prompt[23])?,
+            hops: d(prompt[24])?,
+        })
+    }
+
+    pub fn sample(spec: &TaskSpec, rng: &mut Rng) -> Question {
+        let mut mapping = [0u8; NUM_KEYS];
+        for m in mapping.iter_mut() {
+            *m = rng.below(10) as u8;
+        }
+        Question {
+            mapping,
+            start: rng.below(10) as u8,
+            hops: rng.int_range(spec.min_hops as i64, spec.max_hops as i64)
+                as u8,
+        }
+    }
+}
+
+/// One scripted derivation pass (mirror of `data._derivation`).
+fn derivation(q: &Question, spec: &TaskSpec, rng: &mut Rng) -> (Vec<Token>, u8) {
+    let mut toks = Vec::new();
+    let mut cur = q.start as i64;
+    for _ in 0..q.hops {
+        let mut next = q.mapping[cur as usize] as i64;
+        if rng.chance(spec.p_err) {
+            let delta = if rng.chance(0.5) { 1 } else { -1 };
+            next = (next + delta).rem_euclid(10);
+        }
+        toks.extend([
+            tok::STEP,
+            tok::digit(cur as u8),
+            tok::EQUALS,
+            tok::digit(next as u8),
+        ]);
+        cur = next;
+    }
+    (toks, cur as u8)
+}
+
+/// Scripted *response* (the part generated after the prompt): mirrors
+/// `data.sample_trajectory` but returns only the post-`<think>` suffix,
+/// which is what the SimEngine feeds the coordinator token by token.
+pub fn sample_response(
+    q: &Question,
+    spec: &TaskSpec,
+    rng: &mut Rng,
+    max_len: usize,
+) -> Vec<Token> {
+    let prompt_len = q.prompt_tokens().len();
+    let (mut body, mut ans) = derivation(q, spec, rng);
+    if rng.chance(spec.p_rethink) {
+        loop {
+            let (extra, ans2) = derivation(q, spec, rng);
+            // +4: </think> <ans> digit <eos>.
+            if prompt_len + body.len() + 1 + extra.len() + 4 > max_len {
+                break;
+            }
+            body.push(tok::RECHECK);
+            body.extend(extra);
+            ans = ans2;
+            if !rng.chance(spec.p_continue) {
+                break;
+            }
+        }
+    }
+    body.extend([tok::ETHINK, tok::ANS, tok::digit(ans), tok::EOS]);
+    body
+}
+
+/// Parse the chain state at the end of a step-boundary-aligned generated
+/// prefix: (current value, steps completed in the latest derivation).
+/// Returns None if the prefix is malformed or not at a boundary.
+pub fn chain_state(q: &Question, generated: &[Token]) -> Option<(u8, u32)> {
+    let start = generated
+        .iter()
+        .rposition(|&t| t == tok::RECHECK)
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let seg = &generated[start..];
+    if seg.len() % 4 != 0 {
+        return None; // mid-step
+    }
+    let mut cur = q.start;
+    let mut steps = 0u32;
+    for chunk in seg.chunks(4) {
+        if chunk[0] != tok::STEP || chunk[2] != tok::EQUALS {
+            return None;
+        }
+        let c = tok::digit_value(chunk[1])?;
+        let n = tok::digit_value(chunk[3])?;
+        if c != cur {
+            return None; // broken chain — not a valid fork point
+        }
+        cur = n;
+        steps += 1;
+    }
+    Some((cur, steps))
+}
+
+/// Scripted *continuation* of a forked branch: finish the in-progress
+/// derivation from the given chain state (fresh slips), then optional
+/// re-think loops, then the answer tail. Mirrors the distribution
+/// `sample_response` conditions on the forced prefix.
+pub fn continue_response(
+    q: &Question,
+    spec: &TaskSpec,
+    forced: &[Token],
+    rng: &mut Rng,
+    max_len: usize,
+) -> Vec<Token> {
+    let Some((mut cur, steps_done)) = chain_state(q, forced) else {
+        // Defensive: if the fork point is unparsable, emit the tail.
+        return vec![tok::ETHINK, tok::ANS, tok::digit(q.start), tok::EOS];
+    };
+    let consumed = q.prompt_tokens().len() + forced.len();
+    let mut body = Vec::new();
+    // Finish the current derivation.
+    for _ in steps_done..q.hops as u32 {
+        let mut next = q.mapping[cur as usize] as i64;
+        if rng.chance(spec.p_err) {
+            let delta = if rng.chance(0.5) { 1 } else { -1 };
+            next = (next + delta).rem_euclid(10);
+        }
+        body.extend([tok::STEP, tok::digit(cur), tok::EQUALS,
+                     tok::digit(next as u8)]);
+        cur = next as u8;
+    }
+    let mut ans = cur;
+    // Optional re-think loops, budget-aware.
+    if rng.chance(spec.p_rethink) {
+        loop {
+            let (extra, ans2) = derivation(q, spec, rng);
+            if consumed + body.len() + 1 + extra.len() + 4 > max_len {
+                break;
+            }
+            body.push(tok::RECHECK);
+            body.extend(extra);
+            ans = ans2;
+            if !rng.chance(spec.p_continue) {
+                break;
+            }
+        }
+    }
+    body.extend([tok::ETHINK, tok::ANS, tok::digit(ans), tok::EOS]);
+    body
+}
+
+/// A request with its arrival time (seconds since serve start).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub question: Question,
+    pub arrival: f64,
+    pub dataset: String,
+}
+
+/// Generate a Poisson-arrival trace over a dataset.
+pub fn poisson_trace(
+    spec: &TaskSpec,
+    n_requests: usize,
+    rate: f64,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n_requests)
+        .map(|id| {
+            t += rng.exponential(rate);
+            Request {
+                id,
+                question: Question::sample(spec, &mut rng),
+                arrival: t,
+                dataset: spec.name.clone(),
+            }
+        })
+        .collect()
+}
+
+/// All requests arrive at t=0 (offline / batch evaluation mode).
+pub fn batch_trace(spec: &TaskSpec, n_requests: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n_requests)
+        .map(|id| Request {
+            id,
+            question: Question::sample(spec, &mut rng),
+            arrival: 0.0,
+            dataset: spec.name.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn spec() -> TaskSpec {
+        TaskSpec::synth_gaokao()
+    }
+
+    #[test]
+    fn question_answer_follows_chain() {
+        let mut mapping = [0u8; NUM_KEYS];
+        for (k, m) in mapping.iter_mut().enumerate() {
+            *m = ((k + 1) % 10) as u8; // successor map
+        }
+        let q = Question { mapping, start: 3, hops: 4 };
+        assert_eq!(q.answer(), 7);
+    }
+
+    #[test]
+    fn prompt_shape() {
+        let mut rng = Rng::new(0);
+        let q = Question::sample(&spec(), &mut rng);
+        let p = q.prompt_tokens();
+        assert_eq!(p[0], tok::BOS);
+        assert_eq!(p[1], tok::Q);
+        assert_eq!(*p.last().unwrap(), tok::THINK);
+        assert_eq!(p[p.len() - 2], tok::EQ);
+        // <bos> <q> (k v)*10 + start hops </q> <think> = 27 tokens.
+        assert_eq!(p.len(), 27);
+    }
+
+    #[test]
+    fn key_order_is_deterministic() {
+        let mut rng = Rng::new(4);
+        let q = Question::sample(&spec(), &mut rng);
+        assert_eq!(q.tokens(), q.tokens());
+        // All 10 keys present exactly once.
+        let toks = q.tokens();
+        let mut seen = [0u8; 10];
+        for pair in toks[1..21].chunks(2) {
+            seen[tok::digit_value(pair[0]).unwrap() as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn scripted_response_well_formed() {
+        let mut rng = Rng::new(1);
+        for i in 0..200 {
+            let mut r = rng.fork(i);
+            let q = Question::sample(&spec(), &mut r);
+            let resp = sample_response(&q, &spec(), &mut r, 256);
+            assert_eq!(*resp.last().unwrap(), tok::EOS);
+            assert!(resp.len() + q.prompt_tokens().len() <= 256);
+            assert!(tok::extract_answer(&resp).is_some());
+        }
+    }
+
+    #[test]
+    fn error_free_spec_always_correct() {
+        let mut rng = Rng::new(2);
+        let mut s = spec();
+        s.p_err = 0.0;
+        for i in 0..100 {
+            let mut r = rng.fork(i);
+            let q = Question::sample(&s, &mut r);
+            let resp = sample_response(&q, &s, &mut r, 256);
+            assert_eq!(tok::extract_answer(&resp), Some(q.answer()));
+        }
+    }
+
+    #[test]
+    fn rethink_lengthens_responses() {
+        let mut rng = Rng::new(3);
+        let mut never = spec();
+        never.p_rethink = 0.0;
+        let mut always = spec();
+        always.p_rethink = 1.0;
+        always.p_continue = 0.7;
+        let mean_len = |s: &TaskSpec, rng: &mut Rng| -> f64 {
+            let mut total = 0usize;
+            for i in 0..300 {
+                let mut r = rng.fork(i);
+                let q = Question::sample(s, &mut r);
+                total += sample_response(&q, s, &mut r, 256).len();
+            }
+            total as f64 / 300.0
+        };
+        let short = mean_len(&never, &mut rng);
+        let long = mean_len(&always, &mut rng);
+        assert!(long > short * 1.5, "short={short} long={long}");
+    }
+
+    #[test]
+    fn poisson_trace_monotone_arrivals() {
+        let trace = poisson_trace(&spec(), 50, 4.0, 7);
+        assert_eq!(trace.len(), 50);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // Mean inter-arrival ~ 1/4 s.
+        let mean = trace.last().unwrap().arrival / 50.0;
+        assert!(mean > 0.1 && mean < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = poisson_trace(&spec(), 10, 1.0, 42);
+        let b = poisson_trace(&spec(), 10, 1.0, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.question, y.question);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn taskspec_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"synth-gaokao","min_hops":3,"max_hops":5,
+                "p_err":0.08,"p_rethink":0.35,"p_continue":0.55}"#,
+        )
+        .unwrap();
+        assert_eq!(TaskSpec::from_json(&j).unwrap(), TaskSpec::synth_gaokao());
+    }
+}

@@ -1,0 +1,351 @@
+//! Property-based tests over system invariants (via `sart::testkit`,
+//! the in-repo stand-in for proptest — see DESIGN.md §2).
+
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::kvcache::KvCacheManager;
+use sart::prm::OraclePrm;
+use sart::prop_assert;
+use sart::testkit::{check, default_cases};
+use sart::tokenizer as tok;
+use sart::util::clock::SimClock;
+use sart::util::rng::Rng;
+use sart::util::stats::percentile;
+use sart::workload::{poisson_trace, Question, TaskSpec};
+
+// ---------------------------------------------------------------------------
+// KV-cache manager invariants under random admit/release interleavings.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kvcache_accounting_never_drifts() {
+    check("kvcache_accounting", default_cases(), |rng| {
+        let page = 1 + rng.below(32);
+        let cap_pages = 8 + rng.below(128);
+        let mut kv = KvCacheManager::new(cap_pages * page, page);
+        let mut live: Vec<sart::kvcache::BranchId> = Vec::new();
+        for _ in 0..200 {
+            if rng.chance(0.5) && !live.is_empty() {
+                let i = rng.below(live.len());
+                let b = live.swap_remove(i);
+                kv.release_branch(b).map_err(|e| e.to_string())?;
+            } else {
+                let prompt = 1 + rng.below(64);
+                let max_new = 1 + rng.below(256);
+                let n = 1 + rng.below(8);
+                if kv.can_admit(prompt, max_new, n) {
+                    let (_, bs) =
+                        kv.admit(prompt, max_new, n).map_err(|e| e.to_string())?;
+                    live.extend(bs);
+                } else {
+                    // can_admit=false must imply admit() errors too.
+                    prop_assert!(
+                        kv.admit(prompt, max_new, n).is_err(),
+                        "admit succeeded after can_admit said no"
+                    );
+                }
+            }
+            kv.check_invariants().map_err(|e| e.to_string())?;
+            prop_assert!(
+                kv.used_pages() <= kv.capacity_pages(),
+                "over budget: {} > {}",
+                kv.used_pages(),
+                kv.capacity_pages()
+            );
+        }
+        // Drain: releasing everything must return to exactly zero.
+        for b in live.drain(..) {
+            kv.release_branch(b).map_err(|e| e.to_string())?;
+        }
+        prop_assert!(kv.used_pages() == 0, "leak: {} pages", kv.used_pages());
+        prop_assert!(kv.live_prefixes() == 0, "prefix leak");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvcache_grow_shares_prefix() {
+    check("kvcache_grow", default_cases(), |rng| {
+        let mut kv = KvCacheManager::new(64 * 16, 16);
+        let (prefix, mut bs) = kv.admit(30, 60, 2).map_err(|e| e.to_string())?;
+        let before = kv.used_pages();
+        let more = 1 + rng.below(3);
+        if let Ok(grown) = kv.grow(prefix, 60, more) {
+            // Grow adds only branch pages (ceil(60/16)=4), no prefix pages.
+            prop_assert!(
+                kv.used_pages() == before + more * 4,
+                "grow page math wrong"
+            );
+            bs.extend(grown);
+        }
+        for b in bs {
+            kv.release_branch(b).map_err(|e| e.to_string())?;
+        }
+        prop_assert!(kv.used_pages() == 0, "leak after grow+release");
+        kv.check_invariants().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler invariants over random workloads/policies (SimEngine).
+// ---------------------------------------------------------------------------
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    let n = 1 << rng.below(4); // 1,2,4,8
+    match rng.below(4) {
+        0 => Policy::Vanilla,
+        1 => Policy::SelfConsistency { n },
+        2 => Policy::SartNoPrune { n, m: (n / 2).max(1) },
+        _ => Policy::Sart {
+            n,
+            m: (n / 2).max(1),
+            alpha: (0.3 + 0.4 * rng.f64()) as f32,
+            beta: (n / 2).max(1),
+        },
+    }
+}
+
+#[test]
+fn prop_scheduler_serves_every_request_exactly_once() {
+    check("scheduler_serves_all", 24, |rng| {
+        let policy = random_policy(rng);
+        let slots = 2 + rng.below(14);
+        let n_req = 4 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let spec = if rng.chance(0.5) {
+            TaskSpec::synth_gaokao()
+        } else {
+            TaskSpec::synth_gpqa()
+        };
+        let seed = rng.next_u64();
+        let trace = poisson_trace(&spec, n_req, rate, seed);
+        let mut engine = SimEngine::new(slots, 256, spec,
+                                        SimCostModel::default());
+        let mut prm = OraclePrm::new(0.1, seed ^ 7);
+        let cfg = SchedConfig {
+            policy,
+            t_round: 8 + rng.below(24),
+            temperature: 1.0,
+            max_new: 224,
+            kv_capacity_tokens: 16 * (64 + rng.below(1024)),
+            kv_page_tokens: 16,
+            seed,
+        };
+        let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                       ClockHandle::Sim(SimClock::new()));
+        let res = sched.serve(&trace).map_err(|e| e.to_string())?;
+        prop_assert!(res.outcomes.len() == n_req, "lost requests");
+        let n = policy.n_branches();
+        for o in &res.outcomes {
+            prop_assert!(o.finished_at >= o.arrival, "finished before arrival");
+            prop_assert!(o.admitted_at >= o.arrival, "admitted before arrival");
+            prop_assert!(o.finished_at >= o.admitted_at, "negative inference");
+            prop_assert!(o.branches_started <= n, "started more than N");
+            prop_assert!(
+                o.branches_completed + o.branches_pruned <= n,
+                "completed+pruned {} + {} > N {}",
+                o.branches_completed,
+                o.branches_pruned,
+                n
+            );
+            prop_assert!(o.branches_completed > 0, "finalized with nothing");
+        }
+        // Timeline occupancy can never exceed slot count.
+        for p in &res.timeline.points {
+            prop_assert!(p.running_branches <= slots, "slot overflow");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_early_stopping_dominates_waiting_for_all() {
+    // For the same workload and seed, SART-no-prune (M=N/2) must finish
+    // requests no later on average than Self-Consistency (M=N) — Lemma 1's
+    // operational consequence. Asserted on the mean to avoid per-request
+    // scheduling ties.
+    check("early_stop_dominates", 12, |rng| {
+        let n = 4 + 4 * rng.below(2); // 4 or 8
+        let seed = rng.next_u64();
+        let spec = TaskSpec::synth_gaokao();
+        let trace = poisson_trace(&spec, 10, 2.0, seed);
+        let mut run = |policy: Policy| -> Result<f64, String> {
+            let mut engine = SimEngine::new(8, 256, spec.clone(),
+                                            SimCostModel::default());
+            let mut prm = OraclePrm::new(0.1, seed);
+            let cfg = SchedConfig {
+                policy,
+                t_round: 16,
+                temperature: 1.0,
+                max_new: 224,
+                kv_capacity_tokens: 16384,
+                kv_page_tokens: 16,
+                seed,
+            };
+            let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                           ClockHandle::Sim(SimClock::new()));
+            let res = sched.serve(&trace).map_err(|e| e.to_string())?;
+            Ok(res
+                .outcomes
+                .iter()
+                .map(|o| o.e2e_latency())
+                .sum::<f64>()
+                / res.outcomes.len() as f64)
+        };
+        let sc = run(Policy::SelfConsistency { n })?;
+        let es = run(Policy::SartNoPrune { n, m: n / 2 })?;
+        prop_assert!(
+            es <= sc * 1.05,
+            "early stopping slower than waiting: {es} > {sc}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Order statistics (Lemma 1) against Monte-Carlo.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lemma1_cdf_monotone_in_n() {
+    check("lemma1_monotone", default_cases(), |rng| {
+        let f = rng.f64();
+        let m = 1 + rng.below(6) as u64;
+        let mut prev = -1.0;
+        for n in m..m + 10 {
+            let c = sart::analysis::order_statistic_cdf(f, m, n);
+            prop_assert!(
+                c >= prev - 1e-12,
+                "CDF not monotone at f={f} m={m} n={n}"
+            );
+            prop_assert!((0.0..=1.0 + 1e-12).contains(&c), "CDF out of range");
+            prev = c;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tokenizer / workload structural invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_prompt_roundtrip() {
+    check("prompt_roundtrip", default_cases(), |rng| {
+        let spec = if rng.chance(0.5) {
+            TaskSpec::synth_gaokao()
+        } else {
+            TaskSpec::synth_gpqa()
+        };
+        let q = Question::sample(&spec, rng);
+        let parsed = Question::from_prompt(&q.prompt_tokens())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(parsed == q, "prompt roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scripted_answer_extraction_consistent() {
+    check("answer_extraction", default_cases(), |rng| {
+        let spec = TaskSpec::synth_gpqa();
+        let q = Question::sample(&spec, rng);
+        let resp =
+            sart::workload::sample_response(&q, &spec, rng, 256);
+        let ans = tok::extract_answer(&resp);
+        prop_assert!(ans.is_some(), "no answer in well-formed response");
+        // The answer digit is the token right before EOS.
+        let eos_pos = resp.len() - 1;
+        prop_assert!(resp[eos_pos] == tok::EOS, "missing EOS");
+        prop_assert!(
+            tok::digit_value(resp[eos_pos - 1]) == ans,
+            "answer position mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chain_state_tracks_forced_prefixes() {
+    check("chain_state", default_cases(), |rng| {
+        let mut spec = TaskSpec::synth_gaokao();
+        spec.p_err = 0.0; // clean chains parse exactly
+        spec.p_rethink = 0.0;
+        let q = Question::sample(&spec, rng);
+        let resp = sart::workload::sample_response(&q, &spec, rng, 256);
+        // Steps region: everything before </think> (4 tokens per step).
+        let steps_end = resp
+            .iter()
+            .position(|&t| t == tok::ETHINK)
+            .ok_or("no </think>")?;
+        let n_steps = steps_end / 4;
+        for k in 0..=n_steps {
+            let st = sart::workload::chain_state(&q, &resp[..4 * k]);
+            prop_assert!(st.is_some(), "boundary {k} failed to parse");
+            let (_, steps) = st.unwrap();
+            prop_assert!(steps == k as u32, "step count mismatch at {k}");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Stats utilities.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_percentile_bounds_and_order() {
+    check("percentile", default_cases(), |rng| {
+        let n = 1 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        let mut prev = lo;
+        for p in [0.0, 10.0, 50.0, 90.0, 97.0, 99.0, 100.0] {
+            let v = percentile(&xs, p);
+            prop_assert!(v >= lo - 1e-9 && v <= hi + 1e-9, "out of range");
+            prop_assert!(v >= prev - 1e-9, "not monotone in p");
+            prev = v;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary() {
+    use sart::util::json::Json;
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = b"ab\"\\\nxyz 09"[rng.below(11)];
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json_roundtrip", default_cases(), |rng| {
+        let j = gen(rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(back == j, "roundtrip mismatch for {text}");
+        Ok(())
+    });
+}

@@ -1,0 +1,174 @@
+//! Integration tests: Algorithm 1 over the virtual-time SimEngine.
+//!
+//! These validate the full coordinator behaviour — admission, continuous
+//! batching, early stopping, two-phase pruning, finalization, metrics —
+//! deterministically and without artifacts.
+
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::metrics::ServeReport;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::util::clock::SimClock;
+use sart::workload::{batch_trace, poisson_trace, TaskSpec};
+
+fn sim_engine(slots: usize) -> SimEngine {
+    SimEngine::new(slots, 256, TaskSpec::synth_gaokao(),
+                   SimCostModel::default())
+}
+
+fn run(policy: Policy, n_requests: usize, rate: f64, slots: usize,
+       kv_tokens: usize, seed: u64) -> sart::coordinator::ServeResult {
+    let spec = TaskSpec::synth_gaokao();
+    let trace = if rate > 0.0 {
+        poisson_trace(&spec, n_requests, rate, seed)
+    } else {
+        batch_trace(&spec, n_requests, seed)
+    };
+    let mut engine = sim_engine(slots);
+    let mut prm = OraclePrm::new(0.08, seed ^ 1);
+    let cfg = SchedConfig {
+        policy,
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: kv_tokens,
+        kv_page_tokens: 16,
+        seed,
+    };
+    let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                   ClockHandle::Sim(SimClock::new()));
+    sched.serve(&trace).expect("serve")
+}
+
+#[test]
+fn vanilla_serves_all_requests() {
+    let res = run(Policy::Vanilla, 20, 2.0, 4, 4096, 1);
+    assert_eq!(res.outcomes.len(), 20);
+    for o in &res.outcomes {
+        assert!(o.finished_at >= o.arrival);
+        assert!(o.branches_started == 1);
+        assert!(o.e2e_latency() > 0.0);
+    }
+}
+
+#[test]
+fn self_consistency_completes_all_n() {
+    let res = run(Policy::SelfConsistency { n: 4 }, 10, 1.0, 8, 8192, 2);
+    for o in &res.outcomes {
+        assert_eq!(o.branches_completed, 4, "SC waits for all N");
+        assert_eq!(o.branches_pruned, 0);
+        assert_eq!(o.response_lengths.len(), 4);
+    }
+}
+
+#[test]
+fn sart_early_stops_at_m() {
+    let res = run(
+        Policy::SartNoPrune { n: 8, m: 4 },
+        10, 1.0, 16, 16384, 3,
+    );
+    for o in &res.outcomes {
+        assert!(o.branches_completed >= 4, "needs at least M completions");
+        // Early stopping: strictly fewer than N completions in the common
+        // case; never more than N.
+        assert!(o.branches_completed <= 8);
+    }
+    // At least one request should have stopped early (probability ~1).
+    assert!(res.outcomes.iter().any(|o| o.branches_completed < 8));
+}
+
+#[test]
+fn sart_prunes_under_tight_threshold() {
+    let res = run(
+        Policy::Sart { n: 8, m: 4, alpha: 0.6, beta: 4 },
+        12, 1.0, 16, 16384, 4,
+    );
+    let pruned: usize = res.outcomes.iter().map(|o| o.branches_pruned).sum();
+    assert!(pruned > 0, "a 0.6 exploration threshold must prune something");
+    for o in &res.outcomes {
+        assert!(o.branches_completed + o.branches_pruned <= 8);
+    }
+}
+
+#[test]
+fn sart_accuracy_reasonable() {
+    // With the oracle PRM and branch sampling, SART should answer most
+    // questions correctly (way above the 10% random-guess floor).
+    let res = run(Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+                  40, 0.0, 16, 16384, 5);
+    let report = ServeReport::from_outcomes("sart", &res.outcomes);
+    assert!(report.accuracy > 0.5, "accuracy {}", report.accuracy);
+}
+
+#[test]
+fn sart_beats_self_consistency_on_latency() {
+    // The paper's headline: same-ish accuracy, much lower latency at the
+    // same N under load.
+    let sc = run(Policy::SelfConsistency { n: 8 }, 24, 2.0, 8, 6144, 6);
+    let sart = run(Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+                   24, 2.0, 8, 6144, 6);
+    let sc_rep = ServeReport::from_outcomes("sc", &sc.outcomes);
+    let sart_rep = ServeReport::from_outcomes("sart", &sart.outcomes);
+    assert!(
+        sart_rep.e2e.p97 < sc_rep.e2e.p97,
+        "sart p97 {} !< sc p97 {}",
+        sart_rep.e2e.p97,
+        sc_rep.e2e.p97
+    );
+}
+
+#[test]
+fn pruning_reduces_queue_latency() {
+    // Fig. 6's mechanism: with a tight kv budget, pruning releases memory
+    // and shortens the queue.
+    let noprune = run(Policy::SartNoPrune { n: 8, m: 4 }, 24, 2.0, 8, 4096, 7);
+    let prune = run(Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+                    24, 2.0, 8, 4096, 7);
+    let q_np = ServeReport::from_outcomes("np", &noprune.outcomes).queue.mean;
+    let q_p = ServeReport::from_outcomes("p", &prune.outcomes).queue.mean;
+    assert!(q_p <= q_np, "pruning should not worsen queuing: {q_p} vs {q_np}");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let a = run(Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+                8, 1.0, 8, 8192, 9);
+    let b = run(Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+                8, 1.0, 8, 8192, 9);
+    assert_eq!(a.rounds, b.rounds);
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.answer, y.answer);
+        assert_eq!(x.finished_at, y.finished_at);
+        assert_eq!(x.tokens_generated, y.tokens_generated);
+    }
+}
+
+#[test]
+fn timeline_is_monotone_and_bounded() {
+    let res = run(Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
+                  16, 2.0, 8, 8192, 10);
+    let mut last_t = 0.0;
+    for p in &res.timeline.points {
+        assert!(p.t >= last_t, "time went backwards");
+        last_t = p.t;
+        assert!(p.running_branches <= 8, "more branches than slots");
+    }
+    assert!(res.timeline.peak_branches() > 0);
+}
+
+#[test]
+fn queuing_appears_under_overload() {
+    // High arrival rate + tiny budget → queue delays must dominate.
+    let res = run(Policy::SelfConsistency { n: 8 }, 16, 8.0, 4, 2048, 11);
+    let rep = ServeReport::from_outcomes("sc", &res.outcomes);
+    assert!(rep.queue.p90 > 0.1, "expected queuing, got {:?}", rep.queue);
+}
+
+#[test]
+fn batch_arrival_all_finish() {
+    let res = run(Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+                  30, 0.0, 8, 4096, 12);
+    assert_eq!(res.outcomes.len(), 30);
+    let rep = ServeReport::from_outcomes("sart", &res.outcomes);
+    assert!(rep.answered > 0.9, "answered {}", rep.answered);
+}
