@@ -2,11 +2,14 @@
 //! at bench scale) — prints the same rows as Fig. 5's harness plus wall
 //! time per method, over the virtual-time engine by default.
 //!
+//! Per-method accuracy / p97 / wall-ms also land in `BENCH_e2e.json`.
+//!
 //!     cargo bench --bench e2e_tables
 
 use sart::config::{EngineChoice, Method, PrmChoice, ServeSpec};
 use sart::metrics::ServeReport;
 use sart::server;
+use sart::testkit::bench::BenchReport;
 use sart::util::stats::render_table;
 
 fn spec() -> ServeSpec {
@@ -27,6 +30,14 @@ fn spec() -> ServeSpec {
     }
 }
 
+fn metric_key(label: &str, what: &str) -> String {
+    let slug: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("{slug}_{what}")
+}
+
 fn main() {
     println!("== e2e_tables (sim, 64 requests @ 2/s, 16 slots) ==");
     let base = spec();
@@ -40,17 +51,23 @@ fn main() {
         Method::SartNoPrune { n, m },
         Method::Sart { n, m, alpha: 0.5, beta: m },
     ];
+    let mut report = BenchReport::new("e2e");
     let mut rows = Vec::new();
     for method in methods {
         let mut s = base.clone();
         s.method = method;
         let t0 = std::time::Instant::now();
         let out = server::run_on_trace(&s, &trace).unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        report.metric(&metric_key(&out.report.label, "acc"), out.report.accuracy);
+        report.metric(&metric_key(&out.report.label, "e2e_p97_s"), out.report.e2e.p97);
+        report.metric(&metric_key(&out.report.label, "bench_wall_ms"), wall_ms);
         let mut row = out.report.row();
-        row.push(format!("{:.0} ms", t0.elapsed().as_secs_f64() * 1e3));
+        row.push(format!("{wall_ms:.0} ms"));
         rows.push(row);
     }
     let mut headers: Vec<&str> = ServeReport::ROW_HEADERS.to_vec();
     headers.push("bench-wall");
     println!("{}", render_table(&headers, &rows));
+    report.write().expect("writing BENCH_e2e.json");
 }

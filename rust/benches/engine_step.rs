@@ -1,31 +1,82 @@
-//! Bench: HLO engine hot path — prefill, fused-chunk decode, stepwise
-//! decode, PRM scoring (requires `make artifacts`; skips gracefully).
+//! Bench: engine hot paths.
 //!
-//! This is the L1/L2/runtime measurement used in EXPERIMENTS.md §Perf:
-//! per-token decode latency of the fused path vs the stepwise baseline.
+//! Two sections, both serialized into `BENCH_engine.json`:
+//!
+//! * **sim** (always runs): SimEngine prefill + chunked decode — the
+//!   substrate of every full-scale figure sweep. Decode must be a slice
+//!   copy per slot per round, not per-token queue pops.
+//! * **hlo** (requires `make artifacts`; skips gracefully): prefill,
+//!   fused-chunk decode, stepwise decode, PRM scoring — the L1/L2/runtime
+//!   measurement used in EXPERIMENTS.md §Perf.
 //!
 //!     cargo bench --bench engine_step
 
 use sart::engine::hlo::{DecodeMode, HloEngine};
-use sart::engine::{Engine, PrefillEntry};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::{ChunkResult, Engine, PrefillEntry};
 use sart::prm::{HloPrm, PrmScorer};
 use sart::runtime::{Manifest, Runtime};
-use sart::testkit::bench;
+use sart::testkit::bench::{self, BenchReport};
 use sart::util::rng::Rng;
 use sart::workload::{Question, TaskSpec};
 
-fn main() {
+fn sim_section(report: &mut BenchReport) {
+    println!("-- sim --");
+    let spec = TaskSpec::synth_gaokao();
+    let mut rng = Rng::new(11);
+    for &batch in &[8usize, 64] {
+        let mut eng =
+            SimEngine::new(batch, 256, spec.clone(), SimCostModel::default());
+        let entries: Vec<PrefillEntry> = (0..batch)
+            .map(|s| PrefillEntry {
+                slot: s,
+                prompt: Question::sample(&spec, &mut rng).prompt_tokens(),
+                seed: s as u64,
+            })
+            .collect();
+        let slots: Vec<usize> = (0..batch).collect();
+        report.push(bench::run_result(
+            &format!("sim prefill b{batch}"),
+            2,
+            200,
+            || eng.prefill(&entries).map(|_| ()),
+        ));
+        // Chunked decode with the reused emit buffers. Slots are
+        // re-prefilled before scripts exhaust so every timed round does
+        // real work — the prefill happens OUTSIDE the timed region so the
+        // recorded stats are pure decode (run_timed).
+        eng.prefill(&entries).unwrap();
+        let mut out = ChunkResult::default();
+        let mut rounds = 0usize;
+        report.push(bench::run_timed(
+            &format!("sim decode 16-step round b{batch}"),
+            2,
+            500,
+            || {
+                rounds += 1;
+                if rounds % 4 == 0 {
+                    eng.prefill(&entries).expect("re-prefill");
+                }
+                let t0 = std::time::Instant::now();
+                eng.decode_into(&slots, 16, 1.0, &mut out).expect("decode");
+                t0.elapsed().as_secs_f64() * 1e6
+            },
+        ));
+    }
+}
+
+fn hlo_section(report: &mut BenchReport) {
     let dir = sart::runtime::artifacts_dir();
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
-            println!("== engine_step: SKIPPED (no artifacts: {e}) ==");
+            println!("-- hlo: SKIPPED (no artifacts: {e}) --");
             return;
         }
     };
     let model = std::env::var("SART_BENCH_MODEL")
         .unwrap_or_else(|_| "r1mini-tiny".into());
-    println!("== engine_step ({model}) ==");
+    println!("-- hlo ({model}) --");
     let spec = TaskSpec::synth_gaokao();
     let mut rng = Rng::new(1);
 
@@ -44,16 +95,16 @@ fn main() {
                 })
                 .collect();
             let slots: Vec<usize> = (0..batch).collect();
-            bench::run_result(
+            report.push(bench::run_result(
                 &format!("prefill b{batch}"),
                 2,
                 20,
                 || eng.prefill(&entries).map(|_| ()),
-            );
+            ));
             let chunk = eng.caps().chunk_t;
             // Re-prefill between rounds so lengths never overflow max_seq.
             let mut rounds = 0usize;
-            bench::run_result(
+            report.push(bench::run_result(
                 &format!("decode {chunk}-step round b{batch} ({mode_label})"),
                 2,
                 30,
@@ -64,7 +115,7 @@ fn main() {
                     }
                     eng.decode(&slots, chunk, 1.0).map(|_| ())
                 },
-            );
+            ));
         }
     }
 
@@ -81,7 +132,15 @@ fn main() {
         })
         .collect();
     let refs: Vec<&[i32]> = seqs.iter().map(|s| s.as_slice()).collect();
-    bench::run_result("prm score batch of 8", 2, 20, || {
+    report.push(bench::run_result("prm score batch of 8", 2, 20, || {
         prm.score(&refs).map(|_| ())
-    });
+    }));
+}
+
+fn main() {
+    println!("== engine_step ==");
+    let mut report = BenchReport::new("engine");
+    sim_section(&mut report);
+    hlo_section(&mut report);
+    report.write().expect("writing BENCH_engine.json");
 }

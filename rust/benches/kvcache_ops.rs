@@ -2,24 +2,28 @@
 //!
 //! The manager is consulted on every admission decision and every
 //! branch termination; these must be far off the engine-step critical
-//! path (<1 µs).
+//! path (<1 µs). Storage is slab-based with generation-checked handles,
+//! so admit/release/note_decode are array indexing, not hashing.
+//!
+//! Results land in `BENCH_kvcache.json`.
 //!
 //!     cargo bench --bench kvcache_ops
 
 use sart::kvcache::KvCacheManager;
-use sart::testkit::bench;
+use sart::testkit::bench::{self, BenchReport};
 use sart::util::rng::Rng;
 
 fn main() {
     println!("== kvcache_ops ==");
+    let mut report = BenchReport::new("kvcache");
 
-    bench::run("admit+release 8-branch request", 100, 5000, || {
+    report.push(bench::run("admit+release 8-branch request", 100, 5000, || {
         let mut kv = KvCacheManager::new(16384, 16);
         let (_, bs) = kv.admit(27, 224, 8).unwrap();
         for b in bs {
             kv.release_branch(b).unwrap();
         }
-    });
+    }));
 
     // Steady-state churn at ~70% occupancy (the serving regime).
     let mut kv = KvCacheManager::new(65536, 16);
@@ -30,7 +34,7 @@ fn main() {
             live.extend(bs);
         }
     }
-    bench::run("steady-state admit/release churn", 100, 5000, || {
+    report.push(bench::run("steady-state admit/release churn", 100, 5000, || {
         if rng.chance(0.5) && !live.is_empty() {
             let i = rng.below(live.len());
             let b = live.swap_remove(i);
@@ -39,13 +43,22 @@ fn main() {
             let (_, bs) = kv.admit(27, 224, 4).unwrap();
             live.extend(bs);
         }
-    });
+    }));
 
-    bench::run("can_admit check", 100, 20000, || {
+    report.push(bench::run("note_decode (per-round progress)", 100, 20000, || {
+        if let Some(&b) = live.first() {
+            kv.note_decode(b, 1).unwrap();
+        }
+        std::hint::black_box(kv.live_decoded_tokens());
+    }));
+
+    report.push(bench::run("can_admit check", 100, 20000, || {
         std::hint::black_box(kv.can_admit(27, 224, 8));
-    });
+    }));
 
-    bench::run("invariant check (diagnostic path)", 10, 2000, || {
+    report.push(bench::run("invariant check (diagnostic path)", 10, 2000, || {
         kv.check_invariants().unwrap();
-    });
+    }));
+
+    report.write().expect("writing BENCH_kvcache.json");
 }

@@ -5,18 +5,32 @@
 //! (fill_batch, round processing, PRM batching, metrics) — the paper's
 //! requirement is that coordination is negligible next to decoding.
 //!
+//! Beyond the per-policy serve benches, the SART scaling section drives
+//! 64 / 256 / 512-request runs at 64 slots and reports µs of pure
+//! coordination per round: with O(1)-per-round bookkeeping this must stay
+//! flat as the lifetime request count grows (the pre-refactor loop's
+//! full per-round scans made it grow linearly, i.e. O(R²) per serve).
+//!
+//! Results land in `BENCH_scheduler.json` (see EXPERIMENTS.md §Benches).
+//!
 //!     cargo bench --bench scheduler_tick
 
 use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::prm::OraclePrm;
-use sart::testkit::bench;
+use sart::testkit::bench::{self, BenchReport};
 use sart::util::clock::SimClock;
 use sart::workload::{poisson_trace, TaskSpec};
 
-fn serve_once(policy: Policy, n_req: usize, slots: usize) -> (usize, f64) {
+fn serve_once(
+    policy: Policy,
+    n_req: usize,
+    rate: f64,
+    slots: usize,
+    kv_tokens: usize,
+) -> (usize, f64) {
     let spec = TaskSpec::synth_gaokao();
-    let trace = poisson_trace(&spec, n_req, 4.0, 42);
+    let trace = poisson_trace(&spec, n_req, rate, 42);
     let mut engine = SimEngine::new(slots, 256, spec, SimCostModel::default());
     let mut prm = OraclePrm::new(0.08, 7);
     let cfg = SchedConfig {
@@ -24,7 +38,7 @@ fn serve_once(policy: Policy, n_req: usize, slots: usize) -> (usize, f64) {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: 16384,
+        kv_capacity_tokens: kv_tokens,
         kv_page_tokens: 16,
         seed: 42,
     };
@@ -34,26 +48,49 @@ fn serve_once(policy: Policy, n_req: usize, slots: usize) -> (usize, f64) {
     (res.rounds, res.wall_seconds)
 }
 
+fn sart() -> Policy {
+    Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 }
+}
+
 fn main() {
     println!("== scheduler_tick ==");
+    let mut report = BenchReport::new("scheduler");
     for (label, policy) in [
         ("vanilla", Policy::Vanilla),
         ("self-consistency N=8", Policy::SelfConsistency { n: 8 }),
-        ("sart N=8 M=4", Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 }),
+        ("sart N=8 M=4", sart()),
     ] {
-        bench::run(&format!("serve 32 reqs ({label})"), 2, 20, || {
-            std::hint::black_box(serve_once(policy, 32, 16));
-        });
+        report.push(bench::run(&format!("serve 32 reqs ({label})"), 2, 20, || {
+            std::hint::black_box(serve_once(policy, 32, 4.0, 16, 16384));
+        }));
     }
-    // Per-round cost (the tick): rounds/sec from one big run.
-    let (rounds, wall) = serve_once(
-        Policy::Sart { n: 8, m: 4, alpha: 0.5, beta: 4 },
-        256,
-        16,
-    );
-    println!(
-        "sart 256-request run: {rounds} rounds in {wall:.3}s wall → \
-         {:.1} µs/round of pure coordination",
-        wall / rounds as f64 * 1e6
-    );
+
+    // Pure per-round coordination at SART scale: 64 slots, generous KV
+    // budget (so queuing does not mask bookkeeping), growing lifetime
+    // request counts. µs/round must not grow with the request count.
+    println!("-- SART scaling (N=8, 64 slots) --");
+    let mut us_per_round = Vec::new();
+    for &n_req in &[64usize, 256, 512] {
+        let (rounds, wall) = serve_once(sart(), n_req, 16.0, 64, 1 << 20);
+        let us = wall / rounds as f64 * 1e6;
+        println!(
+            "sart {n_req:>4}-request run: {rounds} rounds in {wall:.3}s wall \
+             → {us:.1} µs/round of pure coordination"
+        );
+        report.metric(&format!("sart_{n_req}req_us_per_round"), us);
+        report.metric(&format!("sart_{n_req}req_rounds"), rounds as f64);
+        us_per_round.push((n_req, us));
+    }
+    if let (Some(&(_, us64)), Some(&(_, us512))) =
+        (us_per_round.first(), us_per_round.last())
+    {
+        let ratio = us512 / us64;
+        println!(
+            "scaling ratio (512 vs 64 requests): {ratio:.2}x per-round cost \
+             (flat ≈ 1.0 means coordination is independent of lifetime \
+             request count)"
+        );
+        report.metric("us_per_round_ratio_512_vs_64", ratio);
+    }
+    report.write().expect("writing BENCH_scheduler.json");
 }

@@ -18,9 +18,34 @@
 //! KV-cache accounting (prefix sharing, reservation admission) gates
 //! request admission; engine-slot availability gates branch starts. Both
 //! scarcities produce the queuing behaviour the paper measures.
+//!
+//! # Per-round bookkeeping is O(batch), not O(lifetime requests)
+//!
+//! The paper's pitch only holds if coordination stays negligible next to
+//! decoding (`benches/scheduler_tick.rs` tracks this), so every per-round
+//! structure is incremental:
+//!
+//! * free engine slots live in a min-heap (lowest slot first, matching
+//!   the previous linear scan's assignment order);
+//! * the involved-request set is deduplicated with a per-request round
+//!   stamp instead of a `contains` scan;
+//! * each request keeps an ordered index of its Running branches, so
+//!   round processing never scans terminated branches;
+//! * `running_tokens` / running-branch counts for the per-round
+//!   [`TimelinePoint`] are maintained incrementally instead of scanning
+//!   every request ever admitted (which made a serve O(R²) in the
+//!   lifetime request count R);
+//! * prompts are tokenized once at arrival and PRM query buffers are
+//!   reused across rounds.
+//!
+//! [`Scheduler::set_audit`] enables a cross-checking mode in which every
+//! round recomputes each incremental quantity from scratch with the
+//! straightforward scans and fails on any divergence — the property tests
+//! serve random workloads under audit and additionally assert the audit
+//! and fast paths produce byte-identical outcomes.
 
 use super::types::*;
-use crate::engine::{Engine, PrefillEntry, SlotId};
+use crate::engine::{ChunkResult, Engine, PrefillEntry, SlotId};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
@@ -30,7 +55,8 @@ use crate::util::clock::{Clock, RealClock, SimClock};
 use crate::util::rng::Rng;
 use crate::workload::Request;
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Scheduler knobs (paper defaults: M = N/2, alpha = 0.5, beta = N/2,
 /// T = 400 — scaled to this testbed's token scale in `config`).
@@ -118,6 +144,24 @@ pub struct Scheduler<'e> {
     request_queue: VecDeque<usize>,
     branch_queue: VecDeque<(usize, usize)>,
     slots: Vec<Option<(usize, usize)>>,
+    /// Free engine slots, lowest first (same assignment order as the
+    /// linear `position(is_none)` scan this replaces).
+    free_slots: BinaryHeap<Reverse<SlotId>>,
+    /// Monotone decode-round counter; pairs with
+    /// `RequestState::round_stamp` for O(1) involved-set dedup.
+    round: u64,
+    /// Σ generated tokens over Running branches (the `TimelinePoint`
+    /// quantity), maintained incrementally.
+    running_tokens: usize,
+    /// Reused across rounds: decode result, involved list, PRM sequences,
+    /// running-branch snapshot scratch.
+    chunk: ChunkResult,
+    involved_buf: Vec<usize>,
+    prm_seqs: Vec<Vec<tok::Token>>,
+    scratch: Vec<usize>,
+    /// Cross-check every incremental structure against a from-scratch
+    /// recomputation each round (tests; see module docs).
+    audit: bool,
     rng: Rng,
 }
 
@@ -142,8 +186,22 @@ impl<'e> Scheduler<'e> {
             request_queue: VecDeque::new(),
             branch_queue: VecDeque::new(),
             slots: vec![None; slots],
+            free_slots: (0..slots).map(Reverse).collect(),
+            round: 0,
+            running_tokens: 0,
+            chunk: ChunkResult::default(),
+            involved_buf: Vec::new(),
+            prm_seqs: Vec::new(),
+            scratch: Vec::new(),
+            audit: false,
             rng,
         }
+    }
+
+    /// Enable per-round cross-checking of every incremental structure
+    /// against the straightforward full scans (slow; for tests).
+    pub fn set_audit(&mut self, on: bool) {
+        self.audit = on;
     }
 
     /// Serve a full trace to completion; requests must be sorted by
@@ -173,6 +231,7 @@ impl<'e> Scheduler<'e> {
                 self.truths.push(r.question.answer());
                 self.requests.push(RequestState {
                     id: r.id,
+                    prompt: r.question.prompt_tokens(),
                     question: r.question.clone(),
                     dataset: r.dataset.clone(),
                     arrival: r.arrival,
@@ -180,7 +239,9 @@ impl<'e> Scheduler<'e> {
                     finished_at: None,
                     meta: self.initial_meta(),
                     branches: Vec::new(),
+                    running: Vec::new(),
                     completed: Vec::new(),
+                    round_stamp: 0,
                     prefix: None,
                     final_answer: None,
                 });
@@ -222,46 +283,55 @@ impl<'e> Scheduler<'e> {
                 );
             }
 
-            // 3. Decode up to T steps (line 12).
-            let res =
-                self.engine
-                    .decode(&active, self.cfg.t_round, self.cfg.temperature)?;
-            engine_seconds += res.cost;
-            self.clock.charge(res.cost);
+            // 3. Decode up to T steps (line 12). The ChunkResult is kept
+            // across rounds so the engine can recycle emit buffers.
+            let mut chunk = std::mem::take(&mut self.chunk);
+            self.engine.decode_into(
+                &active,
+                self.cfg.t_round,
+                self.cfg.temperature,
+                &mut chunk,
+            )?;
+            engine_seconds += chunk.cost;
+            self.clock.charge(chunk.cost);
             rounds += 1;
+            self.round += 1;
+            let round = self.round;
 
-            // Append emitted tokens; classify completions.
-            let mut involved: Vec<usize> = Vec::new();
-            for (slot, toks) in &res.emitted {
+            // Append emitted tokens; stamp involved requests (O(1) dedup).
+            let mut involved = std::mem::take(&mut self.involved_buf);
+            involved.clear();
+            for (slot, toks) in &chunk.emitted {
                 let Some((ridx, bidx)) = self.slots[*slot] else {
                     bail!("engine emitted for empty slot {slot}");
                 };
-                if !involved.contains(&ridx) {
+                let req = &mut self.requests[ridx];
+                if req.round_stamp != round {
+                    req.round_stamp = round;
                     involved.push(ridx);
                 }
-                let branch = &mut self.requests[ridx].branches[bidx];
+                let branch = &mut req.branches[bidx];
                 branch.generated.extend_from_slice(toks);
-                if let Some(kvb) = branch.kv {
+                let kvb = branch.kv;
+                self.running_tokens += toks.len();
+                if let Some(kvb) = kvb {
                     self.kv.note_decode(kvb, toks.len())?;
                 }
             }
+            self.chunk = chunk;
 
             // 4. Per-request round processing (lines 23-41).
             self.process_round(&involved, &mut timeline)?;
+            self.involved_buf = involved;
+
+            if self.audit {
+                self.audit_check()?;
+            }
 
             timeline.points.push(TimelinePoint {
                 t: self.clock.now(),
-                running_branches: self
-                    .slots
-                    .iter()
-                    .filter(|s| s.is_some())
-                    .count(),
-                running_tokens: self
-                    .requests
-                    .iter()
-                    .filter(|r| !r.is_finished())
-                    .map(|r| r.running_tokens())
-                    .sum(),
+                running_branches: self.slots.len() - self.free_slots.len(),
+                running_tokens: self.running_tokens,
                 kv_pages_used: self.kv.used_pages(),
                 queued_requests: self.request_queue.len(),
             });
@@ -330,9 +400,7 @@ impl<'e> Scheduler<'e> {
         let mut entries = Vec::new();
         let now = self.clock.now();
         loop {
-            let Some(free_slot) =
-                self.slots.iter().position(|s| s.is_none())
-            else {
+            let Some(&Reverse(free_slot)) = self.free_slots.peek() else {
                 break;
             };
             // Prefer an awaiting branch (lines 4-5); skip stale entries of
@@ -345,13 +413,17 @@ impl<'e> Scheduler<'e> {
                 {
                     continue; // lazily dropped
                 }
-                let prompt = self.requests[ridx].question.prompt_tokens();
-                let seed = self.requests[ridx].branches[bidx].seed;
-                let b = &mut self.requests[ridx].branches[bidx];
+                let req = &mut self.requests[ridx];
+                let prompt = req.prompt.clone();
+                let seed = req.branches[bidx].seed;
+                let b = &mut req.branches[bidx];
                 b.status = BranchStatus::Running;
                 b.slot = Some(free_slot);
                 b.started_at = Some(now);
+                let pos = req.running.partition_point(|&x| x < bidx);
+                req.running.insert(pos, bidx);
                 self.slots[free_slot] = Some((ridx, bidx));
+                self.free_slots.pop();
                 entries.push(PrefillEntry { slot: free_slot, prompt, seed });
                 assigned = true;
                 break;
@@ -364,8 +436,7 @@ impl<'e> Scheduler<'e> {
                 break;
             };
             let n = self.cfg.policy.n_branches();
-            let prompt_len =
-                self.requests[ridx].question.prompt_tokens().len();
+            let prompt_len = self.requests[ridx].prompt.len();
             if !self.kv.can_admit(prompt_len, self.cfg.max_new, n) {
                 break; // head-of-line blocks until memory frees up
             }
@@ -393,27 +464,37 @@ impl<'e> Scheduler<'e> {
         _timeline: &mut Timeline,
     ) -> Result<()> {
         let now = self.clock.now();
-        // Classify branch completions first (EOS / cap).
+        // Classify branch completions first (EOS / cap). Only the Running
+        // branches of involved requests can complete this round.
         let mut completed_now: Vec<(usize, usize)> = Vec::new();
         for &ridx in involved {
-            for bidx in 0..self.requests[ridx].branches.len() {
-                let b = &self.requests[ridx].branches[bidx];
-                if b.status != BranchStatus::Running {
-                    continue;
-                }
+            let mut snapshot = std::mem::take(&mut self.scratch);
+            snapshot.clear();
+            snapshot.extend_from_slice(&self.requests[ridx].running);
+            for &bidx in &snapshot {
+                let req = &mut self.requests[ridx];
+                let b = &req.branches[bidx];
+                debug_assert_eq!(b.status, BranchStatus::Running);
                 let done = b.generated.last() == Some(&tok::EOS);
                 let capped = b.generated.len() >= self.cfg.max_new;
-                if done || capped {
-                    completed_now.push((ridx, bidx));
-                    let b = &mut self.requests[ridx].branches[bidx];
-                    b.status = if done {
-                        BranchStatus::Completed
-                    } else {
-                        BranchStatus::Capped
-                    };
-                    b.finished_at = Some(now);
+                if !(done || capped) {
+                    continue;
                 }
+                let gen_len = b.generated.len();
+                let b = &mut req.branches[bidx];
+                b.status = if done {
+                    BranchStatus::Completed
+                } else {
+                    BranchStatus::Capped
+                };
+                b.finished_at = Some(now);
+                if let Some(p) = req.running.iter().position(|&x| x == bidx) {
+                    req.running.remove(p);
+                }
+                self.running_tokens -= gen_len;
+                completed_now.push((ridx, bidx));
             }
+            self.scratch = snapshot;
         }
 
         // Batch all PRM queries for this round: completed branches (final
@@ -421,40 +502,44 @@ impl<'e> Scheduler<'e> {
         let needs_prm = self.cfg.policy.needs_prm();
         let mut queries: Vec<(usize, usize)> = Vec::new();
         if needs_prm {
-            for &(ridx, bidx) in &completed_now {
-                queries.push((ridx, bidx));
-            }
+            queries.extend_from_slice(&completed_now);
             if self.cfg.policy.prunes() {
                 for &ridx in involved {
                     if self.requests[ridx].is_finished() {
                         continue;
                     }
-                    for bidx in 0..self.requests[ridx].branches.len() {
-                        if self.requests[ridx].branches[bidx].status
-                            == BranchStatus::Running
-                        {
-                            queries.push((ridx, bidx));
-                        }
-                    }
+                    queries.extend(
+                        self.requests[ridx]
+                            .running
+                            .iter()
+                            .map(|&bidx| (ridx, bidx)),
+                    );
                 }
             }
         }
         if !queries.is_empty() {
-            let seqs: Vec<Vec<tok::Token>> = queries
+            // Reuse the sequence buffers across rounds (prompt + generated
+            // concatenation dominated round processing before).
+            let mut seqs = std::mem::take(&mut self.prm_seqs);
+            while seqs.len() < queries.len() {
+                seqs.push(Vec::new());
+            }
+            for (qi, &(ridx, bidx)) in queries.iter().enumerate() {
+                let r = &self.requests[ridx];
+                let s = &mut seqs[qi];
+                s.clear();
+                s.extend_from_slice(&r.prompt);
+                s.extend_from_slice(&r.branches[bidx].generated);
+            }
+            let refs: Vec<&[tok::Token]> = seqs[..queries.len()]
                 .iter()
-                .map(|&(ridx, bidx)| {
-                    let r = &self.requests[ridx];
-                    let mut s = r.question.prompt_tokens();
-                    s.extend_from_slice(&r.branches[bidx].generated);
-                    s
-                })
+                .map(|s| s.as_slice())
                 .collect();
-            let refs: Vec<&[tok::Token]> =
-                seqs.iter().map(|s| s.as_slice()).collect();
             let scores = self.prm.score(&refs)?;
             for (&(ridx, bidx), score) in queries.iter().zip(scores) {
                 self.requests[ridx].branches[bidx].reward = score;
             }
+            self.prm_seqs = seqs;
         }
 
         for &ridx in involved {
@@ -490,7 +575,10 @@ impl<'e> Scheduler<'e> {
 
             // Prune low-reward running branches (lines 32-37).
             if self.cfg.policy.prunes() {
-                for bidx in 0..self.requests[ridx].branches.len() {
+                let mut snapshot = std::mem::take(&mut self.scratch);
+                snapshot.clear();
+                snapshot.extend_from_slice(&self.requests[ridx].running);
+                for &bidx in &snapshot {
                     let meta = &self.requests[ridx].meta;
                     if meta.num_pruned >= meta.max_num_pruned {
                         break;
@@ -505,6 +593,7 @@ impl<'e> Scheduler<'e> {
                     self.terminate_branch(ridx, bidx, BranchStatus::Pruned, now)?;
                     self.requests[ridx].meta.num_pruned += 1;
                 }
+                self.scratch = snapshot;
             }
 
             // Finalize (lines 38-40).
@@ -521,7 +610,8 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Remove a completed/capped branch from the batch and record its
-    /// response.
+    /// response. (Status and the running index were already updated at
+    /// classification time.)
     fn harvest(&mut self, ridx: usize, bidx: usize, now: f64) -> Result<()> {
         let (answer, reward, length) = {
             let b = &self.requests[ridx].branches[bidx];
@@ -529,11 +619,14 @@ impl<'e> Scheduler<'e> {
         };
         // Free the slot and the kv reservation immediately.
         let b = &mut self.requests[ridx].branches[bidx];
-        if let Some(slot) = b.slot.take() {
+        let slot = b.slot.take();
+        let kvb = b.kv.take();
+        if let Some(slot) = slot {
             self.slots[slot] = None;
+            self.free_slots.push(Reverse(slot));
             self.engine.release(slot);
         }
-        if let Some(kvb) = b.kv.take() {
+        if let Some(kvb) = kvb {
             self.kv.release_branch(kvb)?;
         }
         self.requests[ridx].meta.num_completed += 1;
@@ -553,15 +646,26 @@ impl<'e> Scheduler<'e> {
         status: BranchStatus,
         now: f64,
     ) -> Result<()> {
-        let b = &mut self.requests[ridx].branches[bidx];
-        debug_assert!(!b.is_terminal());
+        let req = &mut self.requests[ridx];
+        debug_assert!(!req.branches[bidx].is_terminal());
+        if req.branches[bidx].status == BranchStatus::Running {
+            let gen_len = req.branches[bidx].generated.len();
+            if let Some(p) = req.running.iter().position(|&x| x == bidx) {
+                req.running.remove(p);
+            }
+            self.running_tokens -= gen_len;
+        }
+        let b = &mut req.branches[bidx];
         b.status = status;
         b.finished_at = Some(now);
-        if let Some(slot) = b.slot.take() {
+        let slot = b.slot.take();
+        let kvb = b.kv.take();
+        if let Some(slot) = slot {
             self.slots[slot] = None;
+            self.free_slots.push(Reverse(slot));
             self.engine.release(slot);
         }
-        if let Some(kvb) = b.kv.take() {
+        if let Some(kvb) = kvb {
             self.kv.release_branch(kvb)?;
         }
         Ok(())
@@ -592,14 +696,65 @@ impl<'e> Scheduler<'e> {
             }
         };
         // Terminate all remaining branches (early stopping, line 39).
+        // One pass over the request's N branches, once per request.
         for bidx in 0..self.requests[ridx].branches.len() {
             if !self.requests[ridx].branches[bidx].is_terminal() {
                 self.terminate_branch(ridx, bidx, BranchStatus::Stopped, now)?;
             }
         }
         let req = &mut self.requests[ridx];
+        debug_assert!(req.running.is_empty());
         req.final_answer = answer;
         req.finished_at = Some(now);
         Ok(())
+    }
+
+    /// Audit mode: recompute every incremental structure with the
+    /// straightforward full scans and fail on any divergence.
+    fn audit_check(&self) -> Result<()> {
+        let free_scan = self.slots.iter().filter(|s| s.is_none()).count();
+        if free_scan != self.free_slots.len() {
+            bail!(
+                "audit: freelist size {} != scanned free slots {free_scan}",
+                self.free_slots.len()
+            );
+        }
+        if let Some(&Reverse(top)) = self.free_slots.peek() {
+            let first = self.slots.iter().position(|s| s.is_none());
+            if first != Some(top) {
+                bail!("audit: freelist min {top} != first free slot {first:?}");
+            }
+        }
+        let tokens_scan: usize = self
+            .requests
+            .iter()
+            .filter(|r| !r.is_finished())
+            .map(|r| r.running_tokens())
+            .sum();
+        if tokens_scan != self.running_tokens {
+            bail!(
+                "audit: running_tokens {} != scanned {tokens_scan}",
+                self.running_tokens
+            );
+        }
+        for (i, r) in self.requests.iter().enumerate() {
+            let scan: Vec<usize> = r
+                .branches
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.status == BranchStatus::Running)
+                .map(|(j, _)| j)
+                .collect();
+            if scan != r.running {
+                bail!(
+                    "audit: request {i} running index {:?} != scanned {scan:?}",
+                    r.running
+                );
+            }
+            if r.prompt != r.question.prompt_tokens() {
+                bail!("audit: request {i} cached prompt drifted");
+            }
+        }
+        self.kv.check_invariants()
     }
 }

@@ -153,13 +153,24 @@ pub struct CompletedResponse {
 pub struct RequestState {
     pub id: usize,
     pub question: Question,
+    /// Serving prompt, derived from `question` exactly once at arrival —
+    /// the scheduler touches it on every admission check, branch start
+    /// and PRM query, so it must not be re-tokenized on the hot path.
+    pub prompt: Vec<Token>,
     pub dataset: String,
     pub arrival: f64,
     pub admitted_at: Option<f64>,
     pub finished_at: Option<f64>,
     pub meta: RequestMeta,
     pub branches: Vec<Branch>,
+    /// Indices of branches currently in `BranchStatus::Running`, kept in
+    /// ascending order (so per-round processing visits branches in the
+    /// same order a full scan would). Maintained by the scheduler.
+    pub running: Vec<usize>,
     pub completed: Vec<CompletedResponse>,
+    /// Round number this request last received emissions in — the
+    /// scheduler's O(1) involved-set dedup (replaces a `contains` scan).
+    pub round_stamp: u64,
     pub prefix: Option<kvcache::PrefixId>,
     pub final_answer: Option<u8>,
 }
@@ -193,7 +204,7 @@ impl RequestState {
 }
 
 /// Final per-request record handed to metrics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestOutcome {
     pub id: usize,
     pub dataset: String,

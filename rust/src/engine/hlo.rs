@@ -17,6 +17,7 @@
 //!   not a multiple of `chunk_t`.
 
 use super::{ChunkResult, Engine, EngineCaps, PrefillEntry, SlotId};
+use crate::runtime::xla;
 use crate::runtime::{read_f32, Manifest, ModelExecutables, Runtime, StateLayout};
 use crate::sampler::sample_token;
 use crate::tokenizer as tok;
@@ -127,13 +128,12 @@ impl HloEngine {
         active: &[SlotId],
         steps: usize,
         temp: f32,
-    ) -> Result<ChunkResult> {
+        out: &mut ChunkResult,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let b = self.caps.slots;
         let ct = self.caps.chunk_t;
         let chunks = steps.div_ceil(ct);
-        let mut emitted: Vec<(SlotId, Vec<Token>)> =
-            active.iter().map(|&s| (s, Vec::new())).collect();
         let mut alive: Vec<bool> = vec![true; active.len()];
         let inv_temp = self.rt.upload_f32(&[1.0 / temp.max(1e-6)], &[])?;
         for _ in 0..chunks {
@@ -174,7 +174,7 @@ impl HloEngine {
                     if t == tok::PAD {
                         break; // this slot finished earlier in the chunk
                     }
-                    emitted[i].1.push(t);
+                    out.emitted[i].1.push(t);
                     if t == tok::EOS {
                         alive[i] = false;
                         break;
@@ -183,7 +183,8 @@ impl HloEngine {
             }
         }
         self.logits_fresh = false; // host cache stale after device sampling
-        Ok(ChunkResult { emitted, cost: t0.elapsed().as_secs_f64() })
+        out.cost = t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     fn decode_stepwise(
@@ -191,14 +192,13 @@ impl HloEngine {
         active: &[SlotId],
         steps: usize,
         temp: f32,
-    ) -> Result<ChunkResult> {
+        out: &mut ChunkResult,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let b = self.caps.slots;
         if !self.logits_fresh {
             self.refresh_logits()?;
         }
-        let mut emitted: Vec<(SlotId, Vec<Token>)> =
-            active.iter().map(|&s| (s, Vec::new())).collect();
         let mut alive: Vec<bool> = vec![true; active.len()];
         for _ in 0..steps {
             // Sample one token per alive slot from the cached logits.
@@ -211,7 +211,7 @@ impl HloEngine {
                 }
                 let t = sample_token(&self.host_logits[s], temp,
                                      self.temp_top_k, &mut self.rngs[s]);
-                emitted[i].1.push(t);
+                out.emitted[i].1.push(t);
                 if t == tok::EOS {
                     alive[i] = false;
                     continue;
@@ -235,8 +235,26 @@ impl HloEngine {
                 }
             }
         }
-        Ok(ChunkResult { emitted, cost: t0.elapsed().as_secs_f64() })
+        out.cost = t0.elapsed().as_secs_f64();
+        Ok(())
     }
+}
+
+/// Reset `out` for this round's active slots, recycling its per-slot token
+/// buffers from the previous round in place (the [`Engine::decode_into`]
+/// contract: no per-round allocation in steady state).
+fn reset_chunk(out: &mut ChunkResult, active: &[SlotId]) {
+    out.emitted.truncate(active.len());
+    for (i, &s) in active.iter().enumerate() {
+        match out.emitted.get_mut(i) {
+            Some(e) => {
+                e.0 = s;
+                e.1.clear();
+            }
+            None => out.emitted.push((s, Vec::new())),
+        }
+    }
+    out.cost = 0.0;
 }
 
 impl Engine for HloEngine {
@@ -286,12 +304,13 @@ impl Engine for HloEngine {
         Ok(t0.elapsed().as_secs_f64())
     }
 
-    fn decode(
+    fn decode_into(
         &mut self,
         active: &[SlotId],
         steps: usize,
         temp: f32,
-    ) -> Result<ChunkResult> {
+        out: &mut ChunkResult,
+    ) -> Result<()> {
         for &s in active {
             if s >= self.caps.slots {
                 bail!("slot {s} out of range");
@@ -301,11 +320,14 @@ impl Engine for HloEngine {
             }
         }
         if active.is_empty() || steps == 0 {
-            return Ok(ChunkResult::default());
+            out.emitted.clear();
+            out.cost = 0.0;
+            return Ok(());
         }
+        reset_chunk(out, active);
         match self.mode {
-            DecodeMode::Fused => self.decode_fused(active, steps, temp),
-            DecodeMode::Stepwise => self.decode_stepwise(active, steps, temp),
+            DecodeMode::Fused => self.decode_fused(active, steps, temp, out),
+            DecodeMode::Stepwise => self.decode_stepwise(active, steps, temp, out),
         }
     }
 

@@ -1,6 +1,6 @@
 //! The batched decode engine: fixed KV slots, continuous refill.
 //!
-//! The coordinator talks to a slot-oriented [`Engine`]: it prefus prompts
+//! The coordinator talks to a slot-oriented [`Engine`]: it prefills prompts
 //! into free slots, runs decode rounds over the active slots, and releases
 //! slots when branches terminate. Two implementations share the trait:
 //!
@@ -74,10 +74,31 @@ pub trait Engine {
     /// (Re)initialize slots with prompts. Returns compute cost (seconds).
     fn prefill(&mut self, entries: &[PrefillEntry]) -> Result<f64>;
 
-    /// Run up to `steps` decode steps for `active` slots. Slots not listed
-    /// are frozen. A slot that emits EOS stops generating within the round.
+    /// Run up to `steps` decode steps for `active` slots, writing the
+    /// round's result into `out` (any previous contents are replaced).
+    /// Slots not listed are frozen. A slot that emits EOS stops generating
+    /// within the round.
+    ///
+    /// This is the hot-path entry point: a caller that keeps one
+    /// [`ChunkResult`] alive across rounds lets the engine recycle the
+    /// per-slot token buffers instead of reallocating them every round
+    /// (the scheduler decodes once per round for the lifetime of a serve).
+    fn decode_into(
+        &mut self,
+        active: &[SlotId],
+        steps: usize,
+        temp: f32,
+        out: &mut ChunkResult,
+    ) -> Result<()>;
+
+    /// Convenience wrapper over [`Engine::decode_into`] allocating a fresh
+    /// result (fine for tests and one-shot probes).
     fn decode(&mut self, active: &[SlotId], steps: usize, temp: f32)
-        -> Result<ChunkResult>;
+        -> Result<ChunkResult> {
+        let mut out = ChunkResult::default();
+        self.decode_into(active, steps, temp, &mut out)?;
+        Ok(out)
+    }
 
     /// Install forks: prefill the prompt then teacher-force a prefix, so
     /// the slot continues generation from mid-trajectory. This is how

@@ -3,11 +3,17 @@
 //! Replays the SynthHop corpus generative process per branch: at prefill
 //! the prompt is parsed back into a [`Question`] and a full scripted
 //! response is drawn from the dataset's trajectory distribution with the
-//! branch's own seed; decode rounds then release it token by token. The
-//! cost model charges `step_base + step_per_slot * |active|` per decode
-//! step and a per-slot prefill cost — the same batch-size-dependent shape
-//! as the real engine, so queuing/batching phenomena (and thus the
-//! paper's figures) reproduce at full scale in deterministic virtual time.
+//! branch's own seed; decode rounds then release it in chunks. The cost
+//! model charges `step_base + step_per_slot * |active|` per decode step
+//! and a per-slot prefill cost — the same batch-size-dependent shape as
+//! the real engine, so queuing/batching phenomena (and thus the paper's
+//! figures) reproduce at full scale in deterministic virtual time.
+//!
+//! Decode is the hot path of every full-scale sweep, so it avoids
+//! per-token work entirely: the script and its EOS position are fixed at
+//! prefill, each round emits one `memcpy`-style slice copy per slot, and
+//! the per-slot emit buffers handed back through
+//! [`Engine::decode_into`]'s `out` parameter are recycled across rounds.
 
 use super::{ChunkResult, Engine, EngineCaps, PrefillEntry, SlotId};
 use crate::tokenizer as tok;
@@ -15,7 +21,6 @@ use crate::tokenizer::Token;
 use crate::util::rng::Rng;
 use crate::workload::{Question, TaskSpec};
 use anyhow::{bail, Result};
-use std::collections::VecDeque;
 
 /// Virtual cost model (seconds). Defaults calibrated to the HLO engine on
 /// the dev machine (see EXPERIMENTS.md §Calibration).
@@ -39,7 +44,33 @@ impl Default for SimCostModel {
 }
 
 struct SlotState {
-    remaining: VecDeque<Token>,
+    /// Full scripted response, fixed at prefill.
+    script: Vec<Token>,
+    /// Next script position to emit.
+    pos: usize,
+    /// Position of the script's EOS token (None only for malformed
+    /// scripts; defensive).
+    eos_at: Option<usize>,
+}
+
+impl SlotState {
+    /// Tokens this slot can still emit (up to and including EOS).
+    fn available(&self) -> usize {
+        match self.eos_at {
+            Some(e) if e >= self.pos => e - self.pos + 1,
+            _ => self.script.len() - self.pos,
+        }
+    }
+
+    /// Decode steps this slot occupies before going dead: one per emitted
+    /// token, plus one trailing step when the script exhausts without EOS
+    /// (mirrors the stepwise reference semantics exactly).
+    fn alive_steps(&self) -> usize {
+        match self.eos_at {
+            Some(e) if e >= self.pos => e - self.pos + 1,
+            _ => self.script.len() - self.pos + 1,
+        }
+    }
 }
 
 /// Scripted-response engine in virtual time.
@@ -48,10 +79,9 @@ pub struct SimEngine {
     spec: TaskSpec,
     cost: SimCostModel,
     slots: Vec<Option<SlotState>>,
-    /// Length-distribution override: when set, scripted responses are
-    /// resampled until their length matches the paper-like lognormal (used
-    /// by ablation studies on the length distribution).
-    pub temp_ignored: (),
+    /// Recycled emit buffers (drained from the caller's previous
+    /// `ChunkResult`, refilled on the next round).
+    spare: Vec<Vec<Token>>,
 }
 
 impl SimEngine {
@@ -67,7 +97,7 @@ impl SimEngine {
             spec,
             cost,
             slots: (0..slots).map(|_| None).collect(),
-            temp_ignored: (),
+            spare: Vec::new(),
         }
     }
 
@@ -76,6 +106,21 @@ impl SimEngine {
             bail!("slot {slot} out of range ({})", self.slots.len());
         }
         Ok(())
+    }
+
+    fn install(&mut self, slot: SlotId, script: Vec<Token>) {
+        let eos_at = script.iter().position(|&t| t == tok::EOS);
+        self.slots[slot] = Some(SlotState { script, pos: 0, eos_at });
+    }
+
+    /// Return a token buffer to the reuse pool, bounded by the slot count
+    /// so long serves (one release per terminated branch) cannot grow the
+    /// pool without bound.
+    fn recycle(&mut self, mut v: Vec<Token>) {
+        if self.spare.len() < self.slots.len() {
+            v.clear();
+            self.spare.push(v);
+        }
     }
 }
 
@@ -96,59 +141,46 @@ impl Engine for SimEngine {
             let script =
                 crate::workload::sample_response(&q, &self.spec, &mut rng,
                                                  self.caps.max_seq);
-            self.slots[e.slot] =
-                Some(SlotState { remaining: script.into() });
+            self.install(e.slot, script);
         }
         Ok(self.cost.prefill_base
             + self.cost.prefill_per_slot * entries.len() as f64)
     }
 
-    fn decode(&mut self, active: &[SlotId], steps: usize, _temp: f32)
-        -> Result<ChunkResult> {
-        let mut emitted: Vec<(SlotId, Vec<Token>)> =
-            active.iter().map(|&s| (s, Vec::new())).collect();
-        let mut alive: Vec<bool> = active
-            .iter()
-            .map(|&s| self.slots.get(s).map(|x| x.is_some()).unwrap_or(false))
-            .collect();
-        for (i, &s) in active.iter().enumerate() {
+    fn decode_into(&mut self, active: &[SlotId], steps: usize, _temp: f32,
+                   out: &mut ChunkResult) -> Result<()> {
+        // Recycle the caller's previous-round buffers (pool capped at the
+        // slot count — steady state needs one buffer per active slot).
+        for (_, v) in out.emitted.drain(..) {
+            self.recycle(v);
+        }
+        out.cost = 0.0;
+        for &s in active {
             self.check_slot(s)?;
-            if !alive[i] {
+            if self.slots[s].is_none() {
                 bail!("decode on empty slot {s}");
             }
         }
-        let mut charged_steps = 0usize;
-        for _ in 0..steps {
-            if !alive.iter().any(|&a| a) {
-                break;
-            }
-            charged_steps += 1;
-            for (i, &s) in active.iter().enumerate() {
-                if !alive[i] {
-                    continue;
-                }
-                let st = self.slots[s].as_mut().unwrap();
-                match st.remaining.pop_front() {
-                    Some(t) => {
-                        emitted[i].1.push(t);
-                        if t == tok::EOS {
-                            alive[i] = false;
-                        }
-                    }
-                    None => {
-                        // Script exhausted without EOS (cannot happen for
-                        // well-formed scripts; defensive).
-                        alive[i] = false;
-                    }
-                }
-            }
+        // Steps actually run: the round ends early once every slot has
+        // emitted EOS (slots keep occupying their lane until then — the
+        // batch runs at its configured width, as in the HLO engine).
+        let mut charged = 0usize;
+        for &s in active {
+            let st = self.slots[s].as_ref().unwrap();
+            charged = charged.max(st.alive_steps().min(steps));
         }
-        // The batch runs at its configured width for the whole round —
-        // completed slots keep occupying their lane (as in the HLO engine).
-        let cost = charged_steps as f64
+        for &s in active {
+            let st = self.slots[s].as_mut().unwrap();
+            let k = st.available().min(charged);
+            let mut buf = self.spare.pop().unwrap_or_default();
+            buf.extend_from_slice(&st.script[st.pos..st.pos + k]);
+            st.pos += k;
+            out.emitted.push((s, buf));
+        }
+        out.cost = charged as f64
             * (self.cost.step_base
                 + self.cost.step_per_slot * active.len() as f64);
-        Ok(ChunkResult { emitted, cost })
+        Ok(())
     }
 
     fn replay(&mut self, entries: &[super::ReplayEntry]) -> Result<f64> {
@@ -159,7 +191,7 @@ impl Engine for SimEngine {
             let mut rng = Rng::new(e.seed);
             let script = crate::workload::continue_response(
                 &q, &self.spec, &e.forced, &mut rng, self.caps.max_seq);
-            self.slots[e.slot] = Some(SlotState { remaining: script.into() });
+            self.install(e.slot, script);
             max_forced = max_forced.max(e.forced.len());
         }
         // Cost: one prefill plus one teacher-forced decode step per forced
@@ -172,8 +204,10 @@ impl Engine for SimEngine {
     }
 
     fn release(&mut self, slot: SlotId) {
-        if let Some(s) = self.slots.get_mut(slot) {
-            *s = None;
+        let taken = self.slots.get_mut(slot).and_then(|s| s.take());
+        if let Some(st) = taken {
+            // Recycle the script allocation as a future emit buffer.
+            self.recycle(st.script);
         }
     }
 
@@ -232,6 +266,28 @@ mod tests {
             }
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers_and_matches_decode() {
+        // The buffer-reusing path must be byte-identical to fresh
+        // allocation round by round.
+        let mut a = engine();
+        let mut b = engine();
+        for eng in [&mut a, &mut b] {
+            eng.prefill(&[
+                PrefillEntry { slot: 0, prompt: prompt(5), seed: 1 },
+                PrefillEntry { slot: 1, prompt: prompt(6), seed: 2 },
+            ])
+            .unwrap();
+        }
+        let mut reused = ChunkResult::default();
+        for _ in 0..20 {
+            a.decode_into(&[0, 1], 16, 1.0, &mut reused).unwrap();
+            let fresh = b.decode(&[0, 1], 16, 1.0).unwrap();
+            assert_eq!(reused.emitted, fresh.emitted);
+            assert_eq!(reused.cost, fresh.cost);
+        }
     }
 
     #[test]

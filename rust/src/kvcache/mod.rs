@@ -18,17 +18,29 @@
 //!
 //! Admission control asks `can_admit`; the scheduler combines this with
 //! engine-slot availability.
+//!
+//! Storage is slab-style: prefixes and branches live in `Vec`s indexed by
+//! their handle, with a free list for reuse and a per-slot generation
+//! counter so stale handles (double release, use-after-release) are
+//! rejected in O(1) instead of hashed lookups — the manager sits on the
+//! admission/termination hot path of every scheduling round.
 
 use anyhow::{bail, Result};
-use std::collections::HashMap;
 
-/// Handle for a request's shared prompt pages.
+/// Handle for a request's shared prompt pages (generation-checked slab
+/// index; stale handles are rejected by every operation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct PrefixId(pub u64);
+pub struct PrefixId {
+    idx: u32,
+    gen: u32,
+}
 
-/// Handle for one branch's reserved decode pages.
+/// Handle for one branch's reserved decode pages (generation-checked).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct BranchId(pub u64);
+pub struct BranchId {
+    idx: u32,
+    gen: u32,
+}
 
 #[derive(Debug)]
 struct Prefix {
@@ -45,15 +57,82 @@ struct BranchAlloc {
     grown_tokens: usize,
 }
 
+/// One slab slot: the generation is bumped on removal so outstanding
+/// handles to the old occupant can never alias a reused slot.
+#[derive(Debug)]
+struct Slot<T> {
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Minimal slab: Vec storage + free list + live count.
+#[derive(Debug)]
+struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Slab<T> {
+    fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    fn insert(&mut self, val: T) -> (u32, u32) {
+        self.len += 1;
+        if let Some(idx) = self.free.pop() {
+            let s = &mut self.slots[idx as usize];
+            debug_assert!(s.val.is_none());
+            s.val = Some(val);
+            (idx, s.gen)
+        } else {
+            self.slots.push(Slot { gen: 0, val: Some(val) });
+            ((self.slots.len() - 1) as u32, 0)
+        }
+    }
+
+    fn get(&self, idx: u32, gen: u32) -> Option<&T> {
+        self.slots
+            .get(idx as usize)
+            .filter(|s| s.gen == gen)
+            .and_then(|s| s.val.as_ref())
+    }
+
+    fn get_mut(&mut self, idx: u32, gen: u32) -> Option<&mut T> {
+        self.slots
+            .get_mut(idx as usize)
+            .filter(|s| s.gen == gen)
+            .and_then(|s| s.val.as_mut())
+    }
+
+    fn remove(&mut self, idx: u32, gen: u32) -> Option<T> {
+        let s = self.slots.get_mut(idx as usize)?;
+        if s.gen != gen {
+            return None;
+        }
+        let v = s.val.take()?;
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(idx);
+        self.len -= 1;
+        Some(v)
+    }
+
+    fn iter(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().filter_map(|s| s.val.as_ref())
+    }
+}
+
 /// Paged KV accounting with a hard page budget.
 #[derive(Debug)]
 pub struct KvCacheManager {
     page_tokens: usize,
     capacity_pages: usize,
     used_pages: usize,
-    prefixes: HashMap<u64, Prefix>,
-    branches: HashMap<u64, BranchAlloc>,
-    next_id: u64,
+    prefixes: Slab<Prefix>,
+    branches: Slab<BranchAlloc>,
+    /// Incrementally maintained Σ grown_tokens over live branches
+    /// (Fig. 3's "running tokens"; previously recomputed by a full scan).
+    live_decoded: usize,
     /// High-water mark, for metrics.
     peak_pages: usize,
 }
@@ -69,9 +148,9 @@ impl KvCacheManager {
             page_tokens,
             capacity_pages: capacity_tokens / page_tokens,
             used_pages: 0,
-            prefixes: HashMap::new(),
-            branches: HashMap::new(),
-            next_id: 0,
+            prefixes: Slab::new(),
+            branches: Slab::new(),
+            live_decoded: 0,
             peak_pages: 0,
         }
     }
@@ -128,28 +207,23 @@ impl KvCacheManager {
         }
         let prefix_pages = pages_for(prompt_len, self.page_tokens);
         let branch_pages = pages_for(max_new, self.page_tokens);
-        let pid = self.next_id;
-        self.next_id += 1;
-        self.prefixes
-            .insert(pid, Prefix { pages: prefix_pages, refcount: n_branches });
+        let (pidx, pgen) = self
+            .prefixes
+            .insert(Prefix { pages: prefix_pages, refcount: n_branches });
+        let prefix = PrefixId { idx: pidx, gen: pgen };
         self.used_pages += prefix_pages;
         let mut branch_ids = Vec::with_capacity(n_branches);
         for _ in 0..n_branches {
-            let bid = self.next_id;
-            self.next_id += 1;
-            self.branches.insert(
-                bid,
-                BranchAlloc {
-                    prefix: PrefixId(pid),
-                    reserved_pages: branch_pages,
-                    grown_tokens: 0,
-                },
-            );
+            let (bidx, bgen) = self.branches.insert(BranchAlloc {
+                prefix,
+                reserved_pages: branch_pages,
+                grown_tokens: 0,
+            });
             self.used_pages += branch_pages;
-            branch_ids.push(BranchId(bid));
+            branch_ids.push(BranchId { idx: bidx, gen: bgen });
         }
         self.peak_pages = self.peak_pages.max(self.used_pages);
-        Ok((PrefixId(pid), branch_ids))
+        Ok((prefix, branch_ids))
     }
 
     /// Attach `n_more` branches to an existing shared prefix (Rebase tree
@@ -161,7 +235,7 @@ impl KvCacheManager {
         max_new: usize,
         n_more: usize,
     ) -> Result<Vec<BranchId>> {
-        if !self.prefixes.contains_key(&prefix.0) {
+        if self.prefixes.get(prefix.idx, prefix.gen).is_none() {
             bail!("grow on unknown prefix {prefix:?}");
         }
         if !self.can_grow(max_new, n_more) {
@@ -174,56 +248,60 @@ impl KvCacheManager {
         let branch_pages = pages_for(max_new, self.page_tokens);
         let mut out = Vec::with_capacity(n_more);
         for _ in 0..n_more {
-            let bid = self.next_id;
-            self.next_id += 1;
-            self.branches.insert(
-                bid,
-                BranchAlloc {
-                    prefix,
-                    reserved_pages: branch_pages,
-                    grown_tokens: 0,
-                },
-            );
+            let (bidx, bgen) = self.branches.insert(BranchAlloc {
+                prefix,
+                reserved_pages: branch_pages,
+                grown_tokens: 0,
+            });
             self.used_pages += branch_pages;
-            out.push(BranchId(bid));
+            out.push(BranchId { idx: bidx, gen: bgen });
         }
-        self.prefixes.get_mut(&prefix.0).unwrap().refcount += n_more;
+        self.prefixes
+            .get_mut(prefix.idx, prefix.gen)
+            .unwrap()
+            .refcount += n_more;
         self.peak_pages = self.peak_pages.max(self.used_pages);
         Ok(out)
     }
 
     /// Record decode progress (informational; reservation already charged).
     pub fn note_decode(&mut self, branch: BranchId, new_tokens: usize) -> Result<()> {
-        match self.branches.get_mut(&branch.0) {
+        match self.branches.get_mut(branch.idx, branch.gen) {
             Some(b) => {
                 b.grown_tokens += new_tokens;
+                self.live_decoded += new_tokens;
                 Ok(())
             }
             None => bail!("note_decode on unknown branch {branch:?}"),
         }
     }
 
-    /// Tokens actually decoded by live branches (Fig. 3's "running tokens").
+    /// Tokens actually decoded by live branches (Fig. 3's "running
+    /// tokens"). O(1): maintained incrementally by `note_decode` /
+    /// `release_branch` and cross-checked by `check_invariants`.
     pub fn live_decoded_tokens(&self) -> usize {
-        self.branches.values().map(|b| b.grown_tokens).sum()
+        self.live_decoded
     }
 
     /// Release a branch (pruned / early-stopped / completed). Frees its
     /// reservation immediately; frees the prefix when the last sibling
-    /// terminates. Double release is an error (caught by tests).
+    /// terminates. Double release is an error (caught by the slab
+    /// generation check, even after the slot has been reused).
     pub fn release_branch(&mut self, branch: BranchId) -> Result<()> {
-        let Some(b) = self.branches.remove(&branch.0) else {
+        let Some(b) = self.branches.remove(branch.idx, branch.gen) else {
             bail!("double release of branch {branch:?}");
         };
         debug_assert!(self.used_pages >= b.reserved_pages);
         self.used_pages -= b.reserved_pages;
+        debug_assert!(self.live_decoded >= b.grown_tokens);
+        self.live_decoded -= b.grown_tokens;
         let prefix = self
             .prefixes
-            .get_mut(&b.prefix.0)
+            .get_mut(b.prefix.idx, b.prefix.gen)
             .expect("branch with dangling prefix");
         prefix.refcount -= 1;
         if prefix.refcount == 0 {
-            let p = self.prefixes.remove(&b.prefix.0).unwrap();
+            let p = self.prefixes.remove(b.prefix.idx, b.prefix.gen).unwrap();
             debug_assert!(self.used_pages >= p.pages);
             self.used_pages -= p.pages;
         }
@@ -232,32 +310,40 @@ impl KvCacheManager {
 
     /// Number of live branches (for invariant checks).
     pub fn live_branches(&self) -> usize {
-        self.branches.len()
+        self.branches.len
     }
 
     pub fn live_prefixes(&self) -> usize {
-        self.prefixes.len()
+        self.prefixes.len
     }
 
     /// Internal invariant: used_pages equals the sum of all live
-    /// allocations. Exposed for property tests.
+    /// allocations, and the incremental counters match a from-scratch
+    /// recomputation. Exposed for property tests.
     pub fn check_invariants(&self) -> Result<()> {
-        let computed: usize = self.prefixes.values().map(|p| p.pages).sum::<usize>()
-            + self.branches.values().map(|b| b.reserved_pages).sum::<usize>();
+        let computed: usize = self.prefixes.iter().map(|p| p.pages).sum::<usize>()
+            + self.branches.iter().map(|b| b.reserved_pages).sum::<usize>();
         if computed != self.used_pages {
             bail!("accounting drift: computed {computed} != used {}", self.used_pages);
         }
         if self.used_pages > self.capacity_pages {
             bail!("over budget: {} > {}", self.used_pages, self.capacity_pages);
         }
-        for b in self.branches.values() {
-            if !self.prefixes.contains_key(&b.prefix.0) {
+        let decoded: usize = self.branches.iter().map(|b| b.grown_tokens).sum();
+        if decoded != self.live_decoded {
+            bail!(
+                "live_decoded drift: recomputed {decoded} != counter {}",
+                self.live_decoded
+            );
+        }
+        for b in self.branches.iter() {
+            if self.prefixes.get(b.prefix.idx, b.prefix.gen).is_none() {
                 bail!("branch references dead prefix");
             }
         }
-        let refsum: usize = self.prefixes.values().map(|p| p.refcount).sum();
-        if refsum != self.branches.len() {
-            bail!("refcount drift: {} != {}", refsum, self.branches.len());
+        let refsum: usize = self.prefixes.iter().map(|p| p.refcount).sum();
+        if refsum != self.branches.len {
+            bail!("refcount drift: {} != {}", refsum, self.branches.len);
         }
         Ok(())
     }
@@ -303,6 +389,41 @@ mod tests {
         let (_, branches) = kv.admit(10, 10, 1).unwrap();
         kv.release_branch(branches[0]).unwrap();
         assert!(kv.release_branch(branches[0]).is_err());
+    }
+
+    #[test]
+    fn stale_handles_rejected_after_slot_reuse() {
+        let mut kv = KvCacheManager::new(4096, 16);
+        let (p1, b1) = kv.admit(16, 16, 1).unwrap();
+        kv.release_branch(b1[0]).unwrap();
+        // The next admit reuses the freed slab slots with a bumped
+        // generation; the stale handles must still be rejected.
+        let (p2, b2) = kv.admit(16, 16, 1).unwrap();
+        assert!(kv.note_decode(b1[0], 4).is_err());
+        assert!(kv.release_branch(b1[0]).is_err());
+        assert!(kv.grow(p1, 16, 1).is_err());
+        assert_ne!(p1, p2);
+        assert_ne!(b1[0], b2[0]);
+        kv.note_decode(b2[0], 4).unwrap();
+        kv.release_branch(b2[0]).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn live_decoded_tokens_tracks_growth() {
+        let mut kv = KvCacheManager::new(4096, 16);
+        let (_, bs) = kv.admit(27, 64, 2).unwrap();
+        assert_eq!(kv.live_decoded_tokens(), 0);
+        kv.note_decode(bs[0], 10).unwrap();
+        kv.note_decode(bs[1], 5).unwrap();
+        kv.note_decode(bs[0], 3).unwrap();
+        assert_eq!(kv.live_decoded_tokens(), 18);
+        kv.check_invariants().unwrap();
+        kv.release_branch(bs[0]).unwrap();
+        assert_eq!(kv.live_decoded_tokens(), 5);
+        kv.release_branch(bs[1]).unwrap();
+        assert_eq!(kv.live_decoded_tokens(), 0);
+        kv.check_invariants().unwrap();
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! tuple-buffer limitation of the binding never bites.
 
 use super::manifest::{ModelArtifacts, ParamEntry, PrmArtifacts};
+// Offline stand-in with the same API as the external `xla` binding; see
+// the module docs for how to swap the real crate back in.
+use super::xla;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::rc::Rc;

@@ -8,6 +8,7 @@
 
 pub mod client;
 pub mod manifest;
+pub mod xla;
 
 pub use client::{read_f32, Executable, ModelExecutables, Runtime};
 pub use manifest::{

@@ -1,4 +1,4 @@
-//! In-repo property-testing helper.
+//! In-repo property-testing and micro-benchmark helpers.
 //!
 //! The offline registry has no `proptest`, so this provides the subset we
 //! need: seeded random case generation, a fixed case budget, and
@@ -48,28 +48,86 @@ where
 
 /// Micro-benchmark support for the `harness = false` bench targets
 /// (criterion is unavailable offline; this prints the same headline
-/// numbers: mean / p50 / p95 per iteration).
+/// numbers: mean / p50 / p95 per iteration) and serializes every run to
+/// a machine-readable `BENCH_<name>.json` at the repo root so the perf
+/// trajectory is tracked PR over PR (see EXPERIMENTS.md §Benches).
+///
+/// Environment knobs:
+/// * `SART_BENCH_ITERS` — upper bound on iterations per bench (CI smoke
+///   runs use a small value; statistics stay valid, just noisier);
+/// * `SART_BENCH_DIR` — output directory for the JSON reports (defaults
+///   to the repo root, i.e. the parent of the cargo manifest dir).
 pub mod bench {
-    use crate::util::stats::{percentile, mean};
+    use crate::util::json::Json;
+    use crate::util::stats::{mean, percentile};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
     use std::time::Instant;
 
-    /// Time `iters` runs of `f` after `warmup` runs; print a stats row.
-    pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    /// One measured bench row (all times in microseconds per iteration).
+    #[derive(Debug, Clone)]
+    pub struct BenchResult {
+        pub name: String,
+        pub iters: usize,
+        pub mean_us: f64,
+        pub p50_us: f64,
+        pub p95_us: f64,
+    }
+
+    /// Cap `iters` by the `SART_BENCH_ITERS` env knob (min 1).
+    fn effective_iters(iters: usize) -> usize {
+        std::env::var("SART_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|cap| iters.min(cap))
+            .unwrap_or(iters)
+            .max(1)
+    }
+
+    /// Time `iters` runs of `f` after `warmup` runs; print a stats row
+    /// and return the measurement for report serialization.
+    pub fn run<F: FnMut()>(
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> BenchResult {
+        run_timed(name, warmup, iters, || {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e6 // µs
+        })
+    }
+
+    /// Like [`run`] but `f` reports its own measured microseconds —
+    /// for bodies that need untimed setup between samples (e.g.
+    /// re-prefilling engine slots so a decode bench never times prefill).
+    pub fn run_timed<F: FnMut() -> f64>(
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> BenchResult {
+        let iters = effective_iters(iters);
         for _ in 0..warmup {
             f();
         }
         let mut samples = Vec::with_capacity(iters);
         for _ in 0..iters {
-            let t0 = Instant::now();
-            f();
-            samples.push(t0.elapsed().as_secs_f64() * 1e6); // µs
+            samples.push(f());
         }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_us: mean(&samples),
+            p50_us: percentile(&samples, 50.0),
+            p95_us: percentile(&samples, 95.0),
+        };
         println!(
             "{name:<44} {:>10.1} µs/iter  p50 {:>10.1}  p95 {:>10.1}  (n={iters})",
-            mean(&samples),
-            percentile(&samples, 50.0),
-            percentile(&samples, 95.0),
+            res.mean_us, res.p50_us, res.p95_us,
         );
+        res
     }
 
     /// Like [`run`] but for fallible bodies; panics on error.
@@ -78,8 +136,87 @@ pub mod bench {
         warmup: usize,
         iters: usize,
         mut f: F,
-    ) {
-        run(name, warmup, iters, || f().expect("bench body failed"));
+    ) -> BenchResult {
+        run(name, warmup, iters, || f().expect("bench body failed"))
+    }
+
+    /// Accumulates bench rows plus named scalar metrics and writes them
+    /// as `BENCH_<name>.json` (schema documented in EXPERIMENTS.md).
+    #[derive(Debug, Clone)]
+    pub struct BenchReport {
+        name: String,
+        results: Vec<BenchResult>,
+        metrics: BTreeMap<String, f64>,
+    }
+
+    impl BenchReport {
+        pub fn new(name: &str) -> BenchReport {
+            BenchReport {
+                name: name.to_string(),
+                results: Vec::new(),
+                metrics: BTreeMap::new(),
+            }
+        }
+
+        pub fn push(&mut self, r: BenchResult) {
+            self.results.push(r);
+        }
+
+        /// Record a derived scalar (e.g. µs/round at a given scale).
+        pub fn metric(&mut self, name: &str, value: f64) {
+            self.metrics.insert(name.to_string(), value);
+        }
+
+        pub fn to_json(&self) -> Json {
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(), Json::Str(self.name.clone()));
+            root.insert(
+                "results".to_string(),
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            let mut o = BTreeMap::new();
+                            o.insert("name".into(), Json::Str(r.name.clone()));
+                            o.insert("iters".into(), Json::Num(r.iters as f64));
+                            o.insert("mean_us".into(), Json::Num(r.mean_us));
+                            o.insert("p50_us".into(), Json::Num(r.p50_us));
+                            o.insert("p95_us".into(), Json::Num(r.p95_us));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
+            );
+            root.insert(
+                "metrics".to_string(),
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                        .collect(),
+                ),
+            );
+            Json::Obj(root)
+        }
+
+        /// Serialize to `<out dir>/BENCH_<name>.json` and return the path.
+        pub fn write(&self) -> anyhow::Result<PathBuf> {
+            let dir = std::env::var_os("SART_BENCH_DIR")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| {
+                    // The repo root: parent of the rust/ package dir.
+                    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                        .parent()
+                        .map(|p| p.to_path_buf())
+                        .unwrap_or_else(|| PathBuf::from("."))
+                });
+            let path = dir.join(format!("BENCH_{}.json", self.name));
+            let mut text = self.to_json().to_string();
+            text.push('\n');
+            std::fs::write(&path, text)?;
+            println!("wrote {}", path.display());
+            Ok(path)
+        }
     }
 }
 
@@ -120,5 +257,45 @@ mod tests {
                 Err(format!("x={x}"))
             }
         });
+    }
+
+    #[test]
+    fn bench_run_returns_stats() {
+        let r = bench::run("noop", 1, 8, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters.min(8), r.iters);
+        assert!(r.mean_us >= 0.0 && r.p50_us >= 0.0 && r.p95_us >= 0.0);
+    }
+
+    #[test]
+    fn bench_report_serializes_valid_json() {
+        use crate::util::json::Json;
+        let mut rep = bench::BenchReport::new("unit");
+        rep.push(bench::BenchResult {
+            name: "x".into(),
+            iters: 4,
+            mean_us: 1.5,
+            p50_us: 1.0,
+            p95_us: 2.0,
+        });
+        rep.metric("us_per_round", 3.25);
+        let j = rep.to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.req("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(
+            back.req("results").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert_eq!(
+            back.req("metrics")
+                .unwrap()
+                .req("us_per_round")
+                .unwrap()
+                .as_f64(),
+            Some(3.25)
+        );
     }
 }

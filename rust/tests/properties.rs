@@ -204,6 +204,132 @@ fn prop_early_stopping_dominates_waiting_for_all() {
 }
 
 // ---------------------------------------------------------------------------
+// Incremental bookkeeping vs from-scratch recomputation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_audit_matches_fast_path() {
+    // Audit mode recomputes every incremental structure (slot freelist,
+    // per-request running-branch index, running_tokens, cached prompts,
+    // kv counters) from straightforward full scans each round and errors
+    // on any drift. It must not change behaviour either: the audited and
+    // fast serves must be byte-identical (same outcomes, same timeline).
+    check("sched_audit", 10, |rng| {
+        let policy = random_policy(rng);
+        let slots = 2 + rng.below(14);
+        let n_req = 4 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let spec = if rng.chance(0.5) {
+            TaskSpec::synth_gaokao()
+        } else {
+            TaskSpec::synth_gpqa()
+        };
+        let seed = rng.next_u64();
+        let t_round = 8 + rng.below(24);
+        // Budget always admits at least one full request (no stalls):
+        // prompt 27 → 2 pages, plus N branches × ceil(224/16) pages.
+        let min_pages = 2 + policy.n_branches() * 14 + 4;
+        let kv_tokens = 16 * (min_pages + rng.below(1024));
+        let trace = poisson_trace(&spec, n_req, rate, seed);
+        let mut run = |audit: bool| {
+            let mut engine = SimEngine::new(slots, 256, spec.clone(),
+                                            SimCostModel::default());
+            let mut prm = OraclePrm::new(0.1, seed ^ 7);
+            let cfg = SchedConfig {
+                policy,
+                t_round,
+                temperature: 1.0,
+                max_new: 224,
+                kv_capacity_tokens: kv_tokens,
+                kv_page_tokens: 16,
+                seed,
+            };
+            let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                           ClockHandle::Sim(SimClock::new()));
+            sched.set_audit(audit);
+            sched.serve(&trace).map_err(|e| format!("audit={audit}: {e}"))
+        };
+        let fast = run(false)?;
+        let audited = run(true)?;
+        prop_assert!(
+            fast.rounds == audited.rounds,
+            "round count differs: {} vs {}",
+            fast.rounds,
+            audited.rounds
+        );
+        prop_assert!(fast.outcomes == audited.outcomes, "outcomes differ");
+        prop_assert!(
+            fast.timeline.points == audited.timeline.points,
+            "timeline differs"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvcache_live_decoded_matches_mirror() {
+    // The incrementally maintained live_decoded_tokens counter must equal
+    // a from-scratch mirror under random admit/decode/release
+    // interleavings, and stale (released) handles must stay rejected even
+    // after their slab slots are reused.
+    check("kv_live_decoded", default_cases(), |rng| {
+        let mut kv = KvCacheManager::new(4096 * 16, 16);
+        let mut live: Vec<(sart::kvcache::BranchId, usize)> = Vec::new();
+        let mut dead: Vec<sart::kvcache::BranchId> = Vec::new();
+        let mut total = 0usize;
+        for _ in 0..300 {
+            match rng.below(3) {
+                0 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let (b, grown) = live.swap_remove(i);
+                    kv.release_branch(b).map_err(|e| e.to_string())?;
+                    total -= grown;
+                    dead.push(b);
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let toks = 1 + rng.below(16);
+                    kv.note_decode(live[i].0, toks)
+                        .map_err(|e| e.to_string())?;
+                    live[i].1 += toks;
+                    total += toks;
+                }
+                _ => {
+                    let n = 1 + rng.below(4);
+                    if kv.can_admit(27, 64, n) {
+                        let (_, bs) =
+                            kv.admit(27, 64, n).map_err(|e| e.to_string())?;
+                        live.extend(bs.into_iter().map(|b| (b, 0)));
+                    }
+                }
+            }
+            prop_assert!(
+                kv.live_decoded_tokens() == total,
+                "live_decoded {} != mirror {total}",
+                kv.live_decoded_tokens()
+            );
+            kv.check_invariants().map_err(|e| e.to_string())?;
+            if let Some(&b) = dead.last() {
+                prop_assert!(
+                    kv.note_decode(b, 1).is_err(),
+                    "note_decode on released branch succeeded"
+                );
+                prop_assert!(
+                    kv.release_branch(b).is_err(),
+                    "double release succeeded"
+                );
+            }
+        }
+        for (b, _) in live.drain(..) {
+            kv.release_branch(b).map_err(|e| e.to_string())?;
+        }
+        prop_assert!(kv.live_decoded_tokens() == 0, "leaked decoded tokens");
+        prop_assert!(kv.used_pages() == 0, "leaked pages");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Order statistics (Lemma 1) against Monte-Carlo.
 // ---------------------------------------------------------------------------
 
