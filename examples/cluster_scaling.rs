@@ -1,0 +1,79 @@
+//! Horizontal-scaling demo: the same Poisson workload served by 1, 2 and
+//! 4 engine replicas under each dispatch policy (virtual time, sim
+//! engine), printing cluster-level latency and per-replica skew.
+//!
+//! The interesting comparisons:
+//! * `--replicas 1` rows reproduce the single-engine path exactly;
+//! * at fixed replica count, load-aware policies (jsq/p2c) vs blind
+//!   round-robin on p99 — the dispatch layer's contribution to the tail;
+//! * occupancy skew: how unevenly the replicas ended up loaded.
+//!
+//!     cargo run --release --example cluster_scaling
+//!     cargo run --release --example cluster_scaling -- \
+//!         --method sart:4 --requests 96 --rate 6 --dataset synth-gpqa
+//!
+//! The workload is held fixed across all rows (same trace), so rows are
+//! directly comparable.
+
+use anyhow::Result;
+use sart::cluster::LbPolicy;
+use sart::config::{Args, Method, ServeSpec};
+use sart::server;
+use sart::util::stats::render_table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut base = ServeSpec::from_args(&args)?;
+    base.method = Method::parse(&args.get_or("method", "sart:4"), &args)?;
+    base.n_requests = args.usize_or("requests", 64)?;
+    base.rate = args.f64_or("rate", 4.0)?;
+    base.slots = args.usize_or("slots", 8)?;
+    base.kv_capacity_tokens = args.usize_or("kv-tokens", 8192)?;
+
+    let trace = server::trace_for(&base)?;
+    eprintln!(
+        "# {} requests @ {:.1}/s, {} slots/replica, method {}",
+        base.n_requests,
+        base.rate,
+        base.slots,
+        base.method.label()
+    );
+
+    let headers = [
+        "replicas", "lb", "acc", "e2e-p50", "e2e-p99", "queue-p50",
+        "occ-skew", "req/replica",
+    ];
+    let mut rows = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let policies: &[LbPolicy] = if replicas == 1 {
+            &[LbPolicy::RoundRobin] // policy is irrelevant at R = 1
+        } else {
+            &LbPolicy::ALL
+        };
+        for &lb in policies {
+            let mut s = base.clone();
+            s.replicas = replicas;
+            s.lb = lb;
+            let out = server::run_on_trace(&s, &trace)?;
+            let (skew, per_replica) = match &out.cluster {
+                Some(c) => (
+                    format!("{:.2}", c.occupancy_skew),
+                    format!("{:?}", c.per_replica_requests),
+                ),
+                None => ("-".into(), format!("[{}]", out.report.n_requests)),
+            };
+            rows.push(vec![
+                format!("{replicas}"),
+                lb.label().to_string(),
+                format!("{:.3}", out.report.accuracy),
+                format!("{:.2}", out.report.e2e.p50),
+                format!("{:.2}", out.report.e2e.p99),
+                format!("{:.2}", out.report.queue.p50),
+                skew,
+                per_replica,
+            ]);
+        }
+    }
+    println!("{}", render_table(&headers, &rows));
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Bench: the multi-replica dispatch layer under a saturating Poisson
+//! trace.
+//!
+//! Serves the same workload through `cluster::serve_cluster` once per
+//! load-balancing policy and records cluster-level p50/p99 end-to-end
+//! latency plus per-replica occupancy skew in `BENCH_cluster.json`
+//! (schema in EXPERIMENTS.md §Benches). The arrival rate is calibrated
+//! in-run against a single replica's batch throughput, so the comparison
+//! stays in the discriminating near-saturation regime (~0.92 utilisation)
+//! even if the sim cost model changes.
+//!
+//! The headline metric is `p2c_vs_rr_p99_ratio`: power-of-two-choices
+//! must beat round-robin on p99 (< 1.0) — load-blind dispatch lets one
+//! replica build a backlog while another idles, exactly the tail the
+//! paper's single-engine scheduling work is trying to keep down.
+//!
+//!     cargo bench --bench cluster_dispatch
+
+use sart::cluster::{serve_cluster, ClusterConfig, ClusterResult, LbPolicy};
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::clock::SimClock;
+use sart::util::stats::percentile;
+use sart::workload::{batch_trace, poisson_trace, Request, TaskSpec};
+
+const REPLICAS: usize = 4;
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 8192;
+const N_REQUESTS: usize = 192;
+const SEED: u64 = 42;
+
+fn sched_cfg() -> SchedConfig {
+    SchedConfig {
+        // N=4 over 8 slots: two requests decode concurrently per replica,
+        // so service times are long and variable (synth-gpqa re-think
+        // loops) — the regime where dispatch policy moves the tail.
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: KV_TOKENS,
+        kv_page_tokens: 16,
+        seed: SEED,
+    }
+}
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gpqa()
+}
+
+fn replica_stacks(
+    n: usize,
+) -> (Vec<Box<dyn Engine>>, Vec<Box<dyn PrmScorer>>) {
+    let engines: Vec<Box<dyn Engine>> = (0..n)
+        .map(|_| {
+            Box::new(SimEngine::new(
+                SLOTS,
+                256,
+                spec(),
+                SimCostModel::default(),
+            )) as Box<dyn Engine>
+        })
+        .collect();
+    let prms: Vec<Box<dyn PrmScorer>> = (0..n)
+        .map(|i| {
+            Box::new(OraclePrm::new(0.08, SEED ^ 7 ^ ((i as u64) << 32)))
+                as Box<dyn PrmScorer>
+        })
+        .collect();
+    (engines, prms)
+}
+
+/// Single-replica batch throughput (req/s of virtual time with slots
+/// always full) — the calibration anchor for the saturating rate.
+fn single_replica_throughput() -> f64 {
+    let probe = batch_trace(&spec(), 48, SEED);
+    let mut engine =
+        SimEngine::new(SLOTS, 256, spec(), SimCostModel::default());
+    let mut prm = OraclePrm::new(0.08, SEED ^ 7);
+    let mut sched = Scheduler::new(
+        sched_cfg(),
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    let res = sched.serve(&probe).expect("calibration serve");
+    let makespan = res
+        .outcomes
+        .iter()
+        .map(|o| o.finished_at)
+        .fold(0.0f64, f64::max);
+    48.0 / makespan.max(1e-9)
+}
+
+fn run_cluster(lb: LbPolicy, trace: &[Request]) -> ClusterResult {
+    let (mut engines, mut prms) = replica_stacks(REPLICAS);
+    let cfg = ClusterConfig {
+        replicas: REPLICAS,
+        lb,
+        sched: sched_cfg(),
+        seed: SEED,
+        audit: false,
+    };
+    serve_cluster(&cfg, &mut engines, &mut prms, trace)
+        .expect("cluster serve")
+}
+
+fn main() {
+    println!(
+        "== cluster_dispatch ({REPLICAS} replicas x {SLOTS} slots, \
+         {N_REQUESTS} requests, synth-gpqa) =="
+    );
+    let mut report = BenchReport::new("cluster");
+
+    let thru1 = single_replica_throughput();
+    let rate = 0.92 * REPLICAS as f64 * thru1;
+    println!(
+        "calibration: single-replica throughput {thru1:.2} req/s \
+         → Poisson rate {rate:.2} req/s (~0.92 utilisation)"
+    );
+    report.metric("single_replica_throughput_req_s", thru1);
+    report.metric("poisson_rate_req_s", rate);
+    let trace = poisson_trace(&spec(), N_REQUESTS, rate, SEED);
+
+    let mut p99_by_slug: Vec<(&'static str, f64)> = Vec::new();
+    for lb in LbPolicy::ALL {
+        let res = run_cluster(lb, &trace);
+        let e2e: Vec<f64> =
+            res.outcomes.iter().map(|o| o.e2e_latency()).collect();
+        let p50 = percentile(&e2e, 50.0);
+        let p99 = percentile(&e2e, 99.0);
+        let rep = res.report();
+        println!(
+            "{:<14} p50 {p50:>7.2}s  p99 {p99:>7.2}s  occupancy-skew \
+             {:.3}  req/replica {:?}",
+            lb.label(),
+            rep.occupancy_skew,
+            rep.per_replica_requests
+        );
+        let slug = lb.slug();
+        report.metric(&format!("p50_e2e_s_{slug}"), p50);
+        report.metric(&format!("p99_e2e_s_{slug}"), p99);
+        report.metric(&format!("occupancy_skew_{slug}"), rep.occupancy_skew);
+        report.metric(&format!("request_skew_{slug}"), rep.request_skew);
+        p99_by_slug.push((slug, p99));
+        // Dispatch-layer wall cost (the whole co-simulated serve; the
+        // sim engine does no real compute, so this is coordination +
+        // dispatch bookkeeping).
+        report.push(bench::run(
+            &format!("cluster serve {N_REQUESTS} reqs ({})", lb.label()),
+            1,
+            5,
+            || {
+                std::hint::black_box(run_cluster(lb, &trace));
+            },
+        ));
+    }
+
+    let p99_of = |slug: &str| {
+        p99_by_slug
+            .iter()
+            .find(|(s, _)| *s == slug)
+            .map(|&(_, p)| p)
+            .unwrap_or(f64::NAN)
+    };
+    let ratio = p99_of("p2c") / p99_of("rr");
+    println!(
+        "p2c vs round-robin p99 ratio: {ratio:.3} (< 1.0 means two random \
+         load probes per request already tame the tail)"
+    );
+    report.metric("p2c_vs_rr_p99_ratio", ratio);
+    report.metric("jsq_vs_rr_p99_ratio", p99_of("jsq") / p99_of("rr"));
+    report.write().expect("writing BENCH_cluster.json");
+}

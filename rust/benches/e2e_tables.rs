@@ -6,6 +6,7 @@
 //!
 //!     cargo bench --bench e2e_tables
 
+use sart::cluster::LbPolicy;
 use sart::config::{EngineChoice, Method, PrmChoice, ServeSpec};
 use sart::metrics::ServeReport;
 use sart::server;
@@ -20,6 +21,8 @@ fn spec() -> ServeSpec {
         rate: 2.0,
         engine: EngineChoice::Sim,
         prm: PrmChoice::Oracle { sigma: 0.08 },
+        replicas: 1,
+        lb: LbPolicy::RoundRobin,
         slots: 16,
         kv_capacity_tokens: 8192,
         kv_page_tokens: 16,

@@ -1,0 +1,429 @@
+//! Multi-replica serving: R independent engine replicas behind a
+//! dispatch layer.
+//!
+//! The paper's efficiency claims are about batching more requests under a
+//! fixed memory budget; serving heavy traffic needs the next layer up —
+//! horizontal scale. A [`serve_cluster`] run owns R *replicas*, each a
+//! full single-engine stack (its own [`Engine`], `KvCacheManager` and
+//! [`Scheduler`] state), and assigns every arriving request to exactly
+//! one replica via a pluggable [`LbPolicy`].
+//!
+//! # Virtual-time co-simulation
+//!
+//! Replicas run in parallel in deployment, so their timelines are
+//! independent: each replica advances its own [`SimClock`] by its own
+//! engine costs only. All clocks share the trace's `t = 0` origin, which
+//! keeps per-replica timelines directly comparable and lets the merged
+//! outcome set report cluster-level latency percentiles. The dispatcher
+//! drives the replicas event-by-event: before assigning a request that
+//! arrives at time `t`, every replica is stepped forward until its clock
+//! reaches `t` (or it idles), so load-aware policies observe each
+//! replica's true state *at the arrival instant* — not a stale snapshot.
+//!
+//! A busy replica may overshoot `t` mid-round; that is exactly the
+//! single-engine semantics, where a request arriving during a decode
+//! round is admitted at the next round boundary.
+//!
+//! # Exact reduction at R = 1
+//!
+//! With one replica every request is dispatched to it in arrival order
+//! and the step sequence is identical to [`Scheduler::serve`] on the same
+//! trace, so outcomes and timeline are byte-identical — the property
+//! tests assert this for every policy. The layer therefore costs nothing
+//! to keep on the single-engine path.
+
+use crate::coordinator::{
+    ClockHandle, RequestOutcome, SchedConfig, Scheduler, ServeResult,
+    StepOutcome,
+};
+use crate::engine::Engine;
+use crate::metrics::{Timeline, TimelinePoint};
+use crate::prm::PrmScorer;
+use crate::util::clock::SimClock;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+use anyhow::{bail, Result};
+
+/// Multiplier used to decorrelate per-replica seed streams (replica 0
+/// keeps the base seed, preserving the R = 1 reduction).
+pub const REPLICA_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Load-balancing policy of the dispatch layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LbPolicy {
+    /// Cyclic assignment, blind to load.
+    RoundRobin,
+    /// Fewest running (decoding) tokens at the arrival instant.
+    LeastLoaded,
+    /// Fewest requests in system (queued + in flight).
+    JoinShortestQueue,
+    /// Sample two distinct replicas, join the shorter queue — JSQ's tail
+    /// behaviour at O(1) probe cost (Mitzenmacher's power of two choices).
+    PowerOfTwoChoices,
+}
+
+impl LbPolicy {
+    pub const ALL: [LbPolicy; 4] = [
+        LbPolicy::RoundRobin,
+        LbPolicy::LeastLoaded,
+        LbPolicy::JoinShortestQueue,
+        LbPolicy::PowerOfTwoChoices,
+    ];
+
+    /// Parse a `--lb` flag value.
+    pub fn parse(s: &str) -> Result<LbPolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => LbPolicy::RoundRobin,
+            "ll" | "least-loaded" => LbPolicy::LeastLoaded,
+            "jsq" | "join-shortest-queue" => LbPolicy::JoinShortestQueue,
+            "p2c" | "power-of-two" => LbPolicy::PowerOfTwoChoices,
+            _ => bail!(
+                "unknown lb policy `{s}` (rr|least-loaded|jsq|p2c)"
+            ),
+        })
+    }
+
+    /// Canonical flag spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LbPolicy::RoundRobin => "round-robin",
+            LbPolicy::LeastLoaded => "least-loaded",
+            LbPolicy::JoinShortestQueue => "jsq",
+            LbPolicy::PowerOfTwoChoices => "p2c",
+        }
+    }
+
+    /// Short identifier for metric keys (`BENCH_cluster.json`).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            LbPolicy::RoundRobin => "rr",
+            LbPolicy::LeastLoaded => "ll",
+            LbPolicy::JoinShortestQueue => "jsq",
+            LbPolicy::PowerOfTwoChoices => "p2c",
+        }
+    }
+}
+
+/// Everything one cluster serve needs beyond the engines themselves.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    pub lb: LbPolicy,
+    /// Per-replica scheduler configuration. The seed is decorrelated per
+    /// replica (`seed ^ i * REPLICA_SEED_STRIDE`); replica 0 keeps it
+    /// verbatim so R = 1 reduces exactly to the single-engine path.
+    pub sched: SchedConfig,
+    /// Dispatcher RNG seed (power-of-two-choices sampling).
+    pub seed: u64,
+    /// Enable per-round audit cross-checks in every replica (tests).
+    pub audit: bool,
+}
+
+/// Result of a cluster serve.
+pub struct ClusterResult {
+    /// Merged outcomes in global dispatch (= arrival) order.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Per-replica serve results (timelines share the t = 0 origin).
+    pub replica_results: Vec<ServeResult>,
+    /// Replica index each trace position was dispatched to.
+    pub assignments: Vec<usize>,
+    pub lb: LbPolicy,
+    pub wall_seconds: f64,
+}
+
+impl ClusterResult {
+    /// Cluster-wide occupancy timeline: a sweep over every replica's
+    /// sample times emitting, at each event, the *sum* of each replica's
+    /// latest state — so `peak_branches()` etc. report cluster totals,
+    /// not one replica's snapshot. (A drained replica's last sample is
+    /// all-zero, so it stops contributing.) Per-replica views stay in
+    /// `replica_results`.
+    pub fn merged_timeline(&self) -> Timeline {
+        let mut events: Vec<(f64, usize, usize)> = Vec::new();
+        for (ri, r) in self.replica_results.iter().enumerate() {
+            for (pi, p) in r.timeline.points.iter().enumerate() {
+                events.push((p.t, ri, pi));
+            }
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut last: Vec<Option<&TimelinePoint>> =
+            vec![None; self.replica_results.len()];
+        let mut points = Vec::with_capacity(events.len());
+        for (t, ri, pi) in events {
+            last[ri] = Some(&self.replica_results[ri].timeline.points[pi]);
+            let mut agg = TimelinePoint {
+                t,
+                running_branches: 0,
+                running_tokens: 0,
+                kv_pages_used: 0,
+                queued_requests: 0,
+            };
+            for l in last.iter().flatten() {
+                agg.running_branches += l.running_branches;
+                agg.running_tokens += l.running_tokens;
+                agg.kv_pages_used += l.kv_pages_used;
+                agg.queued_requests += l.queued_requests;
+            }
+            points.push(agg);
+        }
+        Timeline { points }
+    }
+
+    /// Aggregate per-replica occupancy / skew statistics.
+    pub fn report(&self) -> ClusterReport {
+        let replicas = self.replica_results.len();
+        let mut per_replica_requests = vec![0usize; replicas];
+        for &rep in &self.assignments {
+            per_replica_requests[rep] += 1;
+        }
+        // Occupancy integrated over the *cluster* horizon, not each
+        // replica's own busy span — a replica that drains early and then
+        // idles must read as lightly loaded, or round-robin's
+        // leave-one-idle imbalance would show a skew of ~1.0.
+        let horizon = self
+            .replica_results
+            .iter()
+            .filter_map(|r| r.timeline.points.last().map(|p| p.t))
+            .fold(0.0f64, f64::max);
+        let per_replica_mean_branches: Vec<f64> = self
+            .replica_results
+            .iter()
+            .map(|r| {
+                let mut area = 0.0;
+                for w in r.timeline.points.windows(2) {
+                    area += w[0].running_branches as f64
+                        * (w[1].t - w[0].t).max(0.0);
+                }
+                if horizon > 0.0 {
+                    area / horizon
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let per_replica_tokens: Vec<usize> = {
+            let mut tok = vec![0usize; replicas];
+            for (i, &rep) in self.assignments.iter().enumerate() {
+                tok[rep] += self.outcomes[i].tokens_generated;
+            }
+            tok
+        };
+        let per_replica_engine_seconds: Vec<f64> = self
+            .replica_results
+            .iter()
+            .map(|r| r.engine_seconds)
+            .collect();
+        ClusterReport {
+            replicas,
+            lb: self.lb.label().to_string(),
+            occupancy_skew: skew_f64(&per_replica_mean_branches),
+            request_skew: skew_f64(
+                &per_replica_requests
+                    .iter()
+                    .map(|&c| c as f64)
+                    .collect::<Vec<_>>(),
+            ),
+            per_replica_requests,
+            per_replica_mean_branches,
+            per_replica_tokens,
+            per_replica_engine_seconds,
+        }
+    }
+}
+
+/// Cluster-level aggregate handed to reports/benches: how evenly did the
+/// dispatch policy spread work across replicas?
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub replicas: usize,
+    pub lb: String,
+    pub per_replica_requests: Vec<usize>,
+    /// Running branches per replica integrated over the cluster horizon
+    /// (the latest sample time across all replicas), so idle tails count
+    /// as zero load.
+    pub per_replica_mean_branches: Vec<f64>,
+    pub per_replica_tokens: Vec<usize>,
+    pub per_replica_engine_seconds: Vec<f64>,
+    /// max/mean of per-replica mean occupancy (1.0 = perfectly even).
+    pub occupancy_skew: f64,
+    /// max/mean of per-replica request counts (1.0 = perfectly even).
+    pub request_skew: f64,
+}
+
+/// max/mean skew; 1.0 for empty or all-zero inputs.
+fn skew_f64(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+/// Step `s` until its clock reaches `t` or it runs out of work. An idle
+/// replica's state cannot change before its next dispatch, so stopping
+/// early is exact, not an approximation.
+fn catch_up(s: &mut Scheduler, t: f64) -> Result<()> {
+    while s.now() < t {
+        match s.step()? {
+            StepOutcome::Worked => {}
+            StepOutcome::Idle => break,
+        }
+    }
+    Ok(())
+}
+
+/// Choose the replica for one arriving request. All load reads happen at
+/// the arrival instant (the caller caught every replica up to it).
+fn pick_replica(
+    lb: LbPolicy,
+    scheds: &[Scheduler],
+    rr_next: &mut usize,
+    rng: &mut Rng,
+) -> usize {
+    let r = scheds.len();
+    if r == 1 {
+        return 0;
+    }
+    match lb {
+        LbPolicy::RoundRobin => {
+            let i = *rr_next % r;
+            *rr_next += 1;
+            i
+        }
+        LbPolicy::LeastLoaded => (0..r)
+            .min_by_key(|&i| scheds[i].load().running_tokens)
+            .unwrap_or(0),
+        LbPolicy::JoinShortestQueue => (0..r)
+            .min_by_key(|&i| scheds[i].load().requests_in_system())
+            .unwrap_or(0),
+        LbPolicy::PowerOfTwoChoices => {
+            let a = rng.below(r);
+            let mut b = rng.below(r - 1);
+            if b >= a {
+                b += 1;
+            }
+            if scheds[b].load().requests_in_system()
+                < scheds[a].load().requests_in_system()
+            {
+                b
+            } else {
+                a
+            }
+        }
+    }
+}
+
+/// Serve a trace across `cfg.replicas` engine replicas (virtual time
+/// only: each replica gets its own [`SimClock`], all sharing the trace's
+/// t = 0 origin). `engines[i]` / `prms[i]` back replica `i`; the caller
+/// owns their construction so tests and benches can wire arbitrary
+/// substrates.
+pub fn serve_cluster(
+    cfg: &ClusterConfig,
+    engines: &mut [Box<dyn Engine>],
+    prms: &mut [Box<dyn PrmScorer>],
+    trace: &[Request],
+) -> Result<ClusterResult> {
+    let r = cfg.replicas;
+    if r == 0 {
+        bail!("cluster needs at least one replica");
+    }
+    if engines.len() != r || prms.len() != r {
+        bail!(
+            "cluster wiring mismatch: {r} replicas but {} engines, {} prms",
+            engines.len(),
+            prms.len()
+        );
+    }
+    for w in trace.windows(2) {
+        if w[1].arrival < w[0].arrival {
+            bail!("trace not sorted by arrival");
+        }
+    }
+    let wall0 = std::time::Instant::now();
+
+    let mut scheds: Vec<Scheduler> = engines
+        .iter_mut()
+        .zip(prms.iter_mut())
+        .enumerate()
+        .map(|(i, (e, p))| {
+            let mut sc = cfg.sched.clone();
+            sc.seed ^= (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+            let mut s = Scheduler::new(
+                sc,
+                e.as_mut(),
+                p.as_mut(),
+                ClockHandle::Sim(SimClock::new()),
+            );
+            s.set_audit(cfg.audit);
+            s
+        })
+        .collect();
+
+    let mut rng = Rng::new(cfg.seed ^ 0x00D1_5BA7);
+    let mut rr_next = 0usize;
+    let mut assignments = Vec::with_capacity(trace.len());
+    for req in trace {
+        // Advance every replica to the arrival instant so the policy sees
+        // true loads, then dispatch.
+        for s in scheds.iter_mut() {
+            catch_up(s, req.arrival)?;
+        }
+        let idx = pick_replica(cfg.lb, &scheds, &mut rr_next, &mut rng);
+        scheds[idx].dispatch(req)?;
+        assignments.push(idx);
+    }
+    // Drain every replica to completion.
+    for s in scheds.iter_mut() {
+        while s.step()? == StepOutcome::Worked {}
+    }
+    let mut replica_results = Vec::with_capacity(r);
+    for s in scheds.iter_mut() {
+        replica_results.push(s.finish()?);
+    }
+
+    // Merge outcomes back into global dispatch order (each replica's
+    // outcomes are already in its own dispatch order).
+    let mut cursors = vec![0usize; r];
+    let mut outcomes = Vec::with_capacity(trace.len());
+    for &rep in &assignments {
+        outcomes.push(replica_results[rep].outcomes[cursors[rep]].clone());
+        cursors[rep] += 1;
+    }
+
+    Ok(ClusterResult {
+        outcomes,
+        replica_results,
+        assignments,
+        lb: cfg.lb,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lb_policy_parse_roundtrip() {
+        for lb in LbPolicy::ALL {
+            assert_eq!(LbPolicy::parse(lb.label()).unwrap(), lb);
+            assert_eq!(LbPolicy::parse(lb.slug()).unwrap(), lb);
+        }
+        assert!(LbPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn skew_edge_cases() {
+        assert_eq!(skew_f64(&[]), 1.0);
+        assert_eq!(skew_f64(&[0.0, 0.0]), 1.0);
+        assert!((skew_f64(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((skew_f64(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+}

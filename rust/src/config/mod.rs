@@ -7,6 +7,7 @@
 //! and lengths scaled to this testbed's token scale (paper T=400 at
 //! ~4-8k-token responses ≈ T=16 at our ~40-200-token responses).
 
+use crate::cluster::LbPolicy;
 use crate::coordinator::Policy;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -190,6 +191,10 @@ pub struct ServeSpec {
     pub rate: f64,
     pub engine: EngineChoice,
     pub prm: PrmChoice,
+    /// Engine replicas behind the dispatch layer (1 = single-engine path).
+    pub replicas: usize,
+    /// Load-balancing policy across replicas (ignored at `replicas = 1`).
+    pub lb: LbPolicy,
     pub slots: usize,
     pub kv_capacity_tokens: usize,
     pub kv_page_tokens: usize,
@@ -223,6 +228,10 @@ impl ServeSpec {
             },
             other => bail!("unknown prm `{other}` (oracle|hlo|auto)"),
         };
+        let replicas = args.usize_or("replicas", 1)?;
+        if replicas == 0 {
+            bail!("--replicas must be at least 1");
+        }
         Ok(ServeSpec {
             method,
             dataset: args.get_or("dataset", "synth-gaokao"),
@@ -230,6 +239,8 @@ impl ServeSpec {
             rate: args.f64_or("rate", 1.0)?,
             engine,
             prm,
+            replicas,
+            lb: LbPolicy::parse(&args.get_or("lb", "round-robin"))?,
             slots: args.usize_or("slots", 8)?,
             kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
             kv_page_tokens: args.usize_or("kv-page", 16)?,
@@ -304,6 +315,18 @@ mod tests {
         assert_eq!(s.prm, PrmChoice::Oracle { sigma: 0.08 });
         assert_eq!(s.slots, 8);
         assert_eq!(s.dataset, "synth-gaokao");
+        assert_eq!(s.replicas, 1);
+        assert_eq!(s.lb, LbPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn spec_cluster_flags() {
+        let a = args("--replicas 4 --lb p2c");
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(s.replicas, 4);
+        assert_eq!(s.lb, LbPolicy::PowerOfTwoChoices);
+        assert!(ServeSpec::from_args(&args("--replicas 0")).is_err());
+        assert!(ServeSpec::from_args(&args("--lb wat")).is_err());
     }
 
     #[test]

@@ -10,7 +10,10 @@
 pub mod scheduler;
 pub mod types;
 
-pub use scheduler::{ClockHandle, SchedConfig, Scheduler, ServeResult};
+pub use scheduler::{
+    ClockHandle, LoadSnapshot, SchedConfig, Scheduler, ServeResult,
+    StepOutcome,
+};
 pub use types::{
     Branch, BranchStatus, CompletedResponse, Policy, PrunePhase, RequestMeta,
     RequestOutcome, RequestState,

@@ -43,6 +43,17 @@
 //! straightforward scans and fails on any divergence — the property tests
 //! serve random workloads under audit and additionally assert the audit
 //! and fast paths produce byte-identical outcomes.
+//!
+//! # Stepped interface (cluster dispatch)
+//!
+//! [`Scheduler::serve`] is a thin loop over the incremental API —
+//! [`Scheduler::dispatch`] queues a request, [`Scheduler::step`] runs one
+//! round, [`Scheduler::finish`] assembles the [`ServeResult`] — so the
+//! `cluster` dispatch layer can co-simulate R replicas event-by-event
+//! (feeding each replica requests at their arrival times and advancing
+//! whichever replica lags) while a single-replica cluster serve stays
+//! byte-identical to `serve` on the same trace: both drive the exact same
+//! step sequence.
 
 use super::types::*;
 use crate::engine::{ChunkResult, Engine, PrefillEntry, SlotId};
@@ -132,6 +143,39 @@ pub struct ServeResult {
     pub wall_seconds: f64,
 }
 
+/// What one [`Scheduler::step`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// A round was processed or virtual time advanced; call again.
+    Worked,
+    /// No active branches, no queued work, no pending arrivals.
+    Idle,
+}
+
+/// Point-in-time load of one scheduler, read by cluster dispatch policies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadSnapshot {
+    pub now: f64,
+    /// Dispatched-but-unadmitted requests (incoming + FCFS queue).
+    pub queued_requests: usize,
+    /// Admitted, not yet finalized.
+    pub inflight_requests: usize,
+    /// Occupied engine slots.
+    pub running_branches: usize,
+    /// Σ generated tokens over running branches.
+    pub running_tokens: usize,
+    /// Lifetime requests dispatched to this scheduler.
+    pub dispatched_total: usize,
+}
+
+impl LoadSnapshot {
+    /// Requests anywhere in this replica (queue discipline metric for
+    /// JSQ / power-of-two-choices).
+    pub fn requests_in_system(&self) -> usize {
+        self.queued_requests + self.inflight_requests
+    }
+}
+
 /// The continuous-batching scheduler (Algorithm 1).
 pub struct Scheduler<'e> {
     cfg: SchedConfig,
@@ -141,6 +185,9 @@ pub struct Scheduler<'e> {
     kv: KvCacheManager,
     requests: Vec<RequestState>,
     truths: Vec<u8>,
+    /// Dispatched requests that have not yet reached their arrival time
+    /// (the scheduler admits them once its clock passes `arrival`).
+    incoming: VecDeque<Request>,
     request_queue: VecDeque<usize>,
     branch_queue: VecDeque<(usize, usize)>,
     slots: Vec<Option<(usize, usize)>>,
@@ -153,6 +200,14 @@ pub struct Scheduler<'e> {
     /// Σ generated tokens over Running branches (the `TimelinePoint`
     /// quantity), maintained incrementally.
     running_tokens: usize,
+    /// Occupancy timeline, one point per decode round.
+    timeline: Timeline,
+    /// Σ engine compute seconds charged so far.
+    engine_seconds: f64,
+    /// Requests finalized so far (load accounting).
+    finished_count: usize,
+    /// Lifetime requests dispatched to this scheduler.
+    dispatched_total: usize,
     /// Reused across rounds: decode result, involved list, PRM sequences,
     /// running-branch snapshot scratch.
     chunk: ChunkResult,
@@ -183,12 +238,17 @@ impl<'e> Scheduler<'e> {
             kv,
             requests: Vec::new(),
             truths: Vec::new(),
+            incoming: VecDeque::new(),
             request_queue: VecDeque::new(),
             branch_queue: VecDeque::new(),
             slots: vec![None; slots],
             free_slots: (0..slots).map(Reverse).collect(),
             round: 0,
             running_tokens: 0,
+            timeline: Timeline::default(),
+            engine_seconds: 0.0,
+            finished_count: 0,
+            dispatched_total: 0,
             chunk: ChunkResult::default(),
             involved_buf: Vec::new(),
             prm_seqs: Vec::new(),
@@ -205,139 +265,188 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Serve a full trace to completion; requests must be sorted by
-    /// arrival time.
+    /// arrival time. Equivalent to dispatching every request up front and
+    /// stepping until idle.
     pub fn serve(&mut self, trace: &[Request]) -> Result<ServeResult> {
         let wall0 = std::time::Instant::now();
-        let mut pending: VecDeque<&Request> = trace.iter().collect();
         for w in trace.windows(2) {
             if w[1].arrival < w[0].arrival {
                 bail!("trace not sorted by arrival");
             }
         }
-        let mut timeline = Timeline::default();
-        let mut rounds = 0usize;
-        let mut engine_seconds = 0.0;
+        for r in trace {
+            self.dispatch(r)?;
+        }
+        while self.step()? == StepOutcome::Worked {}
+        let mut res = self.finish()?;
+        res.wall_seconds = wall0.elapsed().as_secs_f64();
+        Ok(res)
+    }
 
-        loop {
-            let now = self.clock.now();
-            // 1. Move arrived requests into the FCFS queue.
-            while pending
-                .front()
-                .map(|r| r.arrival <= now)
-                .unwrap_or(false)
-            {
-                let r = pending.pop_front().unwrap();
-                let idx = self.requests.len();
-                self.truths.push(r.question.answer());
-                self.requests.push(RequestState {
-                    id: r.id,
-                    prompt: r.question.prompt_tokens(),
-                    question: r.question.clone(),
-                    dataset: r.dataset.clone(),
-                    arrival: r.arrival,
-                    admitted_at: None,
-                    finished_at: None,
-                    meta: self.initial_meta(),
-                    branches: Vec::new(),
-                    running: Vec::new(),
-                    completed: Vec::new(),
-                    round_stamp: 0,
-                    prefix: None,
-                    final_answer: None,
-                });
-                self.request_queue.push_back(idx);
+    /// Virtual (or wall) time of this scheduler's clock.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Hand a request to this scheduler. It enters the FCFS queue once the
+    /// scheduler's clock reaches `arrival`. Dispatch order must be sorted
+    /// by arrival (the cluster layer dispatches in global arrival order,
+    /// so any per-replica subsequence is too).
+    pub fn dispatch(&mut self, r: &Request) -> Result<()> {
+        if let Some(last) = self.incoming.back() {
+            if r.arrival < last.arrival {
+                bail!("trace not sorted by arrival");
             }
+        }
+        self.dispatched_total += 1;
+        self.incoming.push_back(r.clone());
+        Ok(())
+    }
 
-            // 2. Fill the batch (Algorithm 1 lines 3-11).
-            let prefills = self.fill_batch()?;
-            if !prefills.is_empty() {
-                let cost = self.engine.prefill(&prefills)?;
-                engine_seconds += cost;
-                self.clock.charge(cost);
-            }
+    /// Current load (cluster dispatch policies read this).
+    pub fn load(&self) -> LoadSnapshot {
+        LoadSnapshot {
+            now: self.clock.now(),
+            queued_requests: self.incoming.len() + self.request_queue.len(),
+            inflight_requests: self.requests.len()
+                - self.request_queue.len()
+                - self.finished_count,
+            running_branches: self.slots.len() - self.free_slots.len(),
+            running_tokens: self.running_tokens,
+            dispatched_total: self.dispatched_total,
+        }
+    }
 
-            let active: Vec<SlotId> = self
-                .slots
-                .iter()
-                .enumerate()
-                .filter_map(|(s, o)| o.map(|_| s))
-                .collect();
-
-            if active.is_empty() {
-                if let Some(next) = pending.front() {
-                    self.clock.idle_until(next.arrival);
-                    continue;
-                }
-                if self.request_queue.is_empty() && self.branch_queue.is_empty()
-                {
-                    break; // fully drained
-                }
-                // Queued work but nothing admissible: this can only mean a
-                // deadlock (e.g. a single request too large for the budget).
-                bail!(
-                    "scheduler stalled: {} queued requests cannot be admitted \
-                     (kv capacity {} pages, {} free)",
-                    self.request_queue.len(),
-                    self.kv.capacity_pages(),
-                    self.kv.free_pages()
-                );
-            }
-
-            // 3. Decode up to T steps (line 12). The ChunkResult is kept
-            // across rounds so the engine can recycle emit buffers.
-            let mut chunk = std::mem::take(&mut self.chunk);
-            self.engine.decode_into(
-                &active,
-                self.cfg.t_round,
-                self.cfg.temperature,
-                &mut chunk,
-            )?;
-            engine_seconds += chunk.cost;
-            self.clock.charge(chunk.cost);
-            rounds += 1;
-            self.round += 1;
-            let round = self.round;
-
-            // Append emitted tokens; stamp involved requests (O(1) dedup).
-            let mut involved = std::mem::take(&mut self.involved_buf);
-            involved.clear();
-            for (slot, toks) in &chunk.emitted {
-                let Some((ridx, bidx)) = self.slots[*slot] else {
-                    bail!("engine emitted for empty slot {slot}");
-                };
-                let req = &mut self.requests[ridx];
-                if req.round_stamp != round {
-                    req.round_stamp = round;
-                    involved.push(ridx);
-                }
-                let branch = &mut req.branches[bidx];
-                branch.generated.extend_from_slice(toks);
-                let kvb = branch.kv;
-                self.running_tokens += toks.len();
-                if let Some(kvb) = kvb {
-                    self.kv.note_decode(kvb, toks.len())?;
-                }
-            }
-            self.chunk = chunk;
-
-            // 4. Per-request round processing (lines 23-41).
-            self.process_round(&involved, &mut timeline)?;
-            self.involved_buf = involved;
-
-            if self.audit {
-                self.audit_check()?;
-            }
-
-            timeline.points.push(TimelinePoint {
-                t: self.clock.now(),
-                running_branches: self.slots.len() - self.free_slots.len(),
-                running_tokens: self.running_tokens,
-                kv_pages_used: self.kv.used_pages(),
-                queued_requests: self.request_queue.len(),
+    /// One scheduling iteration: admit arrivals, fill the batch, decode a
+    /// round and process it — or, with an empty batch, jump the clock to
+    /// the next pending arrival. Returns [`StepOutcome::Idle`] when fully
+    /// drained; errors on a stalled queue (a request too large for the KV
+    /// budget).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let now = self.clock.now();
+        // 1. Move arrived requests into the FCFS queue.
+        while self
+            .incoming
+            .front()
+            .map(|r| r.arrival <= now)
+            .unwrap_or(false)
+        {
+            let r = self.incoming.pop_front().unwrap();
+            let idx = self.requests.len();
+            self.truths.push(r.question.answer());
+            let prompt = r.question.prompt_tokens();
+            self.requests.push(RequestState {
+                id: r.id,
+                prompt,
+                question: r.question,
+                dataset: r.dataset,
+                arrival: r.arrival,
+                admitted_at: None,
+                finished_at: None,
+                meta: self.initial_meta(),
+                branches: Vec::new(),
+                running: Vec::new(),
+                completed: Vec::new(),
+                round_stamp: 0,
+                prefix: None,
+                final_answer: None,
             });
+            self.request_queue.push_back(idx);
         }
 
-        // Assemble outcomes in arrival order.
+        // 2. Fill the batch (Algorithm 1 lines 3-11).
+        let prefills = self.fill_batch()?;
+        if !prefills.is_empty() {
+            let cost = self.engine.prefill(&prefills)?;
+            self.engine_seconds += cost;
+            self.clock.charge(cost);
+        }
+
+        let active: Vec<SlotId> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, o)| o.map(|_| s))
+            .collect();
+
+        if active.is_empty() {
+            if let Some(next) = self.incoming.front() {
+                self.clock.idle_until(next.arrival);
+                return Ok(StepOutcome::Worked);
+            }
+            if self.request_queue.is_empty() && self.branch_queue.is_empty() {
+                return Ok(StepOutcome::Idle); // fully drained
+            }
+            // Queued work but nothing admissible: this can only mean a
+            // deadlock (e.g. a single request too large for the budget).
+            bail!(
+                "scheduler stalled: {} queued requests cannot be admitted \
+                 (kv capacity {} pages, {} free)",
+                self.request_queue.len(),
+                self.kv.capacity_pages(),
+                self.kv.free_pages()
+            );
+        }
+
+        // 3. Decode up to T steps (line 12). The ChunkResult is kept
+        // across rounds so the engine can recycle emit buffers.
+        let mut chunk = std::mem::take(&mut self.chunk);
+        self.engine.decode_into(
+            &active,
+            self.cfg.t_round,
+            self.cfg.temperature,
+            &mut chunk,
+        )?;
+        self.engine_seconds += chunk.cost;
+        self.clock.charge(chunk.cost);
+        self.round += 1;
+        let round = self.round;
+
+        // Append emitted tokens; stamp involved requests (O(1) dedup).
+        let mut involved = std::mem::take(&mut self.involved_buf);
+        involved.clear();
+        for (slot, toks) in &chunk.emitted {
+            let Some((ridx, bidx)) = self.slots[*slot] else {
+                bail!("engine emitted for empty slot {slot}");
+            };
+            let req = &mut self.requests[ridx];
+            if req.round_stamp != round {
+                req.round_stamp = round;
+                involved.push(ridx);
+            }
+            let branch = &mut req.branches[bidx];
+            branch.generated.extend_from_slice(toks);
+            let kvb = branch.kv;
+            self.running_tokens += toks.len();
+            if let Some(kvb) = kvb {
+                self.kv.note_decode(kvb, toks.len())?;
+            }
+        }
+        self.chunk = chunk;
+
+        // 4. Per-request round processing (lines 23-41).
+        self.process_round(&involved)?;
+        self.involved_buf = involved;
+
+        if self.audit {
+            self.audit_check()?;
+        }
+
+        self.timeline.points.push(TimelinePoint {
+            t: self.clock.now(),
+            running_branches: self.slots.len() - self.free_slots.len(),
+            running_tokens: self.running_tokens,
+            kv_pages_used: self.kv.used_pages(),
+            queued_requests: self.request_queue.len(),
+        });
+        Ok(StepOutcome::Worked)
+    }
+
+    /// Assemble the [`ServeResult`] after the last [`Scheduler::step`]
+    /// returned [`StepOutcome::Idle`]. Outcomes are in dispatch (arrival)
+    /// order. Errors if any request never finished. `wall_seconds` is left
+    /// at 0 — the driving loop owns wall time.
+    pub fn finish(&mut self) -> Result<ServeResult> {
         let mut outcomes = Vec::with_capacity(self.requests.len());
         for (i, r) in self.requests.iter().enumerate() {
             let finished_at = r
@@ -373,10 +482,10 @@ impl<'e> Scheduler<'e> {
         self.kv.check_invariants()?;
         Ok(ServeResult {
             outcomes,
-            timeline,
-            rounds,
-            engine_seconds,
-            wall_seconds: wall0.elapsed().as_secs_f64(),
+            timeline: std::mem::take(&mut self.timeline),
+            rounds: self.round as usize,
+            engine_seconds: self.engine_seconds,
+            wall_seconds: 0.0,
         })
     }
 
@@ -390,6 +499,7 @@ impl<'e> Scheduler<'e> {
             threshold,
             max_num_pruned: max_pruned,
             num_completed: 0,
+            num_harvested: 0,
             num_pruned: 0,
         }
     }
@@ -458,11 +568,7 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Algorithm 1 lines 23-41 for every involved request.
-    fn process_round(
-        &mut self,
-        involved: &[usize],
-        _timeline: &mut Timeline,
-    ) -> Result<()> {
+    fn process_round(&mut self, involved: &[usize]) -> Result<()> {
         let now = self.clock.now();
         // Classify branch completions first (EOS / cap). Only the Running
         // branches of involved requests can complete this round.
@@ -546,18 +652,27 @@ impl<'e> Scheduler<'e> {
             if self.requests[ridx].is_finished() {
                 continue;
             }
-            // Phase transition (lines 24-27): first completion flips to
-            // exploitation with threshold = that branch's reward.
-            let first_completed_reward = completed_now
+            // Phase transition (lines 24-27): the first completion flips
+            // to exploitation with threshold α′ = that branch's reward.
+            // Several branches can complete in the same round (they are
+            // decoded in lockstep chunks), in which case α′ is the *max*
+            // reward among them — taking an arbitrary sibling's reward
+            // instead would leave the bar below a completion we already
+            // know is reachable, under-pruning for the request's whole
+            // exploit phase.
+            let max_completed_reward = completed_now
                 .iter()
                 .filter(|&&(r, _)| r == ridx)
                 .map(|&(r, b)| self.requests[r].branches[b].reward)
-                .next();
+                .filter(|r| !r.is_nan())
+                .fold(None, |acc: Option<f32>, r| {
+                    Some(acc.map_or(r, |a| a.max(r)))
+                });
             if needs_prm
                 && self.cfg.policy.prunes()
                 && self.requests[ridx].meta.phase == PrunePhase::Explore
             {
-                if let Some(alpha_prime) = first_completed_reward {
+                if let Some(alpha_prime) = max_completed_reward {
                     let n = self.cfg.policy.n_branches();
                     let meta = &mut self.requests[ridx].meta;
                     meta.phase = PrunePhase::Exploit;
@@ -596,12 +711,16 @@ impl<'e> Scheduler<'e> {
                 self.scratch = snapshot;
             }
 
-            // Finalize (lines 38-40).
+            // Finalize (lines 38-40): M *answered* completions, or
+            // exhaustion — every branch harvested or pruned, so waiting
+            // longer cannot produce another answer. Counting answerless
+            // (capped) harvests toward M would let junk responses finalize
+            // a request early with nothing to vote on.
             let n = self.cfg.policy.n_branches();
             let m = self.cfg.policy.m_required();
             let meta = &self.requests[ridx].meta;
             if meta.num_completed >= m
-                || meta.num_completed + meta.num_pruned >= n
+                || meta.num_harvested + meta.num_pruned >= n
             {
                 self.finalize(ridx, now)?;
             }
@@ -629,7 +748,14 @@ impl<'e> Scheduler<'e> {
         if let Some(kvb) = kvb {
             self.kv.release_branch(kvb)?;
         }
-        self.requests[ridx].meta.num_completed += 1;
+        let meta = &mut self.requests[ridx].meta;
+        meta.num_harvested += 1;
+        if answer.is_some() {
+            // Only answer-bearing responses count toward the early-stop
+            // quorum; the response is still recorded below either way so
+            // the final vote sees everything harvested.
+            meta.num_completed += 1;
+        }
         self.requests[ridx].completed.push(CompletedResponse {
             answer,
             reward,
@@ -706,6 +832,7 @@ impl<'e> Scheduler<'e> {
         debug_assert!(req.running.is_empty());
         req.final_answer = answer;
         req.finished_at = Some(now);
+        self.finished_count += 1;
         Ok(())
     }
 
@@ -754,6 +881,63 @@ impl<'e> Scheduler<'e> {
             if r.prompt != r.question.prompt_tokens() {
                 bail!("audit: request {i} cached prompt drifted");
             }
+            // Meta counters vs branch/response scans (threshold & quorum
+            // bookkeeping).
+            let pruned = r
+                .branches
+                .iter()
+                .filter(|b| b.status == BranchStatus::Pruned)
+                .count();
+            if pruned != r.meta.num_pruned {
+                bail!(
+                    "audit: request {i} num_pruned {} != scanned {pruned}",
+                    r.meta.num_pruned
+                );
+            }
+            let harvested = r
+                .branches
+                .iter()
+                .filter(|b| {
+                    matches!(
+                        b.status,
+                        BranchStatus::Completed | BranchStatus::Capped
+                    )
+                })
+                .count();
+            if harvested != r.meta.num_harvested {
+                bail!(
+                    "audit: request {i} num_harvested {} != scanned \
+                     {harvested}",
+                    r.meta.num_harvested
+                );
+            }
+            if harvested != r.completed.len() {
+                bail!(
+                    "audit: request {i} harvested {harvested} branches but \
+                     recorded {} responses",
+                    r.completed.len()
+                );
+            }
+            let answered = r
+                .completed
+                .iter()
+                .filter(|c| c.answer.is_some())
+                .count();
+            if answered != r.meta.num_completed {
+                bail!(
+                    "audit: request {i} num_completed {} != scanned answered \
+                     {answered} (quorum must count only parsed answers)",
+                    r.meta.num_completed
+                );
+            }
+        }
+        let finished_scan =
+            self.requests.iter().filter(|r| r.is_finished()).count();
+        if finished_scan != self.finished_count {
+            bail!(
+                "audit: finished_count {} != scanned {finished_scan}",
+                self.finished_count
+            );
         }
         self.kv.check_invariants()
     }

@@ -80,7 +80,14 @@ pub struct RequestMeta {
     pub phase: PrunePhase,
     pub threshold: f32,
     pub max_num_pruned: usize,
+    /// Harvested branches whose answer parses — the early-stopping quorum
+    /// counts only these, so M junk (capped, answerless) responses can
+    /// never finalize a request.
     pub num_completed: usize,
+    /// All harvested branches (EOS *or* cap), answered or not. Bounds the
+    /// exhaustion check: `num_harvested + num_pruned == N` means no branch
+    /// is left that could still produce an answer.
+    pub num_harvested: usize,
     pub num_pruned: usize,
 }
 

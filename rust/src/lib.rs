@@ -24,6 +24,10 @@
 //! * [`workload`], [`metrics`], [`server`] — request generation (Poisson
 //!   arrivals over the synthetic datasets), percentile/accuracy/timeline
 //!   metrics, and the serving front-end.
+//! * [`cluster`] — R engine replicas behind a dispatch layer with
+//!   pluggable load-balancing policies (round-robin, least-loaded, JSQ,
+//!   power-of-two-choices), co-simulated in virtual time; `--replicas 1`
+//!   reduces byte-identically to the single-engine path.
 //! * [`analysis`] — the order-statistics machinery behind Lemma 1.
 //! * [`util`], [`testkit`] — std-only JSON/npy/RNG/stats substrates and an
 //!   in-repo property-testing helper (the offline registry has no
@@ -31,6 +35,7 @@
 
 pub mod analysis;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -49,7 +49,9 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --engine   sim|hlo        --model  r1mini-tiny|r1mini-small
   --dataset  synth-gaokao|synth-gpqa
   --requests INT  --rate REQ/S (0=batch)  --slots INT  --kv-tokens INT
-  --t-round INT  --temp F  --seed INT  --stepwise (disable fused decode)";
+  --t-round INT  --temp F  --seed INT  --stepwise (disable fused decode)
+  --replicas INT  engine replicas behind the dispatch layer (sim only)
+  --lb rr|least-loaded|jsq|p2c   load-balancing policy across replicas";
 
 fn print_report(r: &ServeReport) {
     let rows = vec![r.row()];
@@ -69,6 +71,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         out.report.branches_started_per_request,
         out.report.branches_pruned_per_request,
     );
+    if let Some(c) = &out.cluster {
+        println!(
+            "cluster: {} replicas, lb={} | req/replica {:?} | \
+             occupancy-skew {:.2} request-skew {:.2}",
+            c.replicas,
+            c.lb,
+            c.per_replica_requests,
+            c.occupancy_skew,
+            c.request_skew,
+        );
+    }
     Ok(())
 }
 
@@ -89,6 +102,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     ];
     let mut rows = Vec::new();
     for m in methods {
+        if base.replicas > 1 && matches!(m, Method::Rebase { .. }) {
+            continue; // rebase has no cluster path
+        }
         let mut spec = base.clone();
         spec.method = m;
         let out = server::run_on_trace(&spec, &trace)?;

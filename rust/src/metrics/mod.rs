@@ -27,14 +27,17 @@ pub struct Timeline {
 
 impl Timeline {
     /// Down-sample to at most `n` evenly spaced points (plot-friendly).
+    /// The first and last samples are always kept — dropping the last
+    /// point made plots lose the end-of-run occupancy (drain tail).
     pub fn downsample(&self, n: usize) -> Vec<TimelinePoint> {
         if self.points.len() <= n || n == 0 {
             return self.points.clone();
         }
-        let stride = self.points.len() as f64 / n as f64;
-        (0..n)
-            .map(|i| self.points[(i as f64 * stride) as usize])
-            .collect()
+        if n == 1 {
+            return vec![*self.points.last().unwrap()];
+        }
+        let last = self.points.len() - 1;
+        (0..n).map(|i| self.points[i * last / (n - 1)]).collect()
     }
 
     pub fn peak_branches(&self) -> usize {
@@ -217,5 +220,38 @@ mod tests {
         assert!((tl.mean_branches() - 14.0 / 3.0).abs() < 1e-12);
         assert_eq!(tl.downsample(2).len(), 2);
         assert_eq!(tl.downsample(100).len(), 3);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let points: Vec<TimelinePoint> = (0..10)
+            .map(|i| TimelinePoint {
+                t: i as f64,
+                running_branches: i,
+                running_tokens: 10 * i,
+                kv_pages_used: i,
+                queued_requests: 0,
+            })
+            .collect();
+        let tl = Timeline { points };
+        for n in [2, 3, 4, 7, 9] {
+            let ds = tl.downsample(n);
+            assert_eq!(ds.len(), n, "n={n}");
+            assert_eq!(ds[0], tl.points[0], "first dropped at n={n}");
+            assert_eq!(
+                ds[n - 1],
+                *tl.points.last().unwrap(),
+                "last dropped at n={n}"
+            );
+            // Strictly forward in time: no duplicated samples.
+            for w in ds.windows(2) {
+                assert!(w[1].t > w[0].t, "non-monotone at n={n}");
+            }
+        }
+        // n == 1 keeps the end-of-run sample.
+        assert_eq!(tl.downsample(1), vec![*tl.points.last().unwrap()]);
+        // Exact-fit and oversize requests return everything.
+        assert_eq!(tl.downsample(10).len(), 10);
+        assert_eq!(tl.downsample(0).len(), 10);
     }
 }

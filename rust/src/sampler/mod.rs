@@ -71,17 +71,34 @@ pub fn majority_vote(answers: &[Option<u8>]) -> Option<u8> {
 }
 
 /// Highest-reward completed answer (SART's final decision rule).
+///
+/// NaN rewards (a branch harvested before any PRM pass scored it) are
+/// skipped entirely: a NaN that entered `best` could never be displaced,
+/// because every `r <= NaN` comparison is false, so one unscored first
+/// entry would poison the vote. If no answer carries a real score, fall
+/// back to majority voting over the answers rather than returning the
+/// arbitrary NaN-first entry.
 pub fn best_reward_vote(answers: &[(Option<u8>, f32)]) -> Option<u8> {
     let mut best: Option<(u8, f32)> = None;
     for (a, r) in answers {
         if let Some(a) = a {
+            if r.is_nan() {
+                continue;
+            }
             match best {
                 Some((_, br)) if *r <= br => {}
                 _ => best = Some((*a, *r)),
             }
         }
     }
-    best.map(|(a, _)| a)
+    match best {
+        Some((a, _)) => Some(a),
+        None => {
+            let plain: Vec<Option<u8>> =
+                answers.iter().map(|(a, _)| *a).collect();
+            majority_vote(&plain)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +190,32 @@ mod tests {
         let v = [(Some(4u8), 0.2f32), (Some(9), 0.8), (None, 0.99)];
         assert_eq!(best_reward_vote(&v), Some(9));
         assert_eq!(best_reward_vote(&[(None, 1.0)]), None);
+    }
+
+    #[test]
+    fn best_reward_skips_nan_first_entry() {
+        // A NaN first entry must not win by being undisplaceable
+        // (`r <= NaN` is false for every r).
+        let v = [(Some(7u8), f32::NAN), (Some(3), 0.4), (Some(5), 0.9)];
+        assert_eq!(best_reward_vote(&v), Some(5));
+        // NaN anywhere is ignored, not just at the front.
+        let v = [(Some(3u8), 0.4), (Some(7), f32::NAN), (Some(5), 0.2)];
+        assert_eq!(best_reward_vote(&v), Some(3));
+    }
+
+    #[test]
+    fn best_reward_all_nan_falls_back_to_majority() {
+        let v = [
+            (Some(2u8), f32::NAN),
+            (Some(8), f32::NAN),
+            (Some(8), f32::NAN),
+            (None, 0.9),
+        ];
+        assert_eq!(best_reward_vote(&v), Some(8));
+        // No answers at all → None even with the fallback.
+        assert_eq!(
+            best_reward_vote(&[(None, f32::NAN), (None, 0.5)]),
+            None
+        );
     }
 }

@@ -6,6 +6,9 @@
 //! exercise the same code path the server does.
 
 use crate::baselines::{RebaseConfig, RebaseScheduler};
+use crate::cluster::{
+    serve_cluster, ClusterConfig, ClusterReport, REPLICA_SEED_STRIDE,
+};
 use crate::config::{EngineChoice, Method, PrmChoice, ServeSpec};
 use crate::coordinator::{ClockHandle, SchedConfig, Scheduler};
 use crate::engine::hlo::{DecodeMode, HloEngine};
@@ -16,7 +19,7 @@ use crate::prm::{HloPrm, OraclePrm, PrmScorer};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::clock::{RealClock, SimClock};
 use crate::workload::{batch_trace, poisson_trace, Request, TaskSpec};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Everything produced by one serve run.
 pub struct RunOutput {
@@ -25,6 +28,9 @@ pub struct RunOutput {
     pub outcomes: Vec<crate::coordinator::RequestOutcome>,
     /// Engine identity string (log/record provenance).
     pub engine_desc: String,
+    /// Per-replica occupancy/skew aggregate — `Some` only for
+    /// multi-replica (`--replicas > 1`) runs.
+    pub cluster: Option<ClusterReport>,
 }
 
 /// Generate the workload trace for a spec.
@@ -96,6 +102,9 @@ pub fn run(spec: &ServeSpec) -> Result<RunOutput> {
 
 /// Run a spec against an explicit trace (shared-workload comparisons).
 pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
+    if spec.replicas > 1 {
+        return run_cluster_on_trace(spec, trace);
+    }
     let mut engine = build_engine(spec)?;
     let mut prm = build_prm(spec)?;
     let engine_desc = engine.describe();
@@ -123,21 +132,8 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
             sched.serve(trace)?
         }
         _ => {
-            let policy = spec
-                .method
-                .policy()
-                .context("non-rebase method must map to a policy")?;
-            let cfg = SchedConfig {
-                policy,
-                t_round: spec.t_round,
-                temperature: spec.temperature,
-                max_new: spec.max_new,
-                kv_capacity_tokens: spec.kv_capacity_tokens,
-                kv_page_tokens: spec.kv_page_tokens,
-                seed: spec.seed,
-            };
             let mut sched = Scheduler::new(
-                cfg,
+                sched_cfg_for(spec)?,
                 engine.as_mut(),
                 prm.as_mut(),
                 clock_for(spec),
@@ -147,7 +143,83 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
         }
     };
     let report = ServeReport::from_outcomes(&label, &outcomes);
-    Ok(RunOutput { report, timeline, outcomes, engine_desc })
+    Ok(RunOutput { report, timeline, outcomes, engine_desc, cluster: None })
+}
+
+/// The scheduler configuration a spec maps to — shared by the
+/// single-engine and cluster paths so `--replicas 1` and `--replicas N`
+/// can never drift apart on a knob.
+fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
+    let policy = spec
+        .method
+        .policy()
+        .context("non-rebase method must map to a policy")?;
+    Ok(SchedConfig {
+        policy,
+        t_round: spec.t_round,
+        temperature: spec.temperature,
+        max_new: spec.max_new,
+        kv_capacity_tokens: spec.kv_capacity_tokens,
+        kv_page_tokens: spec.kv_page_tokens,
+        seed: spec.seed,
+    })
+}
+
+/// Multi-replica serve: R independent engine/PRM/scheduler stacks behind
+/// the `cluster` dispatch layer (virtual time only; see the module docs).
+fn run_cluster_on_trace(
+    spec: &ServeSpec,
+    trace: &[Request],
+) -> Result<RunOutput> {
+    if matches!(spec.method, Method::Rebase { .. }) {
+        bail!("--replicas > 1 is not supported for the rebase baseline");
+    }
+    if !matches!(spec.engine, EngineChoice::Sim) {
+        bail!(
+            "--replicas > 1 currently requires --engine sim (the cluster \
+             layer co-simulates replicas in virtual time)"
+        );
+    }
+    let sched = sched_cfg_for(spec)?;
+    // Each replica gets its own engine + PRM, seeded off the base spec
+    // with a per-replica stride (replica 0 keeps the base seed, matching
+    // the R = 1 reduction the property tests pin down).
+    let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(spec.replicas);
+    let mut prms: Vec<Box<dyn PrmScorer>> = Vec::with_capacity(spec.replicas);
+    for i in 0..spec.replicas {
+        let mut rspec = spec.clone();
+        rspec.seed = spec.seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+        engines.push(build_engine(&rspec)?);
+        prms.push(build_prm(&rspec)?);
+    }
+    let ccfg = ClusterConfig {
+        replicas: spec.replicas,
+        lb: spec.lb,
+        sched,
+        seed: spec.seed,
+        audit: false,
+    };
+    let res = serve_cluster(&ccfg, &mut engines, &mut prms, trace)?;
+    let label = format!(
+        "{}@{}x{}",
+        spec.method.label(),
+        spec.replicas,
+        spec.lb.label()
+    );
+    let report = ServeReport::from_outcomes(&label, &res.outcomes);
+    let timeline = res.merged_timeline();
+    let cluster = Some(res.report());
+    Ok(RunOutput {
+        report,
+        timeline,
+        outcomes: res.outcomes,
+        engine_desc: format!(
+            "cluster({} sim replicas, lb={})",
+            spec.replicas,
+            spec.lb.label()
+        ),
+        cluster,
+    })
 }
 
 /// Sample `n` independent full responses for one question directly through
@@ -221,6 +293,31 @@ mod tests {
             let out = run(&s).unwrap_or_else(|e| panic!("{m}: {e}"));
             assert_eq!(out.report.n_requests, 8, "{m}");
         }
+    }
+
+    #[test]
+    fn cluster_run_serves_all_and_reports_skew() {
+        for lb in ["rr", "least-loaded", "jsq", "p2c"] {
+            let mut s =
+                spec(&format!("--method sart:4 --replicas 3 --lb {lb}"));
+            s.kv_capacity_tokens = 8192;
+            let out = run(&s).unwrap_or_else(|e| panic!("{lb}: {e}"));
+            assert_eq!(out.report.n_requests, 8, "{lb}");
+            let c = out.cluster.as_ref().expect("cluster report");
+            assert_eq!(c.replicas, 3);
+            assert_eq!(
+                c.per_replica_requests.iter().sum::<usize>(),
+                8,
+                "{lb}"
+            );
+            assert!(c.request_skew >= 1.0 && c.occupancy_skew >= 1.0);
+        }
+    }
+
+    #[test]
+    fn cluster_rejects_unsupported_combos() {
+        let s = spec("--method rebase:4 --replicas 2");
+        assert!(run(&s).is_err(), "rebase cluster must be rejected");
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Property-based tests over system invariants (via `sart::testkit`,
 //! the in-repo stand-in for proptest — see DESIGN.md §2).
 
+use sart::cluster::{
+    serve_cluster, ClusterConfig, LbPolicy, REPLICA_SEED_STRIDE,
+};
 use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
 use sart::kvcache::KvCacheManager;
-use sart::prm::OraclePrm;
+use sart::prm::{OraclePrm, PrmScorer};
 use sart::prop_assert;
 use sart::testkit::{check, default_cases};
 use sart::tokenizer as tok;
@@ -149,7 +153,18 @@ fn prop_scheduler_serves_every_request_exactly_once() {
                 o.branches_pruned,
                 n
             );
-            prop_assert!(o.branches_completed > 0, "finalized with nothing");
+            // branches_completed counts only answer-bearing harvests (the
+            // early-stop quorum); a request whose every branch capped
+            // without an answer can legitimately finalize with zero — but
+            // it must always have harvested *something* to vote over.
+            prop_assert!(
+                !o.response_lengths.is_empty(),
+                "finalized with nothing harvested"
+            );
+            prop_assert!(
+                o.branches_completed <= o.response_lengths.len(),
+                "more answered than harvested"
+            );
         }
         // Timeline occupancy can never exceed slot count.
         for p in &res.timeline.points {
@@ -325,6 +340,201 @@ fn prop_kvcache_live_decoded_matches_mirror() {
         }
         prop_assert!(kv.live_decoded_tokens() == 0, "leaked decoded tokens");
         prop_assert!(kv.used_pages() == 0, "leaked pages");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cluster dispatch layer vs the single-engine scheduler.
+// ---------------------------------------------------------------------------
+
+struct ClusterCase {
+    policy: Policy,
+    slots: usize,
+    t_round: usize,
+    kv_tokens: usize,
+    seed: u64,
+    spec: TaskSpec,
+    trace: Vec<sart::workload::Request>,
+}
+
+fn cluster_case(rng: &mut Rng) -> ClusterCase {
+    let policy = random_policy(rng);
+    let slots = 2 + rng.below(14);
+    let n_req = 4 + rng.below(12);
+    let rate = 0.5 + 4.0 * rng.f64();
+    let spec = if rng.chance(0.5) {
+        TaskSpec::synth_gaokao()
+    } else {
+        TaskSpec::synth_gpqa()
+    };
+    let seed = rng.next_u64();
+    // Budget always admits at least one full request (no stalls).
+    let min_pages = 2 + policy.n_branches() * 14 + 4;
+    let kv_tokens = 16 * (min_pages + rng.below(1024));
+    let trace = poisson_trace(&spec, n_req, rate, seed);
+    ClusterCase {
+        policy,
+        slots,
+        t_round: 8 + rng.below(24),
+        kv_tokens,
+        seed,
+        spec,
+        trace,
+    }
+}
+
+fn case_sched_cfg(c: &ClusterCase) -> SchedConfig {
+    SchedConfig {
+        policy: c.policy,
+        t_round: c.t_round,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: c.kv_tokens,
+        kv_page_tokens: 16,
+        seed: c.seed,
+    }
+}
+
+/// Engines/PRMs for `n` replicas, using the same per-replica seed
+/// *stride* scheme as `server::run_cluster_on_trace` (replica 0 keeps
+/// the base seed). The exact PRM seed/sigma differ from the server's
+/// `build_prm` — the identity property only needs the single-engine and
+/// cluster runs here to share one self-consistent seeding, which they
+/// do (the single run below uses the replica-0 values).
+fn case_stacks(
+    c: &ClusterCase,
+    n: usize,
+) -> (Vec<Box<dyn Engine>>, Vec<Box<dyn PrmScorer>>) {
+    let engines: Vec<Box<dyn Engine>> = (0..n)
+        .map(|_| {
+            Box::new(SimEngine::new(
+                c.slots,
+                256,
+                c.spec.clone(),
+                SimCostModel::default(),
+            )) as Box<dyn Engine>
+        })
+        .collect();
+    let prms: Vec<Box<dyn PrmScorer>> = (0..n)
+        .map(|i| {
+            let seed = c.seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+            Box::new(OraclePrm::new(0.1, seed ^ 7)) as Box<dyn PrmScorer>
+        })
+        .collect();
+    (engines, prms)
+}
+
+#[test]
+fn prop_cluster_single_replica_is_byte_identical() {
+    // A 1-replica cluster serve must reproduce `Scheduler::serve` on the
+    // same trace exactly — same outcomes, same timeline, same round count
+    // — under every dispatch policy. Audit mode is on in the cluster run,
+    // so this doubles as an audit-mode pass over the threshold/quorum
+    // bookkeeping on random workloads.
+    check("cluster_r1_identity", 8, |rng| {
+        let c = cluster_case(rng);
+        let mut engine = SimEngine::new(
+            c.slots,
+            256,
+            c.spec.clone(),
+            SimCostModel::default(),
+        );
+        let mut prm = OraclePrm::new(0.1, c.seed ^ 7);
+        let mut sched = Scheduler::new(
+            case_sched_cfg(&c),
+            &mut engine,
+            &mut prm,
+            ClockHandle::Sim(SimClock::new()),
+        );
+        let single = sched.serve(&c.trace).map_err(|e| e.to_string())?;
+        for lb in LbPolicy::ALL {
+            let (mut engines, mut prms) = case_stacks(&c, 1);
+            let ccfg = ClusterConfig {
+                replicas: 1,
+                lb,
+                sched: case_sched_cfg(&c),
+                seed: c.seed,
+                audit: true,
+            };
+            let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
+                .map_err(|e| format!("{lb:?}: {e}"))?;
+            prop_assert!(
+                res.outcomes == single.outcomes,
+                "outcomes diverge under {lb:?}"
+            );
+            prop_assert!(
+                res.replica_results[0].timeline.points
+                    == single.timeline.points,
+                "timeline diverges under {lb:?}"
+            );
+            prop_assert!(
+                res.replica_results[0].rounds == single.rounds,
+                "round count diverges under {lb:?}"
+            );
+            prop_assert!(
+                res.assignments.iter().all(|&a| a == 0),
+                "single replica got assignment != 0"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_serves_all_under_every_policy() {
+    // Multi-replica serves (audit on in every replica) must serve every
+    // request exactly once with sane per-request invariants, and
+    // round-robin must assign cyclically.
+    check("cluster_serves_all", 6, |rng| {
+        let c = cluster_case(rng);
+        let replicas = 2 + rng.below(3); // 2..=4
+        for lb in LbPolicy::ALL {
+            let (mut engines, mut prms) = case_stacks(&c, replicas);
+            let ccfg = ClusterConfig {
+                replicas,
+                lb,
+                sched: case_sched_cfg(&c),
+                seed: c.seed,
+                audit: true,
+            };
+            let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
+                .map_err(|e| format!("{lb:?}: {e}"))?;
+            prop_assert!(
+                res.outcomes.len() == c.trace.len(),
+                "lost requests under {lb:?}"
+            );
+            prop_assert!(
+                res.assignments.len() == c.trace.len()
+                    && res.assignments.iter().all(|&a| a < replicas),
+                "bad assignment vector under {lb:?}"
+            );
+            for (o, r) in res.outcomes.iter().zip(&c.trace) {
+                prop_assert!(o.id == r.id, "merge order broken: {lb:?}");
+                prop_assert!(
+                    o.finished_at >= o.arrival && o.admitted_at >= o.arrival,
+                    "time travel under {lb:?}"
+                );
+            }
+            if lb == LbPolicy::RoundRobin {
+                for (i, &a) in res.assignments.iter().enumerate() {
+                    prop_assert!(
+                        a == i % replicas,
+                        "round-robin not cyclic at {i}"
+                    );
+                }
+            }
+            let report = res.report();
+            prop_assert!(
+                report.per_replica_requests.iter().sum::<usize>()
+                    == c.trace.len(),
+                "per-replica counts don't sum under {lb:?}"
+            );
+            prop_assert!(
+                report.request_skew >= 1.0 - 1e-12,
+                "skew below 1 under {lb:?}"
+            );
+        }
         Ok(())
     });
 }

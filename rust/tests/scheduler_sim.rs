@@ -6,8 +6,12 @@
 
 use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::{
+    ChunkResult, Engine, EngineCaps, PrefillEntry, ReplayEntry, SlotId,
+};
 use sart::metrics::ServeReport;
 use sart::prm::{OraclePrm, PrmScorer};
+use sart::tokenizer as tok;
 use sart::util::clock::SimClock;
 use sart::workload::{batch_trace, poisson_trace, TaskSpec};
 
@@ -55,9 +59,11 @@ fn vanilla_serves_all_requests() {
 fn self_consistency_completes_all_n() {
     let res = run(Policy::SelfConsistency { n: 4 }, 10, 1.0, 8, 8192, 2);
     for o in &res.outcomes {
-        assert_eq!(o.branches_completed, 4, "SC waits for all N");
+        // SC waits for all N branches to be harvested (branches_completed
+        // counts only the answer-bearing subset).
+        assert_eq!(o.response_lengths.len(), 4, "SC waits for all N");
         assert_eq!(o.branches_pruned, 0);
-        assert_eq!(o.response_lengths.len(), 4);
+        assert!(o.branches_completed <= 4);
     }
 }
 
@@ -171,4 +177,195 @@ fn batch_arrival_all_finish() {
     assert_eq!(res.outcomes.len(), 30);
     let rep = ServeReport::from_outcomes("sart", &res.outcomes);
     assert!(rep.answered > 0.9, "answered {}", rep.answered);
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic decision-rule regressions (scripted toy engine): the
+// exploit-phase threshold under simultaneous completions and the
+// answered-only early-stop quorum.
+// ---------------------------------------------------------------------------
+
+/// Engine that replays hand-written per-round token chunks, assigned to
+/// branches in prefill order — lets a test pin exactly which branches
+/// complete / cap in which round.
+struct ChunkScriptEngine {
+    caps: EngineCaps,
+    /// Per branch (prefill order): the chunk emitted on each round.
+    scripts: Vec<Vec<Vec<tok::Token>>>,
+    next_script: usize,
+    /// slot -> (script index, next round index).
+    slots: Vec<Option<(usize, usize)>>,
+}
+
+impl ChunkScriptEngine {
+    fn new(slots: usize, scripts: Vec<Vec<Vec<tok::Token>>>) -> Self {
+        ChunkScriptEngine {
+            caps: EngineCaps {
+                slots,
+                max_seq: 512,
+                prompt_len: 64,
+                chunk_t: 16,
+            },
+            scripts,
+            next_script: 0,
+            slots: vec![None; slots],
+        }
+    }
+}
+
+impl Engine for ChunkScriptEngine {
+    fn caps(&self) -> EngineCaps {
+        self.caps
+    }
+
+    fn prefill(&mut self, entries: &[PrefillEntry]) -> anyhow::Result<f64> {
+        for e in entries {
+            self.slots[e.slot] = Some((self.next_script, 0));
+            self.next_script += 1;
+        }
+        Ok(0.01)
+    }
+
+    fn decode_into(
+        &mut self,
+        active: &[SlotId],
+        _steps: usize,
+        _temp: f32,
+        out: &mut ChunkResult,
+    ) -> anyhow::Result<()> {
+        out.emitted.clear();
+        out.cost = 0.05;
+        for &slot in active {
+            if let Some((si, ri)) = self.slots[slot] {
+                if ri < self.scripts[si].len() {
+                    out.emitted.push((slot, self.scripts[si][ri].clone()));
+                    self.slots[slot] = Some((si, ri + 1));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn replay(&mut self, _entries: &[ReplayEntry]) -> anyhow::Result<f64> {
+        anyhow::bail!("replay unsupported in ChunkScriptEngine")
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        self.slots[slot] = None;
+    }
+
+    fn describe(&self) -> String {
+        "chunk-script test engine".into()
+    }
+}
+
+/// PRM keyed on the answered digit: `<ans> 1` → 0.3, `<ans> 2` → 0.9,
+/// anything else (including still-running step chains) → 0.6.
+struct AnswerKeyedPrm;
+
+impl PrmScorer for AnswerKeyedPrm {
+    fn score(&mut self, seqs: &[&[tok::Token]]) -> anyhow::Result<Vec<f32>> {
+        Ok(seqs
+            .iter()
+            .map(|s| {
+                let after_ans = s
+                    .iter()
+                    .position(|&t| t == tok::ANS)
+                    .and_then(|i| s.get(i + 1))
+                    .copied();
+                match after_ans {
+                    Some(t) if t == tok::digit(1) => 0.3,
+                    Some(t) if t == tok::digit(2) => 0.9,
+                    _ => 0.6,
+                }
+            })
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        "answer-keyed test prm".into()
+    }
+}
+
+fn toy_cfg(policy: Policy, max_new: usize) -> SchedConfig {
+    SchedConfig {
+        policy,
+        t_round: 16,
+        temperature: 1.0,
+        max_new,
+        kv_capacity_tokens: 4096,
+        kv_page_tokens: 16,
+        seed: 0,
+    }
+}
+
+#[test]
+fn exploit_threshold_is_max_over_simultaneous_completions() {
+    // Round 1: branches 0 and 1 both complete (rewards 0.3 and 0.9);
+    // branch 2 is mid-chain with reward 0.6. α′ must be max(0.3, 0.9) =
+    // 0.9, which prunes branch 2 — the old branch-index-order threshold
+    // (an arbitrary sibling's 0.3) would have let it decode on.
+    let scripts = vec![
+        vec![vec![tok::ETHINK, tok::ANS, tok::digit(1), tok::EOS]],
+        vec![vec![tok::ETHINK, tok::ANS, tok::digit(2), tok::EOS]],
+        vec![
+            vec![tok::STEP; 16],
+            vec![tok::STEP; 16],
+            vec![tok::ETHINK, tok::ANS, tok::digit(4), tok::EOS],
+        ],
+    ];
+    let mut engine = ChunkScriptEngine::new(4, scripts);
+    let mut prm = AnswerKeyedPrm;
+    let trace = batch_trace(&TaskSpec::synth_gaokao(), 1, 0);
+    let mut sched = Scheduler::new(
+        toy_cfg(Policy::Sart { n: 3, m: 3, alpha: 0.05, beta: 1 }, 64),
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.set_audit(true);
+    let res = sched.serve(&trace).expect("serve");
+    let o = &res.outcomes[0];
+    assert_eq!(o.branches_pruned, 1, "0.6 < α′ = 0.9 must prune");
+    assert_eq!(o.branches_completed, 2);
+    assert_eq!(o.answer, Some(2), "vote must pick the 0.9-reward answer");
+}
+
+#[test]
+fn capped_answerless_branches_do_not_satisfy_quorum() {
+    // Branch 0 hits the generation cap (16 tokens, no EOS, no answer) in
+    // round 2; branch 1 completes with an answer in round 5. With M = 1,
+    // the capped junk response must NOT finalize the request — the
+    // scheduler has to wait for the answered completion, while the capped
+    // response stays available to the final vote.
+    let scripts = vec![
+        vec![vec![tok::STEP; 8], vec![tok::STEP; 8]],
+        vec![
+            vec![tok::STEP; 2],
+            vec![tok::STEP; 2],
+            vec![tok::STEP; 2],
+            vec![tok::STEP; 2],
+            vec![tok::ETHINK, tok::ANS, tok::digit(3), tok::EOS],
+        ],
+    ];
+    let mut engine = ChunkScriptEngine::new(4, scripts);
+    let mut prm = AnswerKeyedPrm;
+    let trace = batch_trace(&TaskSpec::synth_gaokao(), 1, 0);
+    let mut sched = Scheduler::new(
+        toy_cfg(Policy::SartNoPrune { n: 2, m: 1 }, 16),
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.set_audit(true);
+    let res = sched.serve(&trace).expect("serve");
+    let o = &res.outcomes[0];
+    assert_eq!(o.answer, Some(3), "must wait for the answered branch");
+    assert_eq!(o.branches_completed, 1, "only answered harvests count");
+    assert_eq!(
+        o.response_lengths.len(),
+        2,
+        "capped response still recorded for the final vote"
+    );
+    assert_eq!(res.rounds, 5, "finalizes with the round-5 completion");
 }
