@@ -43,6 +43,7 @@ fn sched_cfg() -> SchedConfig {
         max_new: 224,
         kv_capacity_tokens: KV_TOKENS,
         kv_page_tokens: 16,
+        prefix_cache_pages: 0,
         seed: SEED,
     }
 }
@@ -127,6 +128,13 @@ fn main() {
 
     let mut p99_by_slug: Vec<(&'static str, f64)> = Vec::new();
     for lb in LbPolicy::ALL {
+        // This bench runs with the prefix cache disabled, where
+        // prefix-affinity's cold fallback is decision-for-decision p2c —
+        // its row would duplicate the p2c one (the affinity comparison
+        // lives in `prefix_cache` / BENCH_prefix.json).
+        if lb == LbPolicy::PrefixAffinity {
+            continue;
+        }
         let res = run_cluster(lb, &trace);
         let e2e: Vec<f64> =
             res.outcomes.iter().map(|o| o.e2e_latency()).collect();

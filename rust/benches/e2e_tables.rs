@@ -26,6 +26,10 @@ fn spec() -> ServeSpec {
         slots: 16,
         kv_capacity_tokens: 8192,
         kv_page_tokens: 16,
+        prefix_cache_pages: 0,
+        prefix_share: 0.0,
+        prefix_templates: 3,
+        prefix_shots: 3,
         t_round: 16,
         temperature: 1.0,
         max_new: 224,

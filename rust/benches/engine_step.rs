@@ -32,6 +32,7 @@ fn sim_section(report: &mut BenchReport) {
                 slot: s,
                 prompt: Question::sample(&spec, &mut rng).prompt_tokens(),
                 seed: s as u64,
+                cached_tokens: 0,
             })
             .collect();
         let slots: Vec<usize> = (0..batch).collect();
@@ -92,6 +93,7 @@ fn hlo_section(report: &mut BenchReport) {
                     slot: s,
                     prompt: Question::sample(&spec, &mut rng).prompt_tokens(),
                     seed: s as u64,
+                    cached_tokens: 0,
                 })
                 .collect();
             let slots: Vec<usize> = (0..batch).collect();

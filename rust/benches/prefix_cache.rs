@@ -1,0 +1,217 @@
+//! Bench: the cross-request radix prefix cache, end to end.
+//!
+//! Three questions, answered on a deterministic prefix-heavy workload
+//! (shared few-shot headers + per-request questions, `workload::
+//! templated_trace`) and recorded in `BENCH_prefix.json` (schema in
+//! EXPERIMENTS.md §Benches):
+//!
+//! 1. **How many prefill tokens does the cache save?**
+//!    `prefill_tokens_saved_frac` = cache-covered prompt tokens / total
+//!    prompt tokens over a single-replica serve. CI fails the bench-smoke
+//!    job if this is ≤ 0 on the prefix-heavy config; the design target
+//!    is > 0.3.
+//! 2. **Does saving them buy throughput?** `hit_vs_cold_throughput_ratio`
+//!    compares makespan-derived throughput of the same trace served with
+//!    the cache on vs off (cache capacity 0 = the pre-cache path).
+//! 3. **Does cache-affinity routing keep hits at cluster scale?** At
+//!    R = 4 replicas with more templates than any single cache budget
+//!    holds, `cache_hit_rate_aff` vs `cache_hit_rate_p2c`: p2c scatters
+//!    each template across all replicas (every replica churns through
+//!    every header), while prefix-affinity pins templates where their
+//!    pages already live. The headline `aff_vs_p2c_hit_rate_delta` must
+//!    stay > 0.
+//!
+//! The kv-level micro rows time warm/cold `admit_tokens` against the
+//! scalar `admit` baseline.
+//!
+//!     cargo bench --bench prefix_cache
+
+use sart::cluster::{serve_cluster, ClusterConfig, LbPolicy};
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::kvcache::KvCacheManager;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::clock::SimClock;
+use sart::workload::{templated_trace, Request, TaskSpec};
+
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 32768;
+const CACHE_PAGES: usize = 64;
+const SEED: u64 = 42;
+const N_REQUESTS: usize = 96;
+const RATE: f64 = 4.0;
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gaokao()
+}
+
+fn cost_model() -> SimCostModel {
+    // Emphasize the per-token prefill component so the time win (not
+    // just the token win) is visible above decode costs.
+    SimCostModel { prefill_per_token: 0.2e-3, ..SimCostModel::default() }
+}
+
+fn sched_cfg(prefix_cache_pages: usize) -> SchedConfig {
+    SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: KV_TOKENS,
+        kv_page_tokens: 16,
+        prefix_cache_pages,
+        seed: SEED,
+    }
+}
+
+fn engine() -> SimEngine {
+    let mut e = SimEngine::new(SLOTS, 512, spec(), cost_model());
+    e.set_prompt_bucket(256);
+    e
+}
+
+fn serve_single(
+    trace: &[Request],
+    prefix_cache_pages: usize,
+) -> sart::coordinator::ServeResult {
+    let mut eng = engine();
+    let mut prm = OraclePrm::new(0.08, SEED ^ 7);
+    let mut sched = Scheduler::new(
+        sched_cfg(prefix_cache_pages),
+        &mut eng,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.serve(trace).expect("prefix serve")
+}
+
+fn makespan(res: &sart::coordinator::ServeResult) -> f64 {
+    res.outcomes
+        .iter()
+        .map(|o| o.finished_at)
+        .fold(0.0f64, f64::max)
+}
+
+fn cluster_hit_rate(
+    trace: &[Request],
+    lb: LbPolicy,
+    replicas: usize,
+    cache_pages: usize,
+) -> f64 {
+    let mut engines: Vec<Box<dyn Engine>> = (0..replicas)
+        .map(|_| Box::new(engine()) as Box<dyn Engine>)
+        .collect();
+    let mut prms: Vec<Box<dyn PrmScorer>> = (0..replicas)
+        .map(|i| {
+            Box::new(OraclePrm::new(0.08, SEED ^ 7 ^ ((i as u64) << 32)))
+                as Box<dyn PrmScorer>
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        replicas,
+        lb,
+        sched: sched_cfg(cache_pages),
+        seed: SEED,
+        audit: false,
+    };
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, trace)
+        .expect("cluster serve");
+    res.cache_hit_rate()
+}
+
+fn main() {
+    println!(
+        "== prefix_cache ({SLOTS} slots, {N_REQUESTS} requests, \
+         cache {CACHE_PAGES} pages) =="
+    );
+    let mut report = BenchReport::new("prefix");
+
+    // ---- 1 + 2: single replica, one hot template --------------------
+    let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 0.9, 2, 3);
+    let warm = serve_single(&trace, CACHE_PAGES);
+    let cold = serve_single(&trace, 0);
+    let saved_frac = warm.cache_hit_tokens as f64 / warm.prompt_tokens as f64;
+    let thru_warm = N_REQUESTS as f64 / makespan(&warm).max(1e-9);
+    let thru_cold = N_REQUESTS as f64 / makespan(&cold).max(1e-9);
+    let thru_ratio = thru_warm / thru_cold;
+    assert_eq!(
+        cold.cache_hit_tokens, 0,
+        "cache capacity 0 must never report hits"
+    );
+    println!(
+        "single replica: {}/{} prompt tokens from cache \
+         (saved_frac {saved_frac:.3}, target > 0.3)",
+        warm.cache_hit_tokens, warm.prompt_tokens
+    );
+    println!(
+        "throughput: warm {thru_warm:.2} req/s vs cold {thru_cold:.2} req/s \
+         → ratio {thru_ratio:.3}"
+    );
+    report.metric("prefill_tokens_saved_frac", saved_frac);
+    report.metric("hit_vs_cold_throughput_ratio", thru_ratio);
+    report.metric("cache_hit_tokens", warm.cache_hit_tokens as f64);
+    report.metric("prompt_tokens_total", warm.prompt_tokens as f64);
+
+    report.push(bench::run("serve 96 reqs warm (cache 64 pages)", 1, 5, || {
+        std::hint::black_box(serve_single(&trace, CACHE_PAGES));
+    }));
+    report.push(bench::run("serve 96 reqs cold (cache off)", 1, 5, || {
+        std::hint::black_box(serve_single(&trace, 0));
+    }));
+
+    // ---- 3: affinity vs p2c at R = 4 --------------------------------
+    // 4 templates and a per-replica budget (24 pages ≈ 2.5 templates)
+    // that cannot hold all of them: scattering templates across replicas
+    // (p2c) churns every cache, affinity pins each template.
+    let replicas = 4;
+    let small_cache = 24;
+    let ctrace =
+        templated_trace(&spec(), 2 * N_REQUESTS, 2.0 * RATE, SEED, 0.85, 4, 3);
+    let hit_aff = cluster_hit_rate(
+        &ctrace,
+        LbPolicy::PrefixAffinity,
+        replicas,
+        small_cache,
+    );
+    let hit_p2c = cluster_hit_rate(
+        &ctrace,
+        LbPolicy::PowerOfTwoChoices,
+        replicas,
+        small_cache,
+    );
+    let delta = hit_aff - hit_p2c;
+    println!(
+        "R={replicas}: cache-hit rate prefix-affinity {hit_aff:.3} vs \
+         p2c {hit_p2c:.3} (delta {delta:+.3}, must stay > 0)"
+    );
+    report.metric("cache_hit_rate_aff", hit_aff);
+    report.metric("cache_hit_rate_p2c", hit_p2c);
+    report.metric("aff_vs_p2c_hit_rate_delta", delta);
+
+    // ---- kv-level micro rows ----------------------------------------
+    let header: Vec<i32> = (1000..1000 + 128).collect();
+    let mut kv = KvCacheManager::with_prefix_cache(KV_TOKENS, 16, CACHE_PAGES);
+    // Warm the tree once so the timed admissions hit.
+    let seed_adm = kv.admit_tokens(&header, 32, 1).unwrap();
+    for b in seed_adm.branches {
+        kv.release_branch(b).unwrap();
+    }
+    report.push(bench::run("admit_tokens warm (8-page hit)", 100, 5000, || {
+        let adm = kv.admit_tokens(&header, 32, 1).unwrap();
+        std::hint::black_box(adm.cached_tokens);
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+    }));
+    let mut cold_kv = KvCacheManager::new(KV_TOKENS, 16);
+    report.push(bench::run("scalar admit baseline (cache off)", 100, 5000, || {
+        let (_, bs) = cold_kv.admit(128, 32, 1).unwrap();
+        for b in bs {
+            cold_kv.release_branch(b).unwrap();
+        }
+    }));
+
+    report.write().expect("writing BENCH_prefix.json");
+}

@@ -40,6 +40,7 @@ fn serve_once(
         max_new: 224,
         kv_capacity_tokens: kv_tokens,
         kv_page_tokens: 16,
+        prefix_cache_pages: 0,
         seed: 42,
     };
     let mut sched =

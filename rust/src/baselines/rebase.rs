@@ -227,6 +227,9 @@ impl<'e> RebaseScheduler<'e> {
                     .sum(),
                 kv_pages_used: self.kv.used_pages(),
                 queued_requests: self.request_queue.len(),
+                // The Rebase baseline allocates prompts scalar-style and
+                // never consults the cross-request cache.
+                cache_hit_tokens: 0,
             });
         }
 
@@ -348,6 +351,7 @@ impl<'e> RebaseScheduler<'e> {
                     slot,
                     prompt,
                     seed: leaf.seed,
+                    cached_tokens: 0,
                 });
             }
         }

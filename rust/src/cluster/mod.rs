@@ -60,14 +60,21 @@ pub enum LbPolicy {
     /// Sample two distinct replicas, join the shorter queue — JSQ's tail
     /// behaviour at O(1) probe cost (Mitzenmacher's power of two choices).
     PowerOfTwoChoices,
+    /// Route to the replica whose radix prefix cache holds the longest
+    /// prefix of the request's prompt (ties broken by fewest requests in
+    /// system); cold prompts fall back to power-of-two-choices. This is
+    /// what turns the per-replica cache into a cluster-level one: the
+    /// same few-shot template keeps landing where its pages already live.
+    PrefixAffinity,
 }
 
 impl LbPolicy {
-    pub const ALL: [LbPolicy; 4] = [
+    pub const ALL: [LbPolicy; 5] = [
         LbPolicy::RoundRobin,
         LbPolicy::LeastLoaded,
         LbPolicy::JoinShortestQueue,
         LbPolicy::PowerOfTwoChoices,
+        LbPolicy::PrefixAffinity,
     ];
 
     /// Parse a `--lb` flag value.
@@ -77,8 +84,10 @@ impl LbPolicy {
             "ll" | "least-loaded" => LbPolicy::LeastLoaded,
             "jsq" | "join-shortest-queue" => LbPolicy::JoinShortestQueue,
             "p2c" | "power-of-two" => LbPolicy::PowerOfTwoChoices,
+            "aff" | "prefix-affinity" => LbPolicy::PrefixAffinity,
             _ => bail!(
-                "unknown lb policy `{s}` (rr|least-loaded|jsq|p2c)"
+                "unknown lb policy `{s}` (rr|least-loaded|jsq|p2c|\
+                 prefix-affinity)"
             ),
         })
     }
@@ -90,6 +99,7 @@ impl LbPolicy {
             LbPolicy::LeastLoaded => "least-loaded",
             LbPolicy::JoinShortestQueue => "jsq",
             LbPolicy::PowerOfTwoChoices => "p2c",
+            LbPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
 
@@ -100,6 +110,7 @@ impl LbPolicy {
             LbPolicy::LeastLoaded => "ll",
             LbPolicy::JoinShortestQueue => "jsq",
             LbPolicy::PowerOfTwoChoices => "p2c",
+            LbPolicy::PrefixAffinity => "aff",
         }
     }
 }
@@ -124,6 +135,8 @@ pub struct ClusterResult {
     /// Merged outcomes in global dispatch (= arrival) order.
     pub outcomes: Vec<RequestOutcome>,
     /// Per-replica serve results (timelines share the t = 0 origin).
+    /// Their `outcomes` vectors are empty: the k-way merge *moves* each
+    /// outcome into the merged list above instead of cloning it.
     pub replica_results: Vec<ServeResult>,
     /// Replica index each trace position was dispatched to.
     pub assignments: Vec<usize>,
@@ -157,16 +170,35 @@ impl ClusterResult {
                 running_tokens: 0,
                 kv_pages_used: 0,
                 queued_requests: 0,
+                cache_hit_tokens: 0,
             };
             for l in last.iter().flatten() {
                 agg.running_branches += l.running_branches;
                 agg.running_tokens += l.running_tokens;
                 agg.kv_pages_used += l.kv_pages_used;
                 agg.queued_requests += l.queued_requests;
+                // Per-replica values are cumulative, so the sum is the
+                // cluster-wide cumulative hit count.
+                agg.cache_hit_tokens += l.cache_hit_tokens;
             }
             points.push(agg);
         }
         Timeline { points }
+    }
+
+    /// Cluster-wide prefix-cache hit rate: Σ cache-covered prompt tokens
+    /// over Σ admitted prompt tokens, across all replicas. 0.0 with the
+    /// cache disabled (or before any admission).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hit: usize =
+            self.replica_results.iter().map(|r| r.cache_hit_tokens).sum();
+        let total: usize =
+            self.replica_results.iter().map(|r| r.prompt_tokens).sum();
+        if total > 0 {
+            hit as f64 / total as f64
+        } else {
+            0.0
+        }
     }
 
     /// Aggregate per-replica occupancy / skew statistics.
@@ -216,6 +248,7 @@ impl ClusterResult {
         ClusterReport {
             replicas,
             lb: self.lb.label().to_string(),
+            cache_hit_rate: self.cache_hit_rate(),
             occupancy_skew: skew_f64(&per_replica_mean_branches),
             request_skew: skew_f64(
                 &per_replica_requests
@@ -248,6 +281,8 @@ pub struct ClusterReport {
     pub occupancy_skew: f64,
     /// max/mean of per-replica request counts (1.0 = perfectly even).
     pub request_skew: f64,
+    /// Cluster-wide prefix-cache hit rate (0.0 with the cache disabled).
+    pub cache_hit_rate: f64,
 }
 
 /// max/mean skew; 1.0 for empty or all-zero inputs.
@@ -278,11 +313,32 @@ fn catch_up(s: &mut Scheduler, t: f64) -> Result<()> {
     Ok(())
 }
 
+/// Two random probes, join the shorter queue (also the prefix-affinity
+/// fallback for cold prompts, so both spellings stay in lockstep).
+/// Caller guarantees ≥ 2 replicas (`pick_replica` short-circuits R = 1).
+fn pick_p2c(scheds: &[Scheduler], rng: &mut Rng) -> usize {
+    let r = scheds.len();
+    debug_assert!(r >= 2, "p2c needs two replicas to probe");
+    let a = rng.below(r);
+    let mut b = rng.below(r - 1);
+    if b >= a {
+        b += 1;
+    }
+    if scheds[b].load().requests_in_system()
+        < scheds[a].load().requests_in_system()
+    {
+        b
+    } else {
+        a
+    }
+}
+
 /// Choose the replica for one arriving request. All load reads happen at
 /// the arrival instant (the caller caught every replica up to it).
 fn pick_replica(
     lb: LbPolicy,
     scheds: &[Scheduler],
+    req: &Request,
     rr_next: &mut usize,
     rng: &mut Rng,
 ) -> usize {
@@ -302,19 +358,25 @@ fn pick_replica(
         LbPolicy::JoinShortestQueue => (0..r)
             .min_by_key(|&i| scheds[i].load().requests_in_system())
             .unwrap_or(0),
-        LbPolicy::PowerOfTwoChoices => {
-            let a = rng.below(r);
-            let mut b = rng.below(r - 1);
-            if b >= a {
-                b += 1;
+        LbPolicy::PowerOfTwoChoices => pick_p2c(scheds, rng),
+        LbPolicy::PrefixAffinity => {
+            // Probe every replica's radix cache for the longest resident
+            // prefix of this prompt; route to the best hit, breaking ties
+            // by queue depth (then index, for determinism). A cold prompt
+            // has no affinity anywhere — fall back to p2c.
+            let prompt = req.prompt_tokens();
+            let hits: Vec<usize> = scheds
+                .iter()
+                .map(|s| s.cached_prefix_tokens(&prompt))
+                .collect();
+            let best = hits.iter().copied().max().unwrap_or(0);
+            if best == 0 {
+                return pick_p2c(scheds, rng);
             }
-            if scheds[b].load().requests_in_system()
-                < scheds[a].load().requests_in_system()
-            {
-                b
-            } else {
-                a
-            }
+            (0..r)
+                .filter(|&i| hits[i] == best)
+                .min_by_key(|&i| (scheds[i].load().requests_in_system(), i))
+                .unwrap_or(0)
         }
     }
 }
@@ -375,8 +437,8 @@ pub fn serve_cluster(
         for s in scheds.iter_mut() {
             catch_up(s, req.arrival)?;
         }
-        let idx = pick_replica(cfg.lb, &scheds, &mut rr_next, &mut rng);
-        scheds[idx].dispatch(req)?;
+        let idx = pick_replica(cfg.lb, &scheds, req, &mut rr_next, &mut rng);
+        scheds[idx].dispatch(req.clone())?;
         assignments.push(idx);
     }
     // Drain every replica to completion.
@@ -389,12 +451,21 @@ pub fn serve_cluster(
     }
 
     // Merge outcomes back into global dispatch order (each replica's
-    // outcomes are already in its own dispatch order).
-    let mut cursors = vec![0usize; r];
+    // outcomes are already in its own dispatch order). The merge *moves*
+    // each outcome out of its replica result — `RequestOutcome` carries a
+    // per-response length vector, so cloning every outcome was an O(total
+    // responses) allocation storm on large traces.
+    let mut drained: Vec<std::vec::IntoIter<RequestOutcome>> = replica_results
+        .iter_mut()
+        .map(|rr| std::mem::take(&mut rr.outcomes).into_iter())
+        .collect();
     let mut outcomes = Vec::with_capacity(trace.len());
     for &rep in &assignments {
-        outcomes.push(replica_results[rep].outcomes[cursors[rep]].clone());
-        cursors[rep] += 1;
+        outcomes.push(
+            drained[rep]
+                .next()
+                .expect("replica produced fewer outcomes than assignments"),
+        );
     }
 
     Ok(ClusterResult {

@@ -198,6 +198,16 @@ pub struct ServeSpec {
     pub slots: usize,
     pub kv_capacity_tokens: usize,
     pub kv_page_tokens: usize,
+    /// Cross-request prefix-cache retention budget in pages (`--prefix-cache`;
+    /// 0 disables the cache — the pre-cache admission accounting).
+    pub prefix_cache_pages: usize,
+    /// Fraction of requests carrying a shared few-shot header
+    /// (`--prefix-share`; 0 = the plain trace generators).
+    pub prefix_share: f64,
+    /// Number of distinct header templates in a prefix-heavy trace.
+    pub prefix_templates: usize,
+    /// Worked examples per header template (controls header length).
+    pub prefix_shots: usize,
     pub t_round: usize,
     pub temperature: f32,
     pub max_new: usize,
@@ -232,6 +242,22 @@ impl ServeSpec {
         if replicas == 0 {
             bail!("--replicas must be at least 1");
         }
+        let prefix_share = args.f64_or("prefix-share", 0.0)?;
+        if !(0.0..=1.0).contains(&prefix_share) {
+            bail!("--prefix-share must be in [0, 1], got {prefix_share}");
+        }
+        let prefix_templates = args.usize_or("prefix-templates", 3)?;
+        if prefix_templates == 0 {
+            bail!("--prefix-templates must be at least 1");
+        }
+        let prefix_shots = args.usize_or("prefix-shots", 3)?;
+        if prefix_share > 0.0 && prefix_shots == 0 {
+            bail!(
+                "--prefix-shots must be at least 1 when --prefix-share > 0 \
+                 (zero-shot headers are empty, silently degenerating the \
+                 prefix workload to a plain trace)"
+            );
+        }
         Ok(ServeSpec {
             method,
             dataset: args.get_or("dataset", "synth-gaokao"),
@@ -244,6 +270,10 @@ impl ServeSpec {
             slots: args.usize_or("slots", 8)?,
             kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
             kv_page_tokens: args.usize_or("kv-page", 16)?,
+            prefix_cache_pages: args.usize_or("prefix-cache", 0)?,
+            prefix_share,
+            prefix_templates,
+            prefix_shots,
             t_round: args.usize_or("t-round", 16)?,
             temperature: args.f64_or("temp", 1.0)? as f32,
             max_new: args.usize_or("max-new", 224)?,
@@ -317,6 +347,32 @@ mod tests {
         assert_eq!(s.dataset, "synth-gaokao");
         assert_eq!(s.replicas, 1);
         assert_eq!(s.lb, LbPolicy::RoundRobin);
+        assert_eq!(s.prefix_cache_pages, 0, "cache must default off");
+        assert_eq!(s.prefix_share, 0.0);
+        assert_eq!(s.prefix_templates, 3);
+        assert_eq!(s.prefix_shots, 3);
+    }
+
+    #[test]
+    fn spec_prefix_flags() {
+        let a = args(
+            "--prefix-share 0.8 --prefix-cache 128 --prefix-templates 2 \
+             --prefix-shots 4 --lb prefix-affinity",
+        );
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(s.prefix_share, 0.8);
+        assert_eq!(s.prefix_cache_pages, 128);
+        assert_eq!(s.prefix_templates, 2);
+        assert_eq!(s.prefix_shots, 4);
+        assert_eq!(s.lb, LbPolicy::PrefixAffinity);
+        assert!(ServeSpec::from_args(&args("--prefix-share 1.5")).is_err());
+        assert!(ServeSpec::from_args(&args("--prefix-templates 0")).is_err());
+        assert!(ServeSpec::from_args(
+            &args("--prefix-share 0.5 --prefix-shots 0")
+        )
+        .is_err());
+        // Shots are irrelevant (and unchecked) without a prefix workload.
+        assert!(ServeSpec::from_args(&args("--prefix-shots 0")).is_ok());
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub struct SchedConfig {
     pub max_new: usize,
     pub kv_capacity_tokens: usize,
     pub kv_page_tokens: usize,
+    /// Retention budget (pages) of the cross-request radix prefix cache;
+    /// 0 disables it, reproducing the pre-cache admission accounting
+    /// byte for byte (property-tested).
+    pub prefix_cache_pages: usize,
     pub seed: u64,
 }
 
@@ -93,6 +97,7 @@ impl Default for SchedConfig {
             max_new: 224,
             kv_capacity_tokens: 4096,
             kv_page_tokens: 16,
+            prefix_cache_pages: 0,
             seed: 0,
         }
     }
@@ -141,6 +146,12 @@ pub struct ServeResult {
     pub rounds: usize,
     pub engine_seconds: f64,
     pub wall_seconds: f64,
+    /// Σ prompt tokens served from the cross-request prefix cache
+    /// (0 with the cache disabled).
+    pub cache_hit_tokens: usize,
+    /// Σ prompt tokens over all admitted requests — the denominator for
+    /// `prefill_tokens_saved_frac` in the prefix bench.
+    pub prompt_tokens: usize,
 }
 
 /// What one [`Scheduler::step`] call did.
@@ -200,6 +211,12 @@ pub struct Scheduler<'e> {
     /// Σ generated tokens over Running branches (the `TimelinePoint`
     /// quantity), maintained incrementally.
     running_tokens: usize,
+    /// Σ prompt tokens covered by the cross-request prefix cache at
+    /// admission (cumulative; audit recomputes it from the per-request
+    /// records).
+    cache_hit_tokens_total: usize,
+    /// Σ prompt tokens over admitted requests (cumulative).
+    prompt_tokens_total: usize,
     /// Occupancy timeline, one point per decode round.
     timeline: Timeline,
     /// Σ engine compute seconds charged so far.
@@ -228,7 +245,11 @@ impl<'e> Scheduler<'e> {
         clock: ClockHandle,
     ) -> Scheduler<'e> {
         let slots = engine.caps().slots;
-        let kv = KvCacheManager::new(cfg.kv_capacity_tokens, cfg.kv_page_tokens);
+        let kv = KvCacheManager::with_prefix_cache(
+            cfg.kv_capacity_tokens,
+            cfg.kv_page_tokens,
+            cfg.prefix_cache_pages,
+        );
         let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
         Scheduler {
             cfg,
@@ -245,6 +266,8 @@ impl<'e> Scheduler<'e> {
             free_slots: (0..slots).map(Reverse).collect(),
             round: 0,
             running_tokens: 0,
+            cache_hit_tokens_total: 0,
+            prompt_tokens_total: 0,
             timeline: Timeline::default(),
             engine_seconds: 0.0,
             finished_count: 0,
@@ -275,7 +298,7 @@ impl<'e> Scheduler<'e> {
             }
         }
         for r in trace {
-            self.dispatch(r)?;
+            self.dispatch(r.clone())?;
         }
         while self.step()? == StepOutcome::Worked {}
         let mut res = self.finish()?;
@@ -288,19 +311,27 @@ impl<'e> Scheduler<'e> {
         self.clock.now()
     }
 
-    /// Hand a request to this scheduler. It enters the FCFS queue once the
-    /// scheduler's clock reaches `arrival`. Dispatch order must be sorted
-    /// by arrival (the cluster layer dispatches in global arrival order,
-    /// so any per-replica subsequence is too).
-    pub fn dispatch(&mut self, r: &Request) -> Result<()> {
+    /// Hand a request to this scheduler (by value — callers that own the
+    /// request hand it over without a clone). It enters the FCFS queue
+    /// once the scheduler's clock reaches `arrival`. Dispatch order must
+    /// be sorted by arrival (the cluster layer dispatches in global
+    /// arrival order, so any per-replica subsequence is too).
+    pub fn dispatch(&mut self, r: Request) -> Result<()> {
         if let Some(last) = self.incoming.back() {
             if r.arrival < last.arrival {
                 bail!("trace not sorted by arrival");
             }
         }
         self.dispatched_total += 1;
-        self.incoming.push_back(r.clone());
+        self.incoming.push_back(r);
         Ok(())
+    }
+
+    /// Tokens of `prompt` resident in this scheduler's radix prefix cache
+    /// (longest interned full-page prefix). The cluster's prefix-affinity
+    /// policy probes replicas with this at dispatch time.
+    pub fn cached_prefix_tokens(&self, prompt: &[tok::Token]) -> usize {
+        self.kv.cached_prefix_tokens(prompt)
     }
 
     /// Current load (cluster dispatch policies read this).
@@ -334,10 +365,11 @@ impl<'e> Scheduler<'e> {
             let r = self.incoming.pop_front().unwrap();
             let idx = self.requests.len();
             self.truths.push(r.question.answer());
-            let prompt = r.question.prompt_tokens();
+            let prompt = r.prompt_tokens();
             self.requests.push(RequestState {
                 id: r.id,
                 prompt,
+                header: r.header,
                 question: r.question,
                 dataset: r.dataset,
                 arrival: r.arrival,
@@ -349,6 +381,7 @@ impl<'e> Scheduler<'e> {
                 completed: Vec::new(),
                 round_stamp: 0,
                 prefix: None,
+                cached_prompt_tokens: 0,
                 final_answer: None,
             });
             self.request_queue.push_back(idx);
@@ -438,6 +471,7 @@ impl<'e> Scheduler<'e> {
             running_tokens: self.running_tokens,
             kv_pages_used: self.kv.used_pages(),
             queued_requests: self.request_queue.len(),
+            cache_hit_tokens: self.cache_hit_tokens_total,
         });
         Ok(StepOutcome::Worked)
     }
@@ -486,6 +520,8 @@ impl<'e> Scheduler<'e> {
             rounds: self.round as usize,
             engine_seconds: self.engine_seconds,
             wall_seconds: 0.0,
+            cache_hit_tokens: self.cache_hit_tokens_total,
+            prompt_tokens: self.prompt_tokens_total,
         })
     }
 
@@ -525,6 +561,19 @@ impl<'e> Scheduler<'e> {
                 }
                 let req = &mut self.requests[ridx];
                 let prompt = req.prompt.clone();
+                // Prompt tokens the engine's cost model may skip: the
+                // request's first branch pays for everything the
+                // cross-request cache did not cover; sibling branches
+                // fork from the request's own shared prefix pages, so
+                // their whole prompt is already resident (charging each
+                // sibling a full prefill would overstate cold cost N×).
+                let first_start =
+                    !req.branches.iter().any(|b| b.started_at.is_some());
+                let cached_tokens = if first_start {
+                    req.cached_prompt_tokens
+                } else {
+                    req.prompt.len()
+                };
                 let seed = req.branches[bidx].seed;
                 let b = &mut req.branches[bidx];
                 b.status = BranchStatus::Running;
@@ -534,29 +583,44 @@ impl<'e> Scheduler<'e> {
                 req.running.insert(pos, bidx);
                 self.slots[free_slot] = Some((ridx, bidx));
                 self.free_slots.pop();
-                entries.push(PrefillEntry { slot: free_slot, prompt, seed });
+                entries.push(PrefillEntry {
+                    slot: free_slot,
+                    prompt,
+                    seed,
+                    cached_tokens,
+                });
                 assigned = true;
                 break;
             }
             if assigned {
                 continue;
             }
-            // Lines 6-7: admit the head request (FCFS, blocking on budget).
+            // Lines 6-7: admit the head request (FCFS, blocking on
+            // budget). Token-level admission: the radix cache discounts
+            // the covered prompt prefix, so a warm few-shot header costs
+            // pages (and prefill) only for the uncovered suffix.
+            // try_admit_tokens folds the budget check and the admission
+            // into one tree walk; over-budget is a side-effect-free None.
             let Some(&ridx) = self.request_queue.front() else {
                 break;
             };
             let n = self.cfg.policy.n_branches();
-            let prompt_len = self.requests[ridx].prompt.len();
-            if !self.kv.can_admit(prompt_len, self.cfg.max_new, n) {
+            let Some(admission) = self.kv.try_admit_tokens(
+                &self.requests[ridx].prompt,
+                self.cfg.max_new,
+                n,
+            )?
+            else {
                 break; // head-of-line blocks until memory frees up
-            }
+            };
             self.request_queue.pop_front();
-            let (prefix, kv_branches) =
-                self.kv.admit(prompt_len, self.cfg.max_new, n)?;
+            self.cache_hit_tokens_total += admission.cached_tokens;
+            self.prompt_tokens_total += self.requests[ridx].prompt.len();
             let req = &mut self.requests[ridx];
             req.admitted_at = Some(now);
-            req.prefix = Some(prefix);
-            for kvb in kv_branches {
+            req.prefix = Some(admission.prefix);
+            req.cached_prompt_tokens = admission.cached_tokens;
+            for kvb in admission.branches {
                 let seed = self.rng.next_u64();
                 let mut b = Branch::new(seed);
                 b.kv = Some(kvb);
@@ -878,8 +942,18 @@ impl<'e> Scheduler<'e> {
                     r.running
                 );
             }
-            if r.prompt != r.question.prompt_tokens() {
+            let mut expected_prompt = r.header.clone();
+            expected_prompt.extend(r.question.prompt_tokens());
+            if r.prompt != expected_prompt {
                 bail!("audit: request {i} cached prompt drifted");
+            }
+            if r.cached_prompt_tokens > r.prompt.len() {
+                bail!(
+                    "audit: request {i} claims {} cached tokens of a {}-token \
+                     prompt",
+                    r.cached_prompt_tokens,
+                    r.prompt.len()
+                );
             }
             // Meta counters vs branch/response scans (threshold & quorum
             // bookkeeping).
@@ -938,6 +1012,29 @@ impl<'e> Scheduler<'e> {
                 "audit: finished_count {} != scanned {finished_scan}",
                 self.finished_count
             );
+        }
+        // Prefix-cache counters vs the per-request admission records.
+        let admitted = || {
+            self.requests.iter().filter(|r| r.admitted_at.is_some())
+        };
+        let hit_scan: usize = admitted().map(|r| r.cached_prompt_tokens).sum();
+        if hit_scan != self.cache_hit_tokens_total {
+            bail!(
+                "audit: cache_hit_tokens_total {} != scanned {hit_scan}",
+                self.cache_hit_tokens_total
+            );
+        }
+        let prompt_scan: usize = admitted().map(|r| r.prompt.len()).sum();
+        if prompt_scan != self.prompt_tokens_total {
+            bail!(
+                "audit: prompt_tokens_total {} != scanned {prompt_scan}",
+                self.prompt_tokens_total
+            );
+        }
+        if self.cfg.prefix_cache_pages == 0
+            && self.cache_hit_tokens_total != 0
+        {
+            bail!("audit: cache hits recorded with the cache disabled");
         }
         self.kv.check_invariants()
     }

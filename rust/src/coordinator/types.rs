@@ -160,10 +160,14 @@ pub struct CompletedResponse {
 pub struct RequestState {
     pub id: usize,
     pub question: Question,
-    /// Serving prompt, derived from `question` exactly once at arrival —
-    /// the scheduler touches it on every admission check, branch start
-    /// and PRM query, so it must not be re-tokenized on the hot path.
+    /// Serving prompt (`header` ⊕ question prompt), derived exactly once
+    /// at arrival — the scheduler touches it on every admission check,
+    /// branch start and PRM query, so it must not be re-tokenized on the
+    /// hot path.
     pub prompt: Vec<Token>,
+    /// Shared few-shot header this request arrived with (empty for plain
+    /// traces; audit mode recomputes `prompt` from it).
+    pub header: Vec<Token>,
     pub dataset: String,
     pub arrival: f64,
     pub admitted_at: Option<f64>,
@@ -179,6 +183,9 @@ pub struct RequestState {
     /// scheduler's O(1) involved-set dedup (replaces a `contains` scan).
     pub round_stamp: u64,
     pub prefix: Option<kvcache::PrefixId>,
+    /// Prompt tokens the cross-request prefix cache covered at admission
+    /// (0 before admission, on cold prompts, or with the cache disabled).
+    pub cached_prompt_tokens: usize,
     pub final_answer: Option<u8>,
 }
 

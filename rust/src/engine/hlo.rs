@@ -52,6 +52,13 @@ pub struct HloEngine {
     /// Per-slot sampling streams (stepwise) and the fused-key stream.
     rngs: Vec<Rng>,
     chunk_rng: Rng,
+    /// Σ prompt tokens the KV manager reported as cache-covered
+    /// ([`PrefillEntry::cached_tokens`]). The packed per-slot state tensor
+    /// has no cross-slot page sharing, so this engine must still compute
+    /// the full prompt — the counter records what a page-sharing device
+    /// layout would have skipped (the calibration target for
+    /// `SimCostModel::prefill_per_token`).
+    pub cached_prefill_tokens: usize,
 }
 
 impl HloEngine {
@@ -87,6 +94,7 @@ impl HloEngine {
             logits_fresh: false,
             rngs: (0..batch).map(|i| Rng::new(seed ^ i as u64)).collect(),
             chunk_rng: Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            cached_prefill_tokens: 0,
             rt,
         })
     }
@@ -282,6 +290,14 @@ impl Engine for HloEngine {
             if e.prompt.is_empty() {
                 bail!("empty prompt");
             }
+            if e.cached_tokens > e.prompt.len() {
+                bail!(
+                    "cached_tokens {} exceeds prompt length {}",
+                    e.cached_tokens,
+                    e.prompt.len()
+                );
+            }
+            self.cached_prefill_tokens += e.cached_tokens;
             for (j, &t) in e.prompt.iter().enumerate() {
                 toks[e.slot * sp + j] = t;
             }
@@ -343,6 +359,7 @@ impl Engine for HloEngine {
                 slot: e.slot,
                 prompt: e.prompt.clone(),
                 seed: e.seed,
+                cached_tokens: 0,
             })
             .collect();
         self.prefill(&prefills)?;

@@ -43,6 +43,14 @@ pub struct PrefillEntry {
     pub prompt: Vec<Token>,
     /// Per-branch RNG stream seed (sampling determinism).
     pub seed: u64,
+    /// Leading prompt tokens whose KV is already resident — covered by
+    /// the cross-request prefix cache on a request's first branch start
+    /// (a page multiple; 0 on cold prompts), or the whole prompt for
+    /// sibling branches forking from their request's shared prefix. The
+    /// sim cost model charges prefill only for the uncovered suffix; the
+    /// HLO engine records the hit but still recomputes (its packed
+    /// per-slot state has no cross-slot page sharing — see `hlo.rs`).
+    pub cached_tokens: usize,
 }
 
 /// A fork to install into a slot: prompt + a teacher-forced prefix the

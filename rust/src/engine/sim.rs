@@ -30,6 +30,13 @@ pub struct SimCostModel {
     pub step_per_slot: f64,
     pub prefill_base: f64,
     pub prefill_per_slot: f64,
+    /// Per *uncached* prompt token — tokens covered by the cross-request
+    /// prefix cache ([`PrefillEntry::cached_tokens`]) are free, which is
+    /// exactly the serving win the cache buys. Defaults to 0.0 (the
+    /// pre-cache flat-per-slot prefill model, so cache-disabled serves
+    /// stay byte-identical to the historical cost model); the prefix
+    /// bench and calibrated runs set it explicitly.
+    pub prefill_per_token: f64,
 }
 
 impl Default for SimCostModel {
@@ -39,6 +46,7 @@ impl Default for SimCostModel {
             step_per_slot: 0.25e-3,
             prefill_base: 4.0e-3,
             prefill_per_slot: 1.0e-3,
+            prefill_per_token: 0.0,
         }
     }
 }
@@ -101,6 +109,12 @@ impl SimEngine {
         }
     }
 
+    /// Raise the advisory prompt bucket (prefix-heavy workloads carry a
+    /// shared few-shot header ahead of the 27-token question).
+    pub fn set_prompt_bucket(&mut self, prompt_len: usize) {
+        self.caps.prompt_len = prompt_len.min(self.caps.max_seq);
+    }
+
     fn check_slot(&self, slot: SlotId) -> Result<()> {
         if slot >= self.slots.len() {
             bail!("slot {slot} out of range ({})", self.slots.len());
@@ -130,21 +144,32 @@ impl Engine for SimEngine {
     }
 
     fn prefill(&mut self, entries: &[PrefillEntry]) -> Result<f64> {
+        let mut uncached_tokens = 0usize;
         for e in entries {
             self.check_slot(e.slot)?;
             if e.prompt.len() > self.caps.prompt_len {
                 bail!("prompt length {} exceeds bucket {}", e.prompt.len(),
                       self.caps.prompt_len);
             }
-            let q = Question::from_prompt(&e.prompt)?;
+            if e.cached_tokens > e.prompt.len() {
+                bail!("cached_tokens {} exceeds prompt length {}",
+                      e.cached_tokens, e.prompt.len());
+            }
+            // Header-aware: the question is the trailing <bos>…<think>
+            // window; any shared few-shot header tightens the response
+            // budget but does not change the generative process.
+            let q = Question::from_serving_prompt(&e.prompt)?;
+            let header_len = e.prompt.len() - q.prompt_tokens().len();
             let mut rng = Rng::new(e.seed);
-            let script =
-                crate::workload::sample_response(&q, &self.spec, &mut rng,
-                                                 self.caps.max_seq);
+            let script = crate::workload::sample_response(
+                &q, &self.spec, &mut rng,
+                self.caps.max_seq.saturating_sub(header_len));
             self.install(e.slot, script);
+            uncached_tokens += e.prompt.len() - e.cached_tokens;
         }
         Ok(self.cost.prefill_base
-            + self.cost.prefill_per_slot * entries.len() as f64)
+            + self.cost.prefill_per_slot * entries.len() as f64
+            + self.cost.prefill_per_token * uncached_tokens as f64)
     }
 
     fn decode_into(&mut self, active: &[SlotId], steps: usize, _temp: f32,
@@ -187,10 +212,14 @@ impl Engine for SimEngine {
         let mut max_forced = 0usize;
         for e in entries {
             self.check_slot(e.slot)?;
-            let q = Question::from_prompt(&e.prompt)?;
+            let q = Question::from_serving_prompt(&e.prompt)?;
+            // Same header-tightened sequence budget as `prefill`, so the
+            // two entry points enforce one invariant per prompt shape.
+            let header_len = e.prompt.len() - q.prompt_tokens().len();
             let mut rng = Rng::new(e.seed);
             let script = crate::workload::continue_response(
-                &q, &self.spec, &e.forced, &mut rng, self.caps.max_seq);
+                &q, &self.spec, &e.forced, &mut rng,
+                self.caps.max_seq.saturating_sub(header_len));
             self.install(e.slot, script);
             max_forced = max_forced.max(e.forced.len());
         }
@@ -235,7 +264,7 @@ mod tests {
     #[test]
     fn prefill_and_decode_to_completion() {
         let mut e = engine();
-        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(1), seed: 7 }])
+        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(1), seed: 7, cached_tokens: 0 }])
             .unwrap();
         let mut all = Vec::new();
         for _ in 0..50 {
@@ -254,7 +283,7 @@ mod tests {
     fn deterministic_given_seed() {
         let run = || {
             let mut e = engine();
-            e.prefill(&[PrefillEntry { slot: 1, prompt: prompt(3), seed: 42 }])
+            e.prefill(&[PrefillEntry { slot: 1, prompt: prompt(3), seed: 42, cached_tokens: 0 }])
                 .unwrap();
             let mut out = Vec::new();
             loop {
@@ -276,8 +305,8 @@ mod tests {
         let mut b = engine();
         for eng in [&mut a, &mut b] {
             eng.prefill(&[
-                PrefillEntry { slot: 0, prompt: prompt(5), seed: 1 },
-                PrefillEntry { slot: 1, prompt: prompt(6), seed: 2 },
+                PrefillEntry { slot: 0, prompt: prompt(5), seed: 1, cached_tokens: 0 },
+                PrefillEntry { slot: 1, prompt: prompt(6), seed: 2, cached_tokens: 0 },
             ])
             .unwrap();
         }
@@ -302,6 +331,7 @@ mod tests {
                 slot: 0,
                 prompt: prompt(5),
                 seed,
+                cached_tokens: 0,
             }])
             .unwrap();
             let mut out = Vec::new();
@@ -320,7 +350,7 @@ mod tests {
     #[test]
     fn eos_stops_emission_within_round() {
         let mut e = engine();
-        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(9), seed: 3 }])
+        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(9), seed: 3, cached_tokens: 0 }])
             .unwrap();
         let r = e.decode(&[0], 10_000, 1.0).unwrap();
         let toks = &r.emitted[0].1;
@@ -332,13 +362,13 @@ mod tests {
     fn cost_scales_with_batch_width() {
         let mut e = engine();
         let entries: Vec<_> = (0..4)
-            .map(|s| PrefillEntry { slot: s, prompt: prompt(s as u64), seed: s as u64 })
+            .map(|s| PrefillEntry { slot: s, prompt: prompt(s as u64), seed: s as u64, cached_tokens: 0 })
             .collect();
         e.prefill(&entries).unwrap();
         let r1 = e.decode(&[0], 4, 1.0).unwrap();
         let mut e2 = engine();
         let entries2: Vec<_> = (0..4)
-            .map(|s| PrefillEntry { slot: s, prompt: prompt(s as u64), seed: s as u64 })
+            .map(|s| PrefillEntry { slot: s, prompt: prompt(s as u64), seed: s as u64, cached_tokens: 0 })
             .collect();
         e2.prefill(&entries2).unwrap();
         let r4 = e2.decode(&[0, 1, 2, 3], 4, 1.0).unwrap();
@@ -352,14 +382,87 @@ mod tests {
     }
 
     #[test]
+    fn cached_tokens_discount_prefill_cost_only() {
+        // Same prompt/seed with and without a cache hit: identical script
+        // (decode behaviour unchanged), strictly cheaper prefill under a
+        // token-priced cost model.
+        let model = SimCostModel {
+            prefill_per_token: 0.2e-3,
+            ..SimCostModel::default()
+        };
+        let priced = || {
+            SimEngine::new(4, 256, TaskSpec::synth_gaokao(), model)
+        };
+        let p = prompt(4);
+        let cold = priced()
+            .prefill(&[PrefillEntry {
+                slot: 0, prompt: p.clone(), seed: 9, cached_tokens: 0,
+            }])
+            .unwrap();
+        let mut warm_engine = priced();
+        let warm = warm_engine
+            .prefill(&[PrefillEntry {
+                slot: 0, prompt: p.clone(), seed: 9, cached_tokens: 16,
+            }])
+            .unwrap();
+        assert!(cold > warm, "hit must be cheaper: {cold} vs {warm}");
+        assert!((cold - warm - 16.0 * model.prefill_per_token).abs() < 1e-12,
+                "cold {cold} vs warm {warm}");
+        let mut cold_engine = engine();
+        cold_engine
+            .prefill(&[PrefillEntry {
+                slot: 0, prompt: p, seed: 9, cached_tokens: 0,
+            }])
+            .unwrap();
+        assert_eq!(
+            cold_engine.decode(&[0], 256, 1.0).unwrap().emitted,
+            warm_engine.decode(&[0], 256, 1.0).unwrap().emitted,
+        );
+        // Over-claimed cache coverage is rejected.
+        let mut e = engine();
+        assert!(e
+            .prefill(&[PrefillEntry {
+                slot: 0, prompt: prompt(4), seed: 1, cached_tokens: 999,
+            }])
+            .is_err());
+    }
+
+    #[test]
+    fn headered_prompt_decodes_the_trailing_question() {
+        use crate::workload::few_shot_header;
+        let mut e = SimEngine::new(4, 512, TaskSpec::synth_gaokao(),
+                                   SimCostModel::default());
+        e.set_prompt_bucket(256);
+        let mut rng = Rng::new(21);
+        let q = Question::sample(&TaskSpec::synth_gaokao(), &mut rng);
+        let mut headered =
+            few_shot_header(&TaskSpec::synth_gaokao(), 5, 3);
+        headered.extend(q.prompt_tokens());
+        e.prefill(&[PrefillEntry {
+            slot: 0, prompt: headered, seed: 7, cached_tokens: 0,
+        }])
+        .unwrap();
+        let mut all = Vec::new();
+        for _ in 0..64 {
+            let r = e.decode(&[0], 16, 1.0).unwrap();
+            all.extend_from_slice(&r.emitted[0].1);
+            if all.last() == Some(&tok::EOS) {
+                break;
+            }
+        }
+        assert_eq!(*all.last().unwrap(), tok::EOS);
+        assert!(tok::extract_answer(&all).is_some());
+    }
+
+    #[test]
     fn release_frees_slot() {
         let mut e = engine();
-        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(1), seed: 7 }])
+        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(1), seed: 7, cached_tokens: 0 }])
             .unwrap();
         e.release(0);
         assert!(e.decode(&[0], 1, 1.0).is_err());
         // Slot is reusable after release.
-        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(2), seed: 8 }])
+        e.prefill(&[PrefillEntry { slot: 0, prompt: prompt(2), seed: 8, cached_tokens: 0 }])
             .unwrap();
         e.decode(&[0], 1, 1.0).unwrap();
     }

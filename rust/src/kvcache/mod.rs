@@ -1,4 +1,5 @@
-//! Paged KV-cache manager with prefix sharing and refcounting.
+//! Paged KV-cache manager with prefix sharing, refcounting and a
+//! cross-request radix prefix cache.
 //!
 //! This is the memory-accounting substrate that turns branch
 //! over-subscription into queuing delay — the second challenge the paper
@@ -16,15 +17,43 @@
 //!   immediately, and the prefix pages when the last sibling terminates —
 //!   this is exactly the release path that lets SART batch more requests.
 //!
-//! Admission control asks `can_admit`; the scheduler combines this with
-//! engine-slot availability.
+//! # Cross-request radix prefix cache
+//!
+//! With a nonzero prefix-cache budget ([`KvCacheManager::with_prefix_cache`]),
+//! prompt token sequences are additionally interned into a **page-granular
+//! radix tree** (one node per full page of prompt tokens, SGLang-style):
+//!
+//! * [`KvCacheManager::admit_tokens`] walks the tree for the longest
+//!   cached prefix and only charges pages for the *uncovered* suffix —
+//!   two requests sharing a few-shot header pay for its pages once;
+//! * every node carries a lease refcount (number of live prefixes whose
+//!   interned path includes it). When the last lease drops, the node's
+//!   page is **retained** instead of freed: it moves to an LRU-stamped
+//!   pool bounded by the cache budget, ready to serve the next request
+//!   with the same prefix;
+//! * eviction only ever touches refcount-0 nodes, deepest/oldest first
+//!   (junk tails age out before shared headers, whose stamps refresh on
+//!   every release);
+//! * [`KvCacheManager::check_invariants`] recomputes node refcounts and
+//!   tree-page accounting from scratch each call, so audit-mode serves
+//!   cross-check the incremental bookkeeping every round.
+//!
+//! A zero cache budget (the [`KvCacheManager::new`] default) disables the
+//! tree entirely: `admit_tokens` delegates to the scalar [`admit`] path,
+//! byte-for-byte reproducing the pre-cache accounting (property-tested).
+//!
+//! Admission control asks `can_admit`/`can_admit_tokens`; the scheduler
+//! combines this with engine-slot availability.
 //!
 //! Storage is slab-style: prefixes and branches live in `Vec`s indexed by
 //! their handle, with a free list for reuse and a per-slot generation
 //! counter so stale handles (double release, use-after-release) are
 //! rejected in O(1) instead of hashed lookups — the manager sits on the
 //! admission/termination hot path of every scheduling round.
+//!
+//! [`admit`]: KvCacheManager::admit
 
+use crate::tokenizer::Token;
 use anyhow::{bail, Result};
 
 /// Handle for a request's shared prompt pages (generation-checked slab
@@ -44,8 +73,15 @@ pub struct BranchId {
 
 #[derive(Debug)]
 struct Prefix {
+    /// Total prompt pages (shared path + private remainder; diagnostics).
     pages: usize,
+    /// Pages owned privately by this prefix (the partial tail page, or
+    /// the whole prompt on the scalar/cache-disabled path).
+    private_pages: usize,
     refcount: usize,
+    /// Deepest radix node of the interned full-page path (None on the
+    /// scalar path or when the prompt is shorter than one page).
+    leaf: Option<u32>,
 }
 
 #[derive(Debug)]
@@ -55,6 +91,20 @@ struct BranchAlloc {
     /// Tokens actually decoded so far (informational — the budget is
     /// charged at reservation time).
     grown_tokens: usize,
+}
+
+/// One radix-tree node: exactly one page of prompt tokens (the edge label
+/// from its parent). `refcount` counts live prefix leases through this
+/// node; at 0 the page is retained (LRU-evictable) rather than freed.
+#[derive(Debug)]
+struct RadixNode {
+    page: Vec<Token>,
+    parent: Option<u32>,
+    children: Vec<u32>,
+    refcount: usize,
+    /// LRU stamp assigned when `refcount` last dropped to 0 (valid only
+    /// while retained).
+    lru: u64,
 }
 
 /// One slab slot: the generation is bumped on removal so outstanding
@@ -122,19 +172,49 @@ impl<T> Slab<T> {
     }
 }
 
+/// What [`KvCacheManager::admit_tokens`] hands back: the usual handles
+/// plus how many prompt tokens the cross-request cache already covered
+/// (a multiple of the page size; 0 on cold admits or with the cache
+/// disabled). The engine's cost model charges only the uncovered suffix.
+#[derive(Debug)]
+pub struct Admission {
+    pub prefix: PrefixId,
+    pub branches: Vec<BranchId>,
+    pub cached_tokens: usize,
+}
+
 /// Paged KV accounting with a hard page budget.
 #[derive(Debug)]
 pub struct KvCacheManager {
     page_tokens: usize,
     capacity_pages: usize,
+    /// Pages held by live allocations: refcount>0 tree nodes (one page
+    /// each, shared across all leases), private prefix remainders and
+    /// branch reservations.
     used_pages: usize,
     prefixes: Slab<Prefix>,
     branches: Slab<BranchAlloc>,
     /// Incrementally maintained Σ grown_tokens over live branches
     /// (Fig. 3's "running tokens"; previously recomputed by a full scan).
     live_decoded: usize,
-    /// High-water mark, for metrics.
+    /// High-water mark of `used_pages`, for metrics.
     peak_pages: usize,
+    /// Retention budget for refcount-0 radix pages; 0 disables the
+    /// cross-request cache entirely (scalar accounting, pre-cache
+    /// semantics).
+    prefix_cache_pages: usize,
+    /// Radix node storage (free-listed; `None` slots are reusable).
+    nodes: Vec<Option<RadixNode>>,
+    free_nodes: Vec<u32>,
+    /// First-page nodes (the radix tree's root edge set).
+    roots: Vec<u32>,
+    /// Resident refcount-0 pages (≤ `prefix_cache_pages`; all evictable).
+    cached_pages: usize,
+    lru_clock: u64,
+    /// Σ cached_tokens over all `admit_tokens` calls (metrics).
+    hit_tokens_total: usize,
+    /// Pages evicted from the retained pool (metrics).
+    evicted_pages_total: usize,
 }
 
 fn pages_for(tokens: usize, page_tokens: usize) -> usize {
@@ -142,7 +222,19 @@ fn pages_for(tokens: usize, page_tokens: usize) -> usize {
 }
 
 impl KvCacheManager {
+    /// Manager with the cross-request prefix cache disabled (pre-cache
+    /// accounting, byte-for-byte).
     pub fn new(capacity_tokens: usize, page_tokens: usize) -> KvCacheManager {
+        Self::with_prefix_cache(capacity_tokens, page_tokens, 0)
+    }
+
+    /// Manager with up to `prefix_cache_pages` refcount-0 prompt pages
+    /// retained for cross-request reuse (0 disables the cache).
+    pub fn with_prefix_cache(
+        capacity_tokens: usize,
+        page_tokens: usize,
+        prefix_cache_pages: usize,
+    ) -> KvCacheManager {
         assert!(page_tokens > 0 && capacity_tokens >= page_tokens);
         KvCacheManager {
             page_tokens,
@@ -152,6 +244,14 @@ impl KvCacheManager {
             branches: Slab::new(),
             live_decoded: 0,
             peak_pages: 0,
+            prefix_cache_pages,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            cached_pages: 0,
+            lru_clock: 0,
+            hit_tokens_total: 0,
+            evicted_pages_total: 0,
         }
     }
 
@@ -171,8 +271,30 @@ impl KvCacheManager {
         self.peak_pages
     }
 
+    /// Pages available to live allocations. Retained (refcount-0) cache
+    /// pages do not subtract: they are evicted on demand by admissions.
     pub fn free_pages(&self) -> usize {
         self.capacity_pages - self.used_pages
+    }
+
+    /// Retained refcount-0 prefix pages currently resident.
+    pub fn cached_pages(&self) -> usize {
+        self.cached_pages
+    }
+
+    /// Retention budget for refcount-0 prefix pages (0 = cache disabled).
+    pub fn prefix_cache_capacity(&self) -> usize {
+        self.prefix_cache_pages
+    }
+
+    /// Σ prompt tokens served from the cache across all admissions.
+    pub fn cache_hit_tokens_total(&self) -> usize {
+        self.hit_tokens_total
+    }
+
+    /// Pages evicted from the retained pool since construction.
+    pub fn evicted_pages_total(&self) -> usize {
+        self.evicted_pages_total
     }
 
     fn admission_pages(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> usize {
@@ -180,7 +302,9 @@ impl KvCacheManager {
             + n_branches * pages_for(max_new, self.page_tokens)
     }
 
-    /// Would admitting a request with `n_branches` branches fit the budget?
+    /// Would admitting a request with `n_branches` branches fit the
+    /// budget? Scalar form: ignores the prefix cache (a cache hit can
+    /// only need fewer pages, so `true` here is conservative-safe).
     pub fn can_admit(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> bool {
         self.admission_pages(prompt_len, max_new, n_branches) <= self.free_pages()
     }
@@ -190,8 +314,160 @@ impl KvCacheManager {
         n_more * pages_for(max_new, self.page_tokens) <= self.free_pages()
     }
 
-    /// Admit a request: allocate the shared prefix plus one reservation per
-    /// branch. Fails (without side effects) if over budget.
+    /// Walk the radix tree for the longest interned full-page prefix of
+    /// `prompt`. Returns the matched node path, root-first.
+    fn walk_path(&self, prompt: &[Token]) -> Vec<u32> {
+        let mut path = Vec::new();
+        if self.prefix_cache_pages == 0 {
+            return path;
+        }
+        let pt = self.page_tokens;
+        let full = prompt.len() / pt;
+        let mut children: &[u32] = &self.roots;
+        for i in 0..full {
+            let page = &prompt[i * pt..(i + 1) * pt];
+            let mut found = None;
+            for &c in children {
+                if self.nodes[c as usize]
+                    .as_ref()
+                    .is_some_and(|n| n.page.as_slice() == page)
+                {
+                    found = Some(c);
+                    break;
+                }
+            }
+            match found {
+                Some(c) => {
+                    path.push(c);
+                    children = &self.nodes[c as usize].as_ref().unwrap().children;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Tokens of `prompt` resident in the radix cache right now (longest
+    /// interned full-page prefix, live or retained). Read-only — the
+    /// cluster's prefix-affinity policy probes replicas with this.
+    pub fn cached_prefix_tokens(&self, prompt: &[Token]) -> usize {
+        self.walk_path(prompt).len() * self.page_tokens
+    }
+
+    /// One tree walk's worth of admission arithmetic: the matched path,
+    /// the pages the admission must newly allocate, and the retained
+    /// (refcount-0) pages it would re-lease. Single source of the budget
+    /// formula for `can_admit_tokens` and `try_admit_tokens`.
+    fn admission_need_tokens(
+        &self,
+        prompt: &[Token],
+        max_new: usize,
+        n_branches: usize,
+    ) -> (Vec<u32>, usize, usize) {
+        let pt = self.page_tokens;
+        let full = prompt.len() / pt;
+        let tail_pages = usize::from(prompt.len() % pt > 0);
+        let path = self.walk_path(prompt);
+        let hit_retained = path
+            .iter()
+            .filter(|&&c| self.nodes[c as usize].as_ref().unwrap().refcount == 0)
+            .count();
+        let need = (full - path.len())
+            + tail_pages
+            + n_branches * pages_for(max_new, pt);
+        (path, need, hit_retained)
+    }
+
+    /// Token-level admission check: charges only the prompt suffix not
+    /// covered by the radix cache. Retained pages the admission would
+    /// re-lease stop being evictable, so they count against the headroom.
+    /// (Callers that will admit on success should prefer
+    /// [`KvCacheManager::try_admit_tokens`], which shares one tree walk
+    /// between the check and the admission.)
+    pub fn can_admit_tokens(
+        &self,
+        prompt: &[Token],
+        max_new: usize,
+        n_branches: usize,
+    ) -> bool {
+        if self.prefix_cache_pages == 0 {
+            return self.can_admit(prompt.len(), max_new, n_branches);
+        }
+        let (_, need, hit_retained) =
+            self.admission_need_tokens(prompt, max_new, n_branches);
+        need + hit_retained <= self.free_pages()
+    }
+
+    /// Evict the least-recently-retained refcount-0 node with no
+    /// children (leaves first; ancestors become evictable as their
+    /// subtrees drain — refcounts are monotone down the tree, so a
+    /// refcount-0 subtree always contains a childless refcount-0 node).
+    ///
+    /// Linear scan by design: the node slab is bounded by the live
+    /// prompt pages plus the (budgeted) retained pool, both small next
+    /// to a serve's page traffic; an intrusive LRU list would only pay
+    /// off once retained pools reach thousands of pages.
+    fn evict_lru(&mut self) -> Result<()> {
+        let mut best: Option<(u64, u32)> = None;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.refcount == 0 && n.children.is_empty() {
+                    let key = (n.lru, i as u32);
+                    match best {
+                        Some(b) if key >= b => {}
+                        _ => best = Some(key),
+                    }
+                }
+            }
+        }
+        let Some((_, idx)) = best else {
+            bail!("prefix cache eviction found no refcount-0 leaf");
+        };
+        let node = self.nodes[idx as usize].take().unwrap();
+        debug_assert!(node.refcount == 0 && node.children.is_empty());
+        match node.parent {
+            Some(p) => self.nodes[p as usize]
+                .as_mut()
+                .unwrap()
+                .children
+                .retain(|&c| c != idx),
+            None => self.roots.retain(|&c| c != idx),
+        }
+        self.free_nodes.push(idx);
+        self.cached_pages -= 1;
+        self.evicted_pages_total += 1;
+        Ok(())
+    }
+
+    /// Evict retained pages until `fresh` new pages fit physically.
+    /// No-op when the cache is disabled (cached_pages is always 0 then).
+    fn make_room(&mut self, fresh: usize) -> Result<()> {
+        while self.capacity_pages - self.used_pages - self.cached_pages < fresh
+        {
+            self.evict_lru()?;
+        }
+        Ok(())
+    }
+
+    fn alloc_node(&mut self, node: RadixNode) -> u32 {
+        match self.free_nodes.pop() {
+            Some(idx) => {
+                debug_assert!(self.nodes[idx as usize].is_none());
+                self.nodes[idx as usize] = Some(node);
+                idx
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Admit a request (scalar form): allocate the whole prompt privately
+    /// plus one reservation per branch. Never consults the radix cache —
+    /// this is the pre-cache accounting, kept for the Rebase baseline and
+    /// as the delegation target when the cache is disabled. Fails
+    /// (without side effects) if over budget.
     pub fn admit(
         &mut self,
         prompt_len: usize,
@@ -207,9 +483,13 @@ impl KvCacheManager {
         }
         let prefix_pages = pages_for(prompt_len, self.page_tokens);
         let branch_pages = pages_for(max_new, self.page_tokens);
-        let (pidx, pgen) = self
-            .prefixes
-            .insert(Prefix { pages: prefix_pages, refcount: n_branches });
+        self.make_room(prefix_pages + n_branches * branch_pages)?;
+        let (pidx, pgen) = self.prefixes.insert(Prefix {
+            pages: prefix_pages,
+            private_pages: prefix_pages,
+            refcount: n_branches,
+            leaf: None,
+        });
         let prefix = PrefixId { idx: pidx, gen: pgen };
         self.used_pages += prefix_pages;
         let mut branch_ids = Vec::with_capacity(n_branches);
@@ -224,6 +504,121 @@ impl KvCacheManager {
         }
         self.peak_pages = self.peak_pages.max(self.used_pages);
         Ok((prefix, branch_ids))
+    }
+
+    /// Admit a request by prompt *tokens*: intern the prompt's full pages
+    /// into the radix tree, lease the longest cached prefix for free, and
+    /// only charge pages for the uncovered suffix (plus the private tail
+    /// page and the per-branch reservations). With the cache disabled
+    /// this delegates to the scalar [`KvCacheManager::admit`] and is
+    /// byte-identical to it. Fails without side effects if over budget.
+    pub fn admit_tokens(
+        &mut self,
+        prompt: &[Token],
+        max_new: usize,
+        n_branches: usize,
+    ) -> Result<Admission> {
+        match self.try_admit_tokens(prompt, max_new, n_branches)? {
+            Some(admission) => Ok(admission),
+            None => bail!(
+                "kv budget exceeded admitting a {}-token prompt with \
+                 {n_branches} branches ({} pages free)",
+                prompt.len(),
+                self.free_pages()
+            ),
+        }
+    }
+
+    /// [`KvCacheManager::admit_tokens`] with "over budget" as a
+    /// side-effect-free `Ok(None)` instead of an error, and one tree walk
+    /// shared between the budget check and the admission — the
+    /// scheduler's head-of-line gate calls this directly on the hot path.
+    pub fn try_admit_tokens(
+        &mut self,
+        prompt: &[Token],
+        max_new: usize,
+        n_branches: usize,
+    ) -> Result<Option<Admission>> {
+        if self.prefix_cache_pages == 0 {
+            if !self.can_admit(prompt.len(), max_new, n_branches) {
+                return Ok(None);
+            }
+            let (prefix, branches) =
+                self.admit(prompt.len(), max_new, n_branches)?;
+            return Ok(Some(Admission { prefix, branches, cached_tokens: 0 }));
+        }
+        let (path, need, hit_retained) =
+            self.admission_need_tokens(prompt, max_new, n_branches);
+        if need + hit_retained > self.free_pages() {
+            return Ok(None);
+        }
+        let pt = self.page_tokens;
+        let full = prompt.len() / pt;
+        let tail_pages = usize::from(prompt.len() % pt > 0);
+        let branch_pages = pages_for(max_new, pt);
+
+        // 1. Lease the already-interned path. Bumping refcounts first
+        //    protects the hit nodes from the eviction pass below; nodes
+        //    leaving the retained pool move from cached to used.
+        for &c in &path {
+            let was_retained = {
+                let node = self.nodes[c as usize].as_mut().unwrap();
+                node.refcount += 1;
+                node.refcount == 1
+            };
+            if was_retained {
+                self.cached_pages -= 1;
+                self.used_pages += 1;
+            }
+        }
+
+        // 2. Make physical room for the genuinely new pages.
+        self.make_room(need)?;
+
+        // 3. Intern the uncovered full pages (one node per page).
+        let mut leaf = path.last().copied();
+        for i in path.len()..full {
+            let page = prompt[i * pt..(i + 1) * pt].to_vec();
+            let idx = self.alloc_node(RadixNode {
+                page,
+                parent: leaf,
+                children: Vec::new(),
+                refcount: 1,
+                lru: 0,
+            });
+            match leaf {
+                Some(p) => {
+                    self.nodes[p as usize].as_mut().unwrap().children.push(idx)
+                }
+                None => self.roots.push(idx),
+            }
+            self.used_pages += 1;
+            leaf = Some(idx);
+        }
+
+        // 4. Private tail page, prefix record, branch reservations.
+        self.used_pages += tail_pages;
+        let (pidx, pgen) = self.prefixes.insert(Prefix {
+            pages: pages_for(prompt.len(), pt),
+            private_pages: tail_pages,
+            refcount: n_branches,
+            leaf,
+        });
+        let prefix = PrefixId { idx: pidx, gen: pgen };
+        let mut branch_ids = Vec::with_capacity(n_branches);
+        for _ in 0..n_branches {
+            let (bidx, bgen) = self.branches.insert(BranchAlloc {
+                prefix,
+                reserved_pages: branch_pages,
+                grown_tokens: 0,
+            });
+            self.used_pages += branch_pages;
+            branch_ids.push(BranchId { idx: bidx, gen: bgen });
+        }
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        let cached_tokens = path.len() * pt;
+        self.hit_tokens_total += cached_tokens;
+        Ok(Some(Admission { prefix, branches: branch_ids, cached_tokens }))
     }
 
     /// Attach `n_more` branches to an existing shared prefix (Rebase tree
@@ -246,6 +641,7 @@ impl KvCacheManager {
             );
         }
         let branch_pages = pages_for(max_new, self.page_tokens);
+        self.make_room(n_more * branch_pages)?;
         let mut out = Vec::with_capacity(n_more);
         for _ in 0..n_more {
             let (bidx, bgen) = self.branches.insert(BranchAlloc {
@@ -283,10 +679,47 @@ impl KvCacheManager {
         self.live_decoded
     }
 
+    /// Drop one lease along `leaf`→root. Nodes reaching refcount 0 move
+    /// to the retained pool (deepest stamped oldest, so request-unique
+    /// tails evict before shared headers), then the pool is trimmed to
+    /// the cache budget.
+    fn release_lease(&mut self, leaf: u32) -> Result<()> {
+        let mut cur = Some(leaf);
+        while let Some(idx) = cur {
+            let (parent, now_zero) = {
+                let Some(node) =
+                    self.nodes.get_mut(idx as usize).and_then(|s| s.as_mut())
+                else {
+                    bail!("lease release hit dead radix node {idx}");
+                };
+                if node.refcount == 0 {
+                    bail!("radix lease refcount underflow at node {idx}");
+                }
+                node.refcount -= 1;
+                (node.parent, node.refcount == 0)
+            };
+            if now_zero {
+                self.lru_clock += 1;
+                let stamp = self.lru_clock;
+                self.nodes[idx as usize].as_mut().unwrap().lru = stamp;
+                debug_assert!(self.used_pages >= 1);
+                self.used_pages -= 1;
+                self.cached_pages += 1;
+            }
+            cur = parent;
+        }
+        while self.cached_pages > self.prefix_cache_pages {
+            self.evict_lru()?;
+        }
+        Ok(())
+    }
+
     /// Release a branch (pruned / early-stopped / completed). Frees its
-    /// reservation immediately; frees the prefix when the last sibling
-    /// terminates. Double release is an error (caught by the slab
-    /// generation check, even after the slot has been reused).
+    /// reservation immediately; releases the prefix when the last sibling
+    /// terminates — private pages are freed, interned pages drop their
+    /// lease and are retained for cross-request reuse. Double release is
+    /// an error (caught by the slab generation check, even after the slot
+    /// has been reused).
     pub fn release_branch(&mut self, branch: BranchId) -> Result<()> {
         let Some(b) = self.branches.remove(branch.idx, branch.gen) else {
             bail!("double release of branch {branch:?}");
@@ -302,8 +735,11 @@ impl KvCacheManager {
         prefix.refcount -= 1;
         if prefix.refcount == 0 {
             let p = self.prefixes.remove(b.prefix.idx, b.prefix.gen).unwrap();
-            debug_assert!(self.used_pages >= p.pages);
-            self.used_pages -= p.pages;
+            debug_assert!(self.used_pages >= p.private_pages);
+            self.used_pages -= p.private_pages;
+            if let Some(leaf) = p.leaf {
+                self.release_lease(leaf)?;
+            }
         }
         Ok(())
     }
@@ -318,16 +754,117 @@ impl KvCacheManager {
     }
 
     /// Internal invariant: used_pages equals the sum of all live
-    /// allocations, and the incremental counters match a from-scratch
-    /// recomputation. Exposed for property tests.
+    /// allocations, the incremental counters match a from-scratch
+    /// recomputation, and the radix tree's refcounts / page accounting
+    /// rebuild exactly from the live prefix set. Exposed for property
+    /// tests and audit-mode serves.
     pub fn check_invariants(&self) -> Result<()> {
-        let computed: usize = self.prefixes.iter().map(|p| p.pages).sum::<usize>()
+        // Rebuild per-node lease counts from the live prefixes.
+        let mut expected = vec![0usize; self.nodes.len()];
+        for p in self.prefixes.iter() {
+            let mut cur = p.leaf;
+            let mut steps = 0usize;
+            while let Some(idx) = cur {
+                let Some(node) =
+                    self.nodes.get(idx as usize).and_then(|s| s.as_ref())
+                else {
+                    bail!("prefix leaf chain hits dead radix node {idx}");
+                };
+                expected[idx as usize] += 1;
+                cur = node.parent;
+                steps += 1;
+                if steps > self.nodes.len() {
+                    bail!("parent cycle in radix tree");
+                }
+            }
+            // Total prompt pages split exactly into interned path +
+            // private remainder.
+            if p.pages != p.private_pages + steps {
+                bail!(
+                    "prefix page split drift: {} != {} private + {steps} \
+                     interned",
+                    p.pages,
+                    p.private_pages
+                );
+            }
+        }
+        let mut live_tree_pages = 0usize;
+        let mut retained_pages = 0usize;
+        let mut linked_children = 0usize;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.refcount != expected[i] {
+                bail!(
+                    "radix refcount drift at node {i}: {} != recomputed {}",
+                    n.refcount,
+                    expected[i]
+                );
+            }
+            if n.page.len() != self.page_tokens {
+                bail!("radix node {i} is not page-sized");
+            }
+            if n.refcount > 0 {
+                live_tree_pages += 1;
+            } else {
+                retained_pages += 1;
+            }
+            linked_children += n.children.len();
+            for &c in &n.children {
+                let Some(ch) =
+                    self.nodes.get(c as usize).and_then(|s| s.as_ref())
+                else {
+                    bail!("radix node {i} has dangling child {c}");
+                };
+                if ch.parent != Some(i as u32) {
+                    bail!("radix parent pointer mismatch at child {c}");
+                }
+            }
+        }
+        for &r in &self.roots {
+            let Some(n) = self.nodes.get(r as usize).and_then(|s| s.as_ref())
+            else {
+                bail!("dangling radix root {r}");
+            };
+            if n.parent.is_some() {
+                bail!("radix root {r} has a parent");
+            }
+        }
+        let total_nodes =
+            self.nodes.iter().filter(|s| s.is_some()).count();
+        if linked_children + self.roots.len() != total_nodes {
+            bail!(
+                "radix link count drift: {} children + {} roots != {} nodes",
+                linked_children,
+                self.roots.len(),
+                total_nodes
+            );
+        }
+        if retained_pages != self.cached_pages {
+            bail!(
+                "cached_pages drift: counter {} != recomputed {retained_pages}",
+                self.cached_pages
+            );
+        }
+        if self.cached_pages > self.prefix_cache_pages {
+            bail!(
+                "retained pages over cache budget: {} > {}",
+                self.cached_pages,
+                self.prefix_cache_pages
+            );
+        }
+        let computed: usize = live_tree_pages
+            + self.prefixes.iter().map(|p| p.private_pages).sum::<usize>()
             + self.branches.iter().map(|b| b.reserved_pages).sum::<usize>();
         if computed != self.used_pages {
             bail!("accounting drift: computed {computed} != used {}", self.used_pages);
         }
-        if self.used_pages > self.capacity_pages {
-            bail!("over budget: {} > {}", self.used_pages, self.capacity_pages);
+        if self.used_pages + self.cached_pages > self.capacity_pages {
+            bail!(
+                "over budget: {} used + {} cached > {}",
+                self.used_pages,
+                self.cached_pages,
+                self.capacity_pages
+            );
         }
         let decoded: usize = self.branches.iter().map(|b| b.grown_tokens).sum();
         if decoded != self.live_decoded {
@@ -352,6 +889,11 @@ impl KvCacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A page-aligned synthetic prompt: `base..base+len` as tokens.
+    fn prompt(base: i32, len: usize) -> Vec<Token> {
+        (base..base + len as i32).collect()
+    }
 
     #[test]
     fn admit_and_release_roundtrip() {
@@ -457,5 +999,216 @@ mod tests {
         assert_eq!(pages_for(1, 16), 1);
         assert_eq!(pages_for(16, 16), 1);
         assert_eq!(pages_for(17, 16), 2);
+    }
+
+    // -----------------------------------------------------------------
+    // Cross-request radix prefix cache.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn disabled_cache_matches_scalar_admit_exactly() {
+        // admit_tokens with a zero cache budget must mirror the scalar
+        // path page for page (the pre-cache accounting).
+        let mut scalar = KvCacheManager::new(4096, 16);
+        let mut tokens = KvCacheManager::new(4096, 16);
+        let p = prompt(100, 30);
+        let (_, bs1) = scalar.admit(p.len(), 100, 4).unwrap();
+        let adm = tokens.admit_tokens(&p, 100, 4).unwrap();
+        assert_eq!(adm.cached_tokens, 0);
+        assert_eq!(scalar.used_pages(), tokens.used_pages());
+        assert_eq!(tokens.cached_pages(), 0);
+        // Second identical prompt: still no sharing with the cache off.
+        let before = tokens.used_pages();
+        let adm2 = tokens.admit_tokens(&p, 100, 4).unwrap();
+        assert_eq!(adm2.cached_tokens, 0);
+        assert_eq!(tokens.used_pages(), 2 * before);
+        for b in bs1 {
+            scalar.release_branch(b).unwrap();
+        }
+        for b in adm.branches.into_iter().chain(adm2.branches) {
+            tokens.release_branch(b).unwrap();
+        }
+        assert_eq!(tokens.used_pages(), 0);
+        assert_eq!(tokens.cached_pages(), 0);
+        tokens.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_identical_prompts_share_interned_pages() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 48); // 3 full pages
+        let a = kv.admit_tokens(&p, 32, 2).unwrap();
+        assert_eq!(a.cached_tokens, 0); // cold
+        // 3 tree pages + 2 branches × 2 pages.
+        assert_eq!(kv.used_pages(), 3 + 4);
+        let b = kv.admit_tokens(&p, 32, 2).unwrap();
+        assert_eq!(b.cached_tokens, 48); // full-page hit while live
+        // Only the new branch reservations are charged.
+        assert_eq!(kv.used_pages(), 3 + 4 + 4);
+        kv.check_invariants().unwrap();
+        for br in a.branches.into_iter().chain(b.branches) {
+            kv.release_branch(br).unwrap();
+        }
+        // Interned pages are retained, not freed.
+        assert_eq!(kv.used_pages(), 0);
+        assert_eq!(kv.cached_pages(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retained_prefix_serves_later_request() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 40); // 2 full pages + 8-token tail
+        let a = kv.admit_tokens(&p, 32, 1).unwrap();
+        assert_eq!(a.cached_tokens, 0);
+        assert_eq!(kv.used_pages(), 2 + 1 + 2); // tree + tail + branch
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.used_pages(), 0);
+        assert_eq!(kv.cached_pages(), 2);
+        assert_eq!(kv.cached_prefix_tokens(&p), 32);
+        // Re-admit: the 2 full pages come from the cache.
+        let b = kv.admit_tokens(&p, 32, 1).unwrap();
+        assert_eq!(b.cached_tokens, 32);
+        assert_eq!(kv.used_pages(), 2 + 1 + 2);
+        assert_eq!(kv.cached_pages(), 0);
+        assert_eq!(kv.cache_hit_tokens_total(), 32);
+        kv.check_invariants().unwrap();
+        for br in b.branches {
+            kv.release_branch(br).unwrap();
+        }
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_header_divergent_tails_split_in_tree() {
+        // Two prompts sharing 2 pages then diverging: the second admit
+        // hits exactly the shared pages.
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let mut p1 = prompt(0, 32);
+        p1.extend(prompt(500, 16));
+        let mut p2 = prompt(0, 32);
+        p2.extend(prompt(900, 16));
+        let a = kv.admit_tokens(&p1, 16, 1).unwrap();
+        let b = kv.admit_tokens(&p2, 16, 1).unwrap();
+        assert_eq!(a.cached_tokens, 0);
+        assert_eq!(b.cached_tokens, 32);
+        // 2 shared + 2 divergent tree pages + 2 branch pages.
+        assert_eq!(kv.used_pages(), 2 + 1 + 1 + 1 + 1);
+        kv.check_invariants().unwrap();
+        for br in a.branches.into_iter().chain(b.branches) {
+            kv.release_branch(br).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cache_budget_trims_lru_leaves_first() {
+        // Budget of 2 retained pages; a released 4-page prefix keeps only
+        // its 2 shallowest pages (deepest stamped oldest → evicted first).
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 2);
+        let p = prompt(0, 64);
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 2);
+        assert_eq!(kv.evicted_pages_total(), 2);
+        // The survivors are the root-most pages: a 2-page prefix of the
+        // same prompt still hits, the full prompt only partially.
+        assert_eq!(kv.cached_prefix_tokens(&p), 32);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_never_touches_live_prefixes() {
+        // A live request's interned pages must survive arbitrary cache
+        // pressure; only refcount-0 pages are evictable.
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 24, 16, 4);
+        let live_prompt = prompt(0, 48); // 3 tree pages
+        let live = kv.admit_tokens(&live_prompt, 16, 1).unwrap(); // +1 branch page
+        // Fill and churn the retained pool with released one-page prompts.
+        for i in 0..6 {
+            let p = prompt(1000 + 100 * i, 16);
+            let a = kv.admit_tokens(&p, 16, 1).unwrap();
+            for b in a.branches {
+                kv.release_branch(b).unwrap();
+            }
+            kv.check_invariants().unwrap();
+        }
+        assert!(kv.evicted_pages_total() > 0, "churn must evict");
+        assert_eq!(
+            kv.cached_prefix_tokens(&live_prompt),
+            48,
+            "live prefix evicted from the radix tree"
+        );
+        // Oldest retained one-pagers were evicted, newest survive.
+        assert_eq!(kv.cached_prefix_tokens(&prompt(1000, 16)), 0);
+        assert_eq!(kv.cached_prefix_tokens(&prompt(1500, 16)), 16);
+        for b in live.branches {
+            kv.release_branch(b).unwrap();
+        }
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_evicts_retained_pages_on_demand() {
+        // 8-page budget total. A retained 3-page prefix must be evicted
+        // to make room for a fresh admission that needs the space.
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
+        let a = kv.admit_tokens(&prompt(0, 48), 16, 1).unwrap();
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 3);
+        // New prompt: 4 tree pages + 2 branch pages = 6 fresh; physical
+        // free is 8 - 3 retained, so one retained page must go.
+        let b = kv.admit_tokens(&prompt(2000, 64), 32, 1).unwrap();
+        assert_eq!(b.cached_tokens, 0);
+        assert_eq!(kv.used_pages(), 6);
+        assert!(kv.used_pages() + kv.cached_pages() <= kv.capacity_pages());
+        assert!(kv.evicted_pages_total() >= 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retained_hit_counts_against_admission_headroom() {
+        // 6-page budget. Retained 2-page prefix; re-admitting it with a
+        // branch load that fits only if the retained pages were free must
+        // be rejected: the hit pages stop being evictable.
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 6, 16, 6);
+        let p = prompt(0, 32);
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 2);
+        // Re-lease 2 retained + 5 branch pages > 6 total: must refuse.
+        assert!(!kv.can_admit_tokens(&p, 16 * 5, 1));
+        assert!(kv.admit_tokens(&p, 16 * 5, 1).is_err());
+        // 2 retained + 4 branch pages == 6: fits exactly.
+        assert!(kv.can_admit_tokens(&p, 16 * 4, 1));
+        let b = kv.admit_tokens(&p, 16 * 4, 1).unwrap();
+        assert_eq!(b.cached_tokens, 32);
+        assert_eq!(kv.used_pages(), 6);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sub_page_prompts_stay_private() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 10); // below one page: nothing to intern
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        assert_eq!(a.cached_tokens, 0);
+        assert_eq!(kv.used_pages(), 1 + 1);
+        let b = kv.admit_tokens(&p, 16, 1).unwrap();
+        assert_eq!(b.cached_tokens, 0, "partial pages are never shared");
+        for br in a.branches.into_iter().chain(b.branches) {
+            kv.release_branch(br).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 0);
+        kv.check_invariants().unwrap();
     }
 }

@@ -13,9 +13,11 @@
 //! * [`engine`] — the batched decode engine over fixed KV-cache slots,
 //!   with an HLO-backed implementation and a virtual-time simulation twin
 //!   used by tests and full-scale figure sweeps.
-//! * [`kvcache`] — paged KV-cache accounting with prefix sharing and
-//!   refcounts; its token budget is what turns branch over-subscription
-//!   into queuing delay, exactly the effect the paper studies.
+//! * [`kvcache`] — paged KV-cache accounting with prefix sharing,
+//!   refcounts and a cross-request radix prefix cache (page-granular
+//!   interning + LRU retention of released prompt pages); its token
+//!   budget is what turns branch over-subscription into queuing delay,
+//!   exactly the effect the paper studies.
 //! * [`sampler`], [`tokenizer`] — host-side sampling (per-branch RNG) and
 //!   the SynthMath token vocabulary mirrored from `python/compile/vocab.py`.
 //! * [`prm`] — the process-reward-model client used by dynamic pruning.
@@ -26,8 +28,9 @@
 //!   metrics, and the serving front-end.
 //! * [`cluster`] — R engine replicas behind a dispatch layer with
 //!   pluggable load-balancing policies (round-robin, least-loaded, JSQ,
-//!   power-of-two-choices), co-simulated in virtual time; `--replicas 1`
-//!   reduces byte-identically to the single-engine path.
+//!   power-of-two-choices, prefix-affinity), co-simulated in virtual
+//!   time; `--replicas 1` reduces byte-identically to the single-engine
+//!   path.
 //! * [`analysis`] — the order-statistics machinery behind Lemma 1.
 //! * [`util`], [`testkit`] — std-only JSON/npy/RNG/stats substrates and an
 //!   in-repo property-testing helper (the offline registry has no

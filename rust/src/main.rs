@@ -51,7 +51,10 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --requests INT  --rate REQ/S (0=batch)  --slots INT  --kv-tokens INT
   --t-round INT  --temp F  --seed INT  --stepwise (disable fused decode)
   --replicas INT  engine replicas behind the dispatch layer (sim only)
-  --lb rr|least-loaded|jsq|p2c   load-balancing policy across replicas";
+  --lb rr|least-loaded|jsq|p2c|prefix-affinity   dispatch policy
+  --prefix-cache PAGES   cross-request radix prefix cache budget (0=off)
+  --prefix-share F       fraction of requests sharing a few-shot header
+  --prefix-templates INT / --prefix-shots INT   header pool shape";
 
 fn print_report(r: &ServeReport) {
     let rows = vec![r.row()];
@@ -71,15 +74,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         out.report.branches_started_per_request,
         out.report.branches_pruned_per_request,
     );
+    if out.prompt_tokens > 0 && out.cache_hit_tokens > 0 {
+        println!(
+            "prefix-cache: {}/{} prompt tokens served from cache ({:.1}%)",
+            out.cache_hit_tokens,
+            out.prompt_tokens,
+            100.0 * out.cache_hit_tokens as f64 / out.prompt_tokens as f64,
+        );
+    }
     if let Some(c) = &out.cluster {
         println!(
             "cluster: {} replicas, lb={} | req/replica {:?} | \
-             occupancy-skew {:.2} request-skew {:.2}",
+             occupancy-skew {:.2} request-skew {:.2} | cache-hit {:.1}%",
             c.replicas,
             c.lb,
             c.per_replica_requests,
             c.occupancy_skew,
             c.request_skew,
+            100.0 * c.cache_hit_rate,
         );
     }
     Ok(())
@@ -102,8 +114,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     ];
     let mut rows = Vec::new();
     for m in methods {
-        if base.replicas > 1 && matches!(m, Method::Rebase { .. }) {
-            continue; // rebase has no cluster path
+        if matches!(m, Method::Rebase { .. })
+            && (base.replicas > 1 || base.prefix_share > 0.0)
+        {
+            continue; // rebase has no cluster or prefix-workload path
         }
         let mut spec = base.clone();
         spec.method = m;

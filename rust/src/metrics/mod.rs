@@ -17,6 +17,9 @@ pub struct TimelinePoint {
     pub running_tokens: usize,
     pub kv_pages_used: usize,
     pub queued_requests: usize,
+    /// Cumulative prompt tokens served from the cross-request prefix
+    /// cache up to this round (0 with the cache disabled).
+    pub cache_hit_tokens: usize,
 }
 
 /// Occupancy over a serve run (Fig. 3's x-axis is `t`).
@@ -205,13 +208,13 @@ mod tests {
             points: vec![
                 TimelinePoint { t: 0.0, running_branches: 2,
                                 running_tokens: 10, kv_pages_used: 3,
-                                queued_requests: 0 },
+                                queued_requests: 0, cache_hit_tokens: 0 },
                 TimelinePoint { t: 1.0, running_branches: 6,
                                 running_tokens: 50, kv_pages_used: 9,
-                                queued_requests: 2 },
+                                queued_requests: 2, cache_hit_tokens: 8 },
                 TimelinePoint { t: 3.0, running_branches: 1,
                                 running_tokens: 5, kv_pages_used: 1,
-                                queued_requests: 0 },
+                                queued_requests: 0, cache_hit_tokens: 8 },
             ],
         };
         assert_eq!(tl.peak_branches(), 6);
@@ -231,6 +234,7 @@ mod tests {
                 running_tokens: 10 * i,
                 kv_pages_used: i,
                 queued_requests: 0,
+                cache_hit_tokens: 2 * i,
             })
             .collect();
         let tl = Timeline { points };

@@ -168,13 +168,17 @@ impl PrmScorer for OraclePrm {
         self.calls += 1;
         seqs.iter()
             .map(|seq| {
-                // Split prompt (27 tokens) from generation.
-                let (prompt, generated) = if seq.len() >= 27 {
-                    seq.split_at(27)
-                } else {
-                    (&seq[..], &[][..])
-                };
-                let mu = match Question::from_prompt(prompt) {
+                // Split prompt from generation at the <think> marker: the
+                // prompt is everything up to and including it (a shared
+                // few-shot header never contains <think>, and generated
+                // suffixes never re-emit it). Bare 27-token prompts split
+                // exactly where the old fixed-offset code did.
+                let (prompt, generated) =
+                    match seq.iter().position(|&t| t == tok::THINK) {
+                        Some(i) => seq.split_at(i + 1),
+                        None => (&seq[..], &[][..]),
+                    };
+                let mu = match Question::from_serving_prompt(prompt) {
                     Ok(q) => {
                         if Self::on_track(&q, generated) {
                             self.mu_good
@@ -270,6 +274,26 @@ mod tests {
             let s = prm.score(&[&seq]).unwrap()[0];
             assert!((0.0..=1.0).contains(&s));
         }
+    }
+
+    #[test]
+    fn oracle_scores_headered_prompts_like_bare_ones() {
+        // A shared few-shot header ahead of the question must not change
+        // the on-track judgement: the oracle locates the question at the
+        // <think> marker.
+        let q = question();
+        let mut bare = q.prompt_tokens();
+        bare.extend(good_steps(&q, 3));
+        let mut headered =
+            crate::workload::few_shot_header(&TaskSpec::synth_gaokao(), 8, 2);
+        headered.extend(q.prompt_tokens());
+        headered.extend(good_steps(&q, 3));
+        let mut a = OraclePrm::new(0.0, 5);
+        let mut b = OraclePrm::new(0.0, 5);
+        let sa = a.score(&[&bare]).unwrap()[0];
+        let sb = b.score(&[&headered]).unwrap()[0];
+        assert_eq!(sa, sb, "header changed the oracle verdict");
+        assert!(sb > 0.5, "on-track chain scored badly: {sb}");
     }
 
     #[test]

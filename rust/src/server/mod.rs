@@ -18,7 +18,9 @@ use crate::metrics::{ServeReport, Timeline};
 use crate::prm::{HloPrm, OraclePrm, PrmScorer};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::clock::{RealClock, SimClock};
-use crate::workload::{batch_trace, poisson_trace, Request, TaskSpec};
+use crate::workload::{
+    batch_trace, poisson_trace, templated_trace, Request, TaskSpec,
+};
 use anyhow::{bail, Context, Result};
 
 /// Everything produced by one serve run.
@@ -31,11 +33,30 @@ pub struct RunOutput {
     /// Per-replica occupancy/skew aggregate — `Some` only for
     /// multi-replica (`--replicas > 1`) runs.
     pub cluster: Option<ClusterReport>,
+    /// Σ prompt tokens covered by the cross-request prefix cache
+    /// (cluster runs sum over replicas; 0 with the cache disabled).
+    pub cache_hit_tokens: usize,
+    /// Σ prompt tokens over all admitted requests.
+    pub prompt_tokens: usize,
 }
 
-/// Generate the workload trace for a spec.
+/// Generate the workload trace for a spec. A nonzero `--prefix-share`
+/// selects the templated prefix-heavy generator (shared few-shot headers
+/// + per-request questions); at share 0 it degenerates to the plain
+/// Poisson/batch trace, so the two paths can never drift.
 pub fn trace_for(spec: &ServeSpec) -> Result<Vec<Request>> {
     let task = TaskSpec::by_name(&spec.dataset)?;
+    if spec.prefix_share > 0.0 {
+        return Ok(templated_trace(
+            &task,
+            spec.n_requests,
+            spec.rate,
+            spec.seed,
+            spec.prefix_share,
+            spec.prefix_templates,
+            spec.prefix_shots,
+        ));
+    }
     Ok(if spec.rate > 0.0 {
         poisson_trace(&task, spec.n_requests, spec.rate, spec.seed)
     } else {
@@ -49,6 +70,23 @@ pub fn build_engine(spec: &ServeSpec) -> Result<Box<dyn Engine>> {
     match &spec.engine {
         EngineChoice::Sim => {
             let task = TaskSpec::by_name(&spec.dataset)?;
+            if spec.prefix_share > 0.0 {
+                // Prefix-heavy prompts carry a few-shot header ahead of
+                // the 27-token question. Size the advisory bucket (and
+                // the sequence budget) to the worst-case header for this
+                // dataset/shots combination: each shot is the 25-token
+                // question + 4·hops derivation steps + 2 answer tokens.
+                let shot_max = 28 + 4 * task.max_hops as usize;
+                let bucket = spec.prefix_shots * shot_max + 27;
+                let mut engine = SimEngine::new(
+                    spec.slots,
+                    bucket + 229,
+                    task,
+                    SimCostModel::default(),
+                );
+                engine.set_prompt_bucket(bucket);
+                return Ok(Box::new(engine));
+            }
             Ok(Box::new(SimEngine::new(
                 spec.slots,
                 256,
@@ -57,6 +95,12 @@ pub fn build_engine(spec: &ServeSpec) -> Result<Box<dyn Engine>> {
             )))
         }
         EngineChoice::Hlo { model, fused } => {
+            if spec.prefix_share > 0.0 {
+                bail!(
+                    "--prefix-share requires --engine sim (headered prompts \
+                     exceed the compiled HLO prompt bucket)"
+                );
+            }
             let rt = Runtime::cpu()?;
             let manifest = Manifest::load(crate::runtime::artifacts_dir())?;
             let mode = if *fused {
@@ -110,8 +154,20 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
     let engine_desc = engine.describe();
     let label = spec.method.label();
 
-    let (outcomes, timeline) = match spec.method {
+    let (outcomes, timeline, cache_hit_tokens, prompt_tokens) = match spec
+        .method
+    {
         Method::Rebase { n } => {
+            if spec.prefix_share > 0.0 {
+                // Rebase prefills bare question prompts and ignores
+                // Request headers; serving it a prefix-heavy trace would
+                // silently compare it against methods paying for (and
+                // caching) the full headered prompts.
+                bail!(
+                    "--prefix-share is not supported for the rebase \
+                     baseline"
+                );
+            }
             let cfg = RebaseConfig {
                 n_leaves: n,
                 t_round: spec.t_round,
@@ -129,7 +185,8 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
                 prm.as_mut(),
                 clock_for(spec),
             );
-            sched.serve(trace)?
+            let (outcomes, timeline) = sched.serve(trace)?;
+            (outcomes, timeline, 0, 0)
         }
         _ => {
             let mut sched = Scheduler::new(
@@ -139,11 +196,20 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
                 clock_for(spec),
             );
             let res = sched.serve(trace)?;
-            (res.outcomes, res.timeline)
+            (res.outcomes, res.timeline, res.cache_hit_tokens,
+             res.prompt_tokens)
         }
     };
     let report = ServeReport::from_outcomes(&label, &outcomes);
-    Ok(RunOutput { report, timeline, outcomes, engine_desc, cluster: None })
+    Ok(RunOutput {
+        report,
+        timeline,
+        outcomes,
+        engine_desc,
+        cluster: None,
+        cache_hit_tokens,
+        prompt_tokens,
+    })
 }
 
 /// The scheduler configuration a spec maps to — shared by the
@@ -161,6 +227,7 @@ fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
         max_new: spec.max_new,
         kv_capacity_tokens: spec.kv_capacity_tokens,
         kv_page_tokens: spec.kv_page_tokens,
+        prefix_cache_pages: spec.prefix_cache_pages,
         seed: spec.seed,
     })
 }
@@ -208,6 +275,10 @@ fn run_cluster_on_trace(
     );
     let report = ServeReport::from_outcomes(&label, &res.outcomes);
     let timeline = res.merged_timeline();
+    let cache_hit_tokens =
+        res.replica_results.iter().map(|r| r.cache_hit_tokens).sum();
+    let prompt_tokens =
+        res.replica_results.iter().map(|r| r.prompt_tokens).sum();
     let cluster = Some(res.report());
     Ok(RunOutput {
         report,
@@ -219,6 +290,8 @@ fn run_cluster_on_trace(
             spec.lb.label()
         ),
         cluster,
+        cache_hit_tokens,
+        prompt_tokens,
     })
 }
 
@@ -244,6 +317,7 @@ pub fn sample_branches(
                 slot: i,
                 prompt: question.prompt_tokens(),
                 seed: seed ^ ((next + i) as u64).wrapping_mul(0x9E37),
+                cached_tokens: 0,
             })
             .collect();
         engine.prefill(&entries)?;
@@ -312,6 +386,50 @@ mod tests {
             );
             assert!(c.request_skew >= 1.0 && c.occupancy_skew >= 1.0);
         }
+    }
+
+    #[test]
+    fn prefix_share_serve_hits_cache_end_to_end() {
+        let mut s = spec(
+            "--method sart:4 --prefix-share 1.0 --prefix-templates 1 \
+             --prefix-cache 64",
+        );
+        s.kv_capacity_tokens = 32768;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        assert!(out.prompt_tokens > 0);
+        assert!(
+            out.cache_hit_tokens > 0,
+            "shared-template serve produced no cache hits"
+        );
+        // Cache off: same workload, zero hits.
+        let mut cold = s.clone();
+        cold.prefix_cache_pages = 0;
+        let out_cold = run(&cold).unwrap();
+        assert_eq!(out_cold.cache_hit_tokens, 0);
+        assert_eq!(out_cold.report.n_requests, 8);
+        // HLO engines reject prefix-heavy workloads up front.
+        let mut hlo = s.clone();
+        hlo.engine = EngineChoice::Hlo {
+            model: "r1mini-tiny".into(),
+            fused: true,
+        };
+        assert!(run(&hlo).is_err());
+    }
+
+    #[test]
+    fn prefix_affinity_cluster_serves_all() {
+        let mut s = spec(
+            "--method sart:4 --replicas 3 --lb prefix-affinity \
+             --prefix-share 0.9 --prefix-templates 3 --prefix-cache 64",
+        );
+        s.kv_capacity_tokens = 32768;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        let c = out.cluster.as_ref().expect("cluster report");
+        assert_eq!(c.replicas, 3);
+        assert_eq!(c.per_replica_requests.iter().sum::<usize>(), 8);
+        assert!((0.0..=1.0).contains(&c.cache_hit_rate));
     }
 
     #[test]

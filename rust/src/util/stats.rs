@@ -6,12 +6,22 @@
 
 /// Percentile by linear interpolation on the sorted sample (numpy
 /// `percentile(..., method="linear")`), matching how the paper's plots
-/// are typically produced.
+/// are typically produced. Sorts with `total_cmp`, so NaN inputs order
+/// after +∞ instead of panicking (they only contaminate the top
+/// percentiles they actually occupy).
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!(!samples.is_empty(), "percentile of empty sample");
-    assert!((0.0..=100.0).contains(&p));
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&v, p)
+}
+
+/// Percentile on an already-sorted (`total_cmp` order) sample. Callers
+/// computing several percentiles should sort once and use this —
+/// `Summary::of` previously re-sorted the sample four times.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    assert!(!v.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -54,14 +64,20 @@ pub struct Summary {
 impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty());
+        // One sort serves every percentile (this used to sort the sample
+        // once per percentile). total_cmp puts NaNs after +∞, so the max
+        // (last finite-or-not element) and the percentiles are defined
+        // without panicking on NaN inputs.
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_unstable_by(|a, b| a.total_cmp(b));
         Summary {
-            n: samples.len(),
+            n: v.len(),
             mean: mean(samples),
-            p50: percentile(samples, 50.0),
-            p90: percentile(samples, 90.0),
-            p97: percentile(samples, 97.0),
-            p99: percentile(samples, 99.0),
-            max: samples.iter().cloned().fold(f64::MIN, f64::max),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p97: percentile_sorted(&v, 97.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
         }
     }
 }
@@ -174,6 +190,33 @@ mod tests {
         );
         assert!(t.contains("a"));
         assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // total_cmp orders NaN after +inf: low/mid percentiles stay
+        // finite and correct, and nothing panics (partial_cmp().unwrap()
+        // used to abort here).
+        let v = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&v, 100.0).is_nan());
+        let s = Summary::of(&v);
+        assert_eq!(s.n, 4);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert!(s.max.is_nan());
+        // All-NaN input: defined (all-NaN percentiles), no panic.
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_entry_point() {
+        let v = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let mut sorted = v.to_vec();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&v, p), percentile_sorted(&sorted, p));
+        }
     }
 
     #[test]

@@ -115,6 +115,17 @@ impl Question {
         out
     }
 
+    /// Parse a question out of a serving prompt that may carry a shared
+    /// few-shot header (`templated_trace`): the question proper is always
+    /// the trailing `<bos> … <think>` window, so this parses the last 27
+    /// tokens. Identical to [`Question::from_prompt`] on bare prompts.
+    pub fn from_serving_prompt(prompt: &[Token]) -> Result<Question> {
+        if prompt.len() < 27 {
+            bail!("serving prompt too short: {} tokens", prompt.len());
+        }
+        Question::from_prompt(&prompt[prompt.len() - 27..])
+    }
+
     /// Parse a question back out of its serving prompt — the inverse of
     /// `prompt_tokens`. Used by the simulation engine and the oracle PRM,
     /// which only ever see token streams (keeping their interfaces
@@ -301,6 +312,23 @@ pub struct Request {
     pub question: Question,
     pub arrival: f64,
     pub dataset: String,
+    /// Shared few-shot header prepended to the serving prompt (empty for
+    /// plain traces). Requests carrying the same header share its prompt
+    /// pages through the cross-request prefix cache.
+    pub header: Vec<Token>,
+}
+
+impl Request {
+    /// Full serving prompt: the (possibly empty) shared header followed
+    /// by the question's `<bos> … <think>` prompt.
+    pub fn prompt_tokens(&self) -> Vec<Token> {
+        if self.header.is_empty() {
+            return self.question.prompt_tokens();
+        }
+        let mut out = self.header.clone();
+        out.extend(self.question.prompt_tokens());
+        out
+    }
 }
 
 /// Generate a Poisson-arrival trace over a dataset.
@@ -320,6 +348,7 @@ pub fn poisson_trace(
                 question: Question::sample(spec, &mut rng),
                 arrival: t,
                 dataset: spec.name.clone(),
+                header: Vec::new(),
             }
         })
         .collect()
@@ -334,6 +363,76 @@ pub fn batch_trace(spec: &TaskSpec, n_requests: usize, seed: u64) -> Vec<Request
             question: Question::sample(spec, &mut rng),
             arrival: 0.0,
             dataset: spec.name.clone(),
+            header: Vec::new(),
+        })
+        .collect()
+}
+
+/// A deterministic few-shot header: `shots` worked examples (question
+/// tokens, the clean derivation chain, the answer). Contains no `<think>`
+/// marker, so prompt parsers can always locate the real question as the
+/// trailing window. Same seed → byte-identical header, which is what
+/// makes it a *shared* prefix across requests.
+pub fn few_shot_header(spec: &TaskSpec, seed: u64, shots: usize) -> Vec<Token> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..shots {
+        let q = Question::sample(spec, &mut rng);
+        out.extend(q.tokens());
+        let mut cur = q.start;
+        for _ in 0..q.hops {
+            let next = q.mapping[cur as usize];
+            out.extend([tok::STEP, tok::digit(cur), tok::EQUALS,
+                        tok::digit(next)]);
+            cur = next;
+        }
+        out.extend([tok::ANS, tok::digit(cur)]);
+    }
+    out
+}
+
+/// Templated prefix-heavy trace: each request carries, with probability
+/// `prefix_share`, one of `n_templates` shared few-shot headers (`shots`
+/// worked examples each) ahead of its own question — the workload shape
+/// that makes a cross-request prefix cache pay. Header assignment draws
+/// from a forked RNG stream, so with `prefix_share = 0` the generated
+/// questions and arrival times are *identical* to [`poisson_trace`]
+/// (`rate > 0`) / [`batch_trace`] (`rate == 0`) at the same seed.
+pub fn templated_trace(
+    spec: &TaskSpec,
+    n_requests: usize,
+    rate: f64,
+    seed: u64,
+    prefix_share: f64,
+    n_templates: usize,
+    shots: usize,
+) -> Vec<Request> {
+    assert!(n_templates > 0, "need at least one template");
+    let headers: Vec<Vec<Token>> = (0..n_templates)
+        .map(|i| {
+            few_shot_header(
+                spec,
+                seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                shots,
+            )
+        })
+        .collect();
+    let mut rng = Rng::new(seed);
+    let mut hrng = Rng::new(seed ^ 0x5EED_4EAD_E12F_1D3A);
+    let mut t = 0.0;
+    (0..n_requests)
+        .map(|id| {
+            if rate > 0.0 {
+                t += rng.exponential(rate);
+            }
+            let question = Question::sample(spec, &mut rng);
+            let header = if hrng.chance(prefix_share) {
+                headers[hrng.below(n_templates)].clone()
+            } else {
+                Vec::new()
+            };
+            Request { id, question, arrival: t, dataset: spec.name.clone(),
+                      header }
         })
         .collect()
 }
@@ -451,6 +550,81 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.question, y.question);
             assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn serving_prompt_parse_ignores_header() {
+        let mut rng = Rng::new(6);
+        let q = Question::sample(&spec(), &mut rng);
+        // Bare prompt parses identically through both entry points.
+        let bare = q.prompt_tokens();
+        assert_eq!(Question::from_serving_prompt(&bare).unwrap(), q);
+        // Headered prompt parses to the same question.
+        let mut with_header = few_shot_header(&spec(), 3, 2);
+        with_header.extend(q.prompt_tokens());
+        assert_eq!(Question::from_serving_prompt(&with_header).unwrap(), q);
+        // A header never contains the <think> marker (prompt locators
+        // rely on it).
+        assert!(!few_shot_header(&spec(), 3, 4).contains(&tok::THINK));
+        // Too-short prompts are rejected.
+        assert!(Question::from_serving_prompt(&bare[..10]).is_err());
+    }
+
+    #[test]
+    fn few_shot_header_deterministic_and_distinct() {
+        let a = few_shot_header(&spec(), 1, 3);
+        let b = few_shot_header(&spec(), 1, 3);
+        let c = few_shot_header(&spec(), 2, 3);
+        assert_eq!(a, b, "same seed must give the same header");
+        assert_ne!(a, c, "different seeds must give distinct headers");
+        assert!(a.len() >= 3 * 30, "3 shots should span 90+ tokens");
+    }
+
+    #[test]
+    fn templated_trace_share_zero_matches_plain_traces() {
+        let plain = poisson_trace(&spec(), 20, 2.0, 11);
+        let templ = templated_trace(&spec(), 20, 2.0, 11, 0.0, 3, 3);
+        for (p, t) in plain.iter().zip(&templ) {
+            assert_eq!(p.question, t.question);
+            assert_eq!(p.arrival, t.arrival);
+            assert!(t.header.is_empty());
+            assert_eq!(p.prompt_tokens(), t.prompt_tokens());
+        }
+        let batch = batch_trace(&spec(), 10, 12);
+        let templ0 = templated_trace(&spec(), 10, 0.0, 12, 0.0, 2, 2);
+        for (p, t) in batch.iter().zip(&templ0) {
+            assert_eq!(p.question, t.question);
+            assert_eq!(t.arrival, 0.0);
+        }
+    }
+
+    #[test]
+    fn templated_trace_shares_headers_across_requests() {
+        let trace = templated_trace(&spec(), 64, 2.0, 7, 0.8, 2, 3);
+        let with_header: Vec<&Request> =
+            trace.iter().filter(|r| !r.header.is_empty()).collect();
+        // ~80% should carry a header, drawn from exactly 2 templates.
+        assert!(with_header.len() > 32, "only {} headered", with_header.len());
+        let mut distinct: Vec<&[Token]> = Vec::new();
+        for r in &with_header {
+            if !distinct.iter().any(|h| *h == r.header.as_slice()) {
+                distinct.push(&r.header);
+            }
+        }
+        assert_eq!(distinct.len(), 2, "expected 2 distinct templates");
+        // Headered prompts end with the question window and still parse.
+        for r in &with_header {
+            let p = r.prompt_tokens();
+            assert_eq!(p.len(), r.header.len() + 27);
+            assert_eq!(
+                Question::from_serving_prompt(&p).unwrap(),
+                r.question
+            );
+        }
+        // Arrivals stay sorted.
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
         }
     }
 

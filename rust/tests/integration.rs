@@ -66,6 +66,7 @@ fn hlo_engine_generates_wellformed_responses() {
             slot: s,
             prompt: q.prompt_tokens(),
             seed: s as u64 + 100,
+            cached_tokens: 0,
         })
         .collect();
     eng.prefill(&entries).unwrap();
@@ -106,6 +107,7 @@ fn fused_and_stepwise_both_complete() {
             slot: 0,
             prompt: q.prompt_tokens(),
             seed: 1,
+            cached_tokens: 0,
         }])
         .unwrap();
         let mut gen: Vec<tok::Token> = Vec::new();
@@ -132,12 +134,12 @@ fn slot_reuse_after_release() {
         HloEngine::load(rt, &man, "r1mini-tiny", 2, DecodeMode::Fused, 13)
             .unwrap();
     let q1 = question(8);
-    eng.prefill(&[PrefillEntry { slot: 0, prompt: q1.prompt_tokens(), seed: 1 }])
+    eng.prefill(&[PrefillEntry { slot: 0, prompt: q1.prompt_tokens(), seed: 1, cached_tokens: 0 }])
         .unwrap();
     eng.decode(&[0], 16, 1.0).unwrap();
     eng.release(0);
     let q2 = question(9);
-    eng.prefill(&[PrefillEntry { slot: 0, prompt: q2.prompt_tokens(), seed: 2 }])
+    eng.prefill(&[PrefillEntry { slot: 0, prompt: q2.prompt_tokens(), seed: 2, cached_tokens: 0 }])
         .unwrap();
     let r = eng.decode(&[0], 16, 1.0).unwrap();
     assert!(!r.emitted[0].1.is_empty());

@@ -91,6 +91,73 @@ fn prop_kvcache_grow_shares_prefix() {
     });
 }
 
+#[test]
+fn prop_kv_cache_disabled_matches_scalar_admit() {
+    // With a zero prefix-cache budget, admit_tokens must be byte-for-byte
+    // the scalar admit path: same admission decisions, same page
+    // accounting, zero reported hits — the pre-cache behaviour.
+    check("kv_cache_disabled_scalar", default_cases(), |rng| {
+        let page = 1 + rng.below(32);
+        let cap_pages = 8 + rng.below(128);
+        let mut scalar = KvCacheManager::new(cap_pages * page, page);
+        let mut tokens = KvCacheManager::new(cap_pages * page, page);
+        let mut live_s: Vec<sart::kvcache::BranchId> = Vec::new();
+        let mut live_t: Vec<sart::kvcache::BranchId> = Vec::new();
+        for step in 0..150usize {
+            if rng.chance(0.5) && !live_s.is_empty() {
+                let i = rng.below(live_s.len());
+                let s = live_s.swap_remove(i);
+                let t = live_t.swap_remove(i);
+                scalar.release_branch(s).map_err(|e| e.to_string())?;
+                tokens.release_branch(t).map_err(|e| e.to_string())?;
+            } else {
+                let plen = 1 + rng.below(64);
+                let max_new = 1 + rng.below(256);
+                let n = 1 + rng.below(8);
+                let prompt: Vec<tok::Token> =
+                    (0..plen).map(|t| (step * 100 + t) as tok::Token).collect();
+                let can_s = scalar.can_admit(plen, max_new, n);
+                let can_t = tokens.can_admit_tokens(&prompt, max_new, n);
+                prop_assert!(
+                    can_s == can_t,
+                    "admission decision diverged: scalar {can_s} tokens {can_t}"
+                );
+                if can_s {
+                    let (_, bs) = scalar
+                        .admit(plen, max_new, n)
+                        .map_err(|e| e.to_string())?;
+                    let adm = tokens
+                        .admit_tokens(&prompt, max_new, n)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        adm.cached_tokens == 0,
+                        "cache-disabled admit reported a hit"
+                    );
+                    live_s.extend(bs);
+                    live_t.extend(adm.branches);
+                }
+            }
+            prop_assert!(
+                scalar.used_pages() == tokens.used_pages()
+                    && scalar.free_pages() == tokens.free_pages(),
+                "page accounting diverged: {} vs {}",
+                scalar.used_pages(),
+                tokens.used_pages()
+            );
+            prop_assert!(
+                tokens.cached_pages() == 0,
+                "cache-disabled manager retained pages"
+            );
+            tokens.check_invariants().map_err(|e| e.to_string())?;
+        }
+        prop_assert!(
+            tokens.cache_hit_tokens_total() == 0,
+            "cache-disabled manager counted hits"
+        );
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Scheduler invariants over random workloads/policies (SimEngine).
 // ---------------------------------------------------------------------------
@@ -134,6 +201,7 @@ fn prop_scheduler_serves_every_request_exactly_once() {
             max_new: 224,
             kv_capacity_tokens: 16 * (64 + rng.below(1024)),
             kv_page_tokens: 16,
+            prefix_cache_pages: 0,
             seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -196,6 +264,7 @@ fn prop_early_stopping_dominates_waiting_for_all() {
                 max_new: 224,
                 kv_capacity_tokens: 16384,
                 kv_page_tokens: 16,
+                prefix_cache_pages: 0,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -257,6 +326,7 @@ fn prop_scheduler_audit_matches_fast_path() {
                 max_new: 224,
                 kv_capacity_tokens: kv_tokens,
                 kv_page_tokens: 16,
+                prefix_cache_pages: 0,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -276,6 +346,158 @@ fn prop_scheduler_audit_matches_fast_path() {
         prop_assert!(
             fast.timeline.points == audited.timeline.points,
             "timeline differs"
+        );
+        Ok(())
+    });
+}
+
+/// One prefix-heavy serve configuration (shared by the cache-neutrality
+/// and cache-audit properties).
+struct TemplatedCase {
+    policy: Policy,
+    slots: usize,
+    t_round: usize,
+    kv_tokens: usize,
+    prefix_cache_pages: usize,
+    seed: u64,
+    spec: TaskSpec,
+}
+
+impl TemplatedCase {
+    fn random(rng: &mut Rng, prefix_cache_pages: usize) -> TemplatedCase {
+        let policy = random_policy(rng);
+        // Headered prompts reach ~11 pages; always keep one full request
+        // admissible so the serve cannot stall.
+        let min_pages = 11 + policy.n_branches() * 14 + 4;
+        TemplatedCase {
+            policy,
+            slots: 2 + rng.below(14),
+            t_round: 8 + rng.below(24),
+            kv_tokens: 16 * (min_pages + rng.below(1024)),
+            prefix_cache_pages,
+            seed: rng.next_u64(),
+            spec: TaskSpec::synth_gaokao(),
+        }
+    }
+
+    fn serve(
+        &self,
+        trace: &[sart::workload::Request],
+        audit: bool,
+    ) -> Result<sart::coordinator::ServeResult, String> {
+        let mut engine = SimEngine::new(self.slots, 512, self.spec.clone(),
+                                        SimCostModel::default());
+        engine.set_prompt_bucket(256);
+        let mut prm = OraclePrm::new(0.1, self.seed ^ 7);
+        let cfg = SchedConfig {
+            policy: self.policy,
+            t_round: self.t_round,
+            temperature: 1.0,
+            max_new: 224,
+            kv_capacity_tokens: self.kv_tokens,
+            kv_page_tokens: 16,
+            prefix_cache_pages: self.prefix_cache_pages,
+            seed: self.seed,
+        };
+        let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                       ClockHandle::Sim(SimClock::new()));
+        sched.set_audit(audit);
+        sched.serve(trace).map_err(|e| {
+            format!("cache={} audit={audit}: {e}", self.prefix_cache_pages)
+        })
+    }
+}
+
+#[test]
+fn prop_cache_zero_serve_is_precache_identical() {
+    // ISSUE 3 acceptance: with the cache capacity at 0, serves must be
+    // byte-identical to the pre-cache behaviour across policies, audit
+    // on. The pre-PR identity rests on three legs, each pinned here or
+    // nearby: (1) admission delegates to the scalar path page-for-page
+    // (prop_kv_cache_disabled_matches_scalar_admit); (2) the default
+    // cost model prices prompt tokens at 0, i.e. the historical
+    // flat-per-slot prefill cost — asserted below so a future nonzero
+    // default (or any cost leak through cached_tokens) fails loudly
+    // rather than silently shifting every cache-off timeline; (3) zero
+    // hits are reported anywhere, fast and audited runs agreeing
+    // byte-for-byte. Headered prompts are in play, so the prompt layout
+    // matches the prefix-heavy workload exactly.
+    assert_eq!(
+        SimCostModel::default().prefill_per_token, 0.0,
+        "default sim cost model must keep the pre-cache flat-per-slot \
+         prefill pricing (cache-off serves are claimed byte-identical \
+         to pre-PR)"
+    );
+    check("cache_zero_precache", 8, |rng| {
+        let case = TemplatedCase::random(rng, 0);
+        let n_req = 4 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let share = 0.3 + 0.6 * rng.f64();
+        let trace = sart::workload::templated_trace(
+            &case.spec, n_req, rate, case.seed, share, 2, 2,
+        );
+        let fast = case.serve(&trace, false)?;
+        let audited = case.serve(&trace, true)?;
+        prop_assert!(fast.outcomes == audited.outcomes, "outcomes differ");
+        prop_assert!(
+            fast.timeline.points == audited.timeline.points,
+            "timeline differs"
+        );
+        prop_assert!(fast.rounds == audited.rounds, "rounds differ");
+        prop_assert!(
+            fast.cache_hit_tokens == 0 && audited.cache_hit_tokens == 0,
+            "cache-disabled serve reported hits"
+        );
+        prop_assert!(
+            fast.timeline.points.iter().all(|p| p.cache_hit_tokens == 0),
+            "cache-disabled timeline recorded hits"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_serve_audit_identical_and_consistent() {
+    // With the cache ON (small budgets force LRU eviction mid-serve),
+    // audit mode recomputes the radix refcounts / page accounting from
+    // scratch every round; the audited and fast serves must still be
+    // byte-identical, and the cumulative hit counter must be monotone
+    // and consistent with the final result.
+    check("cached_serve_audit", 8, |rng| {
+        let cache_pages = 4 + rng.below(64); // small: eviction in play
+        let case = TemplatedCase::random(rng, cache_pages);
+        let n_req = 6 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let trace = sart::workload::templated_trace(
+            &case.spec, n_req, rate, case.seed, 0.8, 2, 2,
+        );
+        let fast = case.serve(&trace, false)?;
+        let audited = case.serve(&trace, true)?;
+        prop_assert!(fast.outcomes == audited.outcomes, "outcomes differ");
+        prop_assert!(
+            fast.timeline.points == audited.timeline.points,
+            "timeline differs"
+        );
+        prop_assert!(
+            fast.cache_hit_tokens == audited.cache_hit_tokens,
+            "hit counters differ"
+        );
+        prop_assert!(
+            fast.cache_hit_tokens <= fast.prompt_tokens,
+            "more hits than prompt tokens"
+        );
+        let mut prev = 0usize;
+        for p in &fast.timeline.points {
+            prop_assert!(
+                p.cache_hit_tokens >= prev,
+                "cumulative hit counter decreased"
+            );
+            prev = p.cache_hit_tokens;
+        }
+        prop_assert!(
+            fast.timeline.points.last().map(|p| p.cache_hit_tokens)
+                == Some(fast.cache_hit_tokens),
+            "final timeline hit count != serve total"
         );
         Ok(())
     });
@@ -392,6 +614,7 @@ fn case_sched_cfg(c: &ClusterCase) -> SchedConfig {
         max_new: 224,
         kv_capacity_tokens: c.kv_tokens,
         kv_page_tokens: 16,
+        prefix_cache_pages: 0,
         seed: c.seed,
     }
 }
@@ -537,6 +760,67 @@ fn prop_cluster_serves_all_under_every_policy() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn affinity_routing_beats_p2c_on_cache_hits() {
+    // Deterministic cluster comparison on a prefix-heavy trace: with
+    // per-replica cache budgets too small to hold every template,
+    // prefix-affinity pins each few-shot template to the replica already
+    // holding its pages, while p2c scatters templates across all
+    // replicas and churns every cache. Affinity must achieve a strictly
+    // higher cluster-wide hit rate (and a 1-replica cluster must agree
+    // between the two policies, since affinity only changes *placement*).
+    let spec = TaskSpec::synth_gaokao();
+    let trace =
+        sart::workload::templated_trace(&spec, 96, 6.0, 42, 0.85, 3, 3);
+    let run = |lb: LbPolicy, replicas: usize| {
+        let mut engines: Vec<Box<dyn Engine>> = (0..replicas)
+            .map(|_| {
+                let mut e = SimEngine::new(8, 512, spec.clone(),
+                                           SimCostModel::default());
+                e.set_prompt_bucket(256);
+                Box::new(e) as Box<dyn Engine>
+            })
+            .collect();
+        let mut prms: Vec<Box<dyn PrmScorer>> = (0..replicas)
+            .map(|i| {
+                let seed = 42 ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+                Box::new(OraclePrm::new(0.1, seed ^ 7)) as Box<dyn PrmScorer>
+            })
+            .collect();
+        let ccfg = ClusterConfig {
+            replicas,
+            lb,
+            sched: SchedConfig {
+                policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+                t_round: 16,
+                temperature: 1.0,
+                max_new: 224,
+                kv_capacity_tokens: 32768,
+                kv_page_tokens: 16,
+                prefix_cache_pages: 24,
+                seed: 42,
+            },
+            seed: 42,
+            audit: true,
+        };
+        let res = serve_cluster(&ccfg, &mut engines, &mut prms, &trace)
+            .expect("cluster serve");
+        assert_eq!(res.outcomes.len(), trace.len());
+        res.cache_hit_rate()
+    };
+    let aff = run(LbPolicy::PrefixAffinity, 3);
+    let p2c = run(LbPolicy::PowerOfTwoChoices, 3);
+    assert!(aff > 0.0, "affinity produced no cache hits");
+    assert!(
+        aff > p2c,
+        "prefix-affinity hit rate {aff:.3} must strictly beat p2c {p2c:.3}"
+    );
+    // R = 1: placement is forced either way, so hit rates coincide.
+    let aff1 = run(LbPolicy::PrefixAffinity, 1);
+    let p2c1 = run(LbPolicy::PowerOfTwoChoices, 1);
+    assert_eq!(aff1, p2c1, "R=1 must be placement-independent");
 }
 
 // ---------------------------------------------------------------------------
