@@ -1,0 +1,167 @@
+//! Bench: chunked prefill with decode-overlap scheduling.
+//!
+//! Serves a prefix-heavy trace with *long cold few-shot headers* (six
+//! distinct 5-shot templates, no prefix cache — every header misses) under
+//! a token-priced prefill cost model, once monolithically and once with
+//! chunked prefill, and records `BENCH_chunked.json` (schema in
+//! EXPERIMENTS.md §Benches; gated by `tools/check_bench.py`).
+//!
+//! The question the paper's batching story needs answered: when a cold
+//! ~270-token prompt is admitted into a busy batch, how long do the
+//! resident decoding branches stall? Monolithic prefill charges the whole
+//! header to one round; chunked prefill bounds each round's prefill work
+//! by the token budget, so the stall tail collapses while total work only
+//! grows by the per-chunk dispatch overhead.
+//!
+//! Headline (CI-enforced): `p99_decode_stall_ratio_chunked_vs_mono < 1.0`
+//! — the p99 of per-round decode stall (prefill seconds absorbed by
+//! rounds that had resident branches) must be strictly lower chunked.
+//!
+//!     cargo bench --bench chunked_prefill
+
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::prm::OraclePrm;
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::clock::SimClock;
+use sart::util::stats::percentile;
+use sart::workload::{templated_trace, TaskSpec};
+
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 32768;
+const N_REQUESTS: usize = 96;
+const RATE: f64 = 3.0;
+const SEED: u64 = 47;
+const CHUNK: usize = 32;
+const BUDGET: usize = 32;
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gaokao()
+}
+
+fn cost_model() -> SimCostModel {
+    // Token-priced prefill (same calibration as the prefix bench): a
+    // 5-shot header costs ~0.05s of prefill, comparable to a decode
+    // round — exactly the regime where monolithic admission stalls the
+    // batch.
+    SimCostModel { prefill_per_token: 0.2e-3, ..SimCostModel::default() }
+}
+
+fn serve(chunk: usize, budget: usize) -> sart::coordinator::ServeResult {
+    // 5-shot gaokao headers reach ~240 tokens + the 27-token question,
+    // so the prompt bucket must exceed the 256 default.
+    let mut engine = SimEngine::new(SLOTS, 560, spec(), cost_model());
+    engine.set_prompt_bucket(288);
+    let mut prm = OraclePrm::new(0.08, SEED ^ 7);
+    let cfg = SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: KV_TOKENS,
+        kv_page_tokens: 16,
+        prefix_cache_pages: 0,
+        prefill_chunk_tokens: chunk,
+        max_batched_prefill_tokens: budget,
+        seed: SEED,
+    };
+    let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 1.0, 6, 5);
+    let mut sched = Scheduler::new(
+        cfg,
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.serve(&trace).expect("chunked bench serve")
+}
+
+fn makespan(res: &sart::coordinator::ServeResult) -> f64 {
+    res.outcomes
+        .iter()
+        .map(|o| o.finished_at)
+        .fold(0.0f64, f64::max)
+}
+
+fn mean_ttft(res: &sart::coordinator::ServeResult) -> f64 {
+    res.outcomes.iter().map(|o| o.ttft()).sum::<f64>()
+        / res.outcomes.len().max(1) as f64
+}
+
+fn main() {
+    println!(
+        "== chunked_prefill ({SLOTS} slots, {N_REQUESTS} requests, \
+         6 cold 5-shot templates, chunk {CHUNK} / budget {BUDGET}) =="
+    );
+    let mut report = BenchReport::new("chunked");
+
+    let mono = serve(0, 0);
+    let chunked = serve(CHUNK, BUDGET);
+    assert_eq!(mono.outcomes.len(), N_REQUESTS);
+    assert_eq!(chunked.outcomes.len(), N_REQUESTS);
+
+    // The stall definition lives in Timeline::decode_stall_series — the
+    // same code path the regression tests assert against.
+    let stalls_mono = mono.timeline.decode_stall_series();
+    let stalls_chunked = chunked.timeline.decode_stall_series();
+    let p99_mono = percentile(&stalls_mono, 99.0);
+    let p99_chunked = percentile(&stalls_chunked, 99.0);
+    let max_mono = stalls_mono.iter().cloned().fold(0.0f64, f64::max);
+    let max_chunked = stalls_chunked.iter().cloned().fold(0.0f64, f64::max);
+    let ratio = p99_chunked / p99_mono.max(1e-12);
+    println!(
+        "decode stall per round: p99 mono {:.2}ms vs chunked {:.2}ms \
+         (ratio {ratio:.3}, must stay < 1.0); worst round {:.2}ms vs {:.2}ms",
+        1e3 * p99_mono,
+        1e3 * p99_chunked,
+        1e3 * max_mono,
+        1e3 * max_chunked,
+    );
+    report.metric("p99_decode_stall_s_mono", p99_mono);
+    report.metric("p99_decode_stall_s_chunked", p99_chunked);
+    report.metric("p99_decode_stall_ratio_chunked_vs_mono", ratio);
+    report.metric("max_decode_stall_s_mono", max_mono);
+    report.metric("max_decode_stall_s_chunked", max_chunked);
+
+    // Chunking is not free: each chunk re-pays the dispatch overhead, so
+    // makespan may give a little back. Record the trade so regressions
+    // in either direction are visible in the artifact trail.
+    let thru_ratio = makespan(&mono) / makespan(&chunked).max(1e-9);
+    let ttft_mono = mean_ttft(&mono);
+    let ttft_chunked = mean_ttft(&chunked);
+    println!(
+        "throughput chunked/mono {thru_ratio:.3}; \
+         mean ttft mono {ttft_mono:.3}s vs chunked {ttft_chunked:.3}s"
+    );
+    report.metric("throughput_ratio_chunked_vs_mono", thru_ratio);
+    report.metric("mean_ttft_s_mono", ttft_mono);
+    report.metric("mean_ttft_s_chunked", ttft_chunked);
+    let peak_backlog = chunked
+        .timeline
+        .points
+        .iter()
+        .map(|p| p.queued_prefill_tokens)
+        .max()
+        .unwrap_or(0);
+    report.metric("peak_queued_prefill_tokens", peak_backlog as f64);
+
+    // Coordination wall cost of the two paths (virtual-time serves do no
+    // real compute, so this times the scheduler + chunk bookkeeping).
+    report.push(bench::run(
+        &format!("serve {N_REQUESTS} reqs monolithic"),
+        1,
+        5,
+        || {
+            std::hint::black_box(serve(0, 0));
+        },
+    ));
+    report.push(bench::run(
+        &format!("serve {N_REQUESTS} reqs chunked ({CHUNK}/{BUDGET})"),
+        1,
+        5,
+        || {
+            std::hint::black_box(serve(CHUNK, BUDGET));
+        },
+    ));
+
+    report.write().expect("writing BENCH_chunked.json");
+}

@@ -44,6 +44,8 @@ fn sched_cfg() -> SchedConfig {
         kv_capacity_tokens: KV_TOKENS,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: SEED,
     }
 }

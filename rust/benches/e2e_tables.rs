@@ -27,6 +27,8 @@ fn spec() -> ServeSpec {
         kv_capacity_tokens: 8192,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         prefix_share: 0.0,
         prefix_templates: 3,
         prefix_shots: 3,

@@ -62,6 +62,8 @@ fn sched_cfg(prefix_cache_pages: usize) -> SchedConfig {
         kv_capacity_tokens: KV_TOKENS,
         kv_page_tokens: 16,
         prefix_cache_pages,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: SEED,
     }
 }

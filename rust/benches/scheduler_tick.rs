@@ -41,6 +41,8 @@ fn serve_once(
         kv_capacity_tokens: kv_tokens,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: 42,
     };
     let mut sched =

@@ -146,6 +146,10 @@ impl<'e> RebaseScheduler<'e> {
         -> Result<(Vec<RequestOutcome>, Timeline)> {
         let mut pending: VecDeque<&Request> = trace.iter().collect();
         let mut timeline = Timeline::default();
+        // Cumulative prompt-prefill seconds (timeline metric). Replay
+        // dispatches (tree forks) are charged to the clock but not here —
+        // they are decode-side work, not prompt streaming.
+        let mut prefill_seconds = 0.0f64;
         loop {
             let now = self.clock.now();
             while pending.front().map(|r| r.arrival <= now).unwrap_or(false) {
@@ -169,6 +173,7 @@ impl<'e> RebaseScheduler<'e> {
             let prefills = self.fill_batch()?;
             if !prefills.is_empty() {
                 let cost = self.engine.prefill(&prefills)?;
+                prefill_seconds += cost;
                 self.charge(cost);
             }
 
@@ -214,6 +219,13 @@ impl<'e> RebaseScheduler<'e> {
             timeline.points.push(TimelinePoint {
                 t: self.clock.now(),
                 running_branches: self.slots.iter().filter(|s| s.is_some()).count(),
+                // Rebase never streams prefill: every occupied slot
+                // decodes.
+                decoding_branches: self
+                    .slots
+                    .iter()
+                    .filter(|s| s.is_some())
+                    .count(),
                 running_tokens: self
                     .requests
                     .iter()
@@ -228,8 +240,11 @@ impl<'e> RebaseScheduler<'e> {
                 kv_pages_used: self.kv.used_pages(),
                 queued_requests: self.request_queue.len(),
                 // The Rebase baseline allocates prompts scalar-style and
-                // never consults the cross-request cache.
+                // never consults the cross-request cache; it has no
+                // chunked-prefill path either.
                 cache_hit_tokens: 0,
+                queued_prefill_tokens: 0,
+                prefill_seconds,
             });
         }
 
@@ -237,11 +252,14 @@ impl<'e> RebaseScheduler<'e> {
         for r in &self.requests {
             let finished_at =
                 r.finished_at.with_context(|| format!("req {} unfinished", r.id))?;
+            let admitted_at = r.admitted_at.unwrap_or(finished_at);
             outcomes.push(RequestOutcome {
                 id: r.id,
                 dataset: r.dataset.clone(),
                 arrival: r.arrival,
-                admitted_at: r.admitted_at.unwrap_or(finished_at),
+                admitted_at,
+                // Rebase prefills monolithically at admission.
+                prefill_done_at: admitted_at,
                 finished_at,
                 answer: r.answer,
                 truth: r.question.answer(),

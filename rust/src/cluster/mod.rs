@@ -167,19 +167,26 @@ impl ClusterResult {
             let mut agg = TimelinePoint {
                 t,
                 running_branches: 0,
+                decoding_branches: 0,
                 running_tokens: 0,
                 kv_pages_used: 0,
                 queued_requests: 0,
                 cache_hit_tokens: 0,
+                queued_prefill_tokens: 0,
+                prefill_seconds: 0.0,
             };
             for l in last.iter().flatten() {
                 agg.running_branches += l.running_branches;
+                agg.decoding_branches += l.decoding_branches;
                 agg.running_tokens += l.running_tokens;
                 agg.kv_pages_used += l.kv_pages_used;
                 agg.queued_requests += l.queued_requests;
                 // Per-replica values are cumulative, so the sum is the
-                // cluster-wide cumulative hit count.
+                // cluster-wide cumulative hit count (same for prefill
+                // seconds below).
                 agg.cache_hit_tokens += l.cache_hit_tokens;
+                agg.queued_prefill_tokens += l.queued_prefill_tokens;
+                agg.prefill_seconds += l.prefill_seconds;
             }
             points.push(agg);
         }
@@ -352,8 +359,11 @@ fn pick_replica(
             *rr_next += 1;
             i
         }
+        // Token load counts the in-flight prefill backlog too: a replica
+        // mid-way through streaming a long cold header has committed to
+        // that compute even though no decode tokens show it yet.
         LbPolicy::LeastLoaded => (0..r)
-            .min_by_key(|&i| scheds[i].load().running_tokens)
+            .min_by_key(|&i| scheds[i].load().token_load())
             .unwrap_or(0),
         LbPolicy::JoinShortestQueue => (0..r)
             .min_by_key(|&i| scheds[i].load().requests_in_system())

@@ -201,6 +201,14 @@ pub struct ServeSpec {
     /// Cross-request prefix-cache retention budget in pages (`--prefix-cache`;
     /// 0 disables the cache — the pre-cache admission accounting).
     pub prefix_cache_pages: usize,
+    /// Chunked prefill: stream each admission's uncovered prompt suffix
+    /// in chunks of at most this many tokens (`--prefill-chunk`; 0 =
+    /// monolithic prefill, the historical behaviour).
+    pub prefill_chunk_tokens: usize,
+    /// Per-round streamed-prefill token budget (`--prefill-budget`;
+    /// defaults to the chunk size when chunking is on — one chunk per
+    /// round — and 0 = unlimited otherwise).
+    pub max_batched_prefill_tokens: usize,
     /// Fraction of requests carrying a shared few-shot header
     /// (`--prefix-share`; 0 = the plain trace generators).
     pub prefix_share: f64,
@@ -250,6 +258,15 @@ impl ServeSpec {
         if prefix_templates == 0 {
             bail!("--prefix-templates must be at least 1");
         }
+        let prefill_chunk_tokens = args.usize_or("prefill-chunk", 0)?;
+        let max_batched_prefill_tokens =
+            args.usize_or("prefill-budget", prefill_chunk_tokens)?;
+        if prefill_chunk_tokens == 0 && max_batched_prefill_tokens > 0 {
+            bail!(
+                "--prefill-budget needs chunked prefill (--prefill-chunk > 0): \
+                 monolithic prefill cannot be budgeted per round"
+            );
+        }
         let prefix_shots = args.usize_or("prefix-shots", 3)?;
         if prefix_share > 0.0 && prefix_shots == 0 {
             bail!(
@@ -271,6 +288,8 @@ impl ServeSpec {
             kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
             kv_page_tokens: args.usize_or("kv-page", 16)?,
             prefix_cache_pages: args.usize_or("prefix-cache", 0)?,
+            prefill_chunk_tokens,
+            max_batched_prefill_tokens,
             prefix_share,
             prefix_templates,
             prefix_shots,
@@ -348,9 +367,32 @@ mod tests {
         assert_eq!(s.replicas, 1);
         assert_eq!(s.lb, LbPolicy::RoundRobin);
         assert_eq!(s.prefix_cache_pages, 0, "cache must default off");
+        assert_eq!(s.prefill_chunk_tokens, 0, "chunking must default off");
+        assert_eq!(s.max_batched_prefill_tokens, 0);
         assert_eq!(s.prefix_share, 0.0);
         assert_eq!(s.prefix_templates, 3);
         assert_eq!(s.prefix_shots, 3);
+    }
+
+    #[test]
+    fn spec_prefill_chunk_flags() {
+        // Budget defaults to the chunk size (one chunk per round).
+        let s = ServeSpec::from_args(&args("--prefill-chunk 32")).unwrap();
+        assert_eq!(s.prefill_chunk_tokens, 32);
+        assert_eq!(s.max_batched_prefill_tokens, 32);
+        let s = ServeSpec::from_args(
+            &args("--prefill-chunk 32 --prefill-budget 96"),
+        )
+        .unwrap();
+        assert_eq!(s.max_batched_prefill_tokens, 96);
+        // Explicit 0 budget = unlimited (drain streams in one round).
+        let s = ServeSpec::from_args(
+            &args("--prefill-chunk 32 --prefill-budget 0"),
+        )
+        .unwrap();
+        assert_eq!(s.max_batched_prefill_tokens, 0);
+        // A budget without chunking is meaningless.
+        assert!(ServeSpec::from_args(&args("--prefill-budget 64")).is_err());
     }
 
     #[test]

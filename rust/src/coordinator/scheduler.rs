@@ -56,7 +56,9 @@
 //! step sequence.
 
 use super::types::*;
-use crate::engine::{ChunkResult, Engine, PrefillEntry, SlotId};
+use crate::engine::{
+    ChunkResult, Engine, PrefillChunkEntry, PrefillEntry, SlotId,
+};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
@@ -85,6 +87,17 @@ pub struct SchedConfig {
     /// 0 disables it, reproducing the pre-cache admission accounting
     /// byte for byte (property-tested).
     pub prefix_cache_pages: usize,
+    /// Chunked prefill: stream each admission's uncovered prompt suffix
+    /// into its slot in chunks of at most this many tokens, interleaved
+    /// with decode rounds, instead of prefilling it in one dispatch. 0 =
+    /// monolithic prefill — the historical behaviour, property-tested
+    /// byte-identical (outcomes + timeline, audit on).
+    pub prefill_chunk_tokens: usize,
+    /// Per-round token budget across all streaming prefills (chunked mode
+    /// only; 0 = unlimited). At least one chunk is always dispatched per
+    /// round so prefill cannot starve; the budget is what bounds the
+    /// decode stall one round can absorb.
+    pub max_batched_prefill_tokens: usize,
     pub seed: u64,
 }
 
@@ -98,6 +111,8 @@ impl Default for SchedConfig {
             kv_capacity_tokens: 4096,
             kv_page_tokens: 16,
             prefix_cache_pages: 0,
+            prefill_chunk_tokens: 0,
+            max_batched_prefill_tokens: 0,
             seed: 0,
         }
     }
@@ -175,6 +190,12 @@ pub struct LoadSnapshot {
     pub running_branches: usize,
     /// Σ generated tokens over running branches.
     pub running_tokens: usize,
+    /// Prompt tokens still waiting to stream into mid-prefill slots —
+    /// work this replica has committed to but not yet computed (0 in
+    /// monolithic serves). Load-aware dispatch must count it: a replica
+    /// swallowing a long cold header is busier than its decoded tokens
+    /// alone suggest.
+    pub pending_prefill_tokens: usize,
     /// Lifetime requests dispatched to this scheduler.
     pub dispatched_total: usize,
 }
@@ -185,6 +206,23 @@ impl LoadSnapshot {
     pub fn requests_in_system(&self) -> usize {
         self.queued_requests + self.inflight_requests
     }
+
+    /// Token-load metric for least-loaded dispatch: decoded tokens plus
+    /// the in-flight prefill backlog.
+    pub fn token_load(&self) -> usize {
+        self.running_tokens + self.pending_prefill_tokens
+    }
+}
+
+/// Progress of one streaming (chunked) prefill: the slot's branch owns
+/// the stream; `cursor` is the next prompt position to dispatch. The
+/// prompt is shared (`Arc`) so per-chunk dispatches never copy tokens.
+#[derive(Debug, Clone)]
+struct PrefillCursor {
+    ridx: usize,
+    bidx: usize,
+    cursor: usize,
+    prompt: std::sync::Arc<[tok::Token]>,
 }
 
 /// The continuous-batching scheduler (Algorithm 1).
@@ -217,6 +255,26 @@ pub struct Scheduler<'e> {
     cache_hit_tokens_total: usize,
     /// Σ prompt tokens over admitted requests (cumulative).
     prompt_tokens_total: usize,
+    /// Chunked prefill: per-slot stream cursors (`None` = the slot is
+    /// decodable or free).
+    prefilling: Vec<Option<PrefillCursor>>,
+    /// Mid-prefill slots, FIFO — the per-round token budget is spent
+    /// front-first, so the oldest admission's header completes first.
+    prefill_queue: VecDeque<SlotId>,
+    /// Σ not-yet-streamed prompt tokens over mid-prefill slots
+    /// (incremental; audited).
+    queued_prefill_tokens: usize,
+    /// Install-only chunk entries (fully cached starts) accumulated by
+    /// `fill_batch` for this round's `pump_prefill` dispatch.
+    pending_installs: Vec<PrefillChunkEntry>,
+    /// Requests whose prompt became fully resident this round; stamped
+    /// with `prefill_done_at` *after* the round's prefill dispatches are
+    /// charged, so the TTFT split includes the dispatch cost in both
+    /// modes (reused buffer, drained every round).
+    prefill_done_buf: Vec<usize>,
+    /// Σ engine seconds spent on prefill dispatches (timeline metric:
+    /// the per-round delta is that round's decode stall).
+    prefill_seconds: f64,
     /// Occupancy timeline, one point per decode round.
     timeline: Timeline,
     /// Σ engine compute seconds charged so far.
@@ -268,6 +326,12 @@ impl<'e> Scheduler<'e> {
             running_tokens: 0,
             cache_hit_tokens_total: 0,
             prompt_tokens_total: 0,
+            prefilling: vec![None; slots],
+            prefill_queue: VecDeque::new(),
+            queued_prefill_tokens: 0,
+            pending_installs: Vec::new(),
+            prefill_done_buf: Vec::new(),
+            prefill_seconds: 0.0,
             timeline: Timeline::default(),
             engine_seconds: 0.0,
             finished_count: 0,
@@ -344,6 +408,7 @@ impl<'e> Scheduler<'e> {
                 - self.finished_count,
             running_branches: self.slots.len() - self.free_slots.len(),
             running_tokens: self.running_tokens,
+            pending_prefill_tokens: self.queued_prefill_tokens,
             dispatched_total: self.dispatched_total,
         }
     }
@@ -374,6 +439,8 @@ impl<'e> Scheduler<'e> {
                 dataset: r.dataset,
                 arrival: r.arrival,
                 admitted_at: None,
+                prefill_done_at: None,
+                stream_slot: None,
                 finished_at: None,
                 meta: self.initial_meta(),
                 branches: Vec::new(),
@@ -392,17 +459,54 @@ impl<'e> Scheduler<'e> {
         if !prefills.is_empty() {
             let cost = self.engine.prefill(&prefills)?;
             self.engine_seconds += cost;
+            self.prefill_seconds += cost;
             self.clock.charge(cost);
         }
+        // 2b. Chunked mode: dispatch this round's prefill work (installs
+        // + budget-bounded stream chunks), so a long cold header trickles
+        // in across rounds while resident branches keep decoding.
+        let streamed = if self.cfg.prefill_chunk_tokens > 0 {
+            self.pump_prefill()?
+        } else {
+            false
+        };
 
+        // Stamp prompts that became fully resident this round, *after*
+        // the prefill dispatches above were charged — so the TTFT split
+        // (`prefill_latency`) includes the dispatch cost symmetrically
+        // in monolithic and chunked modes.
+        if !self.prefill_done_buf.is_empty() {
+            let done_at = self.clock.now();
+            let mut buf = std::mem::take(&mut self.prefill_done_buf);
+            for ridx in buf.drain(..) {
+                self.requests[ridx].prefill_done_at.get_or_insert(done_at);
+            }
+            self.prefill_done_buf = buf;
+        }
+
+        // Decodable slots: occupied and not mid-prefill.
         let active: Vec<SlotId> = self
             .slots
             .iter()
             .enumerate()
-            .filter_map(|(s, o)| o.map(|_| s))
+            .filter_map(|(s, o)| {
+                (o.is_some() && self.prefilling[s].is_none()).then_some(s)
+            })
             .collect();
 
         if active.is_empty() {
+            if streamed {
+                // A prefill-only round: virtual time advanced by the
+                // chunk dispatch; decode resumes once a stream completes.
+                // Sample the timeline so the queued-prefill backlog is
+                // visible while a cold header streams into an empty
+                // batch.
+                if self.audit {
+                    self.audit_check()?;
+                }
+                self.push_timeline_point();
+                return Ok(StepOutcome::Worked);
+            }
             if let Some(next) = self.incoming.front() {
                 self.clock.idle_until(next.arrival);
                 return Ok(StepOutcome::Worked);
@@ -465,15 +569,28 @@ impl<'e> Scheduler<'e> {
             self.audit_check()?;
         }
 
+        self.push_timeline_point();
+        Ok(StepOutcome::Worked)
+    }
+
+    /// Append the end-of-round occupancy sample (one per round, plus one
+    /// per prefill-only round in chunked mode).
+    fn push_timeline_point(&mut self) {
+        let occupied = self.slots.len() - self.free_slots.len();
+        let streaming = self.prefilling.iter().flatten().count();
         self.timeline.points.push(TimelinePoint {
             t: self.clock.now(),
-            running_branches: self.slots.len() - self.free_slots.len(),
+            running_branches: occupied,
+            // Residents who will sit through the next round's prefill
+            // dispatches — mid-prefill slots stall nobody.
+            decoding_branches: occupied - streaming,
             running_tokens: self.running_tokens,
             kv_pages_used: self.kv.used_pages(),
             queued_requests: self.request_queue.len(),
             cache_hit_tokens: self.cache_hit_tokens_total,
+            queued_prefill_tokens: self.queued_prefill_tokens,
+            prefill_seconds: self.prefill_seconds,
         });
-        Ok(StepOutcome::Worked)
     }
 
     /// Assemble the [`ServeResult`] after the last [`Scheduler::step`]
@@ -486,11 +603,13 @@ impl<'e> Scheduler<'e> {
             let finished_at = r
                 .finished_at
                 .with_context(|| format!("request {} never finished", r.id))?;
+            let admitted_at = r.admitted_at.unwrap_or(finished_at);
             outcomes.push(RequestOutcome {
                 id: r.id,
                 dataset: r.dataset.clone(),
                 arrival: r.arrival,
-                admitted_at: r.admitted_at.unwrap_or(finished_at),
+                admitted_at,
+                prefill_done_at: r.prefill_done_at.unwrap_or(admitted_at),
                 finished_at,
                 answer: r.final_answer,
                 truth: self.truths[i],
@@ -542,8 +661,15 @@ impl<'e> Scheduler<'e> {
 
     /// Algorithm 1 lines 3-11: fill free slots from the branch queue,
     /// else by admitting + prefilling the head request.
+    ///
+    /// Monolithic mode returns the round's [`PrefillEntry`] batch. In
+    /// chunked mode it returns nothing: branch starts either register a
+    /// stream cursor (uncovered suffix > 0) or queue an install-only
+    /// chunk, and `pump_prefill` dispatches both.
     fn fill_batch(&mut self) -> Result<Vec<PrefillEntry>> {
+        let chunked = self.cfg.prefill_chunk_tokens > 0;
         let mut entries = Vec::new();
+        let mut deferred: Vec<(usize, usize)> = Vec::new();
         let now = self.clock.now();
         loop {
             let Some(&Reverse(free_slot)) = self.free_slots.peek() else {
@@ -559,8 +685,16 @@ impl<'e> Scheduler<'e> {
                 {
                     continue; // lazily dropped
                 }
+                // Chunked mode: a sibling cannot fork from a shared
+                // prefix that is still streaming in — hold it aside
+                // (order preserved, re-queued below) until the streaming
+                // branch commits the prefix.
+                if chunked && self.requests[ridx].stream_slot.is_some() {
+                    deferred.push((ridx, bidx));
+                    continue;
+                }
                 let req = &mut self.requests[ridx];
-                let prompt = req.prompt.clone();
+                let prompt_len = req.prompt.len();
                 // Prompt tokens the engine's cost model may skip: the
                 // request's first branch pays for everything the
                 // cross-request cache did not cover; sibling branches
@@ -572,7 +706,7 @@ impl<'e> Scheduler<'e> {
                 let cached_tokens = if first_start {
                     req.cached_prompt_tokens
                 } else {
-                    req.prompt.len()
+                    prompt_len
                 };
                 let seed = req.branches[bidx].seed;
                 let b = &mut req.branches[bidx];
@@ -581,14 +715,48 @@ impl<'e> Scheduler<'e> {
                 b.started_at = Some(now);
                 let pos = req.running.partition_point(|&x| x < bidx);
                 req.running.insert(pos, bidx);
+                if chunked && cached_tokens < prompt_len {
+                    // Streaming start: siblings block on this slot.
+                    req.stream_slot = Some(free_slot);
+                }
                 self.slots[free_slot] = Some((ridx, bidx));
                 self.free_slots.pop();
-                entries.push(PrefillEntry {
-                    slot: free_slot,
-                    prompt,
-                    seed,
-                    cached_tokens,
-                });
+                if !chunked {
+                    self.prefill_done_buf.push(ridx);
+                    entries.push(PrefillEntry {
+                        slot: free_slot,
+                        prompt: self.requests[ridx].prompt.clone(),
+                        seed,
+                        cached_tokens,
+                    });
+                } else if cached_tokens == prompt_len {
+                    // Zero uncovered tokens: install-only, dispatched
+                    // this round; the slot decodes immediately.
+                    self.prefill_done_buf.push(ridx);
+                    self.pending_installs.push(PrefillChunkEntry {
+                        slot: free_slot,
+                        prompt: self.requests[ridx].prompt.as_slice().into(),
+                        seed,
+                        cached_tokens,
+                        start: prompt_len,
+                        len: 0,
+                    });
+                } else {
+                    // Streaming start: the slot decodes only once its
+                    // last chunk lands (`pump_prefill`). One token copy
+                    // here; every chunk dispatch shares it.
+                    self.queued_prefill_tokens += prompt_len - cached_tokens;
+                    self.prefilling[free_slot] = Some(PrefillCursor {
+                        ridx,
+                        bidx,
+                        cursor: cached_tokens,
+                        prompt: self.requests[ridx]
+                            .prompt
+                            .as_slice()
+                            .into(),
+                    });
+                    self.prefill_queue.push_back(free_slot);
+                }
                 assigned = true;
                 break;
             }
@@ -601,16 +769,27 @@ impl<'e> Scheduler<'e> {
             // pages (and prefill) only for the uncovered suffix.
             // try_admit_tokens folds the budget check and the admission
             // into one tree walk; over-budget is a side-effect-free None.
+            // Chunked admissions pledge the uncovered suffix instead of
+            // materializing it (pages lease in per chunk, the radix tree
+            // interns on completion).
             let Some(&ridx) = self.request_queue.front() else {
                 break;
             };
             let n = self.cfg.policy.n_branches();
-            let Some(admission) = self.kv.try_admit_tokens(
-                &self.requests[ridx].prompt,
-                self.cfg.max_new,
-                n,
-            )?
-            else {
+            let admission = if chunked {
+                self.kv.try_admit_tokens_chunked(
+                    &self.requests[ridx].prompt,
+                    self.cfg.max_new,
+                    n,
+                )?
+            } else {
+                self.kv.try_admit_tokens(
+                    &self.requests[ridx].prompt,
+                    self.cfg.max_new,
+                    n,
+                )?
+            };
+            let Some(admission) = admission else {
                 break; // head-of-line blocks until memory frees up
             };
             self.request_queue.pop_front();
@@ -628,7 +807,83 @@ impl<'e> Scheduler<'e> {
                 self.branch_queue.push_back((ridx, req.branches.len() - 1));
             }
         }
+        // Blocked siblings go back to the queue front, order preserved.
+        for &e in deferred.iter().rev() {
+            self.branch_queue.push_front(e);
+        }
         Ok(entries)
+    }
+
+    /// Chunked mode, once per round: dispatch every install-only entry
+    /// plus streamed chunks from the FIFO queue under the per-round token
+    /// budget (the first chunk always goes, so prefill cannot starve; the
+    /// final chunk of a round may overshoot the budget by less than one
+    /// chunk). Advances the KV lease cursor per chunk and commits the
+    /// prefix — making the slot decodable and unblocking its siblings —
+    /// when a stream completes. Returns whether anything was dispatched.
+    fn pump_prefill(&mut self) -> Result<bool> {
+        let mut entries = std::mem::take(&mut self.pending_installs);
+        let budget = match self.cfg.max_batched_prefill_tokens {
+            0 => usize::MAX,
+            b => b,
+        };
+        let mut spent = 0usize;
+        while spent < budget {
+            let Some(&slot) = self.prefill_queue.front() else {
+                break;
+            };
+            let (ridx, bidx, cursor, prompt) = {
+                let Some(cur) = self.prefilling[slot].as_ref() else {
+                    bail!("prefill queue holds slot {slot} without a cursor");
+                };
+                // Arc clone: the chunk shares the stream's prompt.
+                (cur.ridx, cur.bidx, cur.cursor, cur.prompt.clone())
+            };
+            let req = &self.requests[ridx];
+            let prompt_len = req.prompt.len();
+            debug_assert!(cursor < prompt_len);
+            let len = self.cfg.prefill_chunk_tokens.min(prompt_len - cursor);
+            let seed = req.branches[bidx].seed;
+            let cached_tokens = req.cached_prompt_tokens;
+            let prefix = req
+                .prefix
+                .context("streaming request lost its kv prefix")?;
+            // Lease the pages this chunk spans (pledge → used).
+            self.kv.note_prefill(prefix, len)?;
+            self.queued_prefill_tokens -= len;
+            spent += len;
+            if cursor + len == prompt_len {
+                // Completing chunk: intern the prompt into the radix
+                // cache and open the slot (and the request's siblings)
+                // for decoding from the next active-set computation on.
+                // The prefill-done stamp happens in step(), after this
+                // round's dispatch cost is charged.
+                self.kv.commit_prefix(prefix, &prompt)?;
+                self.prefilling[slot] = None;
+                self.prefill_queue.pop_front();
+                self.requests[ridx].stream_slot = None;
+                self.prefill_done_buf.push(ridx);
+            } else {
+                self.prefilling[slot].as_mut().unwrap().cursor =
+                    cursor + len;
+            }
+            entries.push(PrefillChunkEntry {
+                slot,
+                prompt,
+                seed,
+                cached_tokens,
+                start: cursor,
+                len,
+            });
+        }
+        if entries.is_empty() {
+            return Ok(false);
+        }
+        let cost = self.engine.prefill_chunk(&entries)?;
+        self.engine_seconds += cost;
+        self.prefill_seconds += cost;
+        self.clock.charge(cost);
+        Ok(true)
     }
 
     /// Algorithm 1 lines 23-41 for every involved request.
@@ -851,6 +1106,19 @@ impl<'e> Scheduler<'e> {
         let slot = b.slot.take();
         let kvb = b.kv.take();
         if let Some(slot) = slot {
+            // The branch may die mid-prefill (request finalization /
+            // preemption): abandon its stream — the engine drops the
+            // partial slot state on release, and the kv prefix release
+            // below (last sibling) frees the partial pages and cancels
+            // the outstanding pledge.
+            if let Some(cur) = self.prefilling[slot].take() {
+                debug_assert_eq!((cur.ridx, cur.bidx), (ridx, bidx));
+                let remaining =
+                    self.requests[ridx].prompt.len() - cur.cursor;
+                self.queued_prefill_tokens -= remaining;
+                self.prefill_queue.retain(|&s| s != slot);
+                self.requests[ridx].stream_slot = None;
+            }
             self.slots[slot] = None;
             self.free_slots.push(Reverse(slot));
             self.engine.release(slot);
@@ -1035,6 +1303,109 @@ impl<'e> Scheduler<'e> {
             && self.cache_hit_tokens_total != 0
         {
             bail!("audit: cache hits recorded with the cache disabled");
+        }
+        // Chunked-prefill structures vs full scans.
+        if self.cfg.prefill_chunk_tokens == 0
+            && (self.queued_prefill_tokens != 0
+                || !self.prefill_queue.is_empty()
+                || self.prefilling.iter().any(|c| c.is_some())
+                || !self.pending_installs.is_empty()
+                || self.requests.iter().any(|r| r.stream_slot.is_some()))
+        {
+            bail!("audit: monolithic serve carries chunk-prefill state");
+        }
+        if !self.pending_installs.is_empty() {
+            bail!("audit: install entries survived the round's pump");
+        }
+        if !self.prefill_done_buf.is_empty() {
+            bail!("audit: prefill-done stamps survived the round");
+        }
+        let mut queued_scan = 0usize;
+        let mut streaming = 0usize;
+        for (s, cur) in self.prefilling.iter().enumerate() {
+            let Some(cur) = cur else { continue };
+            streaming += 1;
+            let Some((ridx, bidx)) = self.slots[s] else {
+                bail!("audit: mid-prefill slot {s} is unoccupied");
+            };
+            if (cur.ridx, cur.bidx) != (ridx, bidx) {
+                bail!("audit: prefill cursor owner mismatch at slot {s}");
+            }
+            let req = &self.requests[ridx];
+            if req.branches[bidx].status != BranchStatus::Running {
+                bail!("audit: mid-prefill branch not Running at slot {s}");
+            }
+            if req.prefill_done_at.is_some() {
+                bail!(
+                    "audit: request {ridx} marked prefill-done while \
+                     slot {s} still streams"
+                );
+            }
+            if req.stream_slot != Some(s) {
+                bail!(
+                    "audit: request {ridx} stream_slot {:?} != streaming \
+                     slot {s}",
+                    req.stream_slot
+                );
+            }
+            if cur.cursor < req.cached_prompt_tokens
+                || cur.cursor >= req.prompt.len()
+            {
+                bail!(
+                    "audit: prefill cursor {} out of [{}, {}) at slot {s}",
+                    cur.cursor,
+                    req.cached_prompt_tokens,
+                    req.prompt.len()
+                );
+            }
+            if cur.prompt[..] != req.prompt[..] {
+                bail!("audit: stream prompt drifted from request {ridx}");
+            }
+            if !self.prefill_queue.contains(&s) {
+                bail!("audit: mid-prefill slot {s} missing from the queue");
+            }
+            queued_scan += req.prompt.len() - cur.cursor;
+        }
+        if queued_scan != self.queued_prefill_tokens {
+            bail!(
+                "audit: queued_prefill_tokens {} != scanned {queued_scan}",
+                self.queued_prefill_tokens
+            );
+        }
+        if self.prefill_queue.len() != streaming {
+            bail!(
+                "audit: prefill queue holds {} slots but {streaming} are \
+                 streaming",
+                self.prefill_queue.len()
+            );
+        }
+        for (i, r) in self.requests.iter().enumerate() {
+            let started = r.branches.iter().any(|b| b.started_at.is_some());
+            if r.prefill_done_at.is_some() && !started {
+                bail!("audit: request {i} prefill-done before any start");
+            }
+            // stream_slot must mirror the per-slot cursor table exactly.
+            if let Some(s) = r.stream_slot {
+                if self.prefilling[s].as_ref().map(|c| c.ridx) != Some(i) {
+                    bail!(
+                        "audit: request {i} claims stream slot {s} but no \
+                         matching cursor exists"
+                    );
+                }
+            }
+            // A live started request is either fully resident or has a
+            // stream in flight (a finished one may have been terminated
+            // mid-prefill).
+            if started
+                && !r.is_finished()
+                && r.prefill_done_at.is_none()
+                && r.stream_slot.is_none()
+            {
+                bail!(
+                    "audit: request {i} started but neither prefill-done \
+                     nor streaming"
+                );
+            }
         }
         self.kv.check_invariants()
     }

@@ -171,6 +171,16 @@ pub struct RequestState {
     pub dataset: String,
     pub arrival: f64,
     pub admitted_at: Option<f64>,
+    /// When this request's prompt KV became fully resident — stamped
+    /// *after* the round's prefill dispatch cost is charged, in both
+    /// modes, so monolithic and streamed prefill latencies compare
+    /// symmetrically: the first branch's monolithic prefill, or the
+    /// completing chunk of its stream.
+    pub prefill_done_at: Option<f64>,
+    /// Slot currently streaming this request's prefix in (chunked mode;
+    /// `None` once committed, abandoned, or for monolithic serves).
+    /// Siblings cannot fork while this is set.
+    pub stream_slot: Option<crate::engine::SlotId>,
     pub finished_at: Option<f64>,
     pub meta: RequestMeta,
     pub branches: Vec<Branch>,
@@ -224,6 +234,11 @@ pub struct RequestOutcome {
     pub dataset: String,
     pub arrival: f64,
     pub admitted_at: f64,
+    /// When the prompt KV became fully resident (= `admitted_at` plus any
+    /// slot wait and prefill streaming). Splits time-to-first-token into
+    /// queueing (`queue_latency`) and prefill streaming
+    /// (`prefill_latency`).
+    pub prefill_done_at: f64,
     pub finished_at: f64,
     pub answer: Option<u8>,
     pub truth: u8,
@@ -245,6 +260,21 @@ impl RequestOutcome {
 
     pub fn queue_latency(&self) -> f64 {
         self.admitted_at - self.arrival
+    }
+
+    /// Admission → prompt KV fully resident: slot wait plus prefill
+    /// streaming. Together with `queue_latency` this splits the
+    /// time-to-first-token; chunked prefill trades a longer
+    /// `prefill_latency` for its own request against decode stalls for
+    /// everyone else's.
+    pub fn prefill_latency(&self) -> f64 {
+        self.prefill_done_at - self.admitted_at
+    }
+
+    /// Arrival → prompt KV fully resident (a time-to-first-token proxy:
+    /// the first decode step follows within one round).
+    pub fn ttft(&self) -> f64 {
+        self.prefill_done_at - self.arrival
     }
 
     pub fn inference_latency(&self) -> f64 {
@@ -296,6 +326,7 @@ mod tests {
             dataset: "d".into(),
             arrival: 1.0,
             admitted_at: 3.0,
+            prefill_done_at: 4.0,
             finished_at: 10.0,
             answer: Some(4),
             truth: 4,
@@ -308,6 +339,8 @@ mod tests {
         assert!(o.correct());
         assert_eq!(o.e2e_latency(), 9.0);
         assert_eq!(o.queue_latency(), 2.0);
+        assert_eq!(o.prefill_latency(), 1.0);
+        assert_eq!(o.ttft(), 3.0);
         assert_eq!(o.inference_latency(), 7.0);
     }
 }

@@ -16,7 +16,10 @@
 //!   sampling — the pre-optimization baseline, also used when a round is
 //!   not a multiple of `chunk_t`.
 
-use super::{ChunkResult, Engine, EngineCaps, PrefillEntry, SlotId};
+use super::{
+    ChunkResult, ChunkStream, Engine, EngineCaps, PrefillChunkEntry,
+    PrefillEntry, SlotId,
+};
 use crate::runtime::xla;
 use crate::runtime::{read_f32, Manifest, ModelExecutables, Runtime, StateLayout};
 use crate::sampler::sample_token;
@@ -46,6 +49,14 @@ pub struct HloEngine {
     /// state buffer; mirror is for bookkeeping/assertions).
     lengths: Vec<usize>,
     occupied: Vec<bool>,
+    /// Per-slot chunked-prefill streams (None = no stream in flight).
+    /// The compiled prefill executable consumes whole prompts, so chunks
+    /// accumulate host-side (the cursor bookkeeping is what the
+    /// scheduler's streaming contract needs validated) and the device
+    /// dispatch happens once, at the completing chunk. Device-side
+    /// chunked prompt processing needs a dedicated executable — see
+    /// `python/compile/model.py`.
+    pending: Vec<Option<ChunkStream>>,
     /// Host logits cache for the stepwise path (refreshed per dispatch).
     host_logits: Vec<Vec<f32>>,
     logits_fresh: bool,
@@ -90,6 +101,7 @@ impl HloEngine {
             state,
             lengths: vec![0; batch],
             occupied: vec![false; batch],
+            pending: (0..batch).map(|_| None).collect(),
             host_logits: vec![vec![0.0; art.config.vocab_size]; batch],
             logits_fresh: false,
             rngs: (0..batch).map(|i| Rng::new(seed ^ i as u64)).collect(),
@@ -298,6 +310,7 @@ impl Engine for HloEngine {
                 );
             }
             self.cached_prefill_tokens += e.cached_tokens;
+            self.pending[e.slot] = None; // supersede any stream in flight
             for (j, &t) in e.prompt.iter().enumerate() {
                 toks[e.slot * sp + j] = t;
             }
@@ -317,6 +330,40 @@ impl Engine for HloEngine {
             .context("prefill execute")?;
         self.state = new_state;
         self.logits_fresh = false;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn prefill_chunk(&mut self, entries: &[PrefillChunkEntry]) -> Result<f64> {
+        let t0 = Instant::now();
+        let sp = self.caps.prompt_len;
+        let mut ready: Vec<PrefillEntry> = Vec::new();
+        for e in entries {
+            if e.slot >= self.caps.slots {
+                bail!("slot {} out of range", e.slot);
+            }
+            ChunkStream::validate(self.pending[e.slot].as_ref(), e, sp)?;
+            if e.completes() {
+                self.pending[e.slot] = None;
+                ready.push(PrefillEntry {
+                    slot: e.slot,
+                    // One copy, at the single device dispatch.
+                    prompt: e.prompt.to_vec(),
+                    seed: e.seed,
+                    cached_tokens: e.cached_tokens,
+                });
+            } else {
+                self.occupied[e.slot] = false; // not decodable mid-stream
+                match &mut self.pending[e.slot] {
+                    Some(p) => p.filled = e.start + e.len,
+                    None => {
+                        self.pending[e.slot] = Some(ChunkStream::begin(e))
+                    }
+                }
+            }
+        }
+        if !ready.is_empty() {
+            self.prefill(&ready)?;
+        }
         Ok(t0.elapsed().as_secs_f64())
     }
 
@@ -395,6 +442,7 @@ impl Engine for HloEngine {
         if slot < self.caps.slots {
             self.occupied[slot] = false;
             self.lengths[slot] = 0;
+            self.pending[slot] = None;
         }
     }
 

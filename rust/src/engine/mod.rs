@@ -18,6 +18,7 @@ pub mod sim;
 
 use crate::tokenizer::Token;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Index of a KV slot in the engine's fixed batch.
 pub type SlotId = usize;
@@ -53,6 +54,155 @@ pub struct PrefillEntry {
     pub cached_tokens: usize,
 }
 
+/// One chunk of a streaming (chunked) prefill: covers
+/// `prompt[start..start + len]` for `slot`.
+///
+/// Chunked prefill splits a prompt's uncovered suffix across several
+/// engine dispatches so a long cold few-shot header streams in over
+/// multiple scheduling rounds instead of stalling the decoding batch for
+/// one monolithic prefill (Sarathi-style chunked prefill). The cursor
+/// protocol, validated by every engine:
+///
+/// * the first chunk for a slot must have `start == cached_tokens` (the
+///   radix-covered prefix needs no compute and is skipped);
+/// * each subsequent chunk must continue exactly where the previous one
+///   ended (`start` == tokens filled so far), with the same `prompt`,
+///   `seed` and `cached_tokens`;
+/// * the chunk with `start + len == prompt.len()` completes the prefill
+///   and makes the slot decodable;
+/// * `len == 0` with `start == prompt.len()` is an *install-only* entry —
+///   a fully cached prompt (`cached_tokens == prompt.len()`) that needs
+///   slot state but no prompt compute, e.g. a sibling branch forking from
+///   its request's already-resident shared prefix.
+///
+/// Entries for different slots batch into one dispatch (one cost charge),
+/// exactly like [`PrefillEntry`] batches in [`Engine::prefill`].
+#[derive(Debug, Clone)]
+pub struct PrefillChunkEntry {
+    pub slot: SlotId,
+    /// The full serving prompt. Every chunk carries it (engines validate
+    /// continuation chunks against the first), shared rather than owned —
+    /// a header streamed over k chunks must not copy its tokens k times.
+    pub prompt: Arc<[Token]>,
+    /// Per-branch RNG stream seed (sampling determinism).
+    pub seed: u64,
+    /// Leading prompt tokens whose KV is already resident (see
+    /// [`PrefillEntry::cached_tokens`]); chunks only ever cover the
+    /// uncovered suffix `prompt[cached_tokens..]`.
+    pub cached_tokens: usize,
+    /// First prompt position this chunk covers.
+    pub start: usize,
+    /// Tokens covered by this chunk (0 = install-only).
+    pub len: usize,
+}
+
+impl PrefillChunkEntry {
+    /// Does this chunk complete the slot's prefill?
+    pub fn completes(&self) -> bool {
+        self.start + self.len == self.prompt.len()
+    }
+}
+
+/// Host-side state of one in-flight chunk stream. Both engines keep a
+/// `Vec<Option<ChunkStream>>` per slot and validate every entry through
+/// [`ChunkStream::validate`], so the cursor protocol lives in exactly one
+/// place and cannot drift between implementations.
+#[derive(Debug)]
+pub(crate) struct ChunkStream {
+    pub(crate) prompt: Arc<[Token]>,
+    pub(crate) seed: u64,
+    pub(crate) cached: usize,
+    pub(crate) filled: usize,
+}
+
+impl ChunkStream {
+    /// Validate `e` as the next chunk for a slot whose stream state is
+    /// `stream` (`None` = no stream in flight), against the engine's
+    /// prompt bucket, per the [`PrefillChunkEntry`] protocol.
+    ///
+    /// Continuation identity is checked cheaply (prompt length, seed,
+    /// cached prefix, cursor) — an O(prompt) content compare per chunk
+    /// would make streaming quadratic in the prompt; content equality is
+    /// debug-asserted, and the completing chunk's prompt is what the
+    /// engine ultimately installs.
+    pub(crate) fn validate(
+        stream: Option<&ChunkStream>,
+        e: &PrefillChunkEntry,
+        prompt_bucket: usize,
+    ) -> Result<()> {
+        if e.prompt.len() > prompt_bucket {
+            anyhow::bail!(
+                "prompt length {} exceeds bucket {prompt_bucket}",
+                e.prompt.len()
+            );
+        }
+        if e.cached_tokens > e.prompt.len() {
+            anyhow::bail!(
+                "cached_tokens {} exceeds prompt length {}",
+                e.cached_tokens,
+                e.prompt.len()
+            );
+        }
+        if e.start + e.len > e.prompt.len() {
+            anyhow::bail!(
+                "chunk [{}, {}) overruns a {}-token prompt (slot {})",
+                e.start,
+                e.start + e.len,
+                e.prompt.len(),
+                e.slot
+            );
+        }
+        match stream {
+            None => {
+                if e.start != e.cached_tokens {
+                    anyhow::bail!(
+                        "chunk stream for slot {} starts at {} but the \
+                         cached prefix is {} tokens",
+                        e.slot,
+                        e.start,
+                        e.cached_tokens
+                    );
+                }
+            }
+            Some(p) => {
+                if p.prompt.len() != e.prompt.len()
+                    || p.seed != e.seed
+                    || p.cached != e.cached_tokens
+                {
+                    anyhow::bail!(
+                        "chunk stream identity changed mid-prefill (slot {})",
+                        e.slot
+                    );
+                }
+                debug_assert_eq!(
+                    p.prompt, e.prompt,
+                    "chunk stream prompt content changed mid-prefill"
+                );
+                if e.start != p.filled {
+                    anyhow::bail!(
+                        "chunk cursor {} != {} tokens filled (slot {})",
+                        e.start,
+                        p.filled,
+                        e.slot
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stream state after a (validated) non-completing first chunk
+    /// (shares the entry's prompt — no token copy).
+    pub(crate) fn begin(e: &PrefillChunkEntry) -> ChunkStream {
+        ChunkStream {
+            prompt: Arc::clone(&e.prompt),
+            seed: e.seed,
+            cached: e.cached_tokens,
+            filled: e.start + e.len,
+        }
+    }
+}
+
 /// A fork to install into a slot: prompt + a teacher-forced prefix the
 /// branch continues from (Rebase tree expansion). Forced prefixes must end
 /// at a derivation-step boundary.
@@ -81,6 +231,19 @@ pub trait Engine {
 
     /// (Re)initialize slots with prompts. Returns compute cost (seconds).
     fn prefill(&mut self, entries: &[PrefillEntry]) -> Result<f64>;
+
+    /// Stream one batch of prefill chunks (see [`PrefillChunkEntry`] for
+    /// the cursor protocol). A slot becomes decodable once its completing
+    /// chunk lands; decoding a mid-prefill slot is an error. Returns
+    /// compute cost (seconds).
+    ///
+    /// The default implementation rejects chunking, so engines that only
+    /// serve monolithic prefills (`prefill_chunk_tokens = 0` schedules,
+    /// scripted test engines) need not implement it.
+    fn prefill_chunk(&mut self, entries: &[PrefillChunkEntry]) -> Result<f64> {
+        let _ = entries;
+        anyhow::bail!("chunked prefill unsupported by {}", self.describe())
+    }
 
     /// Run up to `steps` decode steps for `active` slots, writing the
     /// round's result into `out` (any previous contents are replaced).

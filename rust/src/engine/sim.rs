@@ -15,7 +15,10 @@
 //! the per-slot emit buffers handed back through
 //! [`Engine::decode_into`]'s `out` parameter are recycled across rounds.
 
-use super::{ChunkResult, Engine, EngineCaps, PrefillEntry, SlotId};
+use super::{
+    ChunkResult, ChunkStream, Engine, EngineCaps, PrefillChunkEntry,
+    PrefillEntry, SlotId,
+};
 use crate::tokenizer as tok;
 use crate::tokenizer::Token;
 use crate::util::rng::Rng;
@@ -87,6 +90,11 @@ pub struct SimEngine {
     spec: TaskSpec,
     cost: SimCostModel,
     slots: Vec<Option<SlotState>>,
+    /// Per-slot chunked-prefill streams (None = no stream in flight).
+    /// The script is drawn (and the slot installed) only when the
+    /// completing chunk lands, so the generative process is
+    /// byte-identical to a monolithic prefill of the same prompt/seed.
+    pending: Vec<Option<ChunkStream>>,
     /// Recycled emit buffers (drained from the caller's previous
     /// `ChunkResult`, refilled on the next round).
     spare: Vec<Vec<Token>>,
@@ -105,6 +113,7 @@ impl SimEngine {
             spec,
             cost,
             slots: (0..slots).map(|_| None).collect(),
+            pending: (0..slots).map(|_| None).collect(),
             spare: Vec::new(),
         }
     }
@@ -125,6 +134,24 @@ impl SimEngine {
     fn install(&mut self, slot: SlotId, script: Vec<Token>) {
         let eos_at = script.iter().position(|&t| t == tok::EOS);
         self.slots[slot] = Some(SlotState { script, pos: 0, eos_at });
+    }
+
+    /// Draw the full scripted response for a (complete) serving prompt —
+    /// shared by monolithic and chunked prefill so the two entry points
+    /// produce byte-identical generative behaviour.
+    fn draw_script(&self, prompt: &[Token], seed: u64) -> Result<Vec<Token>> {
+        // Header-aware: the question is the trailing <bos>…<think>
+        // window; any shared few-shot header tightens the response
+        // budget but does not change the generative process.
+        let q = Question::from_serving_prompt(prompt)?;
+        let header_len = prompt.len() - q.prompt_tokens().len();
+        let mut rng = Rng::new(seed);
+        Ok(crate::workload::sample_response(
+            &q,
+            &self.spec,
+            &mut rng,
+            self.caps.max_seq.saturating_sub(header_len),
+        ))
     }
 
     /// Return a token buffer to the reuse pool, bounded by the slot count
@@ -155,21 +182,57 @@ impl Engine for SimEngine {
                 bail!("cached_tokens {} exceeds prompt length {}",
                       e.cached_tokens, e.prompt.len());
             }
-            // Header-aware: the question is the trailing <bos>…<think>
-            // window; any shared few-shot header tightens the response
-            // budget but does not change the generative process.
-            let q = Question::from_serving_prompt(&e.prompt)?;
-            let header_len = e.prompt.len() - q.prompt_tokens().len();
-            let mut rng = Rng::new(e.seed);
-            let script = crate::workload::sample_response(
-                &q, &self.spec, &mut rng,
-                self.caps.max_seq.saturating_sub(header_len));
+            let script = self.draw_script(&e.prompt, e.seed)?;
+            // A monolithic prefill supersedes any chunk stream in flight
+            // on this slot (re-prefill semantics, matching slot reuse).
+            self.pending[e.slot] = None;
             self.install(e.slot, script);
             uncached_tokens += e.prompt.len() - e.cached_tokens;
         }
         Ok(self.cost.prefill_base
             + self.cost.prefill_per_slot * entries.len() as f64
             + self.cost.prefill_per_token * uncached_tokens as f64)
+    }
+
+    fn prefill_chunk(&mut self, entries: &[PrefillChunkEntry]) -> Result<f64> {
+        let mut streamed_tokens = 0usize;
+        for e in entries {
+            self.check_slot(e.slot)?;
+            // Cursor protocol lives in ChunkStream::validate (shared with
+            // the HLO engine): fresh streams start at the cached prefix,
+            // continuations resume exactly where the previous chunk ended
+            // with an unchanged identity.
+            ChunkStream::validate(
+                self.pending[e.slot].as_ref(),
+                e,
+                self.caps.prompt_len,
+            )?;
+            streamed_tokens += e.len;
+            if e.completes() {
+                let script = self.draw_script(&e.prompt, e.seed)?;
+                self.pending[e.slot] = None;
+                self.install(e.slot, script);
+            } else {
+                // Mid-prefill: the slot must not be decodable until the
+                // completing chunk lands.
+                match &mut self.pending[e.slot] {
+                    Some(p) => p.filled = e.start + e.len,
+                    None => {
+                        if let Some(st) = self.slots[e.slot].take() {
+                            self.recycle(st.script);
+                        }
+                        self.pending[e.slot] = Some(ChunkStream::begin(e));
+                    }
+                }
+            }
+        }
+        // Same cost shape as a monolithic prefill dispatch: streaming a
+        // suffix over k chunks pays the same per-token total plus k-1
+        // extra dispatch overheads — chunking is not free, it just
+        // bounds the per-round decode stall.
+        Ok(self.cost.prefill_base
+            + self.cost.prefill_per_slot * entries.len() as f64
+            + self.cost.prefill_per_token * streamed_tokens as f64)
     }
 
     fn decode_into(&mut self, active: &[SlotId], steps: usize, _temp: f32,
@@ -233,6 +296,9 @@ impl Engine for SimEngine {
     }
 
     fn release(&mut self, slot: SlotId) {
+        if let Some(p) = self.pending.get_mut(slot) {
+            *p = None; // abandon any chunk stream in flight
+        }
         let taken = self.slots.get_mut(slot).and_then(|s| s.take());
         if let Some(st) = taken {
             // Recycle the script allocation as a future emit buffer.
@@ -452,6 +518,123 @@ mod tests {
         }
         assert_eq!(*all.last().unwrap(), tok::EOS);
         assert!(tok::extract_answer(&all).is_some());
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_script() {
+        // Streaming the same prompt/seed in chunks must decode the exact
+        // script a monolithic prefill produces, paying the same per-token
+        // total plus one extra dispatch overhead per extra chunk.
+        let model = SimCostModel {
+            prefill_per_token: 0.2e-3,
+            ..SimCostModel::default()
+        };
+        let p = prompt(11);
+        let mut mono = SimEngine::new(4, 256, TaskSpec::synth_gaokao(), model);
+        let mono_cost = mono
+            .prefill(&[PrefillEntry {
+                slot: 0, prompt: p.clone(), seed: 5, cached_tokens: 0,
+            }])
+            .unwrap();
+        let mut chunked =
+            SimEngine::new(4, 256, TaskSpec::synth_gaokao(), model);
+        let mut cost = 0.0;
+        let step = 10;
+        let mut start = 0;
+        while start < p.len() {
+            let len = step.min(p.len() - start);
+            cost += chunked
+                .prefill_chunk(&[PrefillChunkEntry {
+                    slot: 0,
+                    prompt: p.clone().into(),
+                    seed: 5,
+                    cached_tokens: 0,
+                    start,
+                    len,
+                }])
+                .unwrap();
+            if start + len < p.len() {
+                assert!(
+                    chunked.decode(&[0], 1, 1.0).is_err(),
+                    "mid-prefill slot must not decode"
+                );
+            }
+            start += len;
+        }
+        let n_chunks = p.len().div_ceil(step);
+        let overhead = (n_chunks - 1) as f64
+            * (model.prefill_base + model.prefill_per_slot);
+        assert!(
+            (cost - mono_cost - overhead).abs() < 1e-12,
+            "chunked {cost} vs mono {mono_cost} + overhead {overhead}"
+        );
+        assert_eq!(
+            mono.decode(&[0], 256, 1.0).unwrap().emitted,
+            chunked.decode(&[0], 256, 1.0).unwrap().emitted,
+        );
+    }
+
+    #[test]
+    fn chunk_cursor_protocol_enforced() {
+        let p = prompt(3);
+        let mk = || {
+            SimEngine::new(4, 256, TaskSpec::synth_gaokao(),
+                           SimCostModel::default())
+        };
+        let entry = |seed, start, len| PrefillChunkEntry {
+            slot: 0,
+            prompt: p.clone().into(),
+            seed,
+            cached_tokens: 0,
+            start,
+            len,
+        };
+        // Fresh stream must start at the cached prefix (0 here).
+        let mut e = mk();
+        assert!(e.prefill_chunk(&[entry(1, 4, 4)]).is_err());
+        // Continuation must resume exactly where the last chunk ended.
+        let mut e = mk();
+        e.prefill_chunk(&[entry(1, 0, 4)]).unwrap();
+        assert!(e.prefill_chunk(&[entry(1, 8, 4)]).is_err());
+        // Identity (seed) must not change mid-stream.
+        assert!(e.prefill_chunk(&[entry(2, 4, 4)]).is_err());
+        // Overrunning the prompt is rejected.
+        assert!(e.prefill_chunk(&[entry(1, 4, p.len())]).is_err());
+        // Release abandons the stream; a fresh one then starts over.
+        e.release(0);
+        e.prefill_chunk(&[entry(1, 0, p.len())]).unwrap();
+        e.decode(&[0], 1, 1.0).unwrap();
+    }
+
+    #[test]
+    fn install_only_chunk_serves_fully_cached_prompt() {
+        let p = prompt(7);
+        let mut e = SimEngine::new(4, 256, TaskSpec::synth_gaokao(),
+                                   SimCostModel::default());
+        let cost = e
+            .prefill_chunk(&[PrefillChunkEntry {
+                slot: 0,
+                prompt: p.clone().into(),
+                seed: 4,
+                cached_tokens: p.len(),
+                start: p.len(),
+                len: 0,
+            }])
+            .unwrap();
+        // No prompt compute: dispatch overhead only.
+        let m = SimCostModel::default();
+        assert!((cost - m.prefill_base - m.prefill_per_slot).abs() < 1e-12);
+        // Decodes the same script as a monolithic prefill, same seed.
+        let mut mono = SimEngine::new(4, 256, TaskSpec::synth_gaokao(),
+                                      SimCostModel::default());
+        mono.prefill(&[PrefillEntry {
+            slot: 0, prompt: p, seed: 4, cached_tokens: 0,
+        }])
+        .unwrap();
+        assert_eq!(
+            mono.decode(&[0], 256, 1.0).unwrap().emitted,
+            e.decode(&[0], 256, 1.0).unwrap().emitted,
+        );
     }
 
     #[test]

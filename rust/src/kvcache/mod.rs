@@ -42,6 +42,17 @@
 //! tree entirely: `admit_tokens` delegates to the scalar [`admit`] path,
 //! byte-for-byte reproducing the pre-cache accounting (property-tested).
 //!
+//! # Chunked prefill (incremental page leasing)
+//!
+//! [`KvCacheManager::try_admit_tokens_chunked`] admits a request whose
+//! uncovered prompt suffix will stream in over several scheduling rounds:
+//! the suffix's pages are **pledged** (held against the budget so no later
+//! admission can strand the prefill) and convert to used pages chunk by
+//! chunk via [`KvCacheManager::note_prefill`]; the full pages intern into
+//! the radix tree only at [`KvCacheManager::commit_prefix`], once their KV
+//! actually exists. A request released mid-prefill frees its partial pages
+//! and cancels the outstanding pledge without ever touching the tree.
+//!
 //! Admission control asks `can_admit`/`can_admit_tokens`; the scheduler
 //! combines this with engine-slot availability.
 //!
@@ -71,17 +82,40 @@ pub struct BranchId {
     gen: u32,
 }
 
+/// Chunked-prefill staging state of a prefix (see
+/// [`KvCacheManager::try_admit_tokens_chunked`]): the uncovered prompt
+/// suffix's pages are *pledged* — held against the budget but not yet
+/// materialized — at admission, convert to used pages as prefill chunks
+/// land ([`KvCacheManager::note_prefill`]), and the full pages intern
+/// into the radix tree only when the prefill completes
+/// ([`KvCacheManager::commit_prefix`]).
+#[derive(Debug)]
+struct StagedPrefill {
+    /// Prompt tokens covered by the radix path leased at admission.
+    covered_tokens: usize,
+    /// Total prompt length in tokens.
+    prompt_tokens: usize,
+    /// Uncovered tokens whose prefill has landed so far.
+    staged_tokens: usize,
+    /// Uncovered pages not yet materialized (the remaining pledge).
+    pledged_pages: usize,
+}
+
 #[derive(Debug)]
 struct Prefix {
     /// Total prompt pages (shared path + private remainder; diagnostics).
     pages: usize,
     /// Pages owned privately by this prefix (the partial tail page, or
-    /// the whole prompt on the scalar/cache-disabled path).
+    /// the whole prompt on the scalar/cache-disabled path; during a
+    /// chunked prefill, the materialized-so-far uncovered pages).
     private_pages: usize,
     refcount: usize,
     /// Deepest radix node of the interned full-page path (None on the
     /// scalar path or when the prompt is shorter than one page).
     leaf: Option<u32>,
+    /// Chunked-prefill progress (None once committed / for monolithic
+    /// admissions).
+    staged: Option<StagedPrefill>,
 }
 
 #[derive(Debug)]
@@ -192,6 +226,11 @@ pub struct KvCacheManager {
     /// each, shared across all leases), private prefix remainders and
     /// branch reservations.
     used_pages: usize,
+    /// Pages promised to chunked prefills in flight but not yet
+    /// materialized (Σ per-prefix `StagedPrefill::pledged_pages`). They
+    /// count against the budget — an admission must never be able to
+    /// strand a mid-prefill request — but are not physically resident.
+    pledged_pages: usize,
     prefixes: Slab<Prefix>,
     branches: Slab<BranchAlloc>,
     /// Incrementally maintained Σ grown_tokens over live branches
@@ -240,6 +279,7 @@ impl KvCacheManager {
             page_tokens,
             capacity_pages: capacity_tokens / page_tokens,
             used_pages: 0,
+            pledged_pages: 0,
             prefixes: Slab::new(),
             branches: Slab::new(),
             live_decoded: 0,
@@ -273,8 +313,16 @@ impl KvCacheManager {
 
     /// Pages available to live allocations. Retained (refcount-0) cache
     /// pages do not subtract: they are evicted on demand by admissions.
+    /// Pages pledged to chunked prefills in flight *do*: they will
+    /// materialize without a further budget check.
     pub fn free_pages(&self) -> usize {
-        self.capacity_pages - self.used_pages
+        self.capacity_pages - self.used_pages - self.pledged_pages
+    }
+
+    /// Pages pledged to chunked prefills in flight (0 outside chunked
+    /// serving).
+    pub fn pledged_pages(&self) -> usize {
+        self.pledged_pages
     }
 
     /// Retained refcount-0 prefix pages currently resident.
@@ -442,7 +490,11 @@ impl KvCacheManager {
     /// Evict retained pages until `fresh` new pages fit physically.
     /// No-op when the cache is disabled (cached_pages is always 0 then).
     fn make_room(&mut self, fresh: usize) -> Result<()> {
-        while self.capacity_pages - self.used_pages - self.cached_pages < fresh
+        while self.capacity_pages
+            - self.used_pages
+            - self.pledged_pages
+            - self.cached_pages
+            < fresh
         {
             self.evict_lru()?;
         }
@@ -461,6 +513,86 @@ impl KvCacheManager {
                 (self.nodes.len() - 1) as u32
             }
         }
+    }
+
+    /// Intern `prompt`'s full pages from `from_page` onward as
+    /// refcount-1 radix nodes chained below `leaf`; returns the new
+    /// deepest node. `charge_used` additionally charges each page to
+    /// `used_pages` (admission-time interning allocates fresh pages;
+    /// commit-time interning converts pages already charged while
+    /// staged). One definition shared by both paths so monolithic and
+    /// chunked cache semantics cannot drift.
+    fn intern_pages(
+        &mut self,
+        prompt: &[Token],
+        from_page: usize,
+        mut leaf: Option<u32>,
+        charge_used: bool,
+    ) -> Option<u32> {
+        let pt = self.page_tokens;
+        let full = prompt.len() / pt;
+        for i in from_page..full {
+            let page = prompt[i * pt..(i + 1) * pt].to_vec();
+            let idx = self.alloc_node(RadixNode {
+                page,
+                parent: leaf,
+                children: Vec::new(),
+                refcount: 1,
+                lru: 0,
+            });
+            match leaf {
+                Some(p) => self.nodes[p as usize]
+                    .as_mut()
+                    .unwrap()
+                    .children
+                    .push(idx),
+                None => self.roots.push(idx),
+            }
+            if charge_used {
+                self.used_pages += 1;
+            }
+            leaf = Some(idx);
+        }
+        leaf
+    }
+
+    /// Bump the lease refcount of every node on `path` (a `walk_path`
+    /// result). Retained (refcount-0) hits leave the evictable pool:
+    /// cached → used. One definition shared by both admission modes so
+    /// their budget accounting cannot drift.
+    fn lease_path(&mut self, path: &[u32]) {
+        for &c in path {
+            let was_retained = {
+                let node = self.nodes[c as usize].as_mut().unwrap();
+                node.refcount += 1;
+                node.refcount == 1
+            };
+            if was_retained {
+                self.cached_pages -= 1;
+                self.used_pages += 1;
+            }
+        }
+    }
+
+    /// Insert `n_branches` reservations of `branch_pages` each against
+    /// `prefix`, charging `used_pages` (shared by every admission path).
+    fn reserve_branches(
+        &mut self,
+        prefix: PrefixId,
+        n_branches: usize,
+        branch_pages: usize,
+    ) -> Vec<BranchId> {
+        let mut ids = Vec::with_capacity(n_branches);
+        for _ in 0..n_branches {
+            let (bidx, bgen) = self.branches.insert(BranchAlloc {
+                prefix,
+                reserved_pages: branch_pages,
+                grown_tokens: 0,
+            });
+            self.used_pages += branch_pages;
+            ids.push(BranchId { idx: bidx, gen: bgen });
+        }
+        ids
     }
 
     /// Admit a request (scalar form): allocate the whole prompt privately
@@ -489,19 +621,11 @@ impl KvCacheManager {
             private_pages: prefix_pages,
             refcount: n_branches,
             leaf: None,
+            staged: None,
         });
         let prefix = PrefixId { idx: pidx, gen: pgen };
         self.used_pages += prefix_pages;
-        let mut branch_ids = Vec::with_capacity(n_branches);
-        for _ in 0..n_branches {
-            let (bidx, bgen) = self.branches.insert(BranchAlloc {
-                prefix,
-                reserved_pages: branch_pages,
-                grown_tokens: 0,
-            });
-            self.used_pages += branch_pages;
-            branch_ids.push(BranchId { idx: bidx, gen: bgen });
-        }
+        let branch_ids = self.reserve_branches(prefix, n_branches, branch_pages);
         self.peak_pages = self.peak_pages.max(self.used_pages);
         Ok((prefix, branch_ids))
     }
@@ -553,48 +677,20 @@ impl KvCacheManager {
             return Ok(None);
         }
         let pt = self.page_tokens;
-        let full = prompt.len() / pt;
         let tail_pages = usize::from(prompt.len() % pt > 0);
         let branch_pages = pages_for(max_new, pt);
 
         // 1. Lease the already-interned path. Bumping refcounts first
         //    protects the hit nodes from the eviction pass below; nodes
         //    leaving the retained pool move from cached to used.
-        for &c in &path {
-            let was_retained = {
-                let node = self.nodes[c as usize].as_mut().unwrap();
-                node.refcount += 1;
-                node.refcount == 1
-            };
-            if was_retained {
-                self.cached_pages -= 1;
-                self.used_pages += 1;
-            }
-        }
+        self.lease_path(&path);
 
         // 2. Make physical room for the genuinely new pages.
         self.make_room(need)?;
 
         // 3. Intern the uncovered full pages (one node per page).
-        let mut leaf = path.last().copied();
-        for i in path.len()..full {
-            let page = prompt[i * pt..(i + 1) * pt].to_vec();
-            let idx = self.alloc_node(RadixNode {
-                page,
-                parent: leaf,
-                children: Vec::new(),
-                refcount: 1,
-                lru: 0,
-            });
-            match leaf {
-                Some(p) => {
-                    self.nodes[p as usize].as_mut().unwrap().children.push(idx)
-                }
-                None => self.roots.push(idx),
-            }
-            self.used_pages += 1;
-            leaf = Some(idx);
-        }
+        let leaf =
+            self.intern_pages(prompt, path.len(), path.last().copied(), true);
 
         // 4. Private tail page, prefix record, branch reservations.
         self.used_pages += tail_pages;
@@ -603,22 +699,192 @@ impl KvCacheManager {
             private_pages: tail_pages,
             refcount: n_branches,
             leaf,
+            staged: None,
         });
         let prefix = PrefixId { idx: pidx, gen: pgen };
-        let mut branch_ids = Vec::with_capacity(n_branches);
-        for _ in 0..n_branches {
-            let (bidx, bgen) = self.branches.insert(BranchAlloc {
-                prefix,
-                reserved_pages: branch_pages,
-                grown_tokens: 0,
-            });
-            self.used_pages += branch_pages;
-            branch_ids.push(BranchId { idx: bidx, gen: bgen });
-        }
+        let branch_ids = self.reserve_branches(prefix, n_branches, branch_pages);
         self.peak_pages = self.peak_pages.max(self.used_pages);
         let cached_tokens = path.len() * pt;
         self.hit_tokens_total += cached_tokens;
         Ok(Some(Admission { prefix, branches: branch_ids, cached_tokens }))
+    }
+
+    /// Chunked-prefill admission: lease the radix-covered prefix and the
+    /// per-branch reservations exactly like
+    /// [`KvCacheManager::try_admit_tokens`], but *pledge* the uncovered
+    /// prompt suffix's pages instead of materializing them — they convert
+    /// to used pages as prefill chunks land
+    /// ([`KvCacheManager::note_prefill`]), and the full pages intern into
+    /// the radix tree only when the prefill completes
+    /// ([`KvCacheManager::commit_prefix`]). Interning on completion means
+    /// a second identical prompt admitted while the first still streams
+    /// sees no hit (its pages are not computed yet) — the monolithic path
+    /// could intern optimistically at admission, this one cannot.
+    ///
+    /// The budget check is identical to the monolithic one (pledged pages
+    /// count against [`KvCacheManager::free_pages`]), so a chunked
+    /// admission can never be stranded mid-prefill by a later admission.
+    /// Over budget is a side-effect-free `Ok(None)`. Works with the cache
+    /// disabled too (no path, no interning — the whole prompt streams and
+    /// stays private).
+    pub fn try_admit_tokens_chunked(
+        &mut self,
+        prompt: &[Token],
+        max_new: usize,
+        n_branches: usize,
+    ) -> Result<Option<Admission>> {
+        let (path, need, hit_retained) =
+            self.admission_need_tokens(prompt, max_new, n_branches);
+        if need + hit_retained > self.free_pages() {
+            return Ok(None);
+        }
+        let pt = self.page_tokens;
+        let covered_pages = path.len();
+        let covered_tokens = covered_pages * pt;
+        let uncovered_pages = pages_for(prompt.len(), pt) - covered_pages;
+        let branch_pages = pages_for(max_new, pt);
+
+        // 1. Lease the already-interned path (protects the hit nodes from
+        //    the eviction pass below; retained hits move cached → used).
+        self.lease_path(&path);
+
+        // 2. Make physical room for everything this admission will ever
+        //    materialize (branch reservations now, pledged pages later).
+        self.make_room(need)?;
+
+        // 3. Prefix record: nothing is interned or materialized for the
+        //    uncovered suffix yet — it all arrives via note_prefill.
+        let staged = if covered_tokens < prompt.len() {
+            Some(StagedPrefill {
+                covered_tokens,
+                prompt_tokens: prompt.len(),
+                staged_tokens: 0,
+                pledged_pages: uncovered_pages,
+            })
+        } else {
+            None // fully covered: nothing to stream
+        };
+        let (pidx, pgen) = self.prefixes.insert(Prefix {
+            pages: pages_for(prompt.len(), pt),
+            private_pages: 0,
+            refcount: n_branches,
+            leaf: path.last().copied(),
+            staged,
+        });
+        self.pledged_pages += uncovered_pages;
+        let prefix = PrefixId { idx: pidx, gen: pgen };
+        let branch_ids = self.reserve_branches(prefix, n_branches, branch_pages);
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        self.hit_tokens_total += covered_tokens;
+        Ok(Some(Admission {
+            prefix,
+            branches: branch_ids,
+            cached_tokens: covered_tokens,
+        }))
+    }
+
+    /// Record `new_tokens` of chunked-prefill progress on `prefix`: pages
+    /// fully spanned by the progress cursor convert from pledged to used
+    /// (leased incrementally, per chunk). Errors on unknown prefixes, on
+    /// prefixes with no prefill in flight, and on overrunning the
+    /// uncovered suffix.
+    pub fn note_prefill(
+        &mut self,
+        prefix: PrefixId,
+        new_tokens: usize,
+    ) -> Result<()> {
+        let pt = self.page_tokens;
+        let Some(p) = self.prefixes.get_mut(prefix.idx, prefix.gen) else {
+            bail!("note_prefill on unknown prefix {prefix:?}");
+        };
+        let Some(st) = p.staged.as_mut() else {
+            bail!("note_prefill on a prefix with no chunked prefill in flight");
+        };
+        let uncovered = st.prompt_tokens - st.covered_tokens;
+        if st.staged_tokens + new_tokens > uncovered {
+            bail!(
+                "prefill progress overruns the uncovered suffix: \
+                 {} + {new_tokens} > {uncovered}",
+                st.staged_tokens
+            );
+        }
+        st.staged_tokens += new_tokens;
+        let covered_pages = st.covered_tokens / pt;
+        let materialized =
+            pages_for(st.covered_tokens + st.staged_tokens, pt) - covered_pages;
+        let delta = materialized - p.private_pages;
+        p.private_pages = materialized;
+        debug_assert!(st.pledged_pages >= delta);
+        st.pledged_pages -= delta;
+        debug_assert!(self.pledged_pages >= delta);
+        self.pledged_pages -= delta;
+        self.used_pages += delta;
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        Ok(())
+    }
+
+    /// Complete a chunked prefill: intern the now-computed uncovered full
+    /// pages into the radix tree (cache enabled) or leave them private
+    /// (cache disabled). Requires every uncovered token to have been
+    /// reported via [`KvCacheManager::note_prefill`] first. `prompt` must
+    /// be the admission-time prompt — the manager does not retain token
+    /// content for staged prefixes.
+    ///
+    /// Two identical prompts streamed concurrently each intern their own
+    /// nodes (neither can lease pages the other has not finished
+    /// computing); `walk_path` matches the first sibling, the duplicate
+    /// ages out of the retained pool like any cold tail.
+    pub fn commit_prefix(
+        &mut self,
+        prefix: PrefixId,
+        prompt: &[Token],
+    ) -> Result<()> {
+        let pt = self.page_tokens;
+        let covered_pages = {
+            let Some(p) = self.prefixes.get(prefix.idx, prefix.gen) else {
+                bail!("commit_prefix on unknown prefix {prefix:?}");
+            };
+            let Some(st) = p.staged.as_ref() else {
+                bail!("commit_prefix on a prefix with no prefill in flight");
+            };
+            if st.prompt_tokens != prompt.len() {
+                bail!(
+                    "commit_prefix prompt length {} != admitted {}",
+                    prompt.len(),
+                    st.prompt_tokens
+                );
+            }
+            if st.covered_tokens + st.staged_tokens != st.prompt_tokens {
+                bail!(
+                    "commit_prefix before prefill completed: {} of {} \
+                     uncovered tokens staged",
+                    st.staged_tokens,
+                    st.prompt_tokens - st.covered_tokens
+                );
+            }
+            debug_assert_eq!(st.pledged_pages, 0);
+            st.covered_tokens / pt
+        };
+        if self.prefix_cache_pages == 0 {
+            // No tree: the streamed pages simply stay private, matching
+            // the scalar accounting.
+            let p = self.prefixes.get_mut(prefix.idx, prefix.gen).unwrap();
+            p.staged = None;
+            return Ok(());
+        }
+        let tail_pages = usize::from(prompt.len() % pt > 0);
+        let admitted_leaf =
+            self.prefixes.get(prefix.idx, prefix.gen).unwrap().leaf;
+        // The interned pages move from private to tree accounting; the
+        // page totals (and used_pages) are unchanged, so intern_pages
+        // must not charge them again.
+        let leaf =
+            self.intern_pages(prompt, covered_pages, admitted_leaf, false);
+        let p = self.prefixes.get_mut(prefix.idx, prefix.gen).unwrap();
+        p.leaf = leaf;
+        p.private_pages = tail_pages;
+        p.staged = None;
+        Ok(())
     }
 
     /// Attach `n_more` branches to an existing shared prefix (Rebase tree
@@ -642,16 +908,7 @@ impl KvCacheManager {
         }
         let branch_pages = pages_for(max_new, self.page_tokens);
         self.make_room(n_more * branch_pages)?;
-        let mut out = Vec::with_capacity(n_more);
-        for _ in 0..n_more {
-            let (bidx, bgen) = self.branches.insert(BranchAlloc {
-                prefix,
-                reserved_pages: branch_pages,
-                grown_tokens: 0,
-            });
-            self.used_pages += branch_pages;
-            out.push(BranchId { idx: bidx, gen: bgen });
-        }
+        let out = self.reserve_branches(prefix, n_more, branch_pages);
         self.prefixes
             .get_mut(prefix.idx, prefix.gen)
             .unwrap()
@@ -737,6 +994,14 @@ impl KvCacheManager {
             let p = self.prefixes.remove(b.prefix.idx, b.prefix.gen).unwrap();
             debug_assert!(self.used_pages >= p.private_pages);
             self.used_pages -= p.private_pages;
+            if let Some(st) = p.staged {
+                // Released mid-prefill: the partial pages materialized so
+                // far were just freed with `private_pages`; cancel the
+                // outstanding pledge. Nothing was interned, so the radix
+                // tree never sees the half-computed suffix.
+                debug_assert!(self.pledged_pages >= st.pledged_pages);
+                self.pledged_pages -= st.pledged_pages;
+            }
             if let Some(leaf) = p.leaf {
                 self.release_lease(leaf)?;
             }
@@ -761,6 +1026,7 @@ impl KvCacheManager {
     pub fn check_invariants(&self) -> Result<()> {
         // Rebuild per-node lease counts from the live prefixes.
         let mut expected = vec![0usize; self.nodes.len()];
+        let mut pledged_scan = 0usize;
         for p in self.prefixes.iter() {
             let mut cur = p.leaf;
             let mut steps = 0usize;
@@ -778,15 +1044,56 @@ impl KvCacheManager {
                 }
             }
             // Total prompt pages split exactly into interned path +
-            // private remainder.
-            if p.pages != p.private_pages + steps {
+            // private remainder + (mid-prefill) outstanding pledge.
+            let pledged = p.staged.as_ref().map_or(0, |st| st.pledged_pages);
+            pledged_scan += pledged;
+            if p.pages != p.private_pages + steps + pledged {
                 bail!(
                     "prefix page split drift: {} != {} private + {steps} \
-                     interned",
+                     interned + {pledged} pledged",
                     p.pages,
                     p.private_pages
                 );
             }
+            if let Some(st) = &p.staged {
+                // Mid-prefill bookkeeping must be self-consistent: the
+                // leased path is exactly the covered prefix, progress
+                // stays within the uncovered suffix, and the private
+                // pages are exactly the ones the cursor has spanned.
+                if st.covered_tokens != steps * self.page_tokens {
+                    bail!(
+                        "staged prefix covered_tokens {} != {} path pages",
+                        st.covered_tokens,
+                        steps
+                    );
+                }
+                if st.covered_tokens + st.staged_tokens > st.prompt_tokens {
+                    bail!(
+                        "staged prefix progress overran its prompt: \
+                         {} + {} > {}",
+                        st.covered_tokens,
+                        st.staged_tokens,
+                        st.prompt_tokens
+                    );
+                }
+                let materialized = pages_for(
+                    st.covered_tokens + st.staged_tokens,
+                    self.page_tokens,
+                ) - steps;
+                if materialized != p.private_pages {
+                    bail!(
+                        "staged prefix materialized {materialized} pages \
+                         but holds {} private",
+                        p.private_pages
+                    );
+                }
+            }
+        }
+        if pledged_scan != self.pledged_pages {
+            bail!(
+                "pledged_pages drift: counter {} != recomputed {pledged_scan}",
+                self.pledged_pages
+            );
         }
         let mut live_tree_pages = 0usize;
         let mut retained_pages = 0usize;
@@ -858,10 +1165,13 @@ impl KvCacheManager {
         if computed != self.used_pages {
             bail!("accounting drift: computed {computed} != used {}", self.used_pages);
         }
-        if self.used_pages + self.cached_pages > self.capacity_pages {
+        if self.used_pages + self.pledged_pages + self.cached_pages
+            > self.capacity_pages
+        {
             bail!(
-                "over budget: {} used + {} cached > {}",
+                "over budget: {} used + {} pledged + {} cached > {}",
                 self.used_pages,
+                self.pledged_pages,
                 self.cached_pages,
                 self.capacity_pages
             );
@@ -1194,6 +1504,157 @@ mod tests {
         assert_eq!(b.cached_tokens, 32);
         assert_eq!(kv.used_pages(), 6);
         kv.check_invariants().unwrap();
+    }
+
+    // -----------------------------------------------------------------
+    // Chunked prefill: incremental leasing, commit-time interning.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn chunked_admission_leases_pages_incrementally() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 48); // 3 full pages, no tail
+        let adm = kv.try_admit_tokens_chunked(&p, 32, 2).unwrap().unwrap();
+        assert_eq!(adm.cached_tokens, 0);
+        // Only the 2×2 branch reservations are materialized; the prompt's
+        // 3 pages are pledged.
+        assert_eq!(kv.used_pages(), 4);
+        assert_eq!(kv.pledged_pages(), 3);
+        kv.check_invariants().unwrap();
+        // Chunks land: pages convert pledge → used as the cursor spans
+        // them (the page materializes at its first token).
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        assert_eq!((kv.used_pages(), kv.pledged_pages()), (5, 2));
+        kv.note_prefill(adm.prefix, 8).unwrap();
+        assert_eq!((kv.used_pages(), kv.pledged_pages()), (6, 1));
+        kv.note_prefill(adm.prefix, 8).unwrap(); // page boundary exactly
+        assert_eq!((kv.used_pages(), kv.pledged_pages()), (6, 1));
+        kv.check_invariants().unwrap();
+        // Nothing is interned before commit: a probe sees no hit.
+        assert_eq!(kv.cached_prefix_tokens(&p), 0);
+        // Commit requires the full suffix.
+        assert!(kv.commit_prefix(adm.prefix, &p).is_err());
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        assert_eq!((kv.used_pages(), kv.pledged_pages()), (7, 0));
+        kv.commit_prefix(adm.prefix, &p).unwrap();
+        kv.check_invariants().unwrap();
+        // Interned now: resident for probes, retained after release.
+        assert_eq!(kv.cached_prefix_tokens(&p), 48);
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.used_pages(), 0);
+        assert_eq!(kv.cached_pages(), 3);
+        kv.check_invariants().unwrap();
+        // A later admission re-leases the committed pages like any hit.
+        let warm = kv.admit_tokens(&p, 32, 1).unwrap();
+        assert_eq!(warm.cached_tokens, 48);
+    }
+
+    #[test]
+    fn mid_prefill_release_frees_partial_pages_and_pledge() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 50); // 3 full pages + 2-token tail
+        let adm = kv.try_admit_tokens_chunked(&p, 16, 2).unwrap().unwrap();
+        assert_eq!(kv.pledged_pages(), 4);
+        kv.note_prefill(adm.prefix, 20).unwrap(); // 2 pages materialized
+        assert_eq!(kv.used_pages(), 2 + 2 * 1);
+        assert_eq!(kv.pledged_pages(), 2);
+        kv.check_invariants().unwrap();
+        // Request finishes / is preempted mid-prefill: every partial page
+        // and the outstanding pledge must go, and the half-computed
+        // suffix must never reach the radix tree.
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.used_pages(), 0);
+        assert_eq!(kv.pledged_pages(), 0);
+        assert_eq!(kv.cached_pages(), 0);
+        assert_eq!(kv.cached_prefix_tokens(&p), 0);
+        kv.check_invariants().unwrap();
+        assert!(kv.note_prefill(adm.prefix, 1).is_err(), "stale prefix");
+    }
+
+    #[test]
+    fn chunked_admission_pledge_counts_against_budget() {
+        // 8 pages total. Chunked admit pledges 3 prompt pages + uses 2
+        // branch pages → 3 free. A 4-page admission must be refused even
+        // though only 2 pages are physically used.
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
+        let p = prompt(0, 48);
+        let adm = kv.try_admit_tokens_chunked(&p, 32, 1).unwrap().unwrap();
+        assert_eq!(kv.used_pages(), 2);
+        assert_eq!(kv.free_pages(), 3);
+        assert!(kv
+            .try_admit_tokens_chunked(&prompt(500, 32), 32, 1)
+            .unwrap()
+            .is_none());
+        assert!(kv.try_admit_tokens(&prompt(500, 32), 32, 1).unwrap().is_none());
+        // 3 pages fits exactly (1 prompt page + 2 branch pages).
+        assert!(kv
+            .try_admit_tokens_chunked(&prompt(500, 16), 32, 1)
+            .unwrap()
+            .is_some());
+        kv.check_invariants().unwrap();
+        kv.note_prefill(adm.prefix, 48).unwrap();
+        kv.commit_prefix(adm.prefix, &p).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fully_covered_chunked_admission_streams_nothing() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 32); // page-aligned: fully internable
+        let cold = kv.admit_tokens(&p, 16, 1).unwrap();
+        for b in cold.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.cached_pages(), 2);
+        // Chunked re-admission of the retained prompt: zero uncovered
+        // tokens, so there is no staging state at all.
+        let warm = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        assert_eq!(warm.cached_tokens, 32);
+        assert_eq!(kv.pledged_pages(), 0);
+        assert!(kv.note_prefill(warm.prefix, 1).is_err(), "nothing to stream");
+        assert!(kv.commit_prefix(warm.prefix, &p).is_err());
+        kv.check_invariants().unwrap();
+        for b in warm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_admission_cache_disabled_matches_scalar_totals() {
+        // With the cache off, a streamed admission must end at exactly the
+        // scalar accounting once complete (all prompt pages private, no
+        // tree), and drain back to zero.
+        let mut scalar = KvCacheManager::new(4096, 16);
+        let mut chunked = KvCacheManager::new(4096, 16);
+        let p = prompt(0, 40); // 2 full pages + tail
+        let (_, bs) = scalar.admit(p.len(), 64, 3).unwrap();
+        let adm = chunked.try_admit_tokens_chunked(&p, 64, 3).unwrap().unwrap();
+        assert_eq!(adm.cached_tokens, 0);
+        assert_eq!(
+            chunked.used_pages() + chunked.pledged_pages(),
+            scalar.used_pages()
+        );
+        chunked.note_prefill(adm.prefix, 25).unwrap();
+        chunked.check_invariants().unwrap();
+        chunked.note_prefill(adm.prefix, 15).unwrap();
+        chunked.commit_prefix(adm.prefix, &p).unwrap();
+        assert_eq!(chunked.used_pages(), scalar.used_pages());
+        assert_eq!(chunked.pledged_pages(), 0);
+        assert_eq!(chunked.cached_pages(), 0);
+        chunked.check_invariants().unwrap();
+        for b in bs {
+            scalar.release_branch(b).unwrap();
+        }
+        for b in adm.branches {
+            chunked.release_branch(b).unwrap();
+        }
+        assert_eq!(chunked.used_pages(), 0);
+        chunked.check_invariants().unwrap();
     }
 
     #[test]

@@ -54,7 +54,9 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --lb rr|least-loaded|jsq|p2c|prefix-affinity   dispatch policy
   --prefix-cache PAGES   cross-request radix prefix cache budget (0=off)
   --prefix-share F       fraction of requests sharing a few-shot header
-  --prefix-templates INT / --prefix-shots INT   header pool shape";
+  --prefix-templates INT / --prefix-shots INT   header pool shape
+  --prefill-chunk TOK    stream prompt prefill in TOK-token chunks (0=off)
+  --prefill-budget TOK   per-round streamed-prefill budget (default=chunk)";
 
 fn print_report(r: &ServeReport) {
     let rows = vec![r.row()];
@@ -74,6 +76,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         out.report.branches_started_per_request,
         out.report.branches_pruned_per_request,
     );
+    if spec.prefill_chunk_tokens > 0 {
+        let mean =
+            |f: fn(&sart::coordinator::RequestOutcome) -> f64| -> f64 {
+                out.outcomes.iter().map(f).sum::<f64>()
+                    / out.outcomes.len().max(1) as f64
+            };
+        println!(
+            "chunked prefill ({} tok/chunk, {} tok/round): \
+             ttft mean {:.3}s = queue {:.3}s + prefill-stream {:.3}s",
+            spec.prefill_chunk_tokens,
+            spec.max_batched_prefill_tokens,
+            mean(|o| o.ttft()),
+            mean(|o| o.queue_latency()),
+            mean(|o| o.prefill_latency()),
+        );
+    }
     if out.prompt_tokens > 0 && out.cache_hit_tokens > 0 {
         println!(
             "prefix-cache: {}/{} prompt tokens served from cache ({:.1}%)",
@@ -115,9 +133,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for m in methods {
         if matches!(m, Method::Rebase { .. })
-            && (base.replicas > 1 || base.prefix_share > 0.0)
+            && (base.replicas > 1
+                || base.prefix_share > 0.0
+                || base.prefill_chunk_tokens > 0)
         {
-            continue; // rebase has no cluster or prefix-workload path
+            // rebase has no cluster, prefix-workload or chunked path
+            continue;
         }
         let mut spec = base.clone();
         spec.method = m;

@@ -13,13 +13,27 @@ use crate::util::stats::{percentile, Summary};
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimelinePoint {
     pub t: f64,
+    /// Occupied engine slots (in chunked-prefill serves this includes
+    /// slots whose prompt is still streaming in).
     pub running_branches: usize,
+    /// Occupied slots that are actually decodable — `running_branches`
+    /// minus mid-prefill slots (equal to it in monolithic serves). The
+    /// decode-stall series gates on this: a round whose only residents
+    /// were still streaming their own prompts stalled nobody.
+    pub decoding_branches: usize,
     pub running_tokens: usize,
     pub kv_pages_used: usize,
     pub queued_requests: usize,
     /// Cumulative prompt tokens served from the cross-request prefix
     /// cache up to this round (0 with the cache disabled).
     pub cache_hit_tokens: usize,
+    /// Prompt tokens still waiting to stream into mid-prefill slots
+    /// (the chunked-prefill backlog; 0 in monolithic serves).
+    pub queued_prefill_tokens: usize,
+    /// Cumulative engine seconds spent on prefill dispatches up to this
+    /// round — the per-round delta is the decode stall that round's
+    /// resident branches absorbed (the chunked-prefill headline).
+    pub prefill_seconds: f64,
 }
 
 /// Occupancy over a serve run (Fig. 3's x-axis is `t`).
@@ -49,6 +63,32 @@ impl Timeline {
 
     pub fn peak_tokens(&self) -> usize {
         self.points.iter().map(|p| p.running_tokens).max().unwrap_or(0)
+    }
+
+    /// Per-round decode-stall series: the prefill seconds charged in each
+    /// round whose *preceding* sample still had resident branches (those
+    /// branches sat through that round's prompt processing). This is the
+    /// quantity behind BENCH_chunked's
+    /// `p99_decode_stall_ratio_chunked_vs_mono` headline; the bench and
+    /// the regression tests both read it from here so the gate and the
+    /// tests can never measure different things.
+    pub fn decode_stall_series(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut prev_prefill = 0.0f64;
+        let mut prev_decoding = 0usize;
+        for p in &self.points {
+            let d = p.prefill_seconds - prev_prefill;
+            // Gate on *decodable* residents: a cold header streaming
+            // into an otherwise empty batch stalls nobody, and counting
+            // it would bias the chunked-vs-mono ratio against chunked
+            // (monolithic prefill into an empty batch records zero).
+            if prev_decoding > 0 {
+                out.push(d);
+            }
+            prev_prefill = p.prefill_seconds;
+            prev_decoding = p.decoding_branches;
+        }
+        out
     }
 
     /// Time-weighted mean of running branches.
@@ -175,6 +215,7 @@ mod tests {
             dataset: "d".into(),
             arrival,
             admitted_at: admit,
+            prefill_done_at: admit,
             finished_at: finish,
             answer: Some(if correct { 1 } else { 2 }),
             truth: 1,
@@ -207,18 +248,32 @@ mod tests {
         let tl = Timeline {
             points: vec![
                 TimelinePoint { t: 0.0, running_branches: 2,
+                                decoding_branches: 2,
                                 running_tokens: 10, kv_pages_used: 3,
-                                queued_requests: 0, cache_hit_tokens: 0 },
+                                queued_requests: 0, cache_hit_tokens: 0,
+                                queued_prefill_tokens: 0,
+                                prefill_seconds: 0.0 },
                 TimelinePoint { t: 1.0, running_branches: 6,
+                                decoding_branches: 5,
                                 running_tokens: 50, kv_pages_used: 9,
-                                queued_requests: 2, cache_hit_tokens: 8 },
+                                queued_requests: 2, cache_hit_tokens: 8,
+                                queued_prefill_tokens: 4,
+                                prefill_seconds: 0.5 },
                 TimelinePoint { t: 3.0, running_branches: 1,
+                                decoding_branches: 0,
                                 running_tokens: 5, kv_pages_used: 1,
-                                queued_requests: 0, cache_hit_tokens: 8 },
+                                queued_requests: 0, cache_hit_tokens: 8,
+                                queued_prefill_tokens: 0,
+                                prefill_seconds: 0.5 },
             ],
         };
         assert_eq!(tl.peak_branches(), 6);
         assert_eq!(tl.peak_tokens(), 50);
+        // Stall series: point 0 has no predecessor (skipped); point 1
+        // follows a round with 2 decodable branches (0.5 - 0.0
+        // absorbed); point 2 follows one with 5 (0.5 - 0.5 = 0.0). A
+        // 4th point after the decodable count hit 0 would be skipped.
+        assert_eq!(tl.decode_stall_series(), vec![0.5, 0.0]);
         // (2*1 + 6*2) / 3 = 14/3
         assert!((tl.mean_branches() - 14.0 / 3.0).abs() < 1e-12);
         assert_eq!(tl.downsample(2).len(), 2);
@@ -231,10 +286,13 @@ mod tests {
             .map(|i| TimelinePoint {
                 t: i as f64,
                 running_branches: i,
+                decoding_branches: i,
                 running_tokens: 10 * i,
                 kv_pages_used: i,
                 queued_requests: 0,
                 cache_hit_tokens: 2 * i,
+                queued_prefill_tokens: i,
+                prefill_seconds: 0.25 * i as f64,
             })
             .collect();
         let tl = Timeline { points };

@@ -168,6 +168,15 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
                      baseline"
                 );
             }
+            if spec.prefill_chunk_tokens > 0 {
+                // Rebase prefills bare prompts monolithically; serving it
+                // with chunking silently off would skew any comparison
+                // against the chunked schedulers.
+                bail!(
+                    "--prefill-chunk is not supported for the rebase \
+                     baseline"
+                );
+            }
             let cfg = RebaseConfig {
                 n_leaves: n,
                 t_round: spec.t_round,
@@ -228,6 +237,8 @@ fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
         kv_capacity_tokens: spec.kv_capacity_tokens,
         kv_page_tokens: spec.kv_page_tokens,
         prefix_cache_pages: spec.prefix_cache_pages,
+        prefill_chunk_tokens: spec.prefill_chunk_tokens,
+        max_batched_prefill_tokens: spec.max_batched_prefill_tokens,
         seed: spec.seed,
     })
 }
@@ -436,6 +447,38 @@ mod tests {
     fn cluster_rejects_unsupported_combos() {
         let s = spec("--method rebase:4 --replicas 2");
         assert!(run(&s).is_err(), "rebase cluster must be rejected");
+        let s = spec("--method rebase:4 --prefill-chunk 16");
+        assert!(run(&s).is_err(), "rebase has no chunked-prefill path");
+    }
+
+    #[test]
+    fn chunked_prefill_serve_end_to_end() {
+        // Prefix-heavy workload, cold caches, streaming prefill: every
+        // request must still finish, the timeline must show a prefill
+        // backlog at some point, and the TTFT split must be ordered.
+        let mut s = spec(
+            "--method sart:4 --prefix-share 1.0 --prefix-templates 4 \
+             --prefix-shots 4 --prefill-chunk 24 --prefill-budget 48 \
+             --rate 4",
+        );
+        s.kv_capacity_tokens = 32768;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        assert!(
+            out.timeline
+                .points
+                .iter()
+                .any(|p| p.queued_prefill_tokens > 0),
+            "long cold headers never queued any prefill"
+        );
+        let last = out.timeline.points.last().unwrap();
+        assert_eq!(last.queued_prefill_tokens, 0, "drained serve");
+        assert!(last.prefill_seconds > 0.0);
+        for o in &out.outcomes {
+            assert!(o.prefill_done_at >= o.admitted_at);
+            assert!(o.finished_at >= o.prefill_done_at);
+            assert!(o.prefill_latency() >= 0.0 && o.ttft() >= 0.0);
+        }
     }
 
     #[test]

@@ -202,6 +202,8 @@ fn prop_scheduler_serves_every_request_exactly_once() {
             kv_capacity_tokens: 16 * (64 + rng.below(1024)),
             kv_page_tokens: 16,
             prefix_cache_pages: 0,
+            prefill_chunk_tokens: 0,
+            max_batched_prefill_tokens: 0,
             seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -265,6 +267,8 @@ fn prop_early_stopping_dominates_waiting_for_all() {
                 kv_capacity_tokens: 16384,
                 kv_page_tokens: 16,
                 prefix_cache_pages: 0,
+                prefill_chunk_tokens: 0,
+                max_batched_prefill_tokens: 0,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -327,6 +331,8 @@ fn prop_scheduler_audit_matches_fast_path() {
                 kv_capacity_tokens: kv_tokens,
                 kv_page_tokens: 16,
                 prefix_cache_pages: 0,
+                prefill_chunk_tokens: 0,
+                max_batched_prefill_tokens: 0,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -397,6 +403,8 @@ impl TemplatedCase {
             kv_capacity_tokens: self.kv_tokens,
             kv_page_tokens: 16,
             prefix_cache_pages: self.prefix_cache_pages,
+            prefill_chunk_tokens: 0,
+            max_batched_prefill_tokens: 0,
             seed: self.seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -615,6 +623,8 @@ fn case_sched_cfg(c: &ClusterCase) -> SchedConfig {
         kv_capacity_tokens: c.kv_tokens,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: c.seed,
     }
 }
@@ -800,6 +810,8 @@ fn affinity_routing_beats_p2c_on_cache_hits() {
                 kv_capacity_tokens: 32768,
                 kv_page_tokens: 16,
                 prefix_cache_pages: 24,
+                prefill_chunk_tokens: 0,
+                max_batched_prefill_tokens: 0,
                 seed: 42,
             },
             seed: 42,

@@ -38,6 +38,8 @@ fn run(policy: Policy, n_requests: usize, rate: f64, slots: usize,
         kv_capacity_tokens: kv_tokens,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -201,6 +203,8 @@ fn prefix_cache_saves_over_30pct_of_prefill_tokens() {
         kv_capacity_tokens: 32768,
         kv_page_tokens: 16,
         prefix_cache_pages: 64,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: 5,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -336,6 +340,8 @@ fn toy_cfg(policy: Policy, max_new: usize) -> SchedConfig {
         kv_capacity_tokens: 4096,
         kv_page_tokens: 16,
         prefix_cache_pages: 0,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
         seed: 0,
     }
 }

@@ -1,0 +1,259 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json reports and enforce the CI bench gates.
+
+This file is the single source of truth for every bench assertion CI
+makes — the workflow calls it once instead of carrying inline heredocs,
+and it runs identically on a laptop:
+
+    python3 tools/check_bench.py BENCH_*.json
+    python3 tools/check_bench.py --require cluster,prefix,chunked BENCH_*.json
+    python3 tools/check_bench.py --delta path/to/baseline BENCH_*.json
+
+Modes
+-----
+* default: schema-validate every given report, print its metrics, and
+  apply the per-bench headline gates (below). Exit 1 if anything fails.
+* ``--require a,b,c``: additionally fail if no given file carries one of
+  the named benches (catches a bench target silently not running).
+* ``--delta DIR``: after the gates, print per-metric deltas against the
+  same-named reports in DIR (a downloaded ``bench-reports-<sha>``
+  artifact from main). Missing baselines are reported, never fatal —
+  the delta is a trajectory read-out, not a gate.
+
+Gates (bench name → assertions)
+-------------------------------
+* ``cluster``: ``p2c_vs_rr_p99_ratio < 1.0`` — power-of-two-choices must
+  beat round-robin on p99 (a ratio drifting to 1.0 means the dispatch
+  load snapshot went stale or the bench left the saturation regime).
+* ``prefix``: ``prefill_tokens_saved_frac > 0`` (the radix cache saved
+  something on the prefix-heavy config) and
+  ``aff_vs_p2c_hit_rate_delta > 0`` (prefix-affinity routing beats p2c
+  on cluster-wide hit rate at R=4).
+* ``chunked``: ``p99_decode_stall_ratio_chunked_vs_mono < 1.0`` —
+  streaming a long cold header in chunks must cut the p99 per-round
+  decode stall versus monolithic prefill.
+* ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
+  the trajectory record (absolute values are machine-dependent, and CI
+  smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
+  EXPERIMENTS.md §Reading BENCH_scheduler.json).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+RESULT_FIELDS = ("name", "iters", "mean_us", "p50_us", "p95_us")
+
+
+class GateFailure(Exception):
+    """A report failed validation or a headline assertion."""
+
+
+def _fail(path: str, msg: str) -> None:
+    raise GateFailure(f"{path}: {msg}")
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def load_report(path: str) -> dict:
+    """Parse and schema-validate one BENCH_*.json report."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise GateFailure(f"{path}: unreadable or invalid JSON: {e}")
+    if not isinstance(doc, dict):
+        _fail(path, "top level must be an object")
+    for key in ("bench", "results", "metrics"):
+        if key not in doc:
+            _fail(path, f"missing top-level key `{key}`")
+    if not isinstance(doc["bench"], str) or not doc["bench"]:
+        _fail(path, "`bench` must be a non-empty string")
+    if not isinstance(doc["results"], list):
+        _fail(path, "`results` must be an array")
+    for i, row in enumerate(doc["results"]):
+        if not isinstance(row, dict):
+            _fail(path, f"results[{i}] must be an object")
+        for field in RESULT_FIELDS:
+            if field not in row:
+                _fail(path, f"results[{i}] missing `{field}`")
+        if not isinstance(row["name"], str) or not row["name"]:
+            _fail(path, f"results[{i}].name must be a non-empty string")
+        if not _is_num(row["iters"]) or row["iters"] < 1:
+            _fail(path, f"results[{i}].iters must be a positive number")
+        for field in ("mean_us", "p50_us", "p95_us"):
+            v = row[field]
+            if not _is_num(v) or not math.isfinite(v) or v < 0:
+                _fail(
+                    path,
+                    f"results[{i}].{field} must be a finite non-negative "
+                    f"number, got {v!r}",
+                )
+    if not isinstance(doc["metrics"], dict):
+        _fail(path, "`metrics` must be an object")
+    for k, v in doc["metrics"].items():
+        if not _is_num(v) or not math.isfinite(v):
+            _fail(path, f"metrics[{k!r}] must be a finite number, got {v!r}")
+    return doc
+
+
+def _metric(doc: dict, path: str, key: str) -> float:
+    if key not in doc["metrics"]:
+        _fail(path, f"gated metric `{key}` missing from `metrics`")
+    return float(doc["metrics"][key])
+
+
+def gate_cluster(doc: dict, path: str) -> None:
+    ratio = _metric(doc, path, "p2c_vs_rr_p99_ratio")
+    if not ratio < 1.0:
+        _fail(
+            path,
+            f"p2c_vs_rr_p99_ratio = {ratio:.3f}: power-of-two-choices must "
+            "beat round-robin on p99 (stale Scheduler::load snapshot, or "
+            "the bench left the saturation regime?)",
+        )
+
+
+def gate_prefix(doc: dict, path: str) -> None:
+    saved = _metric(doc, path, "prefill_tokens_saved_frac")
+    if not saved > 0.0:
+        _fail(
+            path,
+            f"prefill_tokens_saved_frac = {saved:.3f}: the radix cache "
+            "saved nothing on the prefix-heavy config (broken lookup or "
+            "interning?)",
+        )
+    delta = _metric(doc, path, "aff_vs_p2c_hit_rate_delta")
+    if not delta > 0.0:
+        _fail(
+            path,
+            f"aff_vs_p2c_hit_rate_delta = {delta:.3f}: prefix-affinity "
+            "routing must achieve a strictly higher cache-hit rate than "
+            "p2c at R=4",
+        )
+
+
+def gate_chunked(doc: dict, path: str) -> None:
+    ratio = _metric(doc, path, "p99_decode_stall_ratio_chunked_vs_mono")
+    if not ratio < 1.0:
+        _fail(
+            path,
+            f"p99_decode_stall_ratio_chunked_vs_mono = {ratio:.3f}: "
+            "chunked prefill must cut the p99 per-round decode stall vs "
+            "monolithic (is the per-round budget being honoured, or did "
+            "the trace lose its long cold headers?)",
+        )
+
+
+GATES = {
+    "cluster": gate_cluster,
+    "prefix": gate_prefix,
+    "chunked": gate_chunked,
+}
+
+
+def print_metrics(doc: dict) -> None:
+    name = doc["bench"]
+    for k in sorted(doc["metrics"]):
+        print(f"  {name} {k} = {doc['metrics'][k]:.6g}")
+
+
+def print_delta(doc: dict, path: str, baseline_dir: str) -> None:
+    base_path = os.path.join(baseline_dir, os.path.basename(path))
+    if not os.path.exists(base_path):
+        print(f"  (no baseline for {os.path.basename(path)})")
+        return
+    try:
+        base = load_report(base_path)
+    except GateFailure as e:
+        print(f"  (baseline unreadable: {e})")
+        return
+    name = doc["bench"]
+    for k in sorted(doc["metrics"]):
+        new = doc["metrics"][k]
+        if k not in base["metrics"]:
+            print(f"  {name} {k}: {new:.6g} (new metric)")
+            continue
+        old = base["metrics"][k]
+        if old != 0:
+            pct = 100.0 * (new - old) / abs(old)
+            print(f"  {name} {k}: {old:.6g} -> {new:.6g} ({pct:+.1f}%)")
+        else:
+            print(f"  {name} {k}: {old:.6g} -> {new:.6g}")
+    for k in sorted(set(base["metrics"]) - set(doc["metrics"])):
+        print(f"  {name} {k}: dropped (was {base['metrics'][k]:.6g})")
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate BENCH_*.json and enforce the CI bench gates."
+    )
+    ap.add_argument("files", nargs="+", help="BENCH_*.json reports")
+    ap.add_argument(
+        "--require",
+        default="",
+        metavar="NAMES",
+        help="comma-separated bench names that must be present "
+        "(e.g. cluster,prefix,chunked)",
+    )
+    ap.add_argument(
+        "--delta",
+        default=None,
+        metavar="DIR",
+        help="print per-metric deltas vs same-named baseline reports in DIR",
+    )
+    args = ap.parse_args(argv)
+
+    failures: list[str] = []
+    seen: set[str] = set()
+    docs: list[tuple[str, dict]] = []
+    for path in args.files:
+        try:
+            doc = load_report(path)
+        except GateFailure as e:
+            failures.append(str(e))
+            continue
+        docs.append((path, doc))
+        seen.add(doc["bench"])
+        print(f"ok: {path} (bench `{doc['bench']}`, "
+              f"{len(doc['results'])} result rows, "
+              f"{len(doc['metrics'])} metrics)")
+        print_metrics(doc)
+        gate = GATES.get(doc["bench"])
+        if gate is not None:
+            try:
+                gate(doc, path)
+                print(f"  gate `{doc['bench']}`: PASS")
+            except GateFailure as e:
+                failures.append(str(e))
+                print(f"  gate `{doc['bench']}`: FAIL")
+
+    for name in filter(None, args.require.split(",")):
+        if name not in seen:
+            failures.append(
+                f"required bench `{name}` missing from "
+                f"{[os.path.basename(f) for f in args.files]}"
+            )
+
+    if args.delta is not None:
+        print(f"\nper-metric deltas vs baseline `{args.delta}`:")
+        for path, doc in docs:
+            print_delta(doc, path, args.delta)
+
+    if failures:
+        print("\nbench gate failures:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nall bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
