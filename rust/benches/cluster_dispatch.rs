@@ -106,6 +106,7 @@ fn run_cluster(lb: LbPolicy, trace: &[Request]) -> ClusterResult {
         sched: sched_cfg(),
         seed: SEED,
         audit: false,
+        gossip_rounds: 0,
     };
     serve_cluster(&cfg, &mut engines, &mut prms, trace)
         .expect("cluster serve")

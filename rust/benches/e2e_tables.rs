@@ -23,6 +23,7 @@ fn spec() -> ServeSpec {
         prm: PrmChoice::Oracle { sigma: 0.08 },
         replicas: 1,
         lb: LbPolicy::RoundRobin,
+        gossip_rounds: 0,
         slots: 16,
         kv_capacity_tokens: 8192,
         kv_page_tokens: 16,

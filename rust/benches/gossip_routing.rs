@@ -1,0 +1,174 @@
+//! Bench: prefix-digest gossip routing vs probe-per-replica affinity.
+//!
+//! Serves one prefix-heavy trace through `cluster::serve_cluster` at
+//! R = 4 under eviction pressure (more header templates than any single
+//! replica's retention budget holds) and records, in `BENCH_gossip.json`
+//! (schema in EXPERIMENTS.md §Benches):
+//!
+//! 1. **Does routing on advertised digests keep the hits?**
+//!    `gossip_vs_probe_hit_rate_ratio` = cluster-wide cache-hit rate with
+//!    gossip (period `GOSSIP_ROUNDS`) over the probe-based policy's.
+//!    `tools/check_bench.py` gates this ≥ 0.95: staleness may cost a few
+//!    re-prefills, but the table must keep templates pinned where their
+//!    pages live.
+//! 2. **Does it actually remove the dispatch-hot-path scan?**
+//!    `probe_calls_per_request_gossip` must be exactly 0 (the probe run
+//!    records R per arrival for contrast) — also gated.
+//! 3. **What does staleness cost?** `stale_hits_gossip`,
+//!    `advertisements_gossip` and `digest_table_digests_gossip` give the
+//!    trade's observability; p2c's hit rate anchors the floor both
+//!    affinity spellings must clear.
+//!
+//!     cargo bench --bench gossip_routing
+
+use sart::cluster::{serve_cluster, ClusterConfig, ClusterResult, LbPolicy};
+use sart::coordinator::{Policy, SchedConfig};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::testkit::bench::{self, BenchReport};
+use sart::workload::{templated_trace, Request, TaskSpec};
+
+const REPLICAS: usize = 4;
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 32768;
+/// Per-replica retention budget: ~2.5 of the 4 templates — small enough
+/// that scattering templates across replicas churns every cache.
+const CACHE_PAGES: usize = 24;
+const GOSSIP_ROUNDS: usize = 8;
+const SEED: u64 = 42;
+const N_REQUESTS: usize = 192;
+const RATE: f64 = 8.0;
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gaokao()
+}
+
+fn sched_cfg() -> SchedConfig {
+    SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: KV_TOKENS,
+        kv_page_tokens: 16,
+        prefix_cache_pages: CACHE_PAGES,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
+        seed: SEED,
+    }
+}
+
+fn run_cluster(
+    lb: LbPolicy,
+    gossip_rounds: usize,
+    trace: &[Request],
+) -> ClusterResult {
+    let mut engines: Vec<Box<dyn Engine>> = (0..REPLICAS)
+        .map(|_| {
+            let mut e =
+                SimEngine::new(SLOTS, 512, spec(), SimCostModel::default());
+            e.set_prompt_bucket(256);
+            Box::new(e) as Box<dyn Engine>
+        })
+        .collect();
+    let mut prms: Vec<Box<dyn PrmScorer>> = (0..REPLICAS)
+        .map(|i| {
+            Box::new(OraclePrm::new(0.08, SEED ^ 7 ^ ((i as u64) << 32)))
+                as Box<dyn PrmScorer>
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        replicas: REPLICAS,
+        lb,
+        sched: sched_cfg(),
+        seed: SEED,
+        audit: false,
+        gossip_rounds,
+    };
+    serve_cluster(&cfg, &mut engines, &mut prms, trace)
+        .expect("gossip bench serve")
+}
+
+fn main() {
+    println!(
+        "== gossip_routing ({REPLICAS} replicas x {SLOTS} slots, \
+         {N_REQUESTS} requests, cache {CACHE_PAGES} pages, \
+         gossip period {GOSSIP_ROUNDS}) =="
+    );
+    let mut report = BenchReport::new("gossip");
+
+    // 4 templates over a 0.85 share: the same eviction-pressure shape
+    // BENCH_prefix uses for its affinity-vs-p2c comparison.
+    let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 0.85, 4, 3);
+
+    let probe = run_cluster(LbPolicy::PrefixAffinity, 0, &trace);
+    let gossip = run_cluster(LbPolicy::PrefixAffinity, GOSSIP_ROUNDS, &trace);
+    let p2c = run_cluster(LbPolicy::PowerOfTwoChoices, 0, &trace);
+
+    let hit_probe = probe.cache_hit_rate();
+    let hit_gossip = gossip.cache_hit_rate();
+    let hit_p2c = p2c.cache_hit_rate();
+    let ratio = hit_gossip / hit_probe.max(1e-12);
+    let n = trace.len() as f64;
+    let probes_per_req_probe = probe.gossip.probe_calls as f64 / n;
+    let probes_per_req_gossip = gossip.gossip.probe_calls as f64 / n;
+    println!(
+        "cache-hit rate: probe-affinity {hit_probe:.3} vs gossip-affinity \
+         {hit_gossip:.3} (ratio {ratio:.3}, gate ≥ 0.95) vs p2c {hit_p2c:.3}"
+    );
+    println!(
+        "dispatch cost: {probes_per_req_probe:.1} probes/request (probe \
+         mode) vs {probes_per_req_gossip:.1} (gossip, gate == 0); gossip \
+         paid {} advertisements, {} digests in table, {} stale hits",
+        gossip.gossip.advertisements,
+        gossip.gossip.digest_table_digests,
+        gossip.gossip.stale_hits,
+    );
+
+    report.metric("cache_hit_rate_probe", hit_probe);
+    report.metric("cache_hit_rate_gossip", hit_gossip);
+    report.metric("cache_hit_rate_p2c", hit_p2c);
+    report.metric("gossip_vs_probe_hit_rate_ratio", ratio);
+    report.metric("probe_calls_per_request_probe", probes_per_req_probe);
+    report.metric("probe_calls_per_request_gossip", probes_per_req_gossip);
+    report.metric("stale_hits_gossip", gossip.gossip.stale_hits as f64);
+    report.metric(
+        "advertisements_gossip",
+        gossip.gossip.advertisements as f64,
+    );
+    report.metric(
+        "digest_table_digests_gossip",
+        gossip.gossip.digest_table_digests as f64,
+    );
+
+    // Wall cost of the whole co-simulated serve per routing mode (the
+    // sim engine does no real compute, so this is coordination +
+    // dispatch bookkeeping — the probe scan's O(R) walks included).
+    report.push(bench::run(
+        &format!("cluster serve {N_REQUESTS} reqs (probe affinity)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(run_cluster(
+                LbPolicy::PrefixAffinity,
+                0,
+                &trace,
+            ));
+        },
+    ));
+    report.push(bench::run(
+        &format!("cluster serve {N_REQUESTS} reqs (gossip affinity)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(run_cluster(
+                LbPolicy::PrefixAffinity,
+                GOSSIP_ROUNDS,
+                &trace,
+            ));
+        },
+    ));
+
+    report.write().expect("writing BENCH_gossip.json");
+}

@@ -117,6 +117,7 @@ fn cluster_hit_rate(
         sched: sched_cfg(cache_pages),
         seed: SEED,
         audit: false,
+        gossip_rounds: 0,
     };
     let res = serve_cluster(&cfg, &mut engines, &mut prms, trace)
         .expect("cluster serve");

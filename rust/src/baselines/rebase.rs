@@ -280,6 +280,8 @@ impl<'e> RebaseScheduler<'e> {
                     .iter()
                     .map(|c| c.2)
                     .collect(),
+                // Rebase never consults the cross-request cache.
+                cached_prompt_tokens: 0,
             });
         }
         self.kv.check_invariants()?;

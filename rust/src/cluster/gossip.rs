@@ -1,0 +1,207 @@
+//! Cross-replica prefix-digest gossip: the dispatcher-side table that
+//! replicas advertise their resident prefix digests into.
+//!
+//! The probe-based `PrefixAffinity` policy asks every replica's radix
+//! tree for the longest resident prefix at each arrival — O(R) tree
+//! walks per dispatch, and the knowledge dies with the dispatcher. With
+//! gossip, each replica periodically advertises the digest set of its
+//! interned full-page prefixes
+//! ([`KvCacheManager::advertised_digests`](crate::kvcache::KvCacheManager::advertised_digests))
+//! and routing becomes a [`DigestTable::lookup`]:
+//! hash the arriving prompt's page prefixes with the same rolling
+//! [`page_digest`](crate::kvcache::page_digest) chain and find the
+//! longest one any replica advertises.
+//!
+//! The table is deliberately *stale-tolerant*: an advertisement is a
+//! snapshot, and the replica may have evicted (or newly interned) pages
+//! since. A stale hit only routes a request to a replica that must
+//! re-prefill — admission walks the real tree, so outcomes are always
+//! correct; the cluster layer counts these as `stale_hits` and the next
+//! advertisement retracts the dead digests. That trade is what lets the
+//! dispatch hot path drop its per-arrival probe scan.
+
+use crate::kvcache::{page_digest, DIGEST_SEED};
+use crate::tokenizer::Token;
+use std::collections::HashSet;
+
+/// Per-replica advertised digest sets plus the bookkeeping the cluster
+/// metrics report (advertisement count, table size).
+#[derive(Debug, Clone)]
+pub struct DigestTable {
+    page_tokens: usize,
+    sets: Vec<HashSet<u64>>,
+    advertisements: usize,
+}
+
+impl DigestTable {
+    /// Empty table for `replicas` replicas advertising `page_tokens`-page
+    /// digests (must match the replicas' kv page size, or prompts hash to
+    /// different chains than the trees advertise).
+    pub fn new(replicas: usize, page_tokens: usize) -> DigestTable {
+        assert!(page_tokens > 0, "digest table needs a page size");
+        DigestTable {
+            page_tokens,
+            sets: vec![HashSet::new(); replicas],
+            advertisements: 0,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Replace `replica`'s advertised set wholesale (full-state
+    /// advertisement; digests absent from the new set are retracted).
+    pub fn advertise(
+        &mut self,
+        replica: usize,
+        digests: impl IntoIterator<Item = u64>,
+    ) {
+        self.advertisements += 1;
+        let set = &mut self.sets[replica];
+        set.clear();
+        set.extend(digests);
+    }
+
+    /// Advertisements received since construction.
+    pub fn advertisements_total(&self) -> usize {
+        self.advertisements
+    }
+
+    /// Σ advertised digests over all replicas (table size metric).
+    pub fn len(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.iter().all(|s| s.is_empty())
+    }
+
+    /// Does `replica`'s advertised set name this digest? (Staleness
+    /// regression tests.)
+    pub fn contains(&self, replica: usize, digest: u64) -> bool {
+        self.sets[replica].contains(&digest)
+    }
+
+    /// Longest advertised full-page prefix of `prompt`: the matched token
+    /// count and every replica advertising that prefix (ascending index).
+    /// `(0, [])` when no replica advertises any prefix of it.
+    ///
+    /// Advertised sets are ancestor-closed — interning creates whole
+    /// root chains and eviction is leaf-only, so a replica advertising a
+    /// depth-k prefix advertises every shallower one too. The advertised
+    /// depths of any prompt therefore form a prefix of its digest chain:
+    /// hash and test one page at a time, shallow→deep, and stop at the
+    /// first depth nobody advertises. A cold prompt — the common case at
+    /// low prefix share — costs one page's hashing and one
+    /// short-circuited scan over the replica sets, not work per page.
+    pub fn lookup(&self, prompt: &[Token]) -> (usize, Vec<usize>) {
+        let mut matched = 0usize;
+        let mut deepest = DIGEST_SEED;
+        let mut h = DIGEST_SEED;
+        for page in prompt.chunks_exact(self.page_tokens) {
+            h = page_digest(h, page);
+            if !self.sets.iter().any(|s| s.contains(&h)) {
+                break;
+            }
+            matched += 1;
+            deepest = h;
+        }
+        if matched == 0 {
+            return (0, Vec::new());
+        }
+        let replicas: Vec<usize> = self
+            .sets
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.contains(&deepest))
+            .map(|(i, _)| i)
+            .collect();
+        (matched * self.page_tokens, replicas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{prompt_page_digests, KvCacheManager};
+
+    fn prompt(base: i32, len: usize) -> Vec<Token> {
+        (base..base + len as i32).collect()
+    }
+
+    #[test]
+    fn lookup_finds_longest_advertised_prefix() {
+        let mut t = DigestTable::new(3, 16);
+        assert!(t.is_empty());
+        let p = prompt(0, 64); // 4 pages
+        let ds = prompt_page_digests(&p, 16);
+        // Replica 0 advertises 2 pages deep, replica 2 all 4.
+        t.advertise(0, ds[..2].to_vec());
+        t.advertise(2, ds.clone());
+        assert_eq!(t.advertisements_total(), 2);
+        assert_eq!(t.len(), 6);
+        let (matched, reps) = t.lookup(&p);
+        assert_eq!(matched, 64);
+        assert_eq!(reps, vec![2]);
+        // A 2-page truncation matches both advertisers.
+        let (matched, reps) = t.lookup(&p[..40]);
+        assert_eq!(matched, 32);
+        assert_eq!(reps, vec![0, 2]);
+        // Cold prompt: no match, no candidates.
+        assert_eq!(t.lookup(&prompt(500, 64)), (0, Vec::new()));
+        // Sub-page prompts never match.
+        assert_eq!(t.lookup(&p[..10]), (0, Vec::new()));
+    }
+
+    #[test]
+    fn advertise_replaces_the_whole_set() {
+        let mut t = DigestTable::new(2, 16);
+        let a = prompt(0, 32);
+        let b = prompt(100, 32);
+        t.advertise(1, prompt_page_digests(&a, 16));
+        assert_eq!(t.lookup(&a), (32, vec![1]));
+        // Re-advertising with only b retracts a.
+        t.advertise(1, prompt_page_digests(&b, 16));
+        assert_eq!(t.lookup(&a), (0, Vec::new()));
+        assert_eq!(t.lookup(&b), (32, vec![1]));
+        assert_eq!(t.advertisements_total(), 2);
+    }
+
+    #[test]
+    fn table_matches_live_tree_after_fresh_advertisement() {
+        // An advertisement taken from a real kv manager must reproduce
+        // the tree's own longest-prefix answer for any probe prompt.
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let mut shared = prompt(0, 32);
+        shared.extend(prompt(700, 32)); // 4 pages: 2 shared + 2 tail
+        let other = prompt(300, 48);
+        for p in [&shared, &other] {
+            let a = kv.admit_tokens(p, 16, 1).unwrap();
+            for br in a.branches {
+                kv.release_branch(br).unwrap();
+            }
+        }
+        let mut t = DigestTable::new(1, 16);
+        t.advertise(0, kv.advertised_digests());
+        for probe in [
+            shared.clone(),
+            shared[..40].to_vec(),
+            {
+                let mut div = prompt(0, 32);
+                div.extend(prompt(900, 32));
+                div
+            },
+            other.clone(),
+            prompt(5000, 64),
+        ] {
+            let (matched, reps) = t.lookup(&probe);
+            assert_eq!(
+                matched,
+                kv.cached_prefix_tokens(&probe),
+                "table disagrees with the tree on {probe:?}"
+            );
+            assert_eq!(reps.is_empty(), matched == 0);
+        }
+    }
+}

@@ -31,6 +31,28 @@
 //! trace, so outcomes and timeline are byte-identical — the property
 //! tests assert this for every policy. The layer therefore costs nothing
 //! to keep on the single-engine path.
+//!
+//! # Prefix-digest gossip (`gossip_rounds`)
+//!
+//! With `gossip_rounds = 0`, [`LbPolicy::PrefixAffinity`] probes every
+//! replica's radix tree per arrival — O(R) tree walks on the dispatch
+//! hot path. With `gossip_rounds = G ≥ 1`, each replica instead
+//! re-advertises its resident prefix-digest set into a [`DigestTable`]
+//! once it has run `G` scheduler steps since its last advertisement
+//! (checked at each arrival instant, mirroring how a deployment's gossip
+//! period is measured in replica rounds, not dispatcher events), and
+//! routing becomes a table lookup: longest advertised prefix match, ties
+//! broken by fewest requests in system, cold prompts falling back to
+//! power-of-two-choices. `G = 1` keeps the table exactly as fresh as the
+//! probes (a replica's tree only changes inside its own steps), which is
+//! what the byte-identity property tests pin; larger `G` trades routing
+//! freshness for advertisement traffic. Stale table entries are only a
+//! placement pessimization — admission walks the real tree — and are
+//! counted in [`GossipStats::stale_hits`].
+
+pub mod gossip;
+
+pub use gossip::DigestTable;
 
 use crate::coordinator::{
     ClockHandle, RequestOutcome, SchedConfig, Scheduler, ServeResult,
@@ -128,6 +150,33 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Enable per-round audit cross-checks in every replica (tests).
     pub audit: bool,
+    /// Prefix-digest gossip period for [`LbPolicy::PrefixAffinity`]: a
+    /// replica re-advertises its digest set after running this many
+    /// scheduler steps since its last advertisement. 0 = probe every
+    /// replica's tree per arrival (the pre-gossip behaviour, property-
+    /// tested byte-identical to gossip with fresh advertisements).
+    pub gossip_rounds: usize,
+}
+
+/// Gossip-layer accounting of one cluster serve (all zero when gossip is
+/// off or the policy never consults it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GossipStats {
+    /// The configured advertisement period (`ClusterConfig::gossip_rounds`).
+    pub gossip_rounds: usize,
+    /// Full-state advertisements replicas pushed into the digest table.
+    pub advertisements: usize,
+    /// Σ advertised digests across replicas at the end of the serve.
+    pub digest_table_digests: usize,
+    /// Requests routed on a table match the replica could no longer fully
+    /// honour at admission (evicted between advertisement and admission):
+    /// the replica re-prefilled the difference. A routing pessimization,
+    /// never a correctness issue.
+    pub stale_hits: usize,
+    /// Per-replica radix-tree probes made by routing decisions (O(R) per
+    /// prefix-affinity arrival in probe mode; 0 with gossip on — the
+    /// dispatch-cost headline of BENCH_gossip.json).
+    pub probe_calls: usize,
 }
 
 /// Result of a cluster serve.
@@ -141,6 +190,10 @@ pub struct ClusterResult {
     /// Replica index each trace position was dispatched to.
     pub assignments: Vec<usize>,
     pub lb: LbPolicy,
+    /// Gossip-layer accounting (advertisements, table size, stale hits,
+    /// probe calls). All zero except `gossip_rounds` when the policy
+    /// never consulted the digest table.
+    pub gossip: GossipStats,
     pub wall_seconds: f64,
 }
 
@@ -267,6 +320,7 @@ impl ClusterResult {
             per_replica_mean_branches,
             per_replica_tokens,
             per_replica_engine_seconds,
+            gossip: self.gossip,
         }
     }
 }
@@ -290,6 +344,8 @@ pub struct ClusterReport {
     pub request_skew: f64,
     /// Cluster-wide prefix-cache hit rate (0.0 with the cache disabled).
     pub cache_hit_rate: f64,
+    /// Gossip-layer accounting (see [`GossipStats`]).
+    pub gossip: GossipStats,
 }
 
 /// max/mean skew; 1.0 for empty or all-zero inputs.
@@ -309,15 +365,18 @@ fn skew_f64(xs: &[f64]) -> f64 {
 
 /// Step `s` until its clock reaches `t` or it runs out of work. An idle
 /// replica's state cannot change before its next dispatch, so stopping
-/// early is exact, not an approximation.
-fn catch_up(s: &mut Scheduler, t: f64) -> Result<()> {
+/// early is exact, not an approximation. Returns the number of steps
+/// worked (the gossip layer's advertisement clock — a replica's radix
+/// tree can only change inside its own steps).
+fn catch_up(s: &mut Scheduler, t: f64) -> Result<usize> {
+    let mut steps = 0usize;
     while s.now() < t {
         match s.step()? {
-            StepOutcome::Worked => {}
+            StepOutcome::Worked => steps += 1,
             StepOutcome::Idle => break,
         }
     }
-    Ok(())
+    Ok(steps)
 }
 
 /// Two random probes, join the shorter queue (also the prefix-affinity
@@ -342,12 +401,16 @@ fn pick_p2c(scheds: &[Scheduler], rng: &mut Rng) -> usize {
 
 /// Choose the replica for one arriving request. All load reads happen at
 /// the arrival instant (the caller caught every replica up to it).
+/// `probe_calls` is incremented at the probe site for every per-replica
+/// radix-tree probe made (the dispatch-cost metric gossip removes), so
+/// the published counter can never drift from the work actually done.
 fn pick_replica(
     lb: LbPolicy,
     scheds: &[Scheduler],
     req: &Request,
     rr_next: &mut usize,
     rng: &mut Rng,
+    probe_calls: &mut usize,
 ) -> usize {
     let r = scheds.len();
     if r == 1 {
@@ -373,11 +436,15 @@ fn pick_replica(
             // Probe every replica's radix cache for the longest resident
             // prefix of this prompt; route to the best hit, breaking ties
             // by queue depth (then index, for determinism). A cold prompt
-            // has no affinity anywhere — fall back to p2c.
+            // has no affinity anywhere — fall back to p2c. (Gossip mode
+            // replaces this scan with `pick_gossip`.)
             let prompt = req.prompt_tokens();
             let hits: Vec<usize> = scheds
                 .iter()
-                .map(|s| s.cached_prefix_tokens(&prompt))
+                .map(|s| {
+                    *probe_calls += 1;
+                    s.cached_prefix_tokens(&prompt)
+                })
                 .collect();
             let best = hits.iter().copied().max().unwrap_or(0);
             if best == 0 {
@@ -389,6 +456,33 @@ fn pick_replica(
                 .unwrap_or(0)
         }
     }
+}
+
+/// Gossip-mode prefix affinity: route on the digest table instead of
+/// probing trees. Same decision rule as the probe path — longest
+/// advertised prefix, ties by fewest requests in system (then index),
+/// cold → power-of-two-choices — so fresh advertisements reproduce probe
+/// routing byte for byte (property-tested). Returns the chosen replica
+/// and the advertised match length the table promised (0 on cold /
+/// fallback routes; the caller compares it against the admission's
+/// actual cache coverage to count stale hits).
+fn pick_gossip(
+    table: &DigestTable,
+    scheds: &[Scheduler],
+    req: &Request,
+    rng: &mut Rng,
+) -> (usize, usize) {
+    debug_assert!(scheds.len() >= 2, "gossip routing needs replicas");
+    let prompt = req.prompt_tokens();
+    let (matched_tokens, candidates) = table.lookup(&prompt);
+    if matched_tokens == 0 {
+        return (pick_p2c(scheds, rng), 0);
+    }
+    let idx = candidates
+        .into_iter()
+        .min_by_key(|&i| (scheds[i].load().requests_in_system(), i))
+        .unwrap_or(0);
+    (idx, matched_tokens)
 }
 
 /// Serve a trace across `cfg.replicas` engine replicas (virtual time
@@ -441,13 +535,44 @@ pub fn serve_cluster(
     let mut rng = Rng::new(cfg.seed ^ 0x00D1_5BA7);
     let mut rr_next = 0usize;
     let mut assignments = Vec::with_capacity(trace.len());
-    for req in trace {
+    // Gossip state: the digest table, each replica's steps since its
+    // last advertisement, and the table-promised match per dispatch
+    // (compared against admission-time coverage to count stale hits).
+    let gossip_on =
+        cfg.gossip_rounds > 0 && cfg.lb == LbPolicy::PrefixAffinity && r > 1;
+    let mut table = DigestTable::new(r, cfg.sched.kv_page_tokens);
+    let mut steps_since_advert = vec![0usize; r];
+    let mut expected_match = vec![0usize; trace.len()];
+    let mut probe_calls = 0usize;
+    for (pos, req) in trace.iter().enumerate() {
         // Advance every replica to the arrival instant so the policy sees
         // true loads, then dispatch.
-        for s in scheds.iter_mut() {
-            catch_up(s, req.arrival)?;
+        for (i, s) in scheds.iter_mut().enumerate() {
+            steps_since_advert[i] += catch_up(s, req.arrival)?;
         }
-        let idx = pick_replica(cfg.lb, &scheds, req, &mut rr_next, &mut rng);
+        let idx = if gossip_on {
+            // Advertisement stepping: a replica whose gossip period
+            // elapsed (≥ G steps of its own since the last push)
+            // refreshes its table row before this routing decision.
+            for (i, steps) in steps_since_advert.iter_mut().enumerate() {
+                if *steps >= cfg.gossip_rounds {
+                    table.advertise(i, scheds[i].advertised_digests());
+                    *steps = 0;
+                }
+            }
+            let (idx, expected) = pick_gossip(&table, &scheds, req, &mut rng);
+            expected_match[pos] = expected;
+            idx
+        } else {
+            pick_replica(
+                cfg.lb,
+                &scheds,
+                req,
+                &mut rr_next,
+                &mut rng,
+                &mut probe_calls,
+            )
+        };
         scheds[idx].dispatch(req.clone())?;
         assignments.push(idx);
     }
@@ -478,11 +603,28 @@ pub fn serve_cluster(
         );
     }
 
+    // Stale gossip hits: the table promised a prefix match the replica
+    // could no longer fully serve by the time the request was admitted
+    // (evicted between advertisement and admission — the request simply
+    // re-prefilled the difference).
+    let stale_hits = expected_match
+        .iter()
+        .zip(&outcomes)
+        .filter(|&(&exp, o)| exp > 0 && o.cached_prompt_tokens < exp)
+        .count();
+
     Ok(ClusterResult {
         outcomes,
         replica_results,
         assignments,
         lb: cfg.lb,
+        gossip: GossipStats {
+            gossip_rounds: cfg.gossip_rounds,
+            advertisements: table.advertisements_total(),
+            digest_table_digests: table.len(),
+            stale_hits,
+            probe_calls,
+        },
         wall_seconds: wall0.elapsed().as_secs_f64(),
     })
 }

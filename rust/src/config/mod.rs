@@ -195,6 +195,18 @@ pub struct ServeSpec {
     pub replicas: usize,
     /// Load-balancing policy across replicas (ignored at `replicas = 1`).
     pub lb: LbPolicy,
+    /// Prefix-digest gossip period for `--lb prefix-affinity`
+    /// (`--gossip-rounds`): replicas re-advertise their digest sets into
+    /// the dispatcher's table every this-many scheduler steps, and
+    /// routing becomes a table lookup instead of a per-replica tree
+    /// probe. 0 (the default) = probe-per-replica, the pre-gossip
+    /// behaviour; a nonzero period with any other policy is rejected
+    /// (it would be silently ignored). `--replicas 1` keeps accepting a
+    /// period — placement is forced either way (the cluster-layer
+    /// property pins R = 1 with gossip on byte-identical to the
+    /// single-engine serve), and rejecting it would break `--replicas`
+    /// sweeps under fixed affinity flags.
+    pub gossip_rounds: usize,
     pub slots: usize,
     pub kv_capacity_tokens: usize,
     pub kv_page_tokens: usize,
@@ -250,6 +262,15 @@ impl ServeSpec {
         if replicas == 0 {
             bail!("--replicas must be at least 1");
         }
+        let lb = LbPolicy::parse(&args.get_or("lb", "round-robin"))?;
+        let gossip_rounds = args.usize_or("gossip-rounds", 0)?;
+        if gossip_rounds > 0 && lb != LbPolicy::PrefixAffinity {
+            bail!(
+                "--gossip-rounds only applies to --lb prefix-affinity \
+                 (the other policies never consult the digest table; a \
+                 silently ignored period would misreport gossip as active)"
+            );
+        }
         let prefix_share = args.f64_or("prefix-share", 0.0)?;
         if !(0.0..=1.0).contains(&prefix_share) {
             bail!("--prefix-share must be in [0, 1], got {prefix_share}");
@@ -283,7 +304,8 @@ impl ServeSpec {
             engine,
             prm,
             replicas,
-            lb: LbPolicy::parse(&args.get_or("lb", "round-robin"))?,
+            lb,
+            gossip_rounds,
             slots: args.usize_or("slots", 8)?,
             kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
             kv_page_tokens: args.usize_or("kv-page", 16)?,
@@ -366,6 +388,7 @@ mod tests {
         assert_eq!(s.dataset, "synth-gaokao");
         assert_eq!(s.replicas, 1);
         assert_eq!(s.lb, LbPolicy::RoundRobin);
+        assert_eq!(s.gossip_rounds, 0, "gossip must default to probe mode");
         assert_eq!(s.prefix_cache_pages, 0, "cache must default off");
         assert_eq!(s.prefill_chunk_tokens, 0, "chunking must default off");
         assert_eq!(s.max_batched_prefill_tokens, 0);
@@ -425,6 +448,20 @@ mod tests {
         assert_eq!(s.lb, LbPolicy::PowerOfTwoChoices);
         assert!(ServeSpec::from_args(&args("--replicas 0")).is_err());
         assert!(ServeSpec::from_args(&args("--lb wat")).is_err());
+        let a = args("--replicas 4 --lb prefix-affinity --gossip-rounds 8");
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(s.gossip_rounds, 8);
+        assert!(ServeSpec::from_args(
+            &args("--lb prefix-affinity --gossip-rounds wat")
+        )
+        .is_err());
+        // A gossip period without prefix-affinity routing would be
+        // silently ignored — reject it like other unsupported combos.
+        assert!(ServeSpec::from_args(&args("--gossip-rounds 8")).is_err());
+        assert!(ServeSpec::from_args(
+            &args("--replicas 4 --lb p2c --gossip-rounds 8")
+        )
+        .is_err());
     }
 
     #[test]

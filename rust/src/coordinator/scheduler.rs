@@ -393,9 +393,17 @@ impl<'e> Scheduler<'e> {
 
     /// Tokens of `prompt` resident in this scheduler's radix prefix cache
     /// (longest interned full-page prefix). The cluster's prefix-affinity
-    /// policy probes replicas with this at dispatch time.
+    /// policy probes replicas with this at dispatch time (gossip off).
     pub fn cached_prefix_tokens(&self, prompt: &[tok::Token]) -> usize {
         self.kv.cached_prefix_tokens(prompt)
+    }
+
+    /// Distinct digests of the interned full-page prefixes resident in
+    /// this scheduler's radix cache — what the cluster's gossip layer
+    /// advertises into its `DigestTable` (`--gossip-rounds`). O(distinct
+    /// digests); no tree walk.
+    pub fn advertised_digests(&self) -> Vec<u64> {
+        self.kv.advertised_digests()
     }
 
     /// Current load (cluster dispatch policies read this).
@@ -630,6 +638,7 @@ impl<'e> Scheduler<'e> {
                     .iter()
                     .map(|c| c.length)
                     .collect(),
+                cached_prompt_tokens: r.cached_prompt_tokens,
             });
         }
         self.kv.check_invariants()?;

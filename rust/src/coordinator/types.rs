@@ -247,6 +247,11 @@ pub struct RequestOutcome {
     pub branches_completed: usize,
     pub tokens_generated: usize,
     pub response_lengths: Vec<usize>,
+    /// Prompt tokens the serving replica's radix cache covered at
+    /// admission (0 for cold prompts or with the cache disabled). The
+    /// cluster's gossip layer compares this against the digest-table
+    /// match that routed the request to count stale hits.
+    pub cached_prompt_tokens: usize,
 }
 
 impl RequestOutcome {
@@ -335,6 +340,7 @@ mod tests {
             branches_completed: 4,
             tokens_generated: 100,
             response_lengths: vec![10, 20],
+            cached_prompt_tokens: 0,
         };
         assert!(o.correct());
         assert_eq!(o.e2e_latency(), 9.0);

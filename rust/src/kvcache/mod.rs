@@ -42,6 +42,22 @@
 //! tree entirely: `admit_tokens` delegates to the scalar [`admit`] path,
 //! byte-for-byte reproducing the pre-cache accounting (property-tested).
 //!
+//! # Prefix digests (cross-replica gossip)
+//!
+//! Every radix node additionally carries the rolling [`page_digest`] of
+//! its root path — the digest of the full-page prompt prefix the node
+//! represents. The manager maintains the multiset of resident digests
+//! incrementally (added at intern time, retracted at eviction; no tree
+//! walk at read time), and [`KvCacheManager::advertised_digests`] hands
+//! the distinct digests to the cluster's gossip layer, which routes on
+//! them instead of probing every replica's tree per arrival. A prompt's
+//! own page-prefix digests come from [`prompt_page_digests`] with the
+//! same chain, so content-equal prefixes always match. The digest set is
+//! advisory: routing on a stale digest is only a placement
+//! pessimization, never a correctness issue, because admission still
+//! walks the real tree. `check_invariants` rebuilds the whole multiset
+//! (and every per-node digest) from scratch.
+//!
 //! # Chunked prefill (incremental page leasing)
 //!
 //! [`KvCacheManager::try_admit_tokens_chunked`] admits a request whose
@@ -66,6 +82,44 @@
 
 use crate::tokenizer::Token;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Seed of the per-page rolling digest chain (FNV-1a offset basis). The
+/// digest of a prompt's first full page is `page_digest(DIGEST_SEED,
+/// page)`; deeper pages chain from their parent's digest.
+pub const DIGEST_SEED: u64 = 0xCBF2_9CE4_8422_2325;
+
+const DIGEST_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Rolling digest of one more page on a prefix chain: FNV-1a over the
+/// page's token bytes, chained from the parent prefix's digest. The kv
+/// manager stamps every radix node with the digest of its root path at
+/// intern time, and the cluster's `DigestTable` hashes arriving prompts
+/// with the same function — content-equal full-page prefixes collide by
+/// construction, unequal ones only with ~2^-64 probability.
+pub fn page_digest(parent: u64, page: &[Token]) -> u64 {
+    let mut h = parent;
+    for &t in page {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(DIGEST_PRIME);
+        }
+    }
+    h
+}
+
+/// Digests of every full-page prefix of `prompt`: entry `k` is the digest
+/// of pages `0..=k`. Empty for prompts shorter than one page.
+pub fn prompt_page_digests(prompt: &[Token], page_tokens: usize) -> Vec<u64> {
+    assert!(page_tokens > 0);
+    let mut out = Vec::with_capacity(prompt.len() / page_tokens);
+    let mut h = DIGEST_SEED;
+    for page in prompt.chunks_exact(page_tokens) {
+        h = page_digest(h, page);
+        out.push(h);
+    }
+    out
+}
 
 /// Handle for a request's shared prompt pages (generation-checked slab
 /// index; stale handles are rejected by every operation).
@@ -139,6 +193,10 @@ struct RadixNode {
     /// LRU stamp assigned when `refcount` last dropped to 0 (valid only
     /// while retained).
     lru: u64,
+    /// Rolling digest of this node's root path (see [`page_digest`]) —
+    /// what the cluster's gossip layer advertises. Stamped at intern
+    /// time from the parent's digest; never recomputed on the hot path.
+    digest: u64,
 }
 
 /// One slab slot: the generation is bumped on removal so outstanding
@@ -249,6 +307,11 @@ pub struct KvCacheManager {
     roots: Vec<u32>,
     /// Resident refcount-0 pages (≤ `prefix_cache_pages`; all evictable).
     cached_pages: usize,
+    /// Multiset of resident node digests (live or retained): digest →
+    /// node count. Incremented at intern time, decremented at eviction;
+    /// `advertised_digests` reads the keys with no tree walk. Rebuilt
+    /// from scratch by `check_invariants`.
+    digest_counts: HashMap<u64, u32>,
     lru_clock: u64,
     /// Σ cached_tokens over all `admit_tokens` calls (metrics).
     hit_tokens_total: usize,
@@ -289,6 +352,7 @@ impl KvCacheManager {
             free_nodes: Vec::new(),
             roots: Vec::new(),
             cached_pages: 0,
+            digest_counts: HashMap::new(),
             lru_clock: 0,
             hit_tokens_total: 0,
             evicted_pages_total: 0,
@@ -343,6 +407,25 @@ impl KvCacheManager {
     /// Pages evicted from the retained pool since construction.
     pub fn evicted_pages_total(&self) -> usize {
         self.evicted_pages_total
+    }
+
+    /// Distinct digests of every interned full-page prefix currently
+    /// resident (live or retained) — what a replica advertises into the
+    /// cluster's digest table. O(distinct digests), no tree walk; order
+    /// is unspecified (consumers treat it as a set).
+    pub fn advertised_digests(&self) -> Vec<u64> {
+        self.digest_counts.keys().copied().collect()
+    }
+
+    /// Number of distinct resident prefix digests (metrics).
+    pub fn advertised_digest_count(&self) -> usize {
+        self.digest_counts.len()
+    }
+
+    /// Is a full-page prefix with this digest resident right now? (Tests
+    /// and the gossip staleness regressions.)
+    pub fn has_digest(&self, digest: u64) -> bool {
+        self.digest_counts.contains_key(&digest)
     }
 
     fn admission_pages(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> usize {
@@ -473,6 +556,7 @@ impl KvCacheManager {
         };
         let node = self.nodes[idx as usize].take().unwrap();
         debug_assert!(node.refcount == 0 && node.children.is_empty());
+        self.retract_digest(node.digest);
         match node.parent {
             Some(p) => self.nodes[p as usize]
                 .as_mut()
@@ -499,6 +583,29 @@ impl KvCacheManager {
             self.evict_lru()?;
         }
         Ok(())
+    }
+
+    /// Record one more resident node carrying `digest`.
+    fn add_digest(&mut self, digest: u64) {
+        *self.digest_counts.entry(digest).or_insert(0) += 1;
+    }
+
+    /// Drop one resident node carrying `digest`; the digest leaves the
+    /// advertised set when its last node goes.
+    fn retract_digest(&mut self, digest: u64) {
+        let remove = match self.digest_counts.get_mut(&digest) {
+            Some(c) if *c > 1 => {
+                *c -= 1;
+                false
+            }
+            Some(_) => true,
+            // Unknown digest: nothing to retract. `check_invariants`
+            // catches the multiset drifting, so don't panic a serve here.
+            None => false,
+        };
+        if remove {
+            self.digest_counts.remove(&digest);
+        }
     }
 
     fn alloc_node(&mut self, node: RadixNode) -> u32 {
@@ -531,14 +638,21 @@ impl KvCacheManager {
     ) -> Option<u32> {
         let pt = self.page_tokens;
         let full = prompt.len() / pt;
+        let mut digest = match leaf {
+            Some(p) => self.nodes[p as usize].as_ref().unwrap().digest,
+            None => DIGEST_SEED,
+        };
         for i in from_page..full {
             let page = prompt[i * pt..(i + 1) * pt].to_vec();
+            digest = page_digest(digest, &page);
+            self.add_digest(digest);
             let idx = self.alloc_node(RadixNode {
                 page,
                 parent: leaf,
                 children: Vec::new(),
                 refcount: 1,
                 lru: 0,
+                digest,
             });
             match leaf {
                 Some(p) => self.nodes[p as usize]
@@ -1146,6 +1260,62 @@ impl KvCacheManager {
                 total_nodes
             );
         }
+        // Digest chains and the advertised multiset rebuild exactly: walk
+        // the forest root-down recomputing every node's rolling digest.
+        let mut digest_scan: HashMap<u64, u32> = HashMap::new();
+        let mut stack: Vec<(u32, u64)> =
+            self.roots.iter().map(|&r| (r, DIGEST_SEED)).collect();
+        let mut visited = 0usize;
+        while let Some((idx, parent_digest)) = stack.pop() {
+            let Some(n) = self.nodes.get(idx as usize).and_then(|s| s.as_ref())
+            else {
+                bail!("digest walk hit dead radix node {idx}");
+            };
+            let expect = page_digest(parent_digest, &n.page);
+            if n.digest != expect {
+                bail!(
+                    "radix digest drift at node {idx}: {:#018x} != \
+                     recomputed {expect:#018x}",
+                    n.digest
+                );
+            }
+            *digest_scan.entry(expect).or_insert(0) += 1;
+            visited += 1;
+            if visited > total_nodes {
+                bail!("child cycle in radix tree");
+            }
+            for &c in &n.children {
+                stack.push((c, expect));
+            }
+        }
+        if visited != total_nodes {
+            bail!(
+                "digest walk covered {visited} of {total_nodes} radix nodes"
+            );
+        }
+        if digest_scan != self.digest_counts {
+            // Name one differing entry so the drift is debuggable; the
+            // key sets may well have equal sizes.
+            let culprit = self
+                .digest_counts
+                .iter()
+                .find(|(d, c)| digest_scan.get(*d) != Some(*c))
+                .map(|(d, c)| (*d, *c, digest_scan.get(d).copied()))
+                .or_else(|| {
+                    digest_scan
+                        .iter()
+                        .find(|(d, _)| !self.digest_counts.contains_key(*d))
+                        .map(|(d, c)| (*d, 0, Some(*c)))
+                });
+            let (d, tracked, scanned) = culprit.unwrap_or((0, 0, None));
+            bail!(
+                "advertised digest multiset drift: digest {d:#018x} tracked \
+                 {tracked} times vs recomputed {scanned:?} ({} tracked / {} \
+                 recomputed distinct digests)",
+                self.digest_counts.len(),
+                digest_scan.len()
+            );
+        }
         if retained_pages != self.cached_pages {
             bail!(
                 "cached_pages drift: counter {} != recomputed {retained_pages}",
@@ -1655,6 +1825,125 @@ mod tests {
         }
         assert_eq!(chunked.used_pages(), 0);
         chunked.check_invariants().unwrap();
+    }
+
+    // -----------------------------------------------------------------
+    // Prefix digests (cross-replica gossip).
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn prompt_page_digests_chain_per_page() {
+        let p = prompt(0, 40); // 2 full pages + 8-token tail
+        let ds = prompt_page_digests(&p, 16);
+        assert_eq!(ds.len(), 2, "only full pages digest");
+        assert_eq!(ds[0], page_digest(DIGEST_SEED, &p[..16]));
+        assert_eq!(ds[1], page_digest(ds[0], &p[16..32]));
+        // Content-sensitive: a one-token change flips every digest from
+        // that page on.
+        let mut q = p.clone();
+        q[20] += 1;
+        let dq = prompt_page_digests(&q, 16);
+        assert_eq!(dq[0], ds[0]);
+        assert_ne!(dq[1], ds[1]);
+        // Sub-page prompts advertise nothing.
+        assert!(prompt_page_digests(&p[..10], 16).is_empty());
+    }
+
+    #[test]
+    fn digest_set_tracks_intern_and_release() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 48); // 3 full pages
+        let ds = prompt_page_digests(&p, 16);
+        assert_eq!(kv.advertised_digest_count(), 0);
+        let a = kv.admit_tokens(&p, 32, 1).unwrap();
+        assert!(ds.iter().all(|d| kv.has_digest(*d)));
+        assert_eq!(kv.advertised_digest_count(), 3);
+        kv.check_invariants().unwrap();
+        // Release retains the pages: digests stay advertised.
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.advertised_digest_count(), 3);
+        assert_eq!(kv.advertised_digests().len(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn digest_retracts_on_eviction() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 2);
+        let p = prompt(0, 64); // 4 pages; retention budget 2
+        let ds = prompt_page_digests(&p, 16);
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        assert_eq!(kv.advertised_digest_count(), 4);
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        // Pool trimmed to 2: the deepest digests retract with their
+        // nodes, the shallowest survive.
+        assert!(kv.has_digest(ds[0]) && kv.has_digest(ds[1]));
+        assert!(!kv.has_digest(ds[2]) && !kv.has_digest(ds[3]));
+        assert_eq!(kv.advertised_digest_count(), 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn digest_interns_only_at_chunked_commit_never_mid_prefill() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
+        let p = prompt(0, 48);
+        let ds = prompt_page_digests(&p, 16);
+        let adm = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        kv.note_prefill(adm.prefix, 32).unwrap();
+        assert_eq!(kv.advertised_digest_count(), 0, "digest before commit");
+        kv.check_invariants().unwrap();
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        kv.commit_prefix(adm.prefix, &p).unwrap();
+        assert!(ds.iter().all(|d| kv.has_digest(*d)));
+        assert_eq!(kv.advertised_digest_count(), 3);
+        kv.check_invariants().unwrap();
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.advertised_digest_count(), 3, "retained digests stay");
+
+        // Mid-prefill release: the half-streamed suffix never digests.
+        let q = prompt(9000, 48);
+        let adm2 = kv.try_admit_tokens_chunked(&q, 16, 1).unwrap().unwrap();
+        kv.note_prefill(adm2.prefix, 20).unwrap();
+        for b in adm2.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert!(prompt_page_digests(&q, 16)
+            .iter()
+            .all(|d| !kv.has_digest(*d)));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_interned_prompts_count_digests_per_node() {
+        // Two identical prompts streamed concurrently each intern their
+        // own nodes (commit-time interning cannot share half-computed
+        // pages); the digest multiset holds both copies, and the digest
+        // stays advertised until the *last* copy is evicted.
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 1);
+        let p = prompt(0, 16); // one page
+        let d = prompt_page_digests(&p, 16)[0];
+        let a = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        let b = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        kv.note_prefill(a.prefix, 16).unwrap();
+        kv.commit_prefix(a.prefix, &p).unwrap();
+        kv.note_prefill(b.prefix, 16).unwrap();
+        kv.commit_prefix(b.prefix, &p).unwrap();
+        assert_eq!(kv.advertised_digest_count(), 1, "one distinct digest");
+        kv.check_invariants().unwrap();
+        // Release both: budget 1 retains one copy, evicts the duplicate —
+        // the digest must survive for the remaining node.
+        for br in a.branches.into_iter().chain(b.branches) {
+            kv.release_branch(br).unwrap();
+        }
+        assert!(kv.has_digest(d));
+        assert_eq!(kv.cached_pages(), 1);
+        assert_eq!(kv.advertised_digest_count(), 1);
+        kv.check_invariants().unwrap();
     }
 
     #[test]

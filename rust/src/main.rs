@@ -52,6 +52,8 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --t-round INT  --temp F  --seed INT  --stepwise (disable fused decode)
   --replicas INT  engine replicas behind the dispatch layer (sim only)
   --lb rr|least-loaded|jsq|p2c|prefix-affinity   dispatch policy
+  --gossip-rounds N  prefix-affinity: replicas advertise digest sets every
+                     N scheduler steps; routing reads the table (0=probe)
   --prefix-cache PAGES   cross-request radix prefix cache budget (0=off)
   --prefix-share F       fraction of requests sharing a few-shot header
   --prefix-templates INT / --prefix-shots INT   header pool shape
@@ -111,6 +113,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c.request_skew,
             100.0 * c.cache_hit_rate,
         );
+        let g = &c.gossip;
+        if g.gossip_rounds > 0 || g.probe_calls > 0 {
+            println!(
+                "gossip: period {} steps | {} advertisements | {} digests \
+                 in table | {} stale hits | {} probe calls",
+                g.gossip_rounds,
+                g.advertisements,
+                g.digest_table_digests,
+                g.stale_hits,
+                g.probe_calls,
+            );
+        }
     }
     Ok(())
 }

@@ -224,6 +224,7 @@ mod tests {
             branches_completed: 2,
             tokens_generated: 50,
             response_lengths: vec![10, 30],
+            cached_prompt_tokens: 0,
         }
     }
 

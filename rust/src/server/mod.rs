@@ -276,6 +276,7 @@ fn run_cluster_on_trace(
         sched,
         seed: spec.seed,
         audit: false,
+        gossip_rounds: spec.gossip_rounds,
     };
     let res = serve_cluster(&ccfg, &mut engines, &mut prms, trace)?;
     let label = format!(
@@ -441,6 +442,31 @@ mod tests {
         assert_eq!(c.replicas, 3);
         assert_eq!(c.per_replica_requests.iter().sum::<usize>(), 8);
         assert!((0.0..=1.0).contains(&c.cache_hit_rate));
+    }
+
+    #[test]
+    fn gossip_affinity_cluster_serves_all() {
+        // End-to-end --gossip-rounds plumbing: spec → ClusterConfig →
+        // digest-table routing, with the probe counter pinned at zero.
+        let mut s = spec(
+            "--method sart:4 --replicas 3 --lb prefix-affinity \
+             --gossip-rounds 4 --prefix-share 0.9 --prefix-templates 3 \
+             --prefix-cache 64",
+        );
+        s.kv_capacity_tokens = 32768;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        let c = out.cluster.as_ref().expect("cluster report");
+        assert_eq!(c.gossip.gossip_rounds, 4);
+        assert_eq!(c.gossip.probe_calls, 0, "gossip routing must not probe");
+        // The probe-mode twin pays R probes per arrival and never
+        // touches the table.
+        let mut probe = s.clone();
+        probe.gossip_rounds = 0;
+        let out = run(&probe).unwrap();
+        let c = out.cluster.as_ref().expect("cluster report");
+        assert_eq!(c.gossip.probe_calls, 3 * 8);
+        assert_eq!(c.gossip.advertisements, 0);
     }
 
     #[test]

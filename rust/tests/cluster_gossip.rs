@@ -1,0 +1,408 @@
+//! ISSUE 5: cross-replica prefix-digest gossip routing, property-tested
+//! against the ground-truth probe policy.
+//!
+//! The contract under test: `--gossip-rounds` only changes *how*
+//! `PrefixAffinity` learns where prefixes live (advertised digest tables
+//! vs per-replica tree probes), never what a serve computes. Fresh
+//! advertisements (period 1) must route byte-identically to probes;
+//! probe mode (period 0) is the unchanged pre-gossip path; a one-replica
+//! cluster with gossip on must still reduce exactly to
+//! `Scheduler::serve`; and a stale table entry — the digest of a prefix
+//! the replica has since evicted — must only cost a re-prefill (counted
+//! as a `stale_hit`), never correctness.
+
+use sart::cluster::{
+    serve_cluster, ClusterConfig, DigestTable, LbPolicy, REPLICA_SEED_STRIDE,
+};
+use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::kvcache::{prompt_page_digests, KvCacheManager};
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::prop_assert;
+use sart::testkit::check;
+use sart::tokenizer::Token;
+use sart::util::clock::SimClock;
+use sart::util::rng::Rng;
+use sart::workload::{
+    few_shot_header, templated_trace, Question, Request, TaskSpec,
+};
+
+/// One gossip test configuration over a templated (prefix-heavy) trace.
+struct GossipCase {
+    policy: Policy,
+    slots: usize,
+    t_round: usize,
+    kv_tokens: usize,
+    prefix_cache_pages: usize,
+    seed: u64,
+    spec: TaskSpec,
+    trace: Vec<Request>,
+}
+
+impl GossipCase {
+    fn random(rng: &mut Rng) -> GossipCase {
+        let n = 1 << rng.below(3); // 1, 2, 4
+        let policy = Policy::Sart {
+            n,
+            m: (n / 2).max(1),
+            alpha: (0.3 + 0.4 * rng.f64()) as f32,
+            beta: (n / 2).max(1),
+        };
+        // Headered prompts reach ~11 pages; always keep one full request
+        // admissible so a serve cannot stall.
+        let min_pages = 11 + policy.n_branches() * 14 + 4;
+        let seed = rng.next_u64();
+        let spec = TaskSpec::synth_gaokao();
+        let n_req = 6 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let share = 0.5 + 0.45 * rng.f64();
+        let trace = templated_trace(
+            &spec,
+            n_req,
+            rate,
+            seed,
+            share,
+            1 + rng.below(3),
+            2 + rng.below(2),
+        );
+        GossipCase {
+            policy,
+            slots: 2 + rng.below(14),
+            t_round: 8 + rng.below(24),
+            kv_tokens: 16 * (min_pages + rng.below(512)),
+            // Occasionally run cache-off (both modes degenerate to p2c
+            // and must still agree); otherwise small budgets keep LRU
+            // eviction in play mid-serve.
+            prefix_cache_pages: if rng.chance(0.15) {
+                0
+            } else {
+                8 + rng.below(64)
+            },
+            seed,
+            spec,
+            trace,
+        }
+    }
+
+    fn sched_cfg(&self) -> SchedConfig {
+        SchedConfig {
+            policy: self.policy,
+            t_round: self.t_round,
+            temperature: 1.0,
+            max_new: 224,
+            kv_capacity_tokens: self.kv_tokens,
+            kv_page_tokens: 16,
+            prefix_cache_pages: self.prefix_cache_pages,
+            prefill_chunk_tokens: 0,
+            max_batched_prefill_tokens: 0,
+            seed: self.seed,
+        }
+    }
+
+    fn stacks(
+        &self,
+        n: usize,
+    ) -> (Vec<Box<dyn Engine>>, Vec<Box<dyn PrmScorer>>) {
+        let engines: Vec<Box<dyn Engine>> = (0..n)
+            .map(|_| {
+                let mut e = SimEngine::new(
+                    self.slots,
+                    512,
+                    self.spec.clone(),
+                    SimCostModel::default(),
+                );
+                e.set_prompt_bucket(256);
+                Box::new(e) as Box<dyn Engine>
+            })
+            .collect();
+        let prms: Vec<Box<dyn PrmScorer>> = (0..n)
+            .map(|i| {
+                let seed =
+                    self.seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+                Box::new(OraclePrm::new(0.1, seed ^ 7)) as Box<dyn PrmScorer>
+            })
+            .collect();
+        (engines, prms)
+    }
+
+    fn serve(
+        &self,
+        replicas: usize,
+        gossip_rounds: usize,
+    ) -> Result<sart::cluster::ClusterResult, String> {
+        let (mut engines, mut prms) = self.stacks(replicas);
+        let ccfg = ClusterConfig {
+            replicas,
+            lb: LbPolicy::PrefixAffinity,
+            sched: self.sched_cfg(),
+            seed: self.seed,
+            audit: true,
+            gossip_rounds,
+        };
+        serve_cluster(&ccfg, &mut engines, &mut prms, &self.trace)
+            .map_err(|e| format!("gossip={gossip_rounds}: {e}"))
+    }
+}
+
+#[test]
+fn prop_gossip_fresh_matches_probe_routing_exactly() {
+    // ISSUE 5 acceptance: with fresh-every-round advertisements (period
+    // 1 — a replica's tree only changes inside its own steps, so the
+    // table equals the live trees at every decision), gossip routing
+    // must pick byte-identical replicas to the probe-based policy on
+    // templated traces across seeds: same assignments, same outcomes,
+    // same per-replica timelines, audit on. The probe run pays R tree
+    // probes per arrival; the gossip run must pay none.
+    check("gossip_fresh_identity", 8, |rng| {
+        let case = GossipCase::random(rng);
+        let replicas = 2 + rng.below(3); // 2..=4
+        let probe = case.serve(replicas, 0)?;
+        let fresh = case.serve(replicas, 1)?;
+        prop_assert!(
+            probe.assignments == fresh.assignments,
+            "routing diverged: probe {:?} vs gossip {:?}",
+            probe.assignments,
+            fresh.assignments
+        );
+        prop_assert!(probe.outcomes == fresh.outcomes, "outcomes diverged");
+        for (i, (p, g)) in probe
+            .replica_results
+            .iter()
+            .zip(&fresh.replica_results)
+            .enumerate()
+        {
+            prop_assert!(
+                p.timeline.points == g.timeline.points,
+                "replica {i} timeline diverged"
+            );
+            prop_assert!(
+                p.rounds == g.rounds,
+                "replica {i} round count diverged"
+            );
+        }
+        prop_assert!(
+            probe.gossip.probe_calls == replicas * case.trace.len(),
+            "probe mode must scan every replica per arrival: {} != {}",
+            probe.gossip.probe_calls,
+            replicas * case.trace.len()
+        );
+        prop_assert!(
+            probe.gossip.advertisements == 0
+                && probe.gossip.digest_table_digests == 0,
+            "probe mode must not touch the digest table"
+        );
+        prop_assert!(
+            fresh.gossip.probe_calls == 0,
+            "gossip routing made {} tree probes",
+            fresh.gossip.probe_calls
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gossip_r1_cluster_matches_single_serve() {
+    // With one replica, placement is forced, so gossip must cost nothing:
+    // the cluster serve stays byte-identical to `Scheduler::serve` on the
+    // same trace with gossip on (any period), audit on.
+    check("gossip_r1_identity", 8, |rng| {
+        let case = GossipCase::random(rng);
+        let gossip_rounds = 1 + rng.below(8);
+        let mut engine = SimEngine::new(
+            case.slots,
+            512,
+            case.spec.clone(),
+            SimCostModel::default(),
+        );
+        engine.set_prompt_bucket(256);
+        let mut prm = OraclePrm::new(0.1, case.seed ^ 7);
+        let mut sched = Scheduler::new(
+            case.sched_cfg(),
+            &mut engine,
+            &mut prm,
+            ClockHandle::Sim(SimClock::new()),
+        );
+        let single = sched.serve(&case.trace).map_err(|e| e.to_string())?;
+        let res = case.serve(1, gossip_rounds)?;
+        prop_assert!(
+            res.outcomes == single.outcomes,
+            "R=1 outcomes diverge with gossip on"
+        );
+        prop_assert!(
+            res.replica_results[0].timeline.points == single.timeline.points,
+            "R=1 timeline diverges with gossip on"
+        );
+        prop_assert!(
+            res.replica_results[0].rounds == single.rounds,
+            "R=1 round count diverges with gossip on"
+        );
+        prop_assert!(
+            res.gossip.probe_calls == 0,
+            "R=1 routing must not probe"
+        );
+        Ok(())
+    });
+}
+
+/// A page-aligned synthetic prompt (kv-level staleness tests).
+fn tokens(base: i32, len: usize) -> Vec<Token> {
+    (base..base + len as i32).collect()
+}
+
+#[test]
+fn stale_table_entry_survives_eviction_until_readvertised() {
+    // Satellite regression, kv level: (a) after the replica evicts a
+    // prefix, the digest table still names it — routing on it is merely
+    // stale; (c) the next advertisement retracts it.
+    let mut kv = KvCacheManager::with_prefix_cache(16 * 256, 16, 4);
+    let a = tokens(0, 64); // 4 pages — fills the retention budget
+    let adm = kv.admit_tokens(&a, 16, 1).unwrap();
+    for b in adm.branches {
+        kv.release_branch(b).unwrap();
+    }
+    assert_eq!(kv.cached_prefix_tokens(&a), 64);
+
+    let mut table = DigestTable::new(1, 16);
+    table.advertise(0, kv.advertised_digests());
+    assert_eq!(table.lookup(&a), (64, vec![0]));
+
+    // Churn the pool: a different 4-page prefix evicts every page of `a`.
+    let b = tokens(5000, 64);
+    let adm = kv.admit_tokens(&b, 16, 1).unwrap();
+    for br in adm.branches {
+        kv.release_branch(br).unwrap();
+    }
+    assert_eq!(kv.cached_prefix_tokens(&a), 0, "a must be fully evicted");
+    kv.check_invariants().unwrap();
+
+    // (a) The table has not heard: it still names the evicted prefix.
+    assert_eq!(
+        table.lookup(&a),
+        (64, vec![0]),
+        "pre-advertisement table must still name the evicted prefix"
+    );
+    for d in prompt_page_digests(&a, 16) {
+        assert!(table.contains(0, d));
+        assert!(!kv.has_digest(d));
+    }
+
+    // (c) The next advertisement retracts it (and names the newcomer).
+    table.advertise(0, kv.advertised_digests());
+    assert_eq!(table.lookup(&a), (0, Vec::new()));
+    assert_eq!(table.lookup(&b), (64, vec![0]));
+}
+
+#[test]
+fn stale_gossip_hit_reprefills_and_counts() {
+    // Satellite regression, serve level: force an eviction between
+    // advertisements and pin that the routed replica simply re-prefills
+    // — every request completes, and the dispatcher's `stale_hits`
+    // counter records the broken promise. The scenario:
+    //
+    //   phase 1: template-A requests, spaced out, so both replicas
+    //     intern A's header and advertise it (gossip period 25 steps);
+    //   phase 2: a burst of template-B requests at one instant — the
+    //     table freezes (advertisement periods are measured in replica
+    //     steps, and no steps happen between same-instant arrivals);
+    //   final: one more template-A request 10 ms later. It routes on the
+    //     frozen table entry, queues behind the B's (the kv budget fits
+    //     one request at a time), and by the time it admits, the B
+    //     serves have evicted A's pages from the retention pool.
+    let spec = TaskSpec::synth_gaokao();
+    let header_a = few_shot_header(&spec, 1, 3);
+    let header_b = few_shot_header(&spec, 2, 3);
+    assert_ne!(header_a, header_b);
+    let mut qrng = Rng::new(97);
+    let mut trace: Vec<Request> = Vec::new();
+    let mut push = |trace: &mut Vec<Request>, header: &[Token], t: f64| {
+        let id = trace.len();
+        trace.push(Request {
+            id,
+            question: Question::sample(&spec, &mut qrng),
+            arrival: t,
+            dataset: spec.name.clone(),
+            header: header.to_vec(),
+        });
+    };
+    for i in 0..10 {
+        push(&mut trace, &header_a, 1.5 * i as f64);
+    }
+    let t_burst = 1.5 * 9.0 + 10.0;
+    for _ in 0..8 {
+        push(&mut trace, &header_b, t_burst);
+    }
+    push(&mut trace, &header_a, t_burst + 0.01);
+
+    // Budgets: the kv capacity fits exactly one request (n=4 branches ×
+    // 14 pages + the ~11-page headered prompt), so per-replica serving
+    // is serial and the final A request admits only after every queued B
+    // released; the retention budget holds one template's full pages
+    // plus one, so the B releases evict A's retained pages first.
+    let worst_prompt_pages = {
+        let a = (header_a.len() + 27).div_ceil(16);
+        let b = (header_b.len() + 27).div_ceil(16);
+        a.max(b)
+    };
+    let request_pages = worst_prompt_pages + 4 * 14;
+    let full_a_pages = (header_a.len() + 27) / 16;
+    let sched = SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: 16 * (request_pages + 6),
+        kv_page_tokens: 16,
+        prefix_cache_pages: full_a_pages + 1,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
+        seed: 42,
+    };
+    let replicas = 2;
+    let mut engines: Vec<Box<dyn Engine>> = (0..replicas)
+        .map(|_| {
+            let mut e = SimEngine::new(
+                8,
+                512,
+                spec.clone(),
+                SimCostModel::default(),
+            );
+            e.set_prompt_bucket(256);
+            Box::new(e) as Box<dyn Engine>
+        })
+        .collect();
+    let mut prms: Vec<Box<dyn PrmScorer>> = (0..replicas)
+        .map(|i| {
+            let seed = 42u64 ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+            Box::new(OraclePrm::new(0.1, seed ^ 7)) as Box<dyn PrmScorer>
+        })
+        .collect();
+    let ccfg = ClusterConfig {
+        replicas,
+        lb: LbPolicy::PrefixAffinity,
+        sched,
+        seed: 42,
+        audit: true,
+        gossip_rounds: 25,
+    };
+    let res = serve_cluster(&ccfg, &mut engines, &mut prms, &trace)
+        .expect("stale-hit serve must still complete every request");
+
+    assert_eq!(res.outcomes.len(), trace.len(), "lost requests");
+    for (o, r) in res.outcomes.iter().zip(&trace) {
+        assert_eq!(o.id, r.id, "merge order broken");
+        assert!(o.finished_at >= o.arrival, "time travel");
+    }
+    assert_eq!(res.gossip.probe_calls, 0, "gossip serve must not probe");
+    assert!(
+        res.gossip.advertisements > 0,
+        "phase 1 must have produced advertisements"
+    );
+    assert!(
+        res.gossip.stale_hits >= 1,
+        "the final template-A request must land on a stale table entry \
+         (advertisements: {}, table digests: {})",
+        res.gossip.advertisements,
+        res.gossip.digest_table_digests
+    );
+}

@@ -689,6 +689,7 @@ fn prop_cluster_single_replica_is_byte_identical() {
                 sched: case_sched_cfg(&c),
                 seed: c.seed,
                 audit: true,
+                gossip_rounds: 0,
             };
             let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
                 .map_err(|e| format!("{lb:?}: {e}"))?;
@@ -730,6 +731,7 @@ fn prop_cluster_serves_all_under_every_policy() {
                 sched: case_sched_cfg(&c),
                 seed: c.seed,
                 audit: true,
+                gossip_rounds: 0,
             };
             let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
                 .map_err(|e| format!("{lb:?}: {e}"))?;
@@ -816,6 +818,7 @@ fn affinity_routing_beats_p2c_on_cache_hits() {
             },
             seed: 42,
             audit: true,
+            gossip_rounds: 0,
         };
         let res = serve_cluster(&ccfg, &mut engines, &mut prms, &trace)
             .expect("cluster serve");

@@ -32,6 +32,11 @@ Gates (bench name → assertions)
 * ``chunked``: ``p99_decode_stall_ratio_chunked_vs_mono < 1.0`` —
   streaming a long cold header in chunks must cut the p99 per-round
   decode stall versus monolithic prefill.
+* ``gossip``: ``gossip_vs_probe_hit_rate_ratio >= 0.95`` — routing on
+  advertised prefix digests must preserve at least 95% of the probe
+  policy's cluster-wide cache-hit rate at R=4 under eviction pressure —
+  and ``probe_calls_per_request_gossip == 0`` — gossip routing must not
+  touch the per-replica probe path at all (the dispatch-cost headline).
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -151,10 +156,31 @@ def gate_chunked(doc: dict, path: str) -> None:
         )
 
 
+def gate_gossip(doc: dict, path: str) -> None:
+    ratio = _metric(doc, path, "gossip_vs_probe_hit_rate_ratio")
+    if not ratio >= 0.95:
+        _fail(
+            path,
+            f"gossip_vs_probe_hit_rate_ratio = {ratio:.3f}: digest-table "
+            "routing must keep >= 95% of the probe policy's cache-hit rate "
+            "(advertisements too stale, or the digest chain diverged from "
+            "the radix tree?)",
+        )
+    probes = _metric(doc, path, "probe_calls_per_request_gossip")
+    if probes != 0.0:
+        _fail(
+            path,
+            f"probe_calls_per_request_gossip = {probes:.3f}: gossip routing "
+            "must never fall back to per-replica tree probes (the O(R) "
+            "dispatch scan is exactly what the digest table removes)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
     "chunked": gate_chunked,
+    "gossip": gate_gossip,
 }
 
 

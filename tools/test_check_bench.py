@@ -1,0 +1,214 @@
+"""Tests for tools/check_bench.py — the single source of truth for CI's
+bench gates deserves its own gate.
+
+Covers: schema rejection, the per-bench headline gates (including the
+BENCH_gossip gate), ``--require`` failure, and ``--delta`` output. Run
+with ``python3 -m pytest tools/test_check_bench.py`` (CI does, before the
+rust jobs) or ``python3 -m unittest tools.test_check_bench``.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import sys
+import unittest
+from contextlib import redirect_stderr, redirect_stdout
+from tempfile import TemporaryDirectory
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench  # noqa: E402
+
+
+def result_row(name="row", iters=3, mean_us=10.0, p50_us=9.0, p95_us=12.0):
+    return {
+        "name": name,
+        "iters": iters,
+        "mean_us": mean_us,
+        "p50_us": p50_us,
+        "p95_us": p95_us,
+    }
+
+
+def report(bench="scheduler", results=None, metrics=None):
+    return {
+        "bench": bench,
+        "results": [result_row()] if results is None else results,
+        "metrics": {} if metrics is None else metrics,
+    }
+
+
+class CheckBenchCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = TemporaryDirectory()
+        self.dir = self._tmp.name
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, basename, doc):
+        path = os.path.join(self.dir, basename)
+        with open(path, "w") as f:
+            if isinstance(doc, dict):
+                json.dump(doc, f)
+            else:
+                f.write(doc)
+        return path
+
+    def run_main(self, argv):
+        """Run check_bench.main, capturing stdout/stderr and exit code."""
+        out, err = io.StringIO(), io.StringIO()
+        with redirect_stdout(out), redirect_stderr(err):
+            code = check_bench.main(argv)
+        return code, out.getvalue(), err.getvalue()
+
+
+class TestSchemaValidation(CheckBenchCase):
+    def test_valid_report_passes(self):
+        path = self.write("BENCH_scheduler.json", report())
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("all bench gates passed", out)
+
+    def test_invalid_json_rejected(self):
+        path = self.write("BENCH_broken.json", "{not json")
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("unreadable or invalid JSON", err)
+
+    def test_missing_top_level_key_rejected(self):
+        doc = report()
+        del doc["metrics"]
+        path = self.write("BENCH_scheduler.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("missing top-level key `metrics`", err)
+
+    def test_non_finite_metric_rejected(self):
+        # json.dumps would emit bare NaN; write it verbatim the way a
+        # buggy serializer might.
+        path = self.write(
+            "BENCH_scheduler.json",
+            '{"bench": "scheduler", "results": [], '
+            '"metrics": {"x": NaN}}',
+        )
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("finite number", err)
+
+    def test_malformed_result_row_rejected(self):
+        doc = report(results=[{"name": "row", "iters": 3}])
+        path = self.write("BENCH_scheduler.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("results[0] missing `mean_us`", err)
+
+
+class TestGates(CheckBenchCase):
+    def test_cluster_gate_fails_at_ratio_one(self):
+        doc = report(bench="cluster", metrics={"p2c_vs_rr_p99_ratio": 1.0})
+        path = self.write("BENCH_cluster.json", doc)
+        code, out, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gate `cluster`: FAIL", out)
+        self.assertIn("p2c_vs_rr_p99_ratio", err)
+
+    def test_gossip_gate_passes_on_good_report(self):
+        doc = report(
+            bench="gossip",
+            metrics={
+                "gossip_vs_probe_hit_rate_ratio": 0.99,
+                "probe_calls_per_request_gossip": 0.0,
+            },
+        )
+        path = self.write("BENCH_gossip.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `gossip`: PASS", out)
+
+    def test_gossip_gate_fails_below_ratio_floor(self):
+        doc = report(
+            bench="gossip",
+            metrics={
+                "gossip_vs_probe_hit_rate_ratio": 0.90,
+                "probe_calls_per_request_gossip": 0.0,
+            },
+        )
+        path = self.write("BENCH_gossip.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gossip_vs_probe_hit_rate_ratio", err)
+
+    def test_gossip_gate_fails_on_any_probe_call(self):
+        doc = report(
+            bench="gossip",
+            metrics={
+                "gossip_vs_probe_hit_rate_ratio": 1.0,
+                "probe_calls_per_request_gossip": 4.0,
+            },
+        )
+        path = self.write("BENCH_gossip.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("probe_calls_per_request_gossip", err)
+
+    def test_gossip_gate_fails_on_missing_metric(self):
+        doc = report(bench="gossip", metrics={})
+        path = self.write("BENCH_gossip.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gossip_vs_probe_hit_rate_ratio", err)
+
+
+class TestRequire(CheckBenchCase):
+    def test_require_fails_on_missing_bench(self):
+        path = self.write("BENCH_scheduler.json", report())
+        code, _, err = self.run_main(["--require", "scheduler,gossip", path])
+        self.assertEqual(code, 1)
+        self.assertIn("required bench `gossip` missing", err)
+
+    def test_require_passes_when_all_present(self):
+        a = self.write("BENCH_scheduler.json", report())
+        b = self.write(
+            "BENCH_gossip.json",
+            report(
+                bench="gossip",
+                metrics={
+                    "gossip_vs_probe_hit_rate_ratio": 1.0,
+                    "probe_calls_per_request_gossip": 0.0,
+                },
+            ),
+        )
+        code, _, _ = self.run_main(["--require", "scheduler,gossip", a, b])
+        self.assertEqual(code, 0)
+
+
+class TestDelta(CheckBenchCase):
+    def test_delta_prints_percent_changes_and_new_metrics(self):
+        base_dir = os.path.join(self.dir, "baseline")
+        os.makedirs(base_dir)
+        with open(os.path.join(base_dir, "BENCH_scheduler.json"), "w") as f:
+            json.dump(report(metrics={"us": 10.0, "gone": 1.0}), f)
+        path = self.write(
+            "BENCH_scheduler.json",
+            report(metrics={"us": 12.0, "fresh": 3.0}),
+        )
+        code, out, _ = self.run_main(["--delta", base_dir, path])
+        self.assertEqual(code, 0)
+        self.assertIn("10 -> 12 (+20.0%)", out)
+        self.assertIn("fresh: 3 (new metric)", out)
+        self.assertIn("gone: dropped (was 1)", out)
+
+    def test_delta_missing_baseline_is_not_fatal(self):
+        base_dir = os.path.join(self.dir, "empty-baseline")
+        os.makedirs(base_dir)
+        path = self.write("BENCH_scheduler.json", report())
+        code, out, _ = self.run_main(["--delta", base_dir, path])
+        self.assertEqual(code, 0)
+        self.assertIn("no baseline for BENCH_scheduler.json", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
