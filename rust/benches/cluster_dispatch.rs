@@ -107,6 +107,9 @@ fn run_cluster(lb: LbPolicy, trace: &[Request]) -> ClusterResult {
         seed: SEED,
         audit: false,
         gossip_rounds: 0,
+        gossip_adapt: false,
+        fault_plan: Default::default(),
+        scale: None,
     };
     serve_cluster(&cfg, &mut engines, &mut prms, trace)
         .expect("cluster serve")

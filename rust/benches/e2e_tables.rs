@@ -24,6 +24,9 @@ fn spec() -> ServeSpec {
         replicas: 1,
         lb: LbPolicy::RoundRobin,
         gossip_rounds: 0,
+        gossip_adapt: false,
+        fault_plan: Default::default(),
+        scale: None,
         slots: 16,
         kv_capacity_tokens: 8192,
         kv_page_tokens: 16,

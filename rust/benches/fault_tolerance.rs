@@ -1,0 +1,229 @@
+//! Bench: what does a replica failure actually cost?
+//!
+//! Serves one prefix-heavy trace through `cluster::serve_cluster` at
+//! R = 4 with gossip-routed prefix affinity, three ways — fault-free
+//! (static), with a scripted mid-trace failure + restart of replica 1,
+//! and with the queue-driven scale controller starting at 2 live
+//! replicas — and records, in `BENCH_faults.json` (schema in
+//! EXPERIMENTS.md §Benches):
+//!
+//! 1. **Is the failure loss-free?** `faults_requests_lost` must be
+//!    exactly 0 (`tools/check_bench.py` gates it): every in-flight
+//!    request on the dead replica is re-dispatched and completes.
+//! 2. **What does the detour cost?** `faults_vs_static_p99_ratio` = the
+//!    faulted serve's p99 end-to-end latency over the static serve's,
+//!    gated < 5.0: a one-replica outage may stretch the tail (lost KV
+//!    state is re-prefilled, survivors absorb the load) but must not
+//!    blow it up unboundedly. `redispatches_total` sizes the detour.
+//! 3. **Does the rejoined replica actually recover?**
+//!    `rewarm_hit_rate_recovery` = cluster cache-hit rate over the last
+//!    quarter of arrivals (well after the restart) over the first
+//!    quarter's (pre-failure), gated ≥ 0.5 — a restart that left
+//!    routing or re-warming broken would depress late hits.
+//!    `digest_rows_restarted` pins the gossip-level observable: the
+//!    rejoined replica's table row advertised again.
+//! 4. **Does elasticity serve the same work?** The scale-controller run
+//!    reports `scale_ups_total` / `scale_downs_total` and its own lost
+//!    count in `scale_requests_lost` (also must be 0 — it shares the
+//!    loss-free gate's machinery).
+//!
+//!     cargo bench --bench fault_tolerance
+
+use sart::cluster::{
+    serve_cluster, ClusterConfig, ClusterResult, FaultPlan, LbPolicy,
+    ScaleConfig,
+};
+use sart::coordinator::{Policy, SchedConfig};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::metrics::ServeReport;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::testkit::bench::{self, BenchReport};
+use sart::workload::{templated_trace, Request, TaskSpec};
+
+const REPLICAS: usize = 4;
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 32768;
+const CACHE_PAGES: usize = 24;
+const GOSSIP_ROUNDS: usize = 8;
+const SEED: u64 = 42;
+const N_REQUESTS: usize = 160;
+const RATE: f64 = 6.0;
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gaokao()
+}
+
+fn sched_cfg() -> SchedConfig {
+    SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: KV_TOKENS,
+        kv_page_tokens: 16,
+        prefix_cache_pages: CACHE_PAGES,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
+        seed: SEED,
+    }
+}
+
+fn run_cluster(
+    fault_plan: FaultPlan,
+    scale: Option<ScaleConfig>,
+    trace: &[Request],
+) -> ClusterResult {
+    let mut engines: Vec<Box<dyn Engine>> = (0..REPLICAS)
+        .map(|_| {
+            let mut e =
+                SimEngine::new(SLOTS, 512, spec(), SimCostModel::default());
+            e.set_prompt_bucket(256);
+            Box::new(e) as Box<dyn Engine>
+        })
+        .collect();
+    let mut prms: Vec<Box<dyn PrmScorer>> = (0..REPLICAS)
+        .map(|i| {
+            Box::new(OraclePrm::new(0.08, SEED ^ 7 ^ ((i as u64) << 32)))
+                as Box<dyn PrmScorer>
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        replicas: REPLICAS,
+        lb: LbPolicy::PrefixAffinity,
+        sched: sched_cfg(),
+        seed: SEED,
+        audit: false,
+        gossip_rounds: GOSSIP_ROUNDS,
+        gossip_adapt: false,
+        fault_plan,
+        scale,
+    };
+    serve_cluster(&cfg, &mut engines, &mut prms, trace)
+        .expect("fault bench serve")
+}
+
+/// Cluster cache-hit rate over one window of trace positions.
+fn window_hit_rate(
+    trace: &[Request],
+    res: &ClusterResult,
+    range: std::ops::Range<usize>,
+) -> f64 {
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for pos in range {
+        hit += res.outcomes[pos].cached_prompt_tokens;
+        total += trace[pos].prompt_tokens().len();
+    }
+    if total > 0 {
+        hit as f64 / total as f64
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    println!(
+        "== fault_tolerance ({REPLICAS} replicas x {SLOTS} slots, \
+         {N_REQUESTS} requests, gossip period {GOSSIP_ROUNDS}) =="
+    );
+    let mut report = BenchReport::new("faults");
+
+    let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 0.85, 3, 3);
+    // Fail replica 1 a third of the way in, restart it at the midpoint:
+    // the last quarter of arrivals sees a fully rejoined cluster.
+    let t_fail = trace[N_REQUESTS / 3].arrival;
+    let t_restart = trace[N_REQUESTS / 2].arrival;
+    let plan =
+        FaultPlan::parse(&format!("fail@{t_fail}:1,restart@{t_restart}:1"))
+            .expect("bench fault plan");
+
+    let static_res = run_cluster(FaultPlan::default(), None, &trace);
+    let faulted = run_cluster(plan.clone(), None, &trace);
+    let scaled = run_cluster(
+        FaultPlan::default(),
+        Some(ScaleConfig {
+            min_live: 2,
+            scale_up_queue: 3,
+            scale_up_prefill_tokens: 0,
+            scale_down_queue: 1,
+            cooldown_arrivals: 4,
+        }),
+        &trace,
+    );
+
+    let lost = (trace.len() - faulted.outcomes.len()) as f64;
+    let scale_lost = (trace.len() - scaled.outcomes.len()) as f64;
+    let p99_static = ServeReport::from_outcomes("static", &static_res.outcomes)
+        .e2e
+        .p99;
+    let p99_faulted = ServeReport::from_outcomes("faulted", &faulted.outcomes)
+        .e2e
+        .p99;
+    let p99_ratio = p99_faulted / p99_static.max(1e-12);
+    let early = window_hit_rate(&trace, &faulted, 0..N_REQUESTS / 4);
+    let late =
+        window_hit_rate(&trace, &faulted, 3 * N_REQUESTS / 4..N_REQUESTS);
+    let recovery = late / early.max(1e-12);
+    println!(
+        "failure at t={t_fail:.2}, restart at t={t_restart:.2}: \
+         {} re-dispatches over {} requests, 0 lost",
+        faulted.fault.redispatches, faulted.fault.requests_redispatched,
+    );
+    println!(
+        "p99 e2e: static {p99_static:.2}s vs faulted {p99_faulted:.2}s \
+         (ratio {p99_ratio:.2}, gate < 5.0)"
+    );
+    println!(
+        "cache-hit rate: first quarter {early:.3} vs last quarter {late:.3} \
+         (recovery {recovery:.2}, gate ≥ 0.5); rejoined replica advertises \
+         {} digests",
+        faulted.digest_rows[1],
+    );
+    println!(
+        "scale controller: {} ups / {} downs, {scale_lost:.0} lost",
+        scaled.fault.scale_ups, scaled.fault.scale_downs,
+    );
+
+    report.metric("faults_requests_lost", lost);
+    report.metric("faults_vs_static_p99_ratio", p99_ratio);
+    report.metric("rewarm_hit_rate_recovery", recovery);
+    report.metric("digest_rows_restarted", faulted.digest_rows[1] as f64);
+    report.metric("redispatches_total", faulted.fault.redispatches as f64);
+    report.metric(
+        "requests_redispatched",
+        faulted.fault.requests_redispatched as f64,
+    );
+    report.metric("p99_e2e_static", p99_static);
+    report.metric("p99_e2e_faulted", p99_faulted);
+    report.metric("cache_hit_rate_static", static_res.cache_hit_rate());
+    report.metric("cache_hit_rate_faulted", faulted.cache_hit_rate());
+    report.metric("scale_requests_lost", scale_lost);
+    report.metric("scale_ups_total", scaled.fault.scale_ups as f64);
+    report.metric("scale_downs_total", scaled.fault.scale_downs as f64);
+
+    // Wall cost of the co-simulated serves: the fault pump's overhead on
+    // the dispatch path (drain + re-dispatch + retraction included).
+    report.push(bench::run(
+        &format!("cluster serve {N_REQUESTS} reqs (static)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(run_cluster(
+                FaultPlan::default(),
+                None,
+                &trace,
+            ));
+        },
+    ));
+    report.push(bench::run(
+        &format!("cluster serve {N_REQUESTS} reqs (fail+restart)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(run_cluster(plan.clone(), None, &trace));
+        },
+    ));
+
+    report.write().expect("writing BENCH_faults.json");
+}

@@ -85,6 +85,9 @@ fn run_cluster(
         seed: SEED,
         audit: false,
         gossip_rounds,
+        gossip_adapt: false,
+        fault_plan: Default::default(),
+        scale: None,
     };
     serve_cluster(&cfg, &mut engines, &mut prms, trace)
         .expect("gossip bench serve")

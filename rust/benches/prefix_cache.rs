@@ -118,6 +118,9 @@ fn cluster_hit_rate(
         seed: SEED,
         audit: false,
         gossip_rounds: 0,
+        gossip_adapt: false,
+        fault_plan: Default::default(),
+        scale: None,
     };
     let res = serve_cluster(&cfg, &mut engines, &mut prms, trace)
         .expect("cluster serve");

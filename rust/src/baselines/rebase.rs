@@ -280,8 +280,10 @@ impl<'e> RebaseScheduler<'e> {
                     .iter()
                     .map(|c| c.2)
                     .collect(),
-                // Rebase never consults the cross-request cache.
+                // Rebase never consults the cross-request cache and has
+                // no cluster path, so neither field can be non-zero.
                 cached_prompt_tokens: 0,
+                redispatches: 0,
             });
         }
         self.kv.check_invariants()?;

@@ -1,0 +1,219 @@
+//! Deterministic fault injection and elasticity knobs for cluster serves.
+//!
+//! A [`FaultPlan`] is a virtual-time script of replica failures and
+//! restarts that the dispatcher applies between steps — no wall-clock
+//! randomness, so a faulted serve replays bit-for-bit under the same
+//! seed. [`ScaleConfig`] drives the queue-pressure scale controller that
+//! adds and removes replicas through the same join/drain machinery, and
+//! [`FaultStats`] is the cluster report's tally of everything that
+//! happened.
+
+use anyhow::{bail, Context, Result};
+
+/// What happens to a replica at a scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The replica crashes: in-flight requests are re-dispatched to
+    /// survivors, its gossip row is retracted, its cache is lost.
+    Fail,
+    /// The replica rejoins cold (empty cache, clock advanced to the
+    /// event time) and re-warms through the ordinary gossip path.
+    Restart,
+}
+
+/// One scripted event: `kind` applied to `replica` at virtual time `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// A virtual-time script of [`FaultEvent`]s, sorted by time. The default
+/// (empty) plan is inert: the dispatcher's zero-fault path is
+/// property-tested byte-identical to a plan-less serve.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse the CLI syntax: comma-separated `kind@t:replica` terms,
+    /// e.g. `fail@2.5:1,restart@6.0:1`. Events may be given in any
+    /// order; the plan sorts them by time (stable, so same-instant
+    /// events keep their written order). Replica indices are validated
+    /// against the actual replica count at serve time, not here.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for term in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (head, replica) = term
+                .rsplit_once(':')
+                .with_context(|| format!("fault term `{term}`: missing `:replica`"))?;
+            let (kind, t) = head
+                .split_once('@')
+                .with_context(|| format!("fault term `{term}`: missing `@time`"))?;
+            let kind = match kind {
+                "fail" => FaultKind::Fail,
+                "restart" => FaultKind::Restart,
+                other => bail!(
+                    "fault term `{term}`: unknown kind `{other}` \
+                     (want fail|restart)"
+                ),
+            };
+            let t: f64 = t
+                .parse()
+                .with_context(|| format!("fault term `{term}`: bad time `{t}`"))?;
+            if !t.is_finite() || t < 0.0 {
+                bail!("fault term `{term}`: time must be finite and >= 0");
+            }
+            let replica: usize = replica.parse().with_context(|| {
+                format!("fault term `{term}`: bad replica index `{replica}`")
+            })?;
+            events.push(FaultEvent { t, replica, kind });
+        }
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Ok(FaultPlan { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest replica index named by any event (plan validation).
+    pub fn max_replica(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.replica).max()
+    }
+}
+
+/// Queue-pressure scale controller knobs. The controller is evaluated
+/// once per arrival (after replicas catch up to it): it scales **up**
+/// when the mean queue depth across live replicas exceeds
+/// `scale_up_queue` — or the cluster-wide chunked-prefill backlog
+/// exceeds `scale_up_prefill_tokens` — and scales **down** when the mean
+/// depth falls below `scale_down_queue`. Keeping the down-threshold
+/// strictly below the up-threshold is the hysteresis band that stops the
+/// controller flapping; `cooldown_arrivals` rate-limits consecutive
+/// actions on top.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleConfig {
+    /// Replicas started live (also the floor scale-down respects).
+    pub min_live: usize,
+    /// Scale up when Σ requests-in-system > this × live replicas.
+    pub scale_up_queue: usize,
+    /// Also scale up when Σ pending prefill tokens exceeds this
+    /// (0 disables the prefill-backlog trigger).
+    pub scale_up_prefill_tokens: usize,
+    /// Scale down when Σ requests-in-system < this × live replicas
+    /// (0 disables scale-down). Must stay below `scale_up_queue`.
+    pub scale_down_queue: usize,
+    /// Arrivals that must pass between two scaling actions.
+    pub cooldown_arrivals: usize,
+}
+
+impl ScaleConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_live == 0 {
+            bail!("scale controller needs min_live >= 1");
+        }
+        if self.scale_up_queue == 0 {
+            bail!("scale controller needs scale_up_queue >= 1");
+        }
+        if self.scale_down_queue >= self.scale_up_queue {
+            bail!(
+                "scale_down_queue ({}) must stay below scale_up_queue ({}) \
+                 — no hysteresis band means the controller flaps",
+                self.scale_down_queue,
+                self.scale_up_queue
+            );
+        }
+        Ok(())
+    }
+}
+
+/// What the fault/elasticity layer did during one cluster serve.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Scripted failures applied.
+    pub failures: usize,
+    /// Scripted restarts applied.
+    pub restarts: usize,
+    /// Replicas activated by the scale controller.
+    pub scale_ups: usize,
+    /// Replicas drained by the scale controller.
+    pub scale_downs: usize,
+    /// Re-dispatch events (one per in-flight request per failure it
+    /// survived; a request failed twice counts twice).
+    pub redispatches: usize,
+    /// Distinct requests that were re-dispatched at least once.
+    pub requests_redispatched: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sorts_and_roundtrips() {
+        let p = FaultPlan::parse("restart@6.0:1, fail@2.5:1").unwrap();
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(
+            p.events[0],
+            FaultEvent { t: 2.5, replica: 1, kind: FaultKind::Fail }
+        );
+        assert_eq!(
+            p.events[1],
+            FaultEvent { t: 6.0, replica: 1, kind: FaultKind::Restart }
+        );
+        assert_eq!(p.max_replica(), Some(1));
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_empty_is_inert() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+        assert!(FaultPlan::default().is_empty());
+        assert_eq!(FaultPlan::default().max_replica(), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_terms() {
+        for bad in [
+            "fail@2.5",        // missing replica
+            "fail:1",          // missing time
+            "die@2.5:1",       // unknown kind
+            "fail@x:1",        // bad time
+            "fail@-1.0:1",     // negative time
+            "fail@inf:1",      // non-finite time
+            "fail@2.5:x",      // bad replica
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn parse_keeps_same_instant_order_stable() {
+        let p = FaultPlan::parse("fail@1.0:0,fail@1.0:2,restart@1.0:0")
+            .unwrap();
+        let reps: Vec<usize> = p.events.iter().map(|e| e.replica).collect();
+        assert_eq!(reps, vec![0, 2, 0]);
+    }
+
+    #[test]
+    fn scale_config_validation() {
+        let ok = ScaleConfig {
+            min_live: 2,
+            scale_up_queue: 6,
+            scale_up_prefill_tokens: 0,
+            scale_down_queue: 2,
+            cooldown_arrivals: 8,
+        };
+        ok.validate().unwrap();
+        assert!(ScaleConfig { min_live: 0, ..ok }.validate().is_err());
+        assert!(ScaleConfig { scale_up_queue: 0, ..ok }.validate().is_err());
+        assert!(
+            ScaleConfig { scale_down_queue: 6, ..ok }.validate().is_err(),
+            "down threshold touching up threshold must be rejected"
+        );
+    }
+}

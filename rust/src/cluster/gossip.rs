@@ -20,7 +20,7 @@
 //! advertisement retracts the dead digests. That trade is what lets the
 //! dispatch hot path drop its per-arrival probe scan.
 
-use crate::kvcache::{page_digest, DIGEST_SEED};
+use crate::kvcache::{page_digest, DigestDelta, DIGEST_SEED};
 use crate::tokenizer::Token;
 use std::collections::HashSet;
 
@@ -30,7 +30,17 @@ use std::collections::HashSet;
 pub struct DigestTable {
     page_tokens: usize,
     sets: Vec<HashSet<u64>>,
+    /// Digest-set version each row reflects. `None` means the row has no
+    /// known version (never advertised, legacy full-replace, or retracted
+    /// after a failure) — a delta cannot apply and the sender must fall
+    /// back to a full snapshot.
+    versions: Vec<Option<u64>>,
     advertisements: usize,
+    full_advertisements: usize,
+    delta_advertisements: usize,
+    /// Σ digests carried on the wire (snapshot sizes + delta add/retract
+    /// lists) — the traffic the delta protocol exists to shrink.
+    digests_sent: usize,
 }
 
 impl DigestTable {
@@ -42,7 +52,11 @@ impl DigestTable {
         DigestTable {
             page_tokens,
             sets: vec![HashSet::new(); replicas],
+            versions: vec![None; replicas],
             advertisements: 0,
+            full_advertisements: 0,
+            delta_advertisements: 0,
+            digests_sent: 0,
         }
     }
 
@@ -52,20 +66,94 @@ impl DigestTable {
 
     /// Replace `replica`'s advertised set wholesale (full-state
     /// advertisement; digests absent from the new set are retracted).
+    /// Version-less legacy form: the row's version becomes unknown, so
+    /// the next delta against it is rejected. Prefer
+    /// [`Self::advertise_full`] / [`Self::apply_delta`].
     pub fn advertise(
         &mut self,
         replica: usize,
         digests: impl IntoIterator<Item = u64>,
     ) {
         self.advertisements += 1;
+        self.full_advertisements += 1;
         let set = &mut self.sets[replica];
         set.clear();
         set.extend(digests);
+        self.digests_sent += set.len();
+        self.versions[replica] = None;
+    }
+
+    /// Replace `replica`'s row with a versioned full snapshot (cold
+    /// rejoin, first advertisement, or the fallback after a delta base
+    /// mismatch). Subsequent deltas chain off `version`.
+    pub fn advertise_full(
+        &mut self,
+        replica: usize,
+        version: u64,
+        digests: impl IntoIterator<Item = u64>,
+    ) {
+        self.advertisements += 1;
+        self.full_advertisements += 1;
+        let set = &mut self.sets[replica];
+        set.clear();
+        set.extend(digests);
+        self.digests_sent += set.len();
+        self.versions[replica] = Some(version);
+    }
+
+    /// Apply a version-keyed change set to `replica`'s row. Returns
+    /// `false` — leaving the row untouched — when the row is not at the
+    /// delta's base version (missed advert, retracted row, legacy
+    /// full-replace): the caller must fall back to a full snapshot.
+    pub fn apply_delta(&mut self, replica: usize, delta: &DigestDelta) -> bool {
+        if self.versions[replica] != Some(delta.base_version) {
+            return false;
+        }
+        self.advertisements += 1;
+        self.delta_advertisements += 1;
+        self.digests_sent += delta.adds.len() + delta.retracts.len();
+        let set = &mut self.sets[replica];
+        for d in &delta.retracts {
+            set.remove(d);
+        }
+        set.extend(delta.adds.iter().copied());
+        self.versions[replica] = Some(delta.version);
+        true
+    }
+
+    /// Drop everything `replica` ever advertised — the dispatcher's
+    /// reaction to its failure. Routing on the row would send requests
+    /// into a corpse; clearing it degrades those prompts to p2c until
+    /// the replica rejoins and re-advertises (version unknown, so the
+    /// rejoin advertisement is forced Full).
+    pub fn retract(&mut self, replica: usize) {
+        self.sets[replica].clear();
+        self.versions[replica] = None;
     }
 
     /// Advertisements received since construction.
     pub fn advertisements_total(&self) -> usize {
         self.advertisements
+    }
+
+    /// Full-snapshot advertisements received (versioned or legacy).
+    pub fn full_advertisements_total(&self) -> usize {
+        self.full_advertisements
+    }
+
+    /// Delta advertisements successfully applied.
+    pub fn delta_advertisements_total(&self) -> usize {
+        self.delta_advertisements
+    }
+
+    /// Σ digests carried by all accepted advertisements (wire traffic).
+    pub fn digests_sent_total(&self) -> usize {
+        self.digests_sent
+    }
+
+    /// Digests currently advertised by one replica's row.
+    pub fn replica_len(&self, replica: usize) -> usize {
+        self.sets[replica].len()
     }
 
     /// Σ advertised digests over all replicas (table size metric).
@@ -166,6 +254,79 @@ mod tests {
         assert_eq!(t.lookup(&a), (0, Vec::new()));
         assert_eq!(t.lookup(&b), (32, vec![1]));
         assert_eq!(t.advertisements_total(), 2);
+    }
+
+    #[test]
+    fn deltas_apply_only_on_matching_base_version() {
+        use crate::kvcache::DigestDelta;
+        let mut t = DigestTable::new(2, 16);
+        let a = prompt(0, 32);
+        let ds = prompt_page_digests(&a, 16);
+        t.advertise_full(0, 5, ds.clone());
+        assert_eq!(t.lookup(&a), (32, vec![0]));
+        assert_eq!(t.full_advertisements_total(), 1);
+        assert_eq!(t.digests_sent_total(), 2);
+
+        // Chained delta: retract the deep page, add a new root.
+        let b = prompt(100, 16);
+        let db = prompt_page_digests(&b, 16);
+        let d1 = DigestDelta {
+            base_version: 5,
+            version: 8,
+            adds: db.clone(),
+            retracts: vec![ds[1]],
+        };
+        assert!(t.apply_delta(0, &d1));
+        assert_eq!(t.lookup(&a), (16, vec![0]));
+        assert_eq!(t.lookup(&b), (16, vec![0]));
+        assert_eq!(t.delta_advertisements_total(), 1);
+        assert_eq!(t.digests_sent_total(), 4);
+
+        // Stale base: rejected, row untouched.
+        let stale = DigestDelta {
+            base_version: 5,
+            version: 9,
+            adds: vec![],
+            retracts: db.clone(),
+        };
+        assert!(!t.apply_delta(0, &stale));
+        assert_eq!(t.lookup(&b), (16, vec![0]));
+        // A replica that never advertised has no version to chain from.
+        assert!(!t.apply_delta(1, &d1));
+        // Legacy full-replace drops the version: deltas stop applying.
+        t.advertise(0, ds.clone());
+        let d2 = DigestDelta {
+            base_version: 8,
+            version: 10,
+            adds: vec![],
+            retracts: vec![],
+        };
+        assert!(!t.apply_delta(0, &d2));
+        assert_eq!(t.advertisements_total(), 3);
+    }
+
+    #[test]
+    fn retract_clears_row_and_forces_full_rejoin() {
+        let mut t = DigestTable::new(2, 16);
+        let a = prompt(0, 32);
+        let ds = prompt_page_digests(&a, 16);
+        t.advertise_full(0, 3, ds.clone());
+        t.advertise_full(1, 3, ds.clone());
+        assert_eq!(t.replica_len(0), 2);
+        t.retract(0);
+        assert_eq!(t.replica_len(0), 0);
+        assert_eq!(t.lookup(&a), (32, vec![1]), "survivor row intact");
+        // The retracted row lost its version: a chained delta is
+        // rejected until a full snapshot re-bases it.
+        let d = crate::kvcache::DigestDelta {
+            base_version: 3,
+            version: 4,
+            adds: vec![],
+            retracts: vec![],
+        };
+        assert!(!t.apply_delta(0, &d));
+        t.advertise_full(0, 7, ds.clone());
+        assert_eq!(t.lookup(&a), (32, vec![0, 1]));
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! keeps per-replica timelines directly comparable and lets the merged
 //! outcome set report cluster-level latency percentiles. The dispatcher
 //! drives the replicas event-by-event: before assigning a request that
-//! arrives at time `t`, every replica is stepped forward until its clock
-//! reaches `t` (or it idles), so load-aware policies observe each
-//! replica's true state *at the arrival instant* — not a stale snapshot.
+//! arrives at time `t`, every running replica is stepped forward until
+//! its clock reaches `t` (or it idles), so load-aware policies observe
+//! each replica's true state *at the arrival instant* — not a stale
+//! snapshot.
 //!
 //! A busy replica may overshoot `t` mid-round; that is exactly the
 //! single-engine semantics, where a request arriving during a decode
@@ -49,26 +50,64 @@
 //! freshness for advertisement traffic. Stale table entries are only a
 //! placement pessimization — admission walks the real tree — and are
 //! counted in [`GossipStats::stale_hits`].
+//!
+//! Advertisements travel as **version-keyed deltas**: a replica's first
+//! push (and a cold rejoin after a failure) is a full snapshot, every
+//! later one carries just the digests added and retracted since — see
+//! [`crate::kvcache::Advertisement`]. A delta whose base version no
+//! longer matches the table row falls back to a forced full snapshot,
+//! so the table never applies a change set against the wrong base.
+//! With `--gossip-adapt`, the dispatcher additionally tunes the period
+//! at runtime from the replicas' own stale-admission counts: a window
+//! with too many stale table routes halves the period (fresher table),
+//! a clean window doubles it back toward the configured `G`.
+//!
+//! # Fault injection and elasticity
+//!
+//! A [`FaultPlan`] (`--fault-plan fail@2.5:1,restart@6.0:1`) scripts
+//! replica failures and restarts in *virtual* time; the dispatcher
+//! applies each event between steps, so a faulted serve is exactly as
+//! deterministic as a fault-free one. On a failure the victim's
+//! in-flight requests are re-dispatched to the surviving replicas
+//! (re-prefilled — its KV cache died with it; outcomes record
+//! [`RequestOutcome::redispatches`] and the added latency from the
+//! *original* arrival), its [`DigestTable`] row is retracted so routing
+//! degrades to power-of-two-choices instead of routing into a corpse,
+//! and a later restart rejoins the replica cold, re-warming through the
+//! ordinary gossip path. A [`ScaleConfig`] drives a queue-pressure scale
+//! controller through the same join/drain machinery: sustained queue
+//! depth (or chunked-prefill backlog) above threshold activates a
+//! standby replica, pressure below the hysteresis band drains the
+//! highest-index live one. The zero-fault path — empty plan, no scale
+//! controller — is property-tested byte-identical to a plan-less serve.
 
+pub mod fault;
 pub mod gossip;
 
+pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultStats, ScaleConfig};
 pub use gossip::DigestTable;
 
 use crate::coordinator::{
-    ClockHandle, RequestOutcome, SchedConfig, Scheduler, ServeResult,
-    StepOutcome,
+    ClockHandle, DrainItem, RequestOutcome, SchedConfig, Scheduler,
+    ServeResult, StepOutcome,
 };
 use crate::engine::Engine;
+use crate::kvcache::Advertisement;
 use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
 use crate::util::clock::SimClock;
 use crate::util::rng::Rng;
 use crate::workload::Request;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Multiplier used to decorrelate per-replica seed streams (replica 0
 /// keeps the base seed, preserving the R = 1 reduction).
 pub const REPLICA_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Table-routed admissions per adaptation window of the `--gossip-adapt`
+/// controller: the period only moves once this many routing decisions
+/// actually tested the table, so idle traffic cannot flap it.
+const GOSSIP_ADAPT_WINDOW: usize = 8;
 
 /// Load-balancing policy of the dispatch layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -156,6 +195,17 @@ pub struct ClusterConfig {
     /// replica's tree per arrival (the pre-gossip behaviour, property-
     /// tested byte-identical to gossip with fresh advertisements).
     pub gossip_rounds: usize,
+    /// Adapt the gossip period at runtime from observed stale table
+    /// routes (halve on a stale window, double back toward
+    /// `gossip_rounds` on a clean one). Off by default; the final period
+    /// is reported in [`GossipStats::effective_gossip_rounds`].
+    pub gossip_adapt: bool,
+    /// Scripted replica failures/restarts in virtual time. The default
+    /// empty plan is inert (property-tested byte-identical).
+    pub fault_plan: FaultPlan,
+    /// Queue-pressure scale controller; `None` keeps the replica set
+    /// static (every replica live from t = 0).
+    pub scale: Option<ScaleConfig>,
 }
 
 /// Gossip-layer accounting of one cluster serve (all zero when gossip is
@@ -164,8 +214,20 @@ pub struct ClusterConfig {
 pub struct GossipStats {
     /// The configured advertisement period (`ClusterConfig::gossip_rounds`).
     pub gossip_rounds: usize,
-    /// Full-state advertisements replicas pushed into the digest table.
+    /// The period in force when the serve ended — equal to
+    /// `gossip_rounds` unless `--gossip-adapt` moved it.
+    pub effective_gossip_rounds: usize,
+    /// Advertisements replicas pushed into the digest table (full
+    /// snapshots + applied deltas).
     pub advertisements: usize,
+    /// Full-snapshot advertisements among them (first pushes, cold
+    /// rejoins, delta-base-mismatch fallbacks).
+    pub full_advertisements: usize,
+    /// Delta advertisements successfully applied.
+    pub delta_advertisements: usize,
+    /// Σ digests carried on the wire by all advertisements — the traffic
+    /// the delta protocol exists to shrink.
+    pub digests_sent: usize,
     /// Σ advertised digests across replicas at the end of the serve.
     pub digest_table_digests: usize,
     /// Requests routed on a table match the replica could no longer fully
@@ -181,19 +243,33 @@ pub struct GossipStats {
 
 /// Result of a cluster serve.
 pub struct ClusterResult {
-    /// Merged outcomes in global dispatch (= arrival) order.
+    /// Merged outcomes in trace (= arrival) order. A re-dispatched
+    /// request's outcome keeps its *original* arrival — the re-dispatch
+    /// delay shows up in its latencies — and records the re-dispatch
+    /// count in [`RequestOutcome::redispatches`].
     pub outcomes: Vec<RequestOutcome>,
     /// Per-replica serve results (timelines share the t = 0 origin).
-    /// Their `outcomes` vectors are empty: the k-way merge *moves* each
-    /// outcome into the merged list above instead of cloning it.
+    /// Their `outcomes` vectors are empty: the merge *moves* each
+    /// outcome into the merged list above instead of cloning it. A
+    /// replica that failed and restarted contributes the concatenation
+    /// of its incarnations' timelines (cumulative per-point counters
+    /// restart from zero at the rejoin).
     pub replica_results: Vec<ServeResult>,
-    /// Replica index each trace position was dispatched to.
+    /// Replica that ultimately *served* each trace position (the final
+    /// dispatch target after any failure re-dispatches).
     pub assignments: Vec<usize>,
     pub lb: LbPolicy,
     /// Gossip-layer accounting (advertisements, table size, stale hits,
     /// probe calls). All zero except `gossip_rounds` when the policy
     /// never consulted the digest table.
     pub gossip: GossipStats,
+    /// Fault/elasticity accounting (all zero on a fault-free static
+    /// serve).
+    pub fault: FaultStats,
+    /// Digests each replica's table row advertised at the end of the
+    /// serve — the re-warm observable: a restarted replica's row grows
+    /// back from zero through the ordinary gossip path.
+    pub digest_rows: Vec<usize>,
     pub wall_seconds: f64,
 }
 
@@ -202,8 +278,9 @@ impl ClusterResult {
     /// sample times emitting, at each event, the *sum* of each replica's
     /// latest state — so `peak_branches()` etc. report cluster totals,
     /// not one replica's snapshot. (A drained replica's last sample is
-    /// all-zero, so it stops contributing.) Per-replica views stay in
-    /// `replica_results`.
+    /// all-zero, so it stops contributing; a failed replica closes with
+    /// an explicit zero-occupancy sample at the failure instant.)
+    /// Per-replica views stay in `replica_results`.
     pub fn merged_timeline(&self) -> Timeline {
         let mut events: Vec<(f64, usize, usize)> = Vec::new();
         for (ri, r) in self.replica_results.iter().enumerate() {
@@ -321,6 +398,7 @@ impl ClusterResult {
             per_replica_tokens,
             per_replica_engine_seconds,
             gossip: self.gossip,
+            fault: self.fault,
         }
     }
 }
@@ -346,6 +424,8 @@ pub struct ClusterReport {
     pub cache_hit_rate: f64,
     /// Gossip-layer accounting (see [`GossipStats`]).
     pub gossip: GossipStats,
+    /// Fault/elasticity accounting (see [`FaultStats`]).
+    pub fault: FaultStats,
 }
 
 /// max/mean skew; 1.0 for empty or all-zero inputs.
@@ -379,117 +459,443 @@ fn catch_up(s: &mut Scheduler, t: f64) -> Result<usize> {
     Ok(steps)
 }
 
-/// Two random probes, join the shorter queue (also the prefix-affinity
-/// fallback for cold prompts, so both spellings stay in lockstep).
-/// Caller guarantees ≥ 2 replicas (`pick_replica` short-circuits R = 1).
-fn pick_p2c(scheds: &[Scheduler], rng: &mut Rng) -> usize {
-    let r = scheds.len();
-    debug_assert!(r >= 2, "p2c needs two replicas to probe");
-    let a = rng.below(r);
-    let mut b = rng.below(r - 1);
-    if b >= a {
-        b += 1;
-    }
-    if scheds[b].load().requests_in_system()
-        < scheds[a].load().requests_in_system()
-    {
-        b
-    } else {
-        a
-    }
+/// Where a replica is in its lifecycle, from the dispatcher's seat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    /// Routed to and stepped.
+    Live,
+    /// Draining (scale-down): no new requests, but still stepped until
+    /// its in-flight work finishes. The scale controller re-activates
+    /// draining replicas first — their caches are still warm.
+    Draining,
+    /// Failed or never started: neither routed to nor stepped. Restart
+    /// or scale-up returns it to `Live` with its clock jumped forward.
+    Down,
 }
 
-/// Choose the replica for one arriving request. All load reads happen at
-/// the arrival instant (the caller caught every replica up to it).
-/// `probe_calls` is incremented at the probe site for every per-replica
-/// radix-tree probe made (the dispatch-cost metric gossip removes), so
-/// the published counter can never drift from the work actually done.
-fn pick_replica(
+/// All mutable dispatcher state of one cluster serve, so the event pump
+/// (arrivals, scripted faults, scale actions) is ordinary methods
+/// instead of a parameter blizzard.
+struct Fleet<'e> {
     lb: LbPolicy,
-    scheds: &[Scheduler],
-    req: &Request,
-    rr_next: &mut usize,
-    rng: &mut Rng,
-    probe_calls: &mut usize,
-) -> usize {
-    let r = scheds.len();
-    if r == 1 {
-        return 0;
+    gossip_on: bool,
+    gossip_adapt: bool,
+    /// Configured advertisement period (the adaptive period's ceiling).
+    gossip_rounds_cfg: usize,
+    scale: Option<ScaleConfig>,
+    scheds: Vec<Scheduler<'e>>,
+    state: Vec<ReplicaState>,
+    table: DigestTable,
+    steps_since_advert: Vec<usize>,
+    /// Advertisement period currently in force (== `gossip_rounds_cfg`
+    /// unless `--gossip-adapt` moved it).
+    period: usize,
+    /// `(table-routed, stale)` totals at the last adaptation decision.
+    adapt_mark: (usize, usize),
+    /// Gossip-observation counters retired by failed incarnations
+    /// (`fail_and_drain` zeroes the scheduler's own), keeping the
+    /// adaptation totals monotone across failures.
+    retired_observed: (usize, usize),
+    /// Trace positions dispatched to each replica's *current*
+    /// incarnation, in dispatch order — the key that maps drained items
+    /// and finished outcomes back to trace positions.
+    dispatch_log: Vec<Vec<usize>>,
+    /// Final dispatch target per trace position.
+    assignments: Vec<usize>,
+    outcomes_by_pos: Vec<Option<RequestOutcome>>,
+    redispatch_count: Vec<usize>,
+    /// Table-promised prefix match per trace position (stale-hit
+    /// accounting; overwritten if the request is re-dispatched).
+    expected_match: Vec<usize>,
+    /// Partial results of failed incarnations, per replica.
+    incarnations: Vec<Vec<ServeResult>>,
+    stats: FaultStats,
+    rr_next: usize,
+    rng: Rng,
+    probe_calls: usize,
+    /// Arrivals since the last scale action (controller cooldown).
+    since_scale: usize,
+}
+
+impl<'e> Fleet<'e> {
+    fn live(&self) -> Vec<usize> {
+        (0..self.state.len())
+            .filter(|&i| self.state[i] == ReplicaState::Live)
+            .collect()
     }
-    match lb {
-        LbPolicy::RoundRobin => {
-            let i = *rr_next % r;
-            *rr_next += 1;
-            i
-        }
-        // Token load counts the in-flight prefill backlog too: a replica
-        // mid-way through streaming a long cold header has committed to
-        // that compute even though no decode tokens show it yet.
-        LbPolicy::LeastLoaded => (0..r)
-            .min_by_key(|&i| scheds[i].load().token_load())
-            .unwrap_or(0),
-        LbPolicy::JoinShortestQueue => (0..r)
-            .min_by_key(|&i| scheds[i].load().requests_in_system())
-            .unwrap_or(0),
-        LbPolicy::PowerOfTwoChoices => pick_p2c(scheds, rng),
-        LbPolicy::PrefixAffinity => {
-            // Probe every replica's radix cache for the longest resident
-            // prefix of this prompt; route to the best hit, breaking ties
-            // by queue depth (then index, for determinism). A cold prompt
-            // has no affinity anywhere — fall back to p2c. (Gossip mode
-            // replaces this scan with `pick_gossip`.)
-            let prompt = req.prompt_tokens();
-            let hits: Vec<usize> = scheds
-                .iter()
-                .map(|s| {
-                    *probe_calls += 1;
-                    s.cached_prefix_tokens(&prompt)
-                })
-                .collect();
-            let best = hits.iter().copied().max().unwrap_or(0);
-            if best == 0 {
-                return pick_p2c(scheds, rng);
+
+    /// Advance every running (live or draining) replica to `t`.
+    fn catch_up_running(&mut self, t: f64) -> Result<()> {
+        for i in 0..self.scheds.len() {
+            if self.state[i] != ReplicaState::Down {
+                self.steps_since_advert[i] +=
+                    catch_up(&mut self.scheds[i], t)?;
             }
-            (0..r)
-                .filter(|&i| hits[i] == best)
-                .min_by_key(|&i| (scheds[i].load().requests_in_system(), i))
-                .unwrap_or(0)
+        }
+        Ok(())
+    }
+
+    /// Two random probes among `live`, join the shorter queue (also the
+    /// prefix-affinity fallback for cold prompts, so both spellings stay
+    /// in lockstep). Caller guarantees ≥ 2 candidates.
+    fn pick_p2c(&mut self, live: &[usize]) -> usize {
+        debug_assert!(live.len() >= 2, "p2c needs two replicas to probe");
+        let a = self.rng.below(live.len());
+        let mut b = self.rng.below(live.len() - 1);
+        if b >= a {
+            b += 1;
+        }
+        let (a, b) = (live[a], live[b]);
+        if self.scheds[b].load().requests_in_system()
+            < self.scheds[a].load().requests_in_system()
+        {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Probe-mode policy dispatch over the live replicas. All load reads
+    /// happen at the arrival instant (the caller caught every replica up
+    /// to it). `probe_calls` counts every per-replica radix-tree probe
+    /// at the probe site, so the published counter can never drift from
+    /// the work actually done.
+    fn pick_replica(&mut self, live: &[usize], req: &Request) -> usize {
+        debug_assert!(live.len() >= 2, "single-survivor routing is forced");
+        match self.lb {
+            LbPolicy::RoundRobin => {
+                let i = live[self.rr_next % live.len()];
+                self.rr_next += 1;
+                i
+            }
+            // Token load counts the in-flight prefill backlog too: a
+            // replica mid-way through streaming a long cold header has
+            // committed to that compute even though no decode tokens
+            // show it yet.
+            LbPolicy::LeastLoaded => live
+                .iter()
+                .copied()
+                .min_by_key(|&i| self.scheds[i].load().token_load())
+                .unwrap_or(live[0]),
+            LbPolicy::JoinShortestQueue => live
+                .iter()
+                .copied()
+                .min_by_key(|&i| self.scheds[i].load().requests_in_system())
+                .unwrap_or(live[0]),
+            LbPolicy::PowerOfTwoChoices => self.pick_p2c(live),
+            LbPolicy::PrefixAffinity => {
+                // Probe every live replica's radix cache for the longest
+                // resident prefix of this prompt; route to the best hit,
+                // breaking ties by queue depth (then index, for
+                // determinism). A cold prompt has no affinity anywhere —
+                // fall back to p2c. (Gossip mode replaces this scan with
+                // the digest-table lookup.)
+                let prompt = req.prompt_tokens();
+                let hits: Vec<(usize, usize)> = live
+                    .iter()
+                    .map(|&i| {
+                        self.probe_calls += 1;
+                        (i, self.scheds[i].cached_prefix_tokens(&prompt))
+                    })
+                    .collect();
+                let best =
+                    hits.iter().map(|&(_, h)| h).max().unwrap_or(0);
+                if best == 0 {
+                    return self.pick_p2c(live);
+                }
+                hits.into_iter()
+                    .filter(|&(_, h)| h == best)
+                    .map(|(i, _)| i)
+                    .min_by_key(|&i| {
+                        (self.scheds[i].load().requests_in_system(), i)
+                    })
+                    .unwrap_or(live[0])
+            }
+        }
+    }
+
+    /// Push due advertisements into the digest table: full snapshot on a
+    /// replica's first take (or cold rejoin), deltas afterwards, with a
+    /// forced full snapshot if a delta's base no longer matches the row.
+    fn refresh_adverts(&mut self) {
+        for i in 0..self.scheds.len() {
+            if self.state[i] == ReplicaState::Down
+                || self.steps_since_advert[i] < self.period
+            {
+                continue;
+            }
+            match self.scheds[i].take_advertisement() {
+                Advertisement::Full { version, digests } => {
+                    self.table.advertise_full(i, version, digests);
+                }
+                Advertisement::Delta(d) => {
+                    if !self.table.apply_delta(i, &d) {
+                        let (v, ds) = self.scheds[i].full_advertisement();
+                        self.table.advertise_full(i, v, ds);
+                    }
+                }
+            }
+            self.steps_since_advert[i] = 0;
+        }
+    }
+
+    /// `--gossip-adapt`: retune the advertisement period from the
+    /// replicas' own admission-time staleness counts. Stale table routes
+    /// above 1/4 of a window halve the period (fresher table at more
+    /// advertisement traffic); a perfectly clean window doubles it back
+    /// toward the configured ceiling.
+    fn adapt_period(&mut self) {
+        if !self.gossip_adapt {
+            return;
+        }
+        let (mut routed, mut stale) = self.retired_observed;
+        for s in &self.scheds {
+            let (r0, s0) = s.gossip_observed();
+            routed += r0;
+            stale += s0;
+        }
+        let dr = routed - self.adapt_mark.0;
+        if dr < GOSSIP_ADAPT_WINDOW {
+            return;
+        }
+        let ds = stale - self.adapt_mark.1;
+        if ds * 4 > dr {
+            self.period = (self.period / 2).max(1);
+        } else if ds == 0 {
+            self.period = (self.period * 2).min(self.gossip_rounds_cfg);
+        }
+        self.adapt_mark = (routed, stale);
+    }
+
+    /// Choose the replica for one request (arrival or re-dispatch).
+    /// Returns `(replica, table-promised match tokens)`; the promise is
+    /// 0 on probe-mode, fallback and forced routes. Errors when nothing
+    /// is live to route to.
+    fn route(&mut self, req: &Request) -> Result<(usize, usize)> {
+        let live = self.live();
+        if live.is_empty() {
+            bail!("no live replica to dispatch to (all failed or drained)");
+        }
+        if live.len() == 1 {
+            // Forced choice: consume no randomness, probe nothing —
+            // mirroring the pinned R = 1 reduction.
+            return Ok((live[0], 0));
+        }
+        if self.gossip_on {
+            self.adapt_period();
+            self.refresh_adverts();
+            let prompt = req.prompt_tokens();
+            let (matched, candidates) = self.table.lookup(&prompt);
+            let viable: Vec<usize> = candidates
+                .into_iter()
+                .filter(|&i| self.state[i] == ReplicaState::Live)
+                .collect();
+            if matched == 0 || viable.is_empty() {
+                return Ok((self.pick_p2c(&live), 0));
+            }
+            let idx = viable
+                .into_iter()
+                .min_by_key(|&i| {
+                    (self.scheds[i].load().requests_in_system(), i)
+                })
+                .unwrap_or(live[0]);
+            return Ok((idx, matched));
+        }
+        Ok((self.pick_replica(&live, req), 0))
+    }
+
+    /// Hand `req` (trace position `pos`) to replica `idx` and record the
+    /// bookkeeping that later maps its outcome back to `pos`.
+    fn dispatch_to(
+        &mut self,
+        idx: usize,
+        pos: usize,
+        req: Request,
+        expected: usize,
+    ) -> Result<()> {
+        self.scheds[idx].dispatch_routed(req, expected)?;
+        self.dispatch_log[idx].push(pos);
+        self.assignments[pos] = idx;
+        self.expected_match[pos] = expected;
+        Ok(())
+    }
+
+    /// Apply one scripted fault event.
+    fn apply_event(&mut self, e: &FaultEvent) -> Result<()> {
+        match e.kind {
+            FaultKind::Fail => self.fail_replica(e.replica, e.t),
+            FaultKind::Restart => self.restart_replica(e.replica, e.t),
+        }
+    }
+
+    /// Replica `f` dies at virtual time `t`: its in-flight requests are
+    /// re-dispatched to survivors (re-prefilled — the cache died with
+    /// it), finished-but-unreported outcomes are banked, its digest-table
+    /// row is retracted so routing degrades to p2c instead of routing
+    /// into a corpse, and the scheduler resets to a cold just-booted
+    /// state awaiting a possible restart.
+    fn fail_replica(&mut self, f: usize, t: f64) -> Result<()> {
+        if self.state[f] == ReplicaState::Down {
+            bail!(
+                "fault plan fails replica {f} at t={t} but it is already \
+                 down"
+            );
+        }
+        // Bring every running replica to the failure instant: the
+        // victim's in-flight state is its true state at t, and the
+        // survivors' loads are current for re-dispatch routing.
+        self.catch_up_running(t)?;
+        let (routed, stale) = self.scheds[f].gossip_observed();
+        self.retired_observed.0 += routed;
+        self.retired_observed.1 += stale;
+        let (items, partial) = self.scheds[f].fail_and_drain()?;
+        self.incarnations[f].push(partial);
+        let positions = std::mem::take(&mut self.dispatch_log[f]);
+        if items.len() != positions.len() {
+            bail!(
+                "replica {f} drained {} items for {} dispatches",
+                items.len(),
+                positions.len()
+            );
+        }
+        self.table.retract(f);
+        self.steps_since_advert[f] = 0;
+        self.state[f] = ReplicaState::Down;
+        self.stats.failures += 1;
+
+        let mut unfinished = Vec::new();
+        for (item, pos) in items.into_iter().zip(positions) {
+            match item {
+                DrainItem::Finished(o) => {
+                    self.outcomes_by_pos[pos] = Some(o);
+                }
+                DrainItem::Unfinished(mut req) => {
+                    // A lost request cannot rejoin a queue before the
+                    // failure is observed: it re-arrives at the failure
+                    // instant (also what keeps per-replica dispatch
+                    // order sorted by arrival). The merged outcome
+                    // restores the original arrival, so the latency it
+                    // reports includes the whole detour.
+                    req.arrival = t;
+                    unfinished.push((pos, req));
+                }
+            }
+        }
+        for (pos, req) in unfinished {
+            let (idx, expected) = self.route(&req).with_context(|| {
+                format!(
+                    "re-dispatching request {} after replica {f} failed \
+                     at t={t}",
+                    req.id
+                )
+            })?;
+            self.redispatch_count[pos] += 1;
+            self.stats.redispatches += 1;
+            self.dispatch_to(idx, pos, req, expected)?;
+        }
+        Ok(())
+    }
+
+    /// Replica `f` rejoins cold at virtual time `t`: live again, clock
+    /// jumped to the rejoin instant, empty cache re-warming through the
+    /// ordinary gossip path (its first advertisement is a Full snapshot
+    /// — the fresh manager has nothing advertised).
+    fn restart_replica(&mut self, f: usize, t: f64) -> Result<()> {
+        if self.state[f] != ReplicaState::Down {
+            bail!(
+                "fault plan restarts replica {f} at t={t} but it is not \
+                 down"
+            );
+        }
+        self.scheds[f].advance_clock_to(t);
+        self.state[f] = ReplicaState::Live;
+        self.steps_since_advert[f] = 0;
+        self.stats.restarts += 1;
+        Ok(())
+    }
+
+    /// Queue-pressure scale controller, evaluated once per arrival
+    /// (after catch-up, before routing). At most one action per call;
+    /// `cooldown_arrivals` throttles consecutive actions and the gap
+    /// between the up and down thresholds is the hysteresis band.
+    fn scale_tick(&mut self, now: f64) {
+        let Some(sc) = self.scale else { return };
+        self.since_scale += 1;
+        if self.since_scale < sc.cooldown_arrivals {
+            return;
+        }
+        let live = self.live();
+        let n = live.len();
+        let queued: usize = live
+            .iter()
+            .map(|&i| self.scheds[i].load().requests_in_system())
+            .sum();
+        let backlog: usize = live
+            .iter()
+            .map(|&i| self.scheds[i].load().pending_prefill_tokens)
+            .sum();
+        let up = queued > sc.scale_up_queue * n
+            || (sc.scale_up_prefill_tokens > 0
+                && backlog > sc.scale_up_prefill_tokens);
+        if up {
+            // Draining replicas re-activate first: their caches are
+            // still warm. Cold standbys join at the current instant.
+            let target = (0..self.state.len())
+                .find(|&i| self.state[i] == ReplicaState::Draining)
+                .or_else(|| {
+                    (0..self.state.len())
+                        .find(|&i| self.state[i] == ReplicaState::Down)
+                });
+            if let Some(i) = target {
+                if self.state[i] == ReplicaState::Down {
+                    self.scheds[i].advance_clock_to(now);
+                    self.steps_since_advert[i] = 0;
+                }
+                self.state[i] = ReplicaState::Live;
+                self.stats.scale_ups += 1;
+                self.since_scale = 0;
+            }
+            return;
+        }
+        if sc.scale_down_queue > 0
+            && n > sc.min_live
+            && queued < sc.scale_down_queue * n
+        {
+            if let Some(i) = (0..self.state.len())
+                .rev()
+                .find(|&i| self.state[i] == ReplicaState::Live)
+            {
+                self.state[i] = ReplicaState::Draining;
+                self.stats.scale_downs += 1;
+                self.since_scale = 0;
+            }
         }
     }
 }
 
-/// Gossip-mode prefix affinity: route on the digest table instead of
-/// probing trees. Same decision rule as the probe path — longest
-/// advertised prefix, ties by fewest requests in system (then index),
-/// cold → power-of-two-choices — so fresh advertisements reproduce probe
-/// routing byte for byte (property-tested). Returns the chosen replica
-/// and the advertised match length the table promised (0 on cold /
-/// fallback routes; the caller compares it against the admission's
-/// actual cache coverage to count stale hits).
-fn pick_gossip(
-    table: &DigestTable,
-    scheds: &[Scheduler],
-    req: &Request,
-    rng: &mut Rng,
-) -> (usize, usize) {
-    debug_assert!(scheds.len() >= 2, "gossip routing needs replicas");
-    let prompt = req.prompt_tokens();
-    let (matched_tokens, candidates) = table.lookup(&prompt);
-    if matched_tokens == 0 {
-        return (pick_p2c(scheds, rng), 0);
+/// Concatenate the partial results of a replica's incarnations (failed
+/// ones plus the final `finish()`) into one per-replica [`ServeResult`].
+/// Timelines chain in time order — each incarnation's samples start
+/// after the previous one's failure instant.
+fn merge_incarnations(mut parts: Vec<ServeResult>) -> ServeResult {
+    let mut merged = parts.remove(0);
+    for p in parts {
+        merged.timeline.points.extend(p.timeline.points);
+        merged.rounds += p.rounds;
+        merged.engine_seconds += p.engine_seconds;
+        merged.cache_hit_tokens += p.cache_hit_tokens;
+        merged.prompt_tokens += p.prompt_tokens;
     }
-    let idx = candidates
-        .into_iter()
-        .min_by_key(|&i| (scheds[i].load().requests_in_system(), i))
-        .unwrap_or(0);
-    (idx, matched_tokens)
+    merged
 }
 
 /// Serve a trace across `cfg.replicas` engine replicas (virtual time
 /// only: each replica gets its own [`SimClock`], all sharing the trace's
 /// t = 0 origin). `engines[i]` / `prms[i]` back replica `i`; the caller
 /// owns their construction so tests and benches can wire arbitrary
-/// substrates.
+/// substrates. Scripted faults (`cfg.fault_plan`) and the scale
+/// controller (`cfg.scale`) are applied between steps, in event-time
+/// order interleaved with arrivals.
 pub fn serve_cluster(
     cfg: &ClusterConfig,
     engines: &mut [Box<dyn Engine>],
@@ -512,9 +918,23 @@ pub fn serve_cluster(
             bail!("trace not sorted by arrival");
         }
     }
+    if let Some(m) = cfg.fault_plan.max_replica() {
+        if m >= r {
+            bail!("fault plan names replica {m} but the cluster has {r}");
+        }
+    }
+    if let Some(sc) = &cfg.scale {
+        sc.validate()?;
+        if sc.min_live > r {
+            bail!(
+                "scale controller min_live {} exceeds the replica count {r}",
+                sc.min_live
+            );
+        }
+    }
     let wall0 = std::time::Instant::now();
 
-    let mut scheds: Vec<Scheduler> = engines
+    let scheds: Vec<Scheduler> = engines
         .iter_mut()
         .zip(prms.iter_mut())
         .enumerate()
@@ -532,99 +952,144 @@ pub fn serve_cluster(
         })
         .collect();
 
-    let mut rng = Rng::new(cfg.seed ^ 0x00D1_5BA7);
-    let mut rr_next = 0usize;
-    let mut assignments = Vec::with_capacity(trace.len());
-    // Gossip state: the digest table, each replica's steps since its
-    // last advertisement, and the table-promised match per dispatch
-    // (compared against admission-time coverage to count stale hits).
     let gossip_on =
         cfg.gossip_rounds > 0 && cfg.lb == LbPolicy::PrefixAffinity && r > 1;
-    let mut table = DigestTable::new(r, cfg.sched.kv_page_tokens);
-    let mut steps_since_advert = vec![0usize; r];
-    let mut expected_match = vec![0usize; trace.len()];
-    let mut probe_calls = 0usize;
-    for (pos, req) in trace.iter().enumerate() {
-        // Advance every replica to the arrival instant so the policy sees
-        // true loads, then dispatch.
-        for (i, s) in scheds.iter_mut().enumerate() {
-            steps_since_advert[i] += catch_up(s, req.arrival)?;
+    // With a scale controller, only the first `min_live` replicas start
+    // live; the rest are cold standbys the controller can activate.
+    let mut state = vec![ReplicaState::Live; r];
+    if let Some(sc) = &cfg.scale {
+        for s in state.iter_mut().skip(sc.min_live) {
+            *s = ReplicaState::Down;
         }
-        let idx = if gossip_on {
-            // Advertisement stepping: a replica whose gossip period
-            // elapsed (≥ G steps of its own since the last push)
-            // refreshes its table row before this routing decision.
-            for (i, steps) in steps_since_advert.iter_mut().enumerate() {
-                if *steps >= cfg.gossip_rounds {
-                    table.advertise(i, scheds[i].advertised_digests());
-                    *steps = 0;
-                }
-            }
-            let (idx, expected) = pick_gossip(&table, &scheds, req, &mut rng);
-            expected_match[pos] = expected;
-            idx
-        } else {
-            pick_replica(
-                cfg.lb,
-                &scheds,
-                req,
-                &mut rr_next,
-                &mut rng,
-                &mut probe_calls,
-            )
-        };
-        scheds[idx].dispatch(req.clone())?;
-        assignments.push(idx);
     }
-    // Drain every replica to completion.
-    for s in scheds.iter_mut() {
-        while s.step()? == StepOutcome::Worked {}
+    let mut fleet = Fleet {
+        lb: cfg.lb,
+        gossip_on,
+        gossip_adapt: cfg.gossip_adapt,
+        gossip_rounds_cfg: cfg.gossip_rounds,
+        scale: cfg.scale,
+        scheds,
+        state,
+        table: DigestTable::new(r, cfg.sched.kv_page_tokens),
+        steps_since_advert: vec![0; r],
+        period: cfg.gossip_rounds,
+        adapt_mark: (0, 0),
+        retired_observed: (0, 0),
+        dispatch_log: vec![Vec::new(); r],
+        assignments: vec![usize::MAX; trace.len()],
+        outcomes_by_pos: (0..trace.len()).map(|_| None).collect(),
+        redispatch_count: vec![0; trace.len()],
+        expected_match: vec![0; trace.len()],
+        incarnations: vec![Vec::new(); r],
+        stats: FaultStats::default(),
+        rr_next: 0,
+        rng: Rng::new(cfg.seed ^ 0x00D1_5BA7),
+        probe_calls: 0,
+        since_scale: cfg
+            .scale
+            .map_or(0, |sc| sc.cooldown_arrivals),
+    };
+
+    let mut pending = cfg.fault_plan.events.iter().peekable();
+    for (pos, req) in trace.iter().enumerate() {
+        // Scripted events strictly precede the arrivals they don't
+        // trail: everything at t ≤ this arrival fires first, so routing
+        // observes the post-event replica set.
+        while pending.peek().is_some_and(|e| e.t <= req.arrival) {
+            let e = pending.next().unwrap();
+            fleet.apply_event(e)?;
+        }
+        // Advance every running replica to the arrival instant so the
+        // policy sees true loads, then dispatch.
+        fleet.catch_up_running(req.arrival)?;
+        fleet.scale_tick(req.arrival);
+        let (idx, expected) = fleet.route(req)?;
+        fleet.dispatch_to(idx, pos, req.clone(), expected)?;
     }
-    let mut replica_results = Vec::with_capacity(r);
-    for s in scheds.iter_mut() {
-        replica_results.push(s.finish()?);
+    // Events scripted past the last arrival (e.g. a failure during the
+    // drain tail) still apply, in order.
+    for e in pending {
+        fleet.apply_event(e)?;
+    }
+    // Drain every running replica to completion.
+    for i in 0..r {
+        if fleet.state[i] != ReplicaState::Down {
+            while fleet.scheds[i].step()? == StepOutcome::Worked {}
+        }
     }
 
-    // Merge outcomes back into global dispatch order (each replica's
-    // outcomes are already in its own dispatch order). The merge *moves*
-    // each outcome out of its replica result — `RequestOutcome` carries a
-    // per-response length vector, so cloning every outcome was an O(total
-    // responses) allocation storm on large traces.
-    let mut drained: Vec<std::vec::IntoIter<RequestOutcome>> = replica_results
-        .iter_mut()
-        .map(|rr| std::mem::take(&mut rr.outcomes).into_iter())
-        .collect();
-    let mut outcomes = Vec::with_capacity(trace.len());
-    for &rep in &assignments {
-        outcomes.push(
-            drained[rep]
-                .next()
-                .expect("replica produced fewer outcomes than assignments"),
-        );
+    // Collect outcomes by trace position: each replica's final
+    // incarnation finishes in its own dispatch order, and failed
+    // incarnations already banked their finished outcomes in
+    // `fail_replica`. The merge *moves* outcomes — `RequestOutcome`
+    // carries a per-response length vector, so cloning every outcome was
+    // an O(total responses) allocation storm on large traces.
+    let mut replica_results = Vec::with_capacity(r);
+    for i in 0..r {
+        let mut final_res = fleet.scheds[i].finish()?;
+        let finals = std::mem::take(&mut final_res.outcomes);
+        let positions = std::mem::take(&mut fleet.dispatch_log[i]);
+        if finals.len() != positions.len() {
+            bail!(
+                "replica {i} produced {} outcomes for {} dispatches",
+                finals.len(),
+                positions.len()
+            );
+        }
+        for (o, pos) in finals.into_iter().zip(positions) {
+            fleet.outcomes_by_pos[pos] = Some(o);
+        }
+        let mut parts = std::mem::take(&mut fleet.incarnations[i]);
+        parts.push(final_res);
+        replica_results.push(merge_incarnations(parts));
     }
+    let mut outcomes = Vec::with_capacity(trace.len());
+    for (pos, slot) in fleet.outcomes_by_pos.iter_mut().enumerate() {
+        let Some(mut o) = slot.take() else {
+            bail!("request at trace position {pos} was lost (no outcome)");
+        };
+        // Re-dispatched requests were handed to survivors with the
+        // failure instant as their arrival; the reported outcome
+        // measures from the original arrival so the detour is visible
+        // as latency, never hidden.
+        o.arrival = trace[pos].arrival;
+        o.redispatches = fleet.redispatch_count[pos];
+        outcomes.push(o);
+    }
+    fleet.stats.requests_redispatched =
+        fleet.redispatch_count.iter().filter(|&&c| c > 0).count();
 
     // Stale gossip hits: the table promised a prefix match the replica
     // could no longer fully serve by the time the request was admitted
     // (evicted between advertisement and admission — the request simply
     // re-prefilled the difference).
-    let stale_hits = expected_match
+    let stale_hits = fleet
+        .expected_match
         .iter()
         .zip(&outcomes)
         .filter(|&(&exp, o)| exp > 0 && o.cached_prompt_tokens < exp)
         .count();
+    let digest_rows: Vec<usize> =
+        (0..r).map(|i| fleet.table.replica_len(i)).collect();
 
     Ok(ClusterResult {
         outcomes,
         replica_results,
-        assignments,
+        assignments: fleet.assignments,
         lb: cfg.lb,
         gossip: GossipStats {
             gossip_rounds: cfg.gossip_rounds,
-            advertisements: table.advertisements_total(),
-            digest_table_digests: table.len(),
+            effective_gossip_rounds: fleet.period,
+            advertisements: fleet.table.advertisements_total(),
+            full_advertisements: fleet.table.full_advertisements_total(),
+            delta_advertisements: fleet.table.delta_advertisements_total(),
+            digests_sent: fleet.table.digests_sent_total(),
+            digest_table_digests: fleet.table.len(),
             stale_hits,
-            probe_calls,
+            probe_calls: fleet.probe_calls,
         },
+        fault: fleet.stats,
+        digest_rows,
         wall_seconds: wall0.elapsed().as_secs_f64(),
     })
 }

@@ -7,15 +7,22 @@
 //! and lengths scaled to this testbed's token scale (paper T=400 at
 //! ~4-8k-token responses ≈ T=16 at our ~40-200-token responses).
 
-use crate::cluster::LbPolicy;
+use crate::cluster::{FaultPlan, LbPolicy, ScaleConfig};
 use crate::coordinator::Policy;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// Boolean flags (never consume a following value). Everything else
 /// written as `--key value` or `--key=value` is a key/value pair.
-const KNOWN_FLAGS: &[&str] =
-    &["stepwise", "quiet", "verbose", "csv", "no-header", "help"];
+const KNOWN_FLAGS: &[&str] = &[
+    "stepwise",
+    "quiet",
+    "verbose",
+    "csv",
+    "no-header",
+    "help",
+    "gossip-adapt",
+];
 
 /// Minimal `--key value` / `--key=value` / `--flag` parser.
 #[derive(Debug, Clone, Default)]
@@ -207,6 +214,16 @@ pub struct ServeSpec {
     /// single-engine serve), and rejecting it would break `--replicas`
     /// sweeps under fixed affinity flags.
     pub gossip_rounds: usize,
+    /// Adapt the gossip period at runtime from observed stale table
+    /// routes (`--gossip-adapt`; needs a nonzero `--gossip-rounds`).
+    pub gossip_adapt: bool,
+    /// Scripted replica failures/restarts (`--fault-plan
+    /// fail@2.5:1,restart@6.0:1`); the default empty plan is inert.
+    pub fault_plan: FaultPlan,
+    /// Queue-pressure scale controller (`--scale-min` enables it;
+    /// `--scale-up-queue`, `--scale-down-queue`, `--scale-up-prefill`,
+    /// `--scale-cooldown` tune it). `None` keeps the replica set static.
+    pub scale: Option<ScaleConfig>,
     pub slots: usize,
     pub kv_capacity_tokens: usize,
     pub kv_page_tokens: usize,
@@ -271,6 +288,61 @@ impl ServeSpec {
                  silently ignored period would misreport gossip as active)"
             );
         }
+        let gossip_adapt = args.flag("gossip-adapt");
+        if gossip_adapt && gossip_rounds == 0 {
+            bail!(
+                "--gossip-adapt needs a gossip period to adapt \
+                 (--gossip-rounds > 0)"
+            );
+        }
+        let fault_plan = match args.get("fault-plan") {
+            None => FaultPlan::default(),
+            Some(s) => FaultPlan::parse(s).context("--fault-plan")?,
+        };
+        if let Some(m) = fault_plan.max_replica() {
+            if m >= replicas {
+                bail!(
+                    "--fault-plan names replica {m} but --replicas is \
+                     {replicas}"
+                );
+            }
+        }
+        let scale = match args.get("scale-min") {
+            None => {
+                for k in [
+                    "scale-up-queue",
+                    "scale-down-queue",
+                    "scale-up-prefill",
+                    "scale-cooldown",
+                ] {
+                    if args.get(k).is_some() {
+                        bail!(
+                            "--{k} needs the scale controller enabled \
+                             (--scale-min)"
+                        );
+                    }
+                }
+                None
+            }
+            Some(_) => {
+                let sc = ScaleConfig {
+                    min_live: args.usize_or("scale-min", 1)?,
+                    scale_up_queue: args.usize_or("scale-up-queue", 4)?,
+                    scale_up_prefill_tokens: args
+                        .usize_or("scale-up-prefill", 0)?,
+                    scale_down_queue: args.usize_or("scale-down-queue", 0)?,
+                    cooldown_arrivals: args.usize_or("scale-cooldown", 8)?,
+                };
+                sc.validate()?;
+                if sc.min_live > replicas {
+                    bail!(
+                        "--scale-min {} exceeds --replicas {replicas}",
+                        sc.min_live
+                    );
+                }
+                Some(sc)
+            }
+        };
         let prefix_share = args.f64_or("prefix-share", 0.0)?;
         if !(0.0..=1.0).contains(&prefix_share) {
             bail!("--prefix-share must be in [0, 1], got {prefix_share}");
@@ -306,6 +378,9 @@ impl ServeSpec {
             replicas,
             lb,
             gossip_rounds,
+            gossip_adapt,
+            fault_plan,
+            scale,
             slots: args.usize_or("slots", 8)?,
             kv_capacity_tokens: args.usize_or("kv-tokens", 4096)?,
             kv_page_tokens: args.usize_or("kv-page", 16)?,
@@ -389,6 +464,9 @@ mod tests {
         assert_eq!(s.replicas, 1);
         assert_eq!(s.lb, LbPolicy::RoundRobin);
         assert_eq!(s.gossip_rounds, 0, "gossip must default to probe mode");
+        assert!(!s.gossip_adapt, "period adaptation must default off");
+        assert!(s.fault_plan.is_empty(), "fault plan must default inert");
+        assert_eq!(s.scale, None, "scale controller must default off");
         assert_eq!(s.prefix_cache_pages, 0, "cache must default off");
         assert_eq!(s.prefill_chunk_tokens, 0, "chunking must default off");
         assert_eq!(s.max_batched_prefill_tokens, 0);
@@ -460,6 +538,56 @@ mod tests {
         assert!(ServeSpec::from_args(&args("--gossip-rounds 8")).is_err());
         assert!(ServeSpec::from_args(
             &args("--replicas 4 --lb p2c --gossip-rounds 8")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn spec_fault_flags() {
+        let a = args("--replicas 4 --fault-plan fail@2.5:1,restart@6.0:1");
+        let s = ServeSpec::from_args(&a).unwrap();
+        assert_eq!(s.fault_plan.events.len(), 2);
+        assert_eq!(s.fault_plan.max_replica(), Some(1));
+        // Plans naming replicas outside the cluster are caught at parse
+        // time, not deep inside the serve.
+        assert!(ServeSpec::from_args(
+            &args("--replicas 2 --fault-plan fail@1.0:2")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(&args("--fault-plan wat")).is_err());
+        // Adaptation without a period to adapt is rejected, with one OK.
+        assert!(ServeSpec::from_args(&args("--gossip-adapt")).is_err());
+        let s = ServeSpec::from_args(&args(
+            "--replicas 4 --lb prefix-affinity --gossip-rounds 8 \
+             --gossip-adapt",
+        ))
+        .unwrap();
+        assert!(s.gossip_adapt);
+    }
+
+    #[test]
+    fn spec_scale_flags() {
+        let a = args(
+            "--replicas 4 --scale-min 2 --scale-up-queue 6 \
+             --scale-down-queue 2 --scale-cooldown 4",
+        );
+        let sc = ServeSpec::from_args(&a).unwrap().scale.unwrap();
+        assert_eq!(sc.min_live, 2);
+        assert_eq!(sc.scale_up_queue, 6);
+        assert_eq!(sc.scale_down_queue, 2);
+        assert_eq!(sc.scale_up_prefill_tokens, 0);
+        assert_eq!(sc.cooldown_arrivals, 4);
+        // Tuning knobs without the controller are silent no-ops — reject.
+        assert!(ServeSpec::from_args(&args("--scale-up-queue 6")).is_err());
+        // No hysteresis band.
+        assert!(ServeSpec::from_args(
+            &args("--replicas 4 --scale-min 2 --scale-up-queue 4 \
+                   --scale-down-queue 4")
+        )
+        .is_err());
+        // Floor above the replica count.
+        assert!(ServeSpec::from_args(
+            &args("--replicas 2 --scale-min 3")
         )
         .is_err());
     }

@@ -11,8 +11,8 @@ pub mod scheduler;
 pub mod types;
 
 pub use scheduler::{
-    ClockHandle, LoadSnapshot, SchedConfig, Scheduler, ServeResult,
-    StepOutcome,
+    ClockHandle, DrainItem, LoadSnapshot, SchedConfig, Scheduler,
+    ServeResult, StepOutcome,
 };
 pub use types::{
     Branch, BranchStatus, CompletedResponse, Policy, PrunePhase, RequestMeta,

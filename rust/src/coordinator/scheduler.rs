@@ -178,6 +178,16 @@ pub enum StepOutcome {
     Idle,
 }
 
+/// One dispatched request exported by [`Scheduler::fail_and_drain`], in
+/// dispatch order: either it already finished on the failing replica
+/// (its outcome survives the failure), or it was still in flight and the
+/// cluster layer must re-dispatch it to a survivor.
+#[derive(Debug)]
+pub enum DrainItem {
+    Finished(RequestOutcome),
+    Unfinished(Request),
+}
+
 /// Point-in-time load of one scheduler, read by cluster dispatch policies.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LoadSnapshot {
@@ -235,8 +245,10 @@ pub struct Scheduler<'e> {
     requests: Vec<RequestState>,
     truths: Vec<u8>,
     /// Dispatched requests that have not yet reached their arrival time
-    /// (the scheduler admits them once its clock passes `arrival`).
-    incoming: VecDeque<Request>,
+    /// (the scheduler admits them once its clock passes `arrival`),
+    /// paired with the routing layer's promised cached-token count
+    /// (0 unless a gossip digest-table match routed the request here).
+    incoming: VecDeque<(Request, usize)>,
     request_queue: VecDeque<usize>,
     branch_queue: VecDeque<(usize, usize)>,
     slots: Vec<Option<(usize, usize)>>,
@@ -283,6 +295,13 @@ pub struct Scheduler<'e> {
     finished_count: usize,
     /// Lifetime requests dispatched to this scheduler.
     dispatched_total: usize,
+    /// Admissions that arrived via a gossip digest-table route (their
+    /// `expected_cached_tokens > 0`), and how many of those the local
+    /// radix cache could no longer fully honour — the staleness signal
+    /// the cluster's adaptive gossip period polls. Reset with the other
+    /// counters on `fail_and_drain`.
+    table_routed_admissions: usize,
+    stale_admissions: usize,
     /// Reused across rounds: decode result, involved list, PRM sequences,
     /// running-branch snapshot scratch.
     chunk: ChunkResult,
@@ -336,6 +355,8 @@ impl<'e> Scheduler<'e> {
             engine_seconds: 0.0,
             finished_count: 0,
             dispatched_total: 0,
+            table_routed_admissions: 0,
+            stale_admissions: 0,
             chunk: ChunkResult::default(),
             involved_buf: Vec::new(),
             prm_seqs: Vec::new(),
@@ -381,13 +402,27 @@ impl<'e> Scheduler<'e> {
     /// be sorted by arrival (the cluster layer dispatches in global
     /// arrival order, so any per-replica subsequence is too).
     pub fn dispatch(&mut self, r: Request) -> Result<()> {
-        if let Some(last) = self.incoming.back() {
+        self.dispatch_routed(r, 0)
+    }
+
+    /// [`Scheduler::dispatch`], additionally recording how many prompt
+    /// tokens the cluster's routing layer promised were cached here (a
+    /// gossip digest-table match; 0 = not a table route). The admission
+    /// compares the promise against the radix cache's actual coverage
+    /// and counts the shortfalls — the staleness signal behind the
+    /// adaptive gossip period.
+    pub fn dispatch_routed(
+        &mut self,
+        r: Request,
+        expected_cached_tokens: usize,
+    ) -> Result<()> {
+        if let Some((last, _)) = self.incoming.back() {
             if r.arrival < last.arrival {
                 bail!("trace not sorted by arrival");
             }
         }
         self.dispatched_total += 1;
-        self.incoming.push_back(r);
+        self.incoming.push_back((r, expected_cached_tokens));
         Ok(())
     }
 
@@ -432,10 +467,10 @@ impl<'e> Scheduler<'e> {
         while self
             .incoming
             .front()
-            .map(|r| r.arrival <= now)
+            .map(|(r, _)| r.arrival <= now)
             .unwrap_or(false)
         {
-            let r = self.incoming.pop_front().unwrap();
+            let (r, expected) = self.incoming.pop_front().unwrap();
             let idx = self.requests.len();
             self.truths.push(r.question.answer());
             let prompt = r.prompt_tokens();
@@ -457,6 +492,7 @@ impl<'e> Scheduler<'e> {
                 round_stamp: 0,
                 prefix: None,
                 cached_prompt_tokens: 0,
+                expected_cached_tokens: expected,
                 final_answer: None,
             });
             self.request_queue.push_back(idx);
@@ -515,7 +551,7 @@ impl<'e> Scheduler<'e> {
                 self.push_timeline_point();
                 return Ok(StepOutcome::Worked);
             }
-            if let Some(next) = self.incoming.front() {
+            if let Some((next, _)) = self.incoming.front() {
                 self.clock.idle_until(next.arrival);
                 return Ok(StepOutcome::Worked);
             }
@@ -608,38 +644,7 @@ impl<'e> Scheduler<'e> {
     pub fn finish(&mut self) -> Result<ServeResult> {
         let mut outcomes = Vec::with_capacity(self.requests.len());
         for (i, r) in self.requests.iter().enumerate() {
-            let finished_at = r
-                .finished_at
-                .with_context(|| format!("request {} never finished", r.id))?;
-            let admitted_at = r.admitted_at.unwrap_or(finished_at);
-            outcomes.push(RequestOutcome {
-                id: r.id,
-                dataset: r.dataset.clone(),
-                arrival: r.arrival,
-                admitted_at,
-                prefill_done_at: r.prefill_done_at.unwrap_or(admitted_at),
-                finished_at,
-                answer: r.final_answer,
-                truth: self.truths[i],
-                branches_started: r
-                    .branches
-                    .iter()
-                    .filter(|b| b.started_at.is_some())
-                    .count(),
-                branches_pruned: r.meta.num_pruned,
-                branches_completed: r.meta.num_completed,
-                tokens_generated: r
-                    .branches
-                    .iter()
-                    .map(|b| b.generated.len())
-                    .sum(),
-                response_lengths: r
-                    .completed
-                    .iter()
-                    .map(|c| c.length)
-                    .collect(),
-                cached_prompt_tokens: r.cached_prompt_tokens,
-            });
+            outcomes.push(Self::build_outcome(r, self.truths[i])?);
         }
         self.kv.check_invariants()?;
         Ok(ServeResult {
@@ -651,6 +656,173 @@ impl<'e> Scheduler<'e> {
             cache_hit_tokens: self.cache_hit_tokens_total,
             prompt_tokens: self.prompt_tokens_total,
         })
+    }
+
+    /// The final per-request record for a finished [`RequestState`] —
+    /// shared by [`Scheduler::finish`] and the fault path's
+    /// [`Scheduler::fail_and_drain`] so the two cannot drift.
+    /// `redispatches` is left at 0; the cluster layer owns that count.
+    fn build_outcome(r: &RequestState, truth: u8) -> Result<RequestOutcome> {
+        let finished_at = r
+            .finished_at
+            .with_context(|| format!("request {} never finished", r.id))?;
+        let admitted_at = r.admitted_at.unwrap_or(finished_at);
+        Ok(RequestOutcome {
+            id: r.id,
+            dataset: r.dataset.clone(),
+            arrival: r.arrival,
+            admitted_at,
+            prefill_done_at: r.prefill_done_at.unwrap_or(admitted_at),
+            finished_at,
+            answer: r.final_answer,
+            truth,
+            branches_started: r
+                .branches
+                .iter()
+                .filter(|b| b.started_at.is_some())
+                .count(),
+            branches_pruned: r.meta.num_pruned,
+            branches_completed: r.meta.num_completed,
+            tokens_generated: r
+                .branches
+                .iter()
+                .map(|b| b.generated.len())
+                .sum(),
+            response_lengths: r
+                .completed
+                .iter()
+                .map(|c| c.length)
+                .collect(),
+            cached_prompt_tokens: r.cached_prompt_tokens,
+            redispatches: 0,
+        })
+    }
+
+    /// Simulate this replica dying right now: kill every in-flight
+    /// branch, export every dispatched request — finished ones as their
+    /// final outcomes, unfinished ones as the original [`Request`] for
+    /// re-dispatch on a survivor — and reset to a cold just-booted state
+    /// (fresh KV cache and counters; the clock and RNG carry forward, so
+    /// a later restart rejoins at a sane virtual time).
+    ///
+    /// Items come back in dispatch order. The partial [`ServeResult`]
+    /// carries this incarnation's timeline and cumulative counters (its
+    /// `outcomes` list is empty — outcomes travel in the items). Errors
+    /// if the teardown strands any KV state: every page and pledge must
+    /// be released by the same paths early stopping uses.
+    pub fn fail_and_drain(&mut self) -> Result<(Vec<DrainItem>, ServeResult)> {
+        let now = self.clock.now();
+        for ridx in 0..self.requests.len() {
+            for bidx in 0..self.requests[ridx].branches.len() {
+                if !self.requests[ridx].branches[bidx].is_terminal() {
+                    self.terminate_branch(
+                        ridx,
+                        bidx,
+                        BranchStatus::Stopped,
+                        now,
+                    )?;
+                }
+            }
+        }
+        self.request_queue.clear();
+        self.branch_queue.clear();
+        self.pending_installs.clear();
+        self.prefill_done_buf.clear();
+        // Every lease and pledge must be gone now — a page still charged
+        // is stranded budget the restarted incarnation would inherit.
+        self.kv.check_invariants()?;
+        if self.kv.used_pages() != 0 || self.kv.pledged_pages() != 0 {
+            bail!(
+                "fail_and_drain stranded {} used / {} pledged pages",
+                self.kv.used_pages(),
+                self.kv.pledged_pages()
+            );
+        }
+        // Close the timeline with a zero-occupancy sample at the failure
+        // instant so downtime integrates as zero load in cluster reports.
+        self.push_timeline_point();
+
+        let truths = std::mem::take(&mut self.truths);
+        let mut items =
+            Vec::with_capacity(self.requests.len() + self.incoming.len());
+        for (r, truth) in
+            std::mem::take(&mut self.requests).into_iter().zip(truths)
+        {
+            if r.is_finished() {
+                items.push(DrainItem::Finished(Self::build_outcome(
+                    &r, truth,
+                )?));
+            } else {
+                items.push(DrainItem::Unfinished(Request {
+                    id: r.id,
+                    question: r.question,
+                    arrival: r.arrival,
+                    dataset: r.dataset,
+                    header: r.header,
+                }));
+            }
+        }
+        for (r, _expected) in std::mem::take(&mut self.incoming) {
+            items.push(DrainItem::Unfinished(r));
+        }
+
+        let partial = ServeResult {
+            outcomes: Vec::new(),
+            timeline: std::mem::take(&mut self.timeline),
+            rounds: self.round as usize,
+            engine_seconds: self.engine_seconds,
+            wall_seconds: 0.0,
+            cache_hit_tokens: self.cache_hit_tokens_total,
+            prompt_tokens: self.prompt_tokens_total,
+        };
+
+        // Cold reset: the next incarnation boots with an empty radix
+        // cache (it re-warms through gossip) and fresh counters.
+        self.kv = KvCacheManager::with_prefix_cache(
+            self.cfg.kv_capacity_tokens,
+            self.cfg.kv_page_tokens,
+            self.cfg.prefix_cache_pages,
+        );
+        self.round = 0;
+        self.running_tokens = 0;
+        self.cache_hit_tokens_total = 0;
+        self.prompt_tokens_total = 0;
+        self.queued_prefill_tokens = 0;
+        self.prefill_seconds = 0.0;
+        self.engine_seconds = 0.0;
+        self.finished_count = 0;
+        self.dispatched_total = 0;
+        self.table_routed_admissions = 0;
+        self.stale_admissions = 0;
+        Ok((items, partial))
+    }
+
+    /// Jump this scheduler's clock forward to absolute time `t` (no-op
+    /// if already past it). The cluster layer rejoins a restarted or
+    /// newly activated replica at the current virtual instant with this.
+    pub fn advance_clock_to(&mut self, t: f64) {
+        self.clock.idle_until(t);
+    }
+
+    /// `(table-routed admissions, stale among them)` since construction
+    /// or the last [`Scheduler::fail_and_drain`] reset. The cluster's
+    /// adaptive gossip controller polls the deltas to tighten or relax
+    /// the advertisement period.
+    pub fn gossip_observed(&self) -> (usize, usize) {
+        (self.table_routed_admissions, self.stale_admissions)
+    }
+
+    /// Take the next gossip advertisement for this replica's digest set:
+    /// a full snapshot on the first take after construction or reset,
+    /// deltas afterwards. See `KvCacheManager::take_advertisement`.
+    pub fn take_advertisement(&mut self) -> crate::kvcache::Advertisement {
+        self.kv.take_advertisement()
+    }
+
+    /// Force a full-snapshot advertisement (the digest-table's recovery
+    /// path when a delta's base version no longer matches its row).
+    pub fn full_advertisement(&mut self) -> (u64, Vec<u64>) {
+        self.kv.full_advertisement()
     }
 
     fn initial_meta(&self) -> RequestMeta {
@@ -808,6 +980,14 @@ impl<'e> Scheduler<'e> {
             req.admitted_at = Some(now);
             req.prefix = Some(admission.prefix);
             req.cached_prompt_tokens = admission.cached_tokens;
+            // Table-routed admission: check the routing layer's promise
+            // against what the radix cache actually still held.
+            if req.expected_cached_tokens > 0 {
+                self.table_routed_admissions += 1;
+                if admission.cached_tokens < req.expected_cached_tokens {
+                    self.stale_admissions += 1;
+                }
+            }
             for kvb in admission.branches {
                 let seed = self.rng.next_u64();
                 let mut b = Branch::new(seed);
@@ -1312,6 +1492,27 @@ impl<'e> Scheduler<'e> {
             && self.cache_hit_tokens_total != 0
         {
             bail!("audit: cache hits recorded with the cache disabled");
+        }
+        // Gossip-staleness counters vs the per-request routing promises.
+        let routed_scan =
+            admitted().filter(|r| r.expected_cached_tokens > 0).count();
+        if routed_scan != self.table_routed_admissions {
+            bail!(
+                "audit: table_routed_admissions {} != scanned {routed_scan}",
+                self.table_routed_admissions
+            );
+        }
+        let stale_scan = admitted()
+            .filter(|r| {
+                r.expected_cached_tokens > 0
+                    && r.cached_prompt_tokens < r.expected_cached_tokens
+            })
+            .count();
+        if stale_scan != self.stale_admissions {
+            bail!(
+                "audit: stale_admissions {} != scanned {stale_scan}",
+                self.stale_admissions
+            );
         }
         // Chunked-prefill structures vs full scans.
         if self.cfg.prefill_chunk_tokens == 0

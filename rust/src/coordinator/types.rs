@@ -196,6 +196,12 @@ pub struct RequestState {
     /// Prompt tokens the cross-request prefix cache covered at admission
     /// (0 before admission, on cold prompts, or with the cache disabled).
     pub cached_prompt_tokens: usize,
+    /// Prompt tokens the cluster's routing layer promised were cached on
+    /// this replica when it chose it (a gossip digest-table match; 0 for
+    /// non-table routes). Compared against `cached_prompt_tokens` at
+    /// admission to count stale routing decisions on the replica itself,
+    /// which is what drives the adaptive gossip period.
+    pub expected_cached_tokens: usize,
     pub final_answer: Option<u8>,
 }
 
@@ -252,6 +258,12 @@ pub struct RequestOutcome {
     /// cluster's gossip layer compares this against the digest-table
     /// match that routed the request to count stale hits.
     pub cached_prompt_tokens: usize,
+    /// How many times a replica failure forced this request to be
+    /// re-dispatched (and re-prefilled) on a surviving replica. 0 on the
+    /// single-engine path and in fault-free cluster serves; the added
+    /// latency shows up in the ordinary latency fields, measured from the
+    /// original arrival.
+    pub redispatches: usize,
 }
 
 impl RequestOutcome {
@@ -341,6 +353,7 @@ mod tests {
             tokens_generated: 100,
             response_lengths: vec![10, 20],
             cached_prompt_tokens: 0,
+            redispatches: 0,
         };
         assert!(o.correct());
         assert_eq!(o.e2e_latency(), 9.0);

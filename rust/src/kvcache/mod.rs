@@ -275,6 +275,28 @@ pub struct Admission {
     pub cached_tokens: usize,
 }
 
+/// Version-keyed change set between two advertisements of one replica's
+/// digest set: everything that entered (`adds`) and left (`retracts`)
+/// since `base_version`. Applying it to a table row at `base_version`
+/// yields the row at `version`; applying it to any other base is invalid
+/// and the receiver must fall back to a full snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DigestDelta {
+    pub base_version: u64,
+    pub version: u64,
+    pub adds: Vec<u64>,
+    pub retracts: Vec<u64>,
+}
+
+/// One gossip advertisement taken from a replica's cache: either a full
+/// digest-set snapshot (first take after construction or a cold rejoin)
+/// or a [`DigestDelta`] against the previously advertised version.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Advertisement {
+    Full { version: u64, digests: Vec<u64> },
+    Delta(DigestDelta),
+}
+
 /// Paged KV accounting with a hard page budget.
 #[derive(Debug)]
 pub struct KvCacheManager {
@@ -312,6 +334,18 @@ pub struct KvCacheManager {
     /// `advertised_digests` reads the keys with no tree walk. Rebuilt
     /// from scratch by `check_invariants`.
     digest_counts: HashMap<u64, u32>,
+    /// Monotone version of the advertised digest *set* (the key set of
+    /// `digest_counts`); bumped once per digest entering or leaving.
+    digest_version: u64,
+    /// Net set transitions since the last advertisement take: `+1` the
+    /// digest became resident, `-1` it left. Presence is boolean, so a
+    /// round trip cancels to net 0 and the entry is dropped — values
+    /// outside ±1 cannot occur. Cleared by [`Self::take_advertisement`]
+    /// and [`Self::full_advertisement`].
+    digest_journal: HashMap<u64, i8>,
+    /// Digest-set version the last advertisement reflected (`None` until
+    /// the first take — forcing that take to be a Full snapshot).
+    advertised_version: Option<u64>,
     lru_clock: u64,
     /// Σ cached_tokens over all `admit_tokens` calls (metrics).
     hit_tokens_total: usize,
@@ -353,6 +387,9 @@ impl KvCacheManager {
             roots: Vec::new(),
             cached_pages: 0,
             digest_counts: HashMap::new(),
+            digest_version: 0,
+            digest_journal: HashMap::new(),
+            advertised_version: None,
             lru_clock: 0,
             hit_tokens_total: 0,
             evicted_pages_total: 0,
@@ -426,6 +463,48 @@ impl KvCacheManager {
     /// and the gossip staleness regressions.)
     pub fn has_digest(&self, digest: u64) -> bool {
         self.digest_counts.contains_key(&digest)
+    }
+
+    /// Take the next gossip advertisement: a Full snapshot on the first
+    /// take (nothing advertised yet — e.g. a freshly constructed or
+    /// restarted replica), a [`DigestDelta`] against the last advertised
+    /// version afterwards. Either way the journal is drained and the
+    /// advertised version catches up, so consecutive takes chain.
+    /// Add/retract lists are sorted for deterministic wire contents.
+    pub fn take_advertisement(&mut self) -> Advertisement {
+        let Some(base) = self.advertised_version else {
+            let (version, digests) = self.full_advertisement();
+            return Advertisement::Full { version, digests };
+        };
+        let mut adds = Vec::new();
+        let mut retracts = Vec::new();
+        for (&d, &sign) in &self.digest_journal {
+            if sign > 0 {
+                adds.push(d);
+            } else {
+                retracts.push(d);
+            }
+        }
+        adds.sort_unstable();
+        retracts.sort_unstable();
+        self.digest_journal.clear();
+        self.advertised_version = Some(self.digest_version);
+        Advertisement::Delta(DigestDelta {
+            base_version: base,
+            version: self.digest_version,
+            adds,
+            retracts,
+        })
+    }
+
+    /// Force a full snapshot advertisement (version + every resident
+    /// digest), regardless of delta state — the fallback when a receiver
+    /// reports a base-version mismatch. Drains the journal and advances
+    /// the advertised version like [`Self::take_advertisement`].
+    pub fn full_advertisement(&mut self) -> (u64, Vec<u64>) {
+        self.digest_journal.clear();
+        self.advertised_version = Some(self.digest_version);
+        (self.digest_version, self.advertised_digests())
     }
 
     fn admission_pages(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> usize {
@@ -587,7 +666,11 @@ impl KvCacheManager {
 
     /// Record one more resident node carrying `digest`.
     fn add_digest(&mut self, digest: u64) {
-        *self.digest_counts.entry(digest).or_insert(0) += 1;
+        let c = self.digest_counts.entry(digest).or_insert(0);
+        *c += 1;
+        if *c == 1 {
+            self.journal(digest, 1);
+        }
     }
 
     /// Drop one resident node carrying `digest`; the digest leaves the
@@ -605,6 +688,20 @@ impl KvCacheManager {
         };
         if remove {
             self.digest_counts.remove(&digest);
+            self.journal(digest, -1);
+        }
+    }
+
+    /// Log one digest-*set* transition (`+1` entered, `-1` left) for the
+    /// delta journal. A transition opposite to a pending entry is a round
+    /// trip since the last advertisement — net zero, entry dropped.
+    fn journal(&mut self, digest: u64, sign: i8) {
+        self.digest_version += 1;
+        match self.digest_journal.remove(&digest) {
+            Some(prev) => debug_assert_eq!(prev, -sign),
+            None => {
+                self.digest_journal.insert(digest, sign);
+            }
         }
     }
 
@@ -1316,6 +1413,28 @@ impl KvCacheManager {
                 digest_scan.len()
             );
         }
+        // The delta journal must describe real set transitions: a pending
+        // add names a digest that is resident, a pending retract one that
+        // is not, and net values outside ±1 are impossible (presence is
+        // boolean; round trips cancel).
+        for (&d, &sign) in &self.digest_journal {
+            if sign != 1 && sign != -1 {
+                bail!("digest journal entry {d:#018x} has net {sign}");
+            }
+            let present = self.digest_counts.contains_key(&d);
+            if sign == 1 && !present {
+                bail!(
+                    "digest journal advertises {d:#018x} as added but it \
+                     is not resident"
+                );
+            }
+            if sign == -1 && present {
+                bail!(
+                    "digest journal advertises {d:#018x} as retracted but \
+                     it is still resident"
+                );
+            }
+        }
         if retained_pages != self.cached_pages {
             bail!(
                 "cached_pages drift: counter {} != recomputed {retained_pages}",
@@ -1943,6 +2062,77 @@ mod tests {
         assert!(kv.has_digest(d));
         assert_eq!(kv.cached_pages(), 1);
         assert_eq!(kv.advertised_digest_count(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advertisement_deltas_chain_from_full_snapshot() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 2);
+        // The first take is always a Full snapshot — even of nothing.
+        let Advertisement::Full { version: v0, digests } =
+            kv.take_advertisement()
+        else {
+            panic!("first take must be Full");
+        };
+        assert_eq!(v0, 0);
+        assert!(digests.is_empty());
+
+        let p = prompt(0, 48); // 3 pages
+        let ds = prompt_page_digests(&p, 16);
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let Advertisement::Delta(d1) = kv.take_advertisement() else {
+            panic!("second take must be a delta");
+        };
+        assert_eq!(d1.base_version, v0);
+        assert_eq!(d1.version, 3, "one version bump per set transition");
+        let mut expect = ds.clone();
+        expect.sort_unstable();
+        assert_eq!(d1.adds, expect);
+        assert!(d1.retracts.is_empty());
+
+        // Release trims the pool to the 2-page budget: the deepest
+        // digest retracts, and the next delta chains off d1.
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        let Advertisement::Delta(d2) = kv.take_advertisement() else {
+            panic!("third take must chain as a delta");
+        };
+        assert_eq!(d2.base_version, d1.version);
+        assert!(d2.adds.is_empty());
+        assert_eq!(d2.retracts, vec![ds[2]]);
+        kv.check_invariants().unwrap();
+
+        // A forced full snapshot re-bases delta state as well.
+        let (v, full) = kv.full_advertisement();
+        assert_eq!(v, d2.version);
+        assert_eq!(full.len(), 2);
+        let Advertisement::Delta(d3) = kv.take_advertisement() else {
+            panic!("takes after a forced full still chain");
+        };
+        assert_eq!(d3.base_version, v);
+        assert!(d3.adds.is_empty() && d3.retracts.is_empty());
+    }
+
+    #[test]
+    fn advertisement_round_trips_cancel() {
+        let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 1);
+        kv.take_advertisement(); // arm delta mode
+        let p = prompt(0, 32); // 2 pages against a 1-page budget
+        let ds = prompt_page_digests(&p, 16);
+        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        for b in a.branches {
+            kv.release_branch(b).unwrap();
+        }
+        // ds[1] interned then evicted inside one advert window: net
+        // zero, so it appears in neither list — but both transitions
+        // still advanced the version.
+        let Advertisement::Delta(d) = kv.take_advertisement() else {
+            panic!("delta expected");
+        };
+        assert_eq!(d.adds, vec![ds[0]]);
+        assert!(d.retracts.is_empty());
+        assert_eq!(d.version, 3);
         kv.check_invariants().unwrap();
     }
 

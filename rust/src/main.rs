@@ -54,6 +54,12 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --lb rr|least-loaded|jsq|p2c|prefix-affinity   dispatch policy
   --gossip-rounds N  prefix-affinity: replicas advertise digest sets every
                      N scheduler steps; routing reads the table (0=probe)
+  --gossip-adapt     retune the gossip period at runtime from stale routes
+  --fault-plan PLAN  scripted failures, e.g. fail@2.5:1,restart@6.0:1
+  --scale-min INT    enable the scale controller with INT replicas live
+  --scale-up-queue N / --scale-down-queue N / --scale-up-prefill TOK
+                     controller thresholds (down<up = hysteresis band)
+  --scale-cooldown N arrivals between two scaling actions
   --prefix-cache PAGES   cross-request radix prefix cache budget (0=off)
   --prefix-share F       fraction of requests sharing a few-shot header
   --prefix-templates INT / --prefix-shots INT   header pool shape
@@ -116,13 +122,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let g = &c.gossip;
         if g.gossip_rounds > 0 || g.probe_calls > 0 {
             println!(
-                "gossip: period {} steps | {} advertisements | {} digests \
-                 in table | {} stale hits | {} probe calls",
+                "gossip: period {} steps (effective {}) | {} advertisements \
+                 ({} full + {} delta, {} digests sent) | {} digests in \
+                 table | {} stale hits | {} probe calls",
                 g.gossip_rounds,
+                g.effective_gossip_rounds,
                 g.advertisements,
+                g.full_advertisements,
+                g.delta_advertisements,
+                g.digests_sent,
                 g.digest_table_digests,
                 g.stale_hits,
                 g.probe_calls,
+            );
+        }
+        let f = &c.fault;
+        if *f != Default::default() {
+            println!(
+                "faults: {} failures, {} restarts | {} re-dispatches over \
+                 {} requests | scale {} up / {} down",
+                f.failures,
+                f.restarts,
+                f.redispatches,
+                f.requests_redispatched,
+                f.scale_ups,
+                f.scale_downs,
             );
         }
     }

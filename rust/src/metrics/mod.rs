@@ -225,6 +225,7 @@ mod tests {
             tokens_generated: 50,
             response_lengths: vec![10, 30],
             cached_prompt_tokens: 0,
+            redispatches: 0,
         }
     }
 

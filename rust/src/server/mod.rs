@@ -277,6 +277,9 @@ fn run_cluster_on_trace(
         seed: spec.seed,
         audit: false,
         gossip_rounds: spec.gossip_rounds,
+        gossip_adapt: spec.gossip_adapt,
+        fault_plan: spec.fault_plan.clone(),
+        scale: spec.scale,
     };
     let res = serve_cluster(&ccfg, &mut engines, &mut prms, trace)?;
     let label = format!(
@@ -467,6 +470,38 @@ mod tests {
         let c = out.cluster.as_ref().expect("cluster report");
         assert_eq!(c.gossip.probe_calls, 3 * 8);
         assert_eq!(c.gossip.advertisements, 0);
+    }
+
+    #[test]
+    fn faulted_cluster_serve_completes_all() {
+        // End-to-end --fault-plan plumbing: spec → ClusterConfig → the
+        // failure/restart pump, with every request still answered.
+        let mut s = spec(
+            "--method sart:4 --replicas 3 --lb p2c \
+             --fault-plan fail@1.0:1,restart@3.0:1",
+        );
+        s.kv_capacity_tokens = 8192;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        let c = out.cluster.as_ref().expect("cluster report");
+        assert_eq!(c.fault.failures, 1);
+        assert_eq!(c.fault.restarts, 1);
+    }
+
+    #[test]
+    fn scaled_cluster_serve_completes_all() {
+        // Scale controller plumbing: start at 1 live replica of 3 and
+        // let queue pressure activate standbys. A batch trace (all
+        // arrivals at t = 0) piles the queue up deterministically.
+        let mut s = spec(
+            "--method sart:4 --replicas 3 --lb jsq --rate 0 \
+             --scale-min 1 --scale-up-queue 1 --scale-cooldown 1",
+        );
+        s.kv_capacity_tokens = 8192;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        let c = out.cluster.as_ref().expect("cluster report");
+        assert!(c.fault.scale_ups >= 1, "pressure never scaled up");
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! ISSUE 6: fault-tolerant elastic cluster — failure injection,
+//! in-flight re-dispatch, gossip retraction, and the scale controller.
+//!
+//! The contract under test: the fault layer is *additive*. An armed but
+//! inert layer (empty plan, no-op scale controller) must leave a serve
+//! byte-identical to a plan-less one; a scripted failure must cost
+//! re-dispatch latency, never correctness — every request still gets
+//! exactly one outcome, routing never selects a down replica, and a
+//! restarted replica re-warms through the ordinary gossip path.
+
+use sart::cluster::{
+    serve_cluster, ClusterConfig, FaultPlan, LbPolicy, ScaleConfig,
+    REPLICA_SEED_STRIDE,
+};
+use sart::coordinator::{Policy, SchedConfig};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::prop_assert;
+use sart::testkit::check;
+use sart::util::rng::Rng;
+use sart::workload::{
+    batch_trace, poisson_trace, templated_trace, Request, TaskSpec,
+};
+
+fn sched_cfg(seed: u64, kv_tokens: usize, cache_pages: usize) -> SchedConfig {
+    SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv_capacity_tokens: kv_tokens,
+        kv_page_tokens: 16,
+        prefix_cache_pages: cache_pages,
+        prefill_chunk_tokens: 0,
+        max_batched_prefill_tokens: 0,
+        seed,
+    }
+}
+
+fn stacks(
+    n: usize,
+    seed: u64,
+    cost: SimCostModel,
+) -> (Vec<Box<dyn Engine>>, Vec<Box<dyn PrmScorer>>) {
+    let spec = TaskSpec::synth_gaokao();
+    let engines: Vec<Box<dyn Engine>> = (0..n)
+        .map(|_| {
+            let mut e = SimEngine::new(8, 512, spec.clone(), cost);
+            e.set_prompt_bucket(256);
+            Box::new(e) as Box<dyn Engine>
+        })
+        .collect();
+    let prms: Vec<Box<dyn PrmScorer>> = (0..n)
+        .map(|i| {
+            let s = seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+            Box::new(OraclePrm::new(0.1, s ^ 7)) as Box<dyn PrmScorer>
+        })
+        .collect();
+    (engines, prms)
+}
+
+fn base_cfg(replicas: usize, lb: LbPolicy, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        replicas,
+        lb,
+        sched: sched_cfg(seed, 16 * 512, 0),
+        seed,
+        audit: true,
+        gossip_rounds: 0,
+        gossip_adapt: false,
+        fault_plan: FaultPlan::default(),
+        scale: None,
+    }
+}
+
+#[test]
+fn prop_armed_but_inert_fault_layer_is_byte_identical() {
+    // ISSUE 6 acceptance: the zero-fault path through the fault-aware
+    // dispatcher must be byte-identical to a plan-less serve — same
+    // assignments, outcomes, timelines and round counts, audit on. The
+    // armed twin carries an empty fault plan *and* a scale controller
+    // whose thresholds are unreachable (all replicas live, up-threshold
+    // astronomically high, scale-down disabled), so every line of the
+    // event pump runs and must take no action.
+    check("inert_fault_layer_identity", 8, |rng| {
+        let seed = rng.next_u64();
+        let replicas = 2 + rng.below(3); // 2..=4
+        let lbs = [
+            LbPolicy::RoundRobin,
+            LbPolicy::JoinShortestQueue,
+            LbPolicy::PowerOfTwoChoices,
+            LbPolicy::PrefixAffinity,
+        ];
+        let lb = lbs[rng.below(lbs.len())];
+        let spec = TaskSpec::synth_gaokao();
+        let trace = poisson_trace(
+            &spec,
+            6 + rng.below(10),
+            0.5 + 3.0 * rng.f64(),
+            seed,
+        );
+        let serve = |cfg: &ClusterConfig| {
+            let (mut engines, mut prms) =
+                stacks(replicas, seed, SimCostModel::default());
+            serve_cluster(cfg, &mut engines, &mut prms, &trace)
+                .map_err(|e| e.to_string())
+        };
+        let plain = serve(&base_cfg(replicas, lb, seed))?;
+        let mut armed_cfg = base_cfg(replicas, lb, seed);
+        armed_cfg.scale = Some(ScaleConfig {
+            min_live: replicas,
+            scale_up_queue: 1_000_000,
+            scale_up_prefill_tokens: 0,
+            scale_down_queue: 0,
+            cooldown_arrivals: 0,
+        });
+        let armed = serve(&armed_cfg)?;
+        prop_assert!(
+            plain.assignments == armed.assignments,
+            "routing diverged under the inert fault layer"
+        );
+        prop_assert!(plain.outcomes == armed.outcomes, "outcomes diverged");
+        for (i, (p, a)) in plain
+            .replica_results
+            .iter()
+            .zip(&armed.replica_results)
+            .enumerate()
+        {
+            prop_assert!(
+                p.timeline.points == a.timeline.points,
+                "replica {i} timeline diverged"
+            );
+            prop_assert!(p.rounds == a.rounds, "replica {i} rounds diverged");
+        }
+        prop_assert!(
+            armed.fault == Default::default(),
+            "inert layer reported actions: {:?}",
+            armed.fault
+        );
+        prop_assert!(
+            armed.outcomes.iter().all(|o| o.redispatches == 0),
+            "inert layer re-dispatched a request"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn failure_with_in_flight_work_redispatches_and_loses_nothing() {
+    // A batch of 12 requests lands on 4 replicas round-robin; replica 1
+    // dies 10 ms in — far less than any request takes — so all three of
+    // its requests are mid-flight and must be re-dispatched. Every trace
+    // position still gets exactly one outcome, none of them served by
+    // the dead replica, and the detour is visible as latency.
+    let seed = 42;
+    let replicas = 4;
+    let spec = TaskSpec::synth_gaokao();
+    let trace = batch_trace(&spec, 12, seed);
+    let mut cfg = base_cfg(replicas, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@0.01:1").unwrap();
+    let (mut engines, mut prms) =
+        stacks(replicas, seed, SimCostModel::default());
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+        .expect("faulted serve must complete");
+
+    assert_eq!(res.outcomes.len(), trace.len(), "requests lost");
+    for (o, r) in res.outcomes.iter().zip(&trace) {
+        assert_eq!(o.id, r.id, "outcome order broken");
+        assert_eq!(o.arrival, r.arrival, "original arrival not restored");
+        assert!(o.finished_at >= o.arrival, "time travel");
+    }
+    assert_eq!(res.fault.failures, 1);
+    assert_eq!(res.fault.restarts, 0);
+    // Round-robin put trace positions 1, 5, 9 on replica 1; none were
+    // finishable in 10 ms, so all three detoured exactly once.
+    assert_eq!(res.fault.redispatches, 3);
+    assert_eq!(res.fault.requests_redispatched, 3);
+    let total: usize = res.outcomes.iter().map(|o| o.redispatches).sum();
+    assert_eq!(total, res.fault.redispatches, "per-outcome counts drifted");
+    for (pos, o) in res.outcomes.iter().enumerate() {
+        if o.redispatches > 0 {
+            assert_ne!(
+                res.assignments[pos], 1,
+                "request {pos} still served by the dead replica"
+            );
+        }
+    }
+    // The dead replica's timeline closes with an explicit zero-occupancy
+    // sample at the failure instant.
+    let last = res.replica_results[1].timeline.points.last().unwrap();
+    assert_eq!(last.running_branches, 0);
+    assert_eq!(last.kv_pages_used, 0);
+}
+
+#[test]
+fn routing_never_selects_a_down_replica() {
+    // Replica 1 is down for t ∈ [3, 8). Every request arriving in that
+    // window must route elsewhere, and requests re-dispatched at the
+    // failure must land on survivors.
+    let seed = 7;
+    let replicas = 4;
+    let spec = TaskSpec::synth_gaokao();
+    let trace = poisson_trace(&spec, 24, 2.0, seed);
+    let mut cfg = base_cfg(replicas, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@3.0:1,restart@8.0:1").unwrap();
+    let (mut engines, mut prms) =
+        stacks(replicas, seed, SimCostModel::default());
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+        .expect("fail+restart serve must complete");
+
+    assert_eq!(res.outcomes.len(), trace.len());
+    assert_eq!(res.fault.failures, 1);
+    assert_eq!(res.fault.restarts, 1);
+    for (pos, r) in trace.iter().enumerate() {
+        let downtime = (3.0..8.0).contains(&r.arrival);
+        if downtime || res.outcomes[pos].redispatches > 0 {
+            assert_ne!(
+                res.assignments[pos], 1,
+                "request {pos} (arrival {:.2}) routed to the down replica",
+                r.arrival
+            );
+        }
+    }
+}
+
+#[test]
+fn restarted_replica_rewarms_through_gossip() {
+    // Prefix-affinity + gossip, period 1: replica 1 advertises, dies
+    // (its table row is retracted), restarts cold, and must re-advertise
+    // a fresh Full snapshot once it earns work again — its digest row
+    // grows back from zero through the ordinary gossip path.
+    let seed = 11;
+    let replicas = 3;
+    let spec = TaskSpec::synth_gaokao();
+    // Mixed workload: shared headers give the table something to
+    // advertise, the cold remainder keeps p2c fallback routes flowing to
+    // the rejoined (empty-cache) replica.
+    let trace = templated_trace(&spec, 48, 3.0, seed, 0.6, 2, 3);
+    let t_mid = trace[trace.len() / 3].arrival;
+    let t_back = trace[trace.len() / 2].arrival;
+    assert!(t_back > t_mid, "trace too short to straddle the outage");
+    let mut cfg = base_cfg(replicas, LbPolicy::PrefixAffinity, seed);
+    cfg.sched = sched_cfg(seed, 16 * 512, 32);
+    cfg.gossip_rounds = 1;
+    cfg.fault_plan =
+        FaultPlan::parse(&format!("fail@{t_mid}:1,restart@{t_back}:1"))
+            .unwrap();
+    let (mut engines, mut prms) =
+        stacks(replicas, seed, SimCostModel::default());
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+        .expect("rewarm serve must complete");
+
+    assert_eq!(res.outcomes.len(), trace.len());
+    assert_eq!(res.fault.failures, 1);
+    assert_eq!(res.fault.restarts, 1);
+    assert_eq!(res.gossip.probe_calls, 0, "gossip serve must not probe");
+    assert!(
+        res.digest_rows[1] > 0,
+        "restarted replica never re-advertised (rows: {:?})",
+        res.digest_rows
+    );
+    // Every replica's first push is a Full snapshot, and the rejoined
+    // replica's cold cache forces one more.
+    assert!(
+        res.gossip.full_advertisements >= replicas + 1,
+        "expected a post-restart full snapshot: {} full advertisements",
+        res.gossip.full_advertisements
+    );
+    assert!(
+        res.gossip.delta_advertisements > 0,
+        "steady-state advertisements should be deltas"
+    );
+}
+
+#[test]
+fn failure_during_chunked_prefill_releases_pledges() {
+    // Chunked prefill holds pledged pages for mid-stream admissions; a
+    // failure in that window must release them cleanly (fail_and_drain
+    // verifies kv invariants and zero residual pages internally, turning
+    // a leak into a serve error). Long cold headers + a 24-token chunk +
+    // per-token prefill cost keep replica 1 mid-stream at t = 0.01.
+    let seed = 5;
+    let replicas = 2;
+    let spec = TaskSpec::synth_gaokao();
+    let trace = templated_trace(&spec, 10, 0.0, seed, 1.0, 4, 4);
+    let mut cfg = base_cfg(replicas, LbPolicy::JoinShortestQueue, seed);
+    cfg.sched = SchedConfig {
+        prefill_chunk_tokens: 24,
+        max_batched_prefill_tokens: 48,
+        prefix_cache_pages: 32,
+        ..sched_cfg(seed, 16 * 2048, 32)
+    };
+    cfg.fault_plan = FaultPlan::parse("fail@0.01:1").unwrap();
+    let cost = SimCostModel {
+        prefill_per_token: 0.2e-3,
+        ..SimCostModel::default()
+    };
+    let (mut engines, mut prms) = stacks(replicas, seed, cost);
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+        .expect("mid-prefill failure must drain cleanly");
+
+    assert_eq!(res.outcomes.len(), trace.len(), "requests lost");
+    assert_eq!(res.fault.failures, 1);
+    assert!(
+        res.fault.redispatches >= 1,
+        "replica 1 had mid-stream work to re-dispatch"
+    );
+    let last = res.replica_results[1].timeline.points.last().unwrap();
+    assert_eq!(last.kv_pages_used, 0, "failed replica leaked pages");
+    assert_eq!(last.queued_prefill_tokens, 0, "prefill backlog survived");
+}
+
+#[test]
+fn scale_controller_respects_hysteresis_and_floor() {
+    // Start 1-of-4 live under a burst, then let the queue drain: the
+    // controller must scale up under pressure, scale down in the calm
+    // tail, and never drain below the floor. A second burst re-activates
+    // a drained (warm) replica.
+    let seed = 13;
+    let replicas = 4;
+    let spec = TaskSpec::synth_gaokao();
+    let mut trace = batch_trace(&spec, 10, seed);
+    // Calm tail: a few spaced-out stragglers long after the burst.
+    let tail = poisson_trace(&spec, 6, 0.2, seed ^ 1);
+    for (i, mut r) in tail.into_iter().enumerate() {
+        r.id = trace.len();
+        r.arrival += 20.0 + 5.0 * i as f64;
+        trace.push(r);
+    }
+    let mut cfg = base_cfg(replicas, LbPolicy::JoinShortestQueue, seed);
+    cfg.scale = Some(ScaleConfig {
+        min_live: 1,
+        scale_up_queue: 2,
+        scale_up_prefill_tokens: 0,
+        scale_down_queue: 1,
+        cooldown_arrivals: 1,
+    });
+    let (mut engines, mut prms) =
+        stacks(replicas, seed, SimCostModel::default());
+    let res = serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+        .expect("scaled serve must complete");
+
+    assert_eq!(res.outcomes.len(), trace.len(), "requests lost");
+    assert!(res.fault.scale_ups >= 1, "burst never scaled up");
+    assert!(res.fault.scale_downs >= 1, "calm tail never scaled down");
+    assert_eq!(res.fault.failures, 0);
+    assert_eq!(res.fault.redispatches, 0, "scaling must not re-dispatch");
+    // Standby replicas that were never activated served nothing.
+    for (pos, &rep) in res.assignments.iter().enumerate() {
+        assert!(rep < replicas, "request {pos} unassigned");
+    }
+}
+
+#[test]
+fn fault_plan_validation_errors_are_caught() {
+    let seed = 3;
+    let spec = TaskSpec::synth_gaokao();
+    let trace = batch_trace(&spec, 4, seed);
+    let serve = |cfg: &ClusterConfig| {
+        let (mut engines, mut prms) =
+            stacks(cfg.replicas, seed, SimCostModel::default());
+        serve_cluster(cfg, &mut engines, &mut prms, &trace)
+    };
+    // Plan names a replica outside the cluster.
+    let mut cfg = base_cfg(2, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@1.0:5").unwrap();
+    assert!(serve(&cfg).is_err());
+    // Restarting a replica that never failed.
+    let mut cfg = base_cfg(2, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("restart@1.0:1").unwrap();
+    assert!(serve(&cfg).is_err());
+    // Failing the same replica twice without a restart in between.
+    let mut cfg = base_cfg(2, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@0.5:1,fail@1.0:1").unwrap();
+    assert!(serve(&cfg).is_err());
+    // Failing every replica while requests are in flight strands them —
+    // the serve must error, not lose requests silently. (10 ms in, no
+    // request has finished yet.)
+    let mut cfg = base_cfg(2, LbPolicy::RoundRobin, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@0.01:0,fail@0.01:1").unwrap();
+    assert!(serve(&cfg).is_err());
+    // Scale floor above the replica count.
+    let mut cfg = base_cfg(2, LbPolicy::RoundRobin, seed);
+    cfg.scale = Some(ScaleConfig {
+        min_live: 3,
+        scale_up_queue: 4,
+        scale_up_prefill_tokens: 0,
+        scale_down_queue: 0,
+        cooldown_arrivals: 1,
+    });
+    assert!(serve(&cfg).is_err());
+}
+
+/// Deterministic harness sanity: the same faulted serve twice must agree
+/// bit-for-bit (virtual-time fault injection has no hidden entropy).
+#[test]
+fn faulted_serve_is_deterministic() {
+    let seed = 23;
+    let replicas = 3;
+    let spec = TaskSpec::synth_gaokao();
+    let trace = poisson_trace(&spec, 16, 2.0, seed);
+    let mut cfg = base_cfg(replicas, LbPolicy::PowerOfTwoChoices, seed);
+    cfg.fault_plan = FaultPlan::parse("fail@2.0:2,restart@5.0:2").unwrap();
+    let run = || {
+        let (mut engines, mut prms) =
+            stacks(replicas, seed, SimCostModel::default());
+        serve_cluster(&cfg, &mut engines, &mut prms, &trace)
+            .expect("deterministic faulted serve")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.outcomes, b.outcomes);
+    assert_eq!(a.fault, b.fault);
+    for (x, y) in a.replica_results.iter().zip(&b.replica_results) {
+        assert_eq!(x.timeline.points, y.timeline.points);
+    }
+}

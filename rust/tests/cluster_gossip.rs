@@ -139,6 +139,9 @@ impl GossipCase {
             seed: self.seed,
             audit: true,
             gossip_rounds,
+            gossip_adapt: false,
+            fault_plan: Default::default(),
+            scale: None,
         };
         serve_cluster(&ccfg, &mut engines, &mut prms, &self.trace)
             .map_err(|e| format!("gossip={gossip_rounds}: {e}"))
@@ -384,6 +387,9 @@ fn stale_gossip_hit_reprefills_and_counts() {
         seed: 42,
         audit: true,
         gossip_rounds: 25,
+        gossip_adapt: false,
+        fault_plan: Default::default(),
+        scale: None,
     };
     let res = serve_cluster(&ccfg, &mut engines, &mut prms, &trace)
         .expect("stale-hit serve must still complete every request");

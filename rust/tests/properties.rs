@@ -690,6 +690,9 @@ fn prop_cluster_single_replica_is_byte_identical() {
                 seed: c.seed,
                 audit: true,
                 gossip_rounds: 0,
+                gossip_adapt: false,
+                fault_plan: Default::default(),
+                scale: None,
             };
             let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
                 .map_err(|e| format!("{lb:?}: {e}"))?;
@@ -732,6 +735,9 @@ fn prop_cluster_serves_all_under_every_policy() {
                 seed: c.seed,
                 audit: true,
                 gossip_rounds: 0,
+                gossip_adapt: false,
+                fault_plan: Default::default(),
+                scale: None,
             };
             let res = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
                 .map_err(|e| format!("{lb:?}: {e}"))?;
@@ -819,6 +825,9 @@ fn affinity_routing_beats_p2c_on_cache_hits() {
             seed: 42,
             audit: true,
             gossip_rounds: 0,
+            gossip_adapt: false,
+            fault_plan: Default::default(),
+            scale: None,
         };
         let res = serve_cluster(&ccfg, &mut engines, &mut prms, &trace)
             .expect("cluster serve");

@@ -37,6 +37,15 @@ Gates (bench name → assertions)
   policy's cluster-wide cache-hit rate at R=4 under eviction pressure —
   and ``probe_calls_per_request_gossip == 0`` — gossip routing must not
   touch the per-replica probe path at all (the dispatch-cost headline).
+* ``faults``: ``faults_requests_lost == 0`` — a scripted replica failure
+  must lose no requests (every in-flight request on the dead replica is
+  re-dispatched to a survivor and completes);
+  ``faults_vs_static_p99_ratio < 5.0`` — the fail+restart serve's p99
+  end-to-end latency stays within 5x the fault-free serve's (re-prefill
+  plus survivor load may stretch the tail, not blow it up); and
+  ``rewarm_hit_rate_recovery >= 0.5`` — the cluster cache-hit rate over
+  the last quarter of arrivals (after the replica rejoins and re-warms
+  via gossip) reaches at least half the pre-failure rate.
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -176,11 +185,43 @@ def gate_gossip(doc: dict, path: str) -> None:
         )
 
 
+def gate_faults(doc: dict, path: str) -> None:
+    lost = _metric(doc, path, "faults_requests_lost")
+    if lost != 0.0:
+        _fail(
+            path,
+            f"faults_requests_lost = {lost:.0f}: a replica failure must be "
+            "loss-free — every in-flight request on the dead replica is "
+            "re-dispatched to a survivor (did fail_and_drain drop "
+            "unfinished work, or the dispatcher skip the drain list?)",
+        )
+    ratio = _metric(doc, path, "faults_vs_static_p99_ratio")
+    if not ratio < 5.0:
+        _fail(
+            path,
+            f"faults_vs_static_p99_ratio = {ratio:.3f}: the fail+restart "
+            "serve's p99 e2e latency must stay within 5x the fault-free "
+            "serve's (are re-dispatched requests re-queued at the failure "
+            "time, or is routing still counting the dead replica?)",
+        )
+    recovery = _metric(doc, path, "rewarm_hit_rate_recovery")
+    if not recovery >= 0.5:
+        _fail(
+            path,
+            f"rewarm_hit_rate_recovery = {recovery:.3f}: after the failed "
+            "replica rejoins, the late-trace cache-hit rate must recover "
+            "to >= 50% of the pre-failure rate (cold rejoin without a "
+            "full-table advertisement, or the retracted digest row never "
+            "repopulating?)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
     "chunked": gate_chunked,
     "gossip": gate_gossip,
+    "faults": gate_faults,
 }
 
 

@@ -162,6 +162,62 @@ class TestGates(CheckBenchCase):
         self.assertIn("gossip_vs_probe_hit_rate_ratio", err)
 
 
+def faults_metrics(**overrides):
+    metrics = {
+        "faults_requests_lost": 0.0,
+        "faults_vs_static_p99_ratio": 1.6,
+        "rewarm_hit_rate_recovery": 1.1,
+    }
+    metrics.update(overrides)
+    return metrics
+
+
+class TestFaultsGate(CheckBenchCase):
+    def test_faults_gate_passes_on_good_report(self):
+        doc = report(bench="faults", metrics=faults_metrics())
+        path = self.write("BENCH_faults.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `faults`: PASS", out)
+
+    def test_faults_gate_fails_on_any_lost_request(self):
+        doc = report(
+            bench="faults", metrics=faults_metrics(faults_requests_lost=1.0)
+        )
+        path = self.write("BENCH_faults.json", doc)
+        code, out, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gate `faults`: FAIL", out)
+        self.assertIn("faults_requests_lost", err)
+
+    def test_faults_gate_fails_at_p99_ratio_ceiling(self):
+        doc = report(
+            bench="faults",
+            metrics=faults_metrics(faults_vs_static_p99_ratio=5.0),
+        )
+        path = self.write("BENCH_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("faults_vs_static_p99_ratio", err)
+
+    def test_faults_gate_fails_below_recovery_floor(self):
+        doc = report(
+            bench="faults",
+            metrics=faults_metrics(rewarm_hit_rate_recovery=0.4),
+        )
+        path = self.write("BENCH_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("rewarm_hit_rate_recovery", err)
+
+    def test_faults_gate_fails_on_missing_metric(self):
+        doc = report(bench="faults", metrics={})
+        path = self.write("BENCH_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("faults_requests_lost", err)
+
+
 class TestRequire(CheckBenchCase):
     def test_require_fails_on_missing_bench(self):
         path = self.write("BENCH_scheduler.json", report())
