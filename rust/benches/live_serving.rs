@@ -1,0 +1,112 @@
+//! Bench: what does serving over the wall-clock front end cost?
+//!
+//! Replays one 64-request trace twice — through the virtual-time serve
+//! (`server::run_on_trace`) and through a loopback `sart listen` +
+//! `sart replay` pair at `--time-scale 0.01` — and records, in
+//! `BENCH_serving.json` (schema in EXPERIMENTS.md §Benches):
+//!
+//! 1. **Is the live path loss-free?** `serving_requests_lost` must be
+//!    exactly 0 (`tools/check_bench.py` gates it): every accepted
+//!    session streams to its `finalized` event. `serving_rejected`
+//!    rides along (0 here — the trace never exceeds the session table).
+//! 2. **What does wall-clock pacing cost?**
+//!    `wall_vs_virtual_p99_ratio` = the live serve's p99 wall e2e
+//!    latency over the virtual serve's p99 *scaled to wall units*
+//!    (virtual p99 × time-scale), gated < 50: the live path pays
+//!    stepping granularity, socket hops and thread scheduling on top of
+//!    the simulated decode cost, but must stay within an order of
+//!    magnitude of the ideal replay at this aggressive a time scale.
+//! 3. **Live tail observables**: `wall_ttft_p99_s` / `wall_e2e_p99_s`
+//!    (wall seconds per session from open to first `tokens` /
+//!    `finalized`) and `virtual_e2e_p99_s` for the same trace.
+//!
+//!     cargo bench --bench live_serving
+
+use sart::config::{Args, LiveConfig, ServeSpec};
+use sart::frontend;
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::stats::percentile;
+use std::time::Instant;
+
+const N_REQUESTS: usize = 64;
+const TIME_SCALE: f64 = 0.01;
+
+fn spec() -> ServeSpec {
+    let args = Args::parse(
+        format!(
+            "--method sart:4 --requests {N_REQUESTS} --rate 4 \
+             --kv-tokens 8192 --seed 42"
+        )
+        .split_whitespace()
+        .map(String::from),
+    )
+    .expect("bench args");
+    ServeSpec::from_args(&args).expect("bench spec")
+}
+
+fn main() {
+    println!(
+        "== live_serving ({N_REQUESTS} requests, loopback NDJSON, \
+         time-scale {TIME_SCALE}) =="
+    );
+    let mut report = BenchReport::new("serving");
+
+    let spec = spec();
+    let trace = sart::server::trace_for(&spec).expect("bench trace");
+
+    // Virtual-time baseline: the same trace through the batch serve.
+    let virt = sart::server::run_on_trace(&spec, &trace)
+        .expect("virtual baseline serve");
+    let virtual_p99 = virt.report.e2e.p99;
+
+    // Live loopback: listener on an ephemeral port, replay at trace rate.
+    let live = LiveConfig {
+        addr: "127.0.0.1:0".into(),
+        time_scale: TIME_SCALE,
+        max_sessions: 256,
+    };
+    let handle = frontend::listen(&spec, &live).expect("loopback listener");
+    let addr = handle.addr().to_string();
+    let t0 = Instant::now();
+    let res = frontend::replay(&addr, &trace, TIME_SCALE, true)
+        .expect("loopback replay");
+    let replay_wall_s = t0.elapsed().as_secs_f64();
+    handle.join().expect("listener drain");
+
+    let lost = res.requests_lost as f64;
+    let rejected = res.rejected as f64;
+    let wall_ttft_p99 = percentile(&res.wall_ttft, 99.0);
+    let wall_e2e_p99 = percentile(&res.wall_e2e, 99.0);
+    // The ideal live serve realizes a virtual second in TIME_SCALE wall
+    // seconds; the ratio is the live path's overhead over that ideal.
+    let ratio = wall_e2e_p99 / (virtual_p99 * TIME_SCALE).max(1e-12);
+    println!(
+        "live: {}/{} finalized, {rejected:.0} rejected, {lost:.0} lost \
+         in {replay_wall_s:.2}s wall",
+        res.outcomes.len(),
+        trace.len(),
+    );
+    println!(
+        "p99 e2e: virtual {virtual_p99:.2}s (ideal wall {:.3}s) vs live \
+         wall {wall_e2e_p99:.3}s (ratio {ratio:.2}, gate < 50)",
+        virtual_p99 * TIME_SCALE,
+    );
+
+    report.metric("serving_requests_lost", lost);
+    report.metric("serving_rejected", rejected);
+    report.metric("wall_ttft_p99_s", wall_ttft_p99);
+    report.metric("wall_e2e_p99_s", wall_e2e_p99);
+    report.metric("virtual_e2e_p99_s", virtual_p99);
+    report.metric("wall_vs_virtual_p99_ratio", ratio);
+
+    // Wall cost of the full loopback replay (one sample — the serve
+    // above; re-running would re-pay the whole scaled trace).
+    report.push(bench::run_timed(
+        &format!("loopback replay {N_REQUESTS} reqs"),
+        0,
+        1,
+        || replay_wall_s * 1e6,
+    ));
+
+    report.write().expect("writing BENCH_serving.json");
+}

@@ -77,9 +77,11 @@
 //! ordinary gossip path. A [`ScaleConfig`] drives a queue-pressure scale
 //! controller through the same join/drain machinery: sustained queue
 //! depth (or chunked-prefill backlog) above threshold activates a
-//! standby replica, pressure below the hysteresis band drains the
-//! highest-index live one. The zero-fault path — empty plan, no scale
-//! controller — is property-tested byte-identical to a plan-less serve.
+//! standby replica, pressure below the hysteresis band drains the live
+//! replica with the smallest chunked-prefill backlog (highest index on
+//! ties — draining a replica mid-prefill forfeits the most queued
+//! work). The zero-fault path — empty plan, no scale controller — is
+//! property-tested byte-identical to a plan-less serve.
 
 pub mod fault;
 pub mod gossip;
@@ -89,7 +91,7 @@ pub use gossip::DigestTable;
 
 use crate::coordinator::{
     ClockHandle, DrainItem, RequestOutcome, SchedConfig, Scheduler,
-    ServeResult, StepOutcome,
+    ServeEvent, ServeResult, StepOutcome,
 };
 use crate::engine::Engine;
 use crate::kvcache::Advertisement;
@@ -861,14 +863,51 @@ impl<'e> Fleet<'e> {
             && n > sc.min_live
             && queued < sc.scale_down_queue * n
         {
-            if let Some(i) = (0..self.state.len())
-                .rev()
-                .find(|&i| self.state[i] == ReplicaState::Live)
-            {
+            let backlogs: Vec<usize> = self
+                .scheds
+                .iter()
+                .map(|s| s.load().pending_prefill_tokens)
+                .collect();
+            if let Some(i) = pick_drain_candidate(&self.state, &backlogs) {
                 self.state[i] = ReplicaState::Draining;
                 self.stats.scale_downs += 1;
                 self.since_scale = 0;
             }
+        }
+    }
+}
+
+/// Latency-aware scale-down selection: among the Live replicas, drain
+/// the one with the shallowest streamed-prefill backlog, breaking ties
+/// by highest index (the historical choice — before backlogs were
+/// consulted, the highest-index live replica always drained, which this
+/// reproduces exactly whenever no replica is mid-prefill). Draining a
+/// replica that still owes committed prefill work would park exactly
+/// the requests that are most expensive to finish — their headers are
+/// half-streamed and cannot move — so the controller prefers the
+/// replica that can empty fastest.
+fn pick_drain_candidate(
+    state: &[ReplicaState],
+    prefill_backlog: &[usize],
+) -> Option<usize> {
+    debug_assert_eq!(state.len(), prefill_backlog.len());
+    (0..state.len())
+        .rev()
+        .filter(|&i| state[i] == ReplicaState::Live)
+        .min_by_key(|&i| prefill_backlog[i])
+}
+
+/// Forward every replica's buffered events to the sink, tagged with the
+/// replica index (no-op without a sink — emission is off then, so the
+/// buffers stay empty).
+fn pump_events(
+    fleet: &mut Fleet,
+    sink: &mut Option<&mut dyn FnMut(usize, ServeEvent)>,
+) {
+    let Some(s) = sink.as_deref_mut() else { return };
+    for i in 0..fleet.scheds.len() {
+        for ev in fleet.scheds[i].drain_events() {
+            s(i, ev);
         }
     }
 }
@@ -901,6 +940,32 @@ pub fn serve_cluster(
     engines: &mut [Box<dyn Engine>],
     prms: &mut [Box<dyn PrmScorer>],
     trace: &[Request],
+) -> Result<ClusterResult> {
+    serve_cluster_impl(cfg, engines, prms, trace, None)
+}
+
+/// [`serve_cluster`] as an explicit event pump: every replica scheduler
+/// emits [`ServeEvent`]s and the fleet forwards them to `sink` tagged
+/// with the replica index, after each dispatch round and drain pass.
+/// Events of one replica arrive in emission order; cross-replica
+/// interleaving follows the dispatcher's pump points. Scheduling is
+/// byte-identical to [`serve_cluster`] (property-tested).
+pub fn serve_cluster_with(
+    cfg: &ClusterConfig,
+    engines: &mut [Box<dyn Engine>],
+    prms: &mut [Box<dyn PrmScorer>],
+    trace: &[Request],
+    sink: &mut dyn FnMut(usize, ServeEvent),
+) -> Result<ClusterResult> {
+    serve_cluster_impl(cfg, engines, prms, trace, Some(sink))
+}
+
+fn serve_cluster_impl(
+    cfg: &ClusterConfig,
+    engines: &mut [Box<dyn Engine>],
+    prms: &mut [Box<dyn PrmScorer>],
+    trace: &[Request],
+    mut sink: Option<&mut dyn FnMut(usize, ServeEvent)>,
 ) -> Result<ClusterResult> {
     let r = cfg.replicas;
     if r == 0 {
@@ -948,6 +1013,7 @@ pub fn serve_cluster(
                 ClockHandle::Sim(SimClock::new()),
             );
             s.set_audit(cfg.audit);
+            s.set_emit_events(sink.is_some());
             s
         })
         .collect();
@@ -1005,6 +1071,7 @@ pub fn serve_cluster(
         fleet.scale_tick(req.arrival);
         let (idx, expected) = fleet.route(req)?;
         fleet.dispatch_to(idx, pos, req.clone(), expected)?;
+        pump_events(&mut fleet, &mut sink);
     }
     // Events scripted past the last arrival (e.g. a failure during the
     // drain tail) still apply, in order.
@@ -1017,6 +1084,7 @@ pub fn serve_cluster(
             while fleet.scheds[i].step()? == StepOutcome::Worked {}
         }
     }
+    pump_events(&mut fleet, &mut sink);
 
     // Collect outcomes by trace position: each replica's final
     // incarnation finishes in its own dispatch order, and failed
@@ -1113,5 +1181,39 @@ mod tests {
         assert_eq!(skew_f64(&[0.0, 0.0]), 1.0);
         assert!((skew_f64(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
         assert!((skew_f64(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_candidate_avoids_deep_prefill_backlog() {
+        use ReplicaState::{Down, Draining, Live};
+        // Historical tie-break: with no prefill backlog anywhere, the
+        // highest-index live replica drains (pre-latency-aware behaviour,
+        // reproduced exactly).
+        assert_eq!(
+            pick_drain_candidate(&[Live, Live, Live], &[0, 0, 0]),
+            Some(2)
+        );
+        // A replica mid-way through streaming a deep prefill backlog is
+        // not chosen to drain, even though index order prefers it.
+        assert_eq!(
+            pick_drain_candidate(&[Live, Live, Live], &[0, 0, 4096]),
+            Some(1)
+        );
+        assert_eq!(
+            pick_drain_candidate(&[Live, Live, Live], &[128, 4096, 64]),
+            Some(2)
+        );
+        // Non-live replicas are never candidates, whatever their backlog.
+        assert_eq!(
+            pick_drain_candidate(&[Live, Down, Live], &[512, 0, 1024]),
+            Some(0)
+        );
+        assert_eq!(pick_drain_candidate(&[Down, Draining], &[0, 0]), None);
+        // All live replicas deep in prefill: the shallowest one drains
+        // (the controller still honours the queue-depth decision).
+        assert_eq!(
+            pick_drain_candidate(&[Live, Live], &[900, 700]),
+            Some(1)
+        );
     }
 }

@@ -22,6 +22,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "no-header",
     "help",
     "gossip-adapt",
+    "shutdown",
 ];
 
 /// Minimal `--key value` / `--key=value` / `--flag` parser.
@@ -398,6 +399,43 @@ impl ServeSpec {
     }
 }
 
+/// Configuration of the wall-clock front end (`sart listen` and the
+/// `sart replay` client). Orthogonal to [`ServeSpec`]: the spec says what
+/// to serve, this says how the serve meets real time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiveConfig {
+    /// Listen/connect address (`--addr`; port 0 binds an ephemeral port
+    /// and the listener reports the real one).
+    pub addr: String,
+    /// Wall seconds per virtual second (`--time-scale`): 1.0 replays a
+    /// trace in real time, 0.01 replays it 100× faster. Applies to both
+    /// the listener's virtual-clock pacing and the replay client's
+    /// arrival sleeps.
+    pub time_scale: f64,
+    /// Admission bound on concurrent in-flight sessions
+    /// (`--max-sessions`): past it, submits are rejected with a
+    /// `retry_after_ms` hint instead of queueing unboundedly.
+    pub max_sessions: usize,
+}
+
+impl LiveConfig {
+    pub fn from_args(args: &Args) -> Result<LiveConfig> {
+        let time_scale = args.f64_or("time-scale", 1.0)?;
+        if !(time_scale.is_finite() && time_scale > 0.0) {
+            bail!("--time-scale must be a positive number, got {time_scale}");
+        }
+        let max_sessions = args.usize_or("max-sessions", 256)?;
+        if max_sessions == 0 {
+            bail!("--max-sessions must be at least 1");
+        }
+        Ok(LiveConfig {
+            addr: args.get_or("addr", "127.0.0.1:8477"),
+            time_scale,
+            max_sessions,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -590,6 +628,29 @@ mod tests {
             &args("--replicas 2 --scale-min 3")
         )
         .is_err());
+    }
+
+    #[test]
+    fn live_config_flags() {
+        let l = LiveConfig::from_args(&args("")).unwrap();
+        assert_eq!(l.addr, "127.0.0.1:8477");
+        assert_eq!(l.time_scale, 1.0);
+        assert_eq!(l.max_sessions, 256);
+        let l = LiveConfig::from_args(&args(
+            "--addr 127.0.0.1:0 --time-scale 0.01 --max-sessions 4",
+        ))
+        .unwrap();
+        assert_eq!(l.addr, "127.0.0.1:0");
+        assert_eq!(l.time_scale, 0.01);
+        assert_eq!(l.max_sessions, 4);
+        assert!(LiveConfig::from_args(&args("--time-scale 0")).is_err());
+        assert!(LiveConfig::from_args(&args("--time-scale -1")).is_err());
+        assert!(LiveConfig::from_args(&args("--time-scale wat")).is_err());
+        assert!(LiveConfig::from_args(&args("--max-sessions 0")).is_err());
+        // `--shutdown` is a boolean flag (replay client), not a kv pair.
+        let a = args("--shutdown --addr 127.0.0.1:9");
+        assert!(a.flag("shutdown"));
+        assert_eq!(a.get("addr"), Some("127.0.0.1:9"));
     }
 
     #[test]

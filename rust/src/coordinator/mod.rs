@@ -16,5 +16,5 @@ pub use scheduler::{
 };
 pub use types::{
     Branch, BranchStatus, CompletedResponse, Policy, PrunePhase, RequestMeta,
-    RequestOutcome, RequestState,
+    RequestOutcome, RequestState, ServeEvent,
 };

@@ -64,7 +64,6 @@ use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
 use crate::sampler;
 use crate::tokenizer as tok;
-use crate::util::clock::{Clock, RealClock, SimClock};
 use crate::util::rng::Rng;
 use crate::workload::Request;
 use anyhow::{bail, Context, Result};
@@ -118,41 +117,10 @@ impl Default for SchedConfig {
     }
 }
 
-/// Real or virtual time.
-pub enum ClockHandle {
-    Real(RealClock),
-    Sim(SimClock),
-}
-
-impl ClockHandle {
-    pub fn now(&self) -> f64 {
-        match self {
-            ClockHandle::Real(c) => c.now(),
-            ClockHandle::Sim(c) => c.now(),
-        }
-    }
-
-    /// Charge engine cost (virtual clocks only — wall time passed anyway).
-    fn charge(&self, cost: f64) {
-        if let ClockHandle::Sim(c) = self {
-            c.advance(cost);
-        }
-    }
-
-    fn idle_until(&self, t: f64) {
-        match self {
-            ClockHandle::Sim(c) => c.advance_to(t),
-            ClockHandle::Real(c) => {
-                let dt = t - c.now();
-                if dt > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(
-                        dt.min(0.01),
-                    ));
-                }
-            }
-        }
-    }
-}
+// The single time authority lives in `util::clock` now (the wall-clock
+// front end threads the same handle); re-exported here so existing
+// `coordinator::ClockHandle` imports keep working.
+pub use crate::util::clock::ClockHandle;
 
 /// Result of a serve run.
 pub struct ServeResult {
@@ -311,6 +279,12 @@ pub struct Scheduler<'e> {
     /// Cross-check every incremental structure against a from-scratch
     /// recomputation each round (tests; see module docs).
     audit: bool,
+    /// Record [`ServeEvent`]s as scheduling decisions land (off by
+    /// default). Emission is strictly write-only — no scheduling decision
+    /// reads the buffer — so enabling it cannot perturb outcomes or
+    /// timelines (the byte-identity property test pins this).
+    emit_events: bool,
+    events: Vec<ServeEvent>,
     rng: Rng,
 }
 
@@ -362,6 +336,8 @@ impl<'e> Scheduler<'e> {
             prm_seqs: Vec::new(),
             scratch: Vec::new(),
             audit: false,
+            emit_events: false,
+            events: Vec::new(),
             rng,
         }
     }
@@ -372,10 +348,47 @@ impl<'e> Scheduler<'e> {
         self.audit = on;
     }
 
+    /// Record structured [`ServeEvent`]s as scheduling decisions land
+    /// (drain them with [`Scheduler::drain_events`]). Off by default:
+    /// recording is write-only and cannot change scheduling, it only
+    /// costs the buffer and the token clones.
+    pub fn set_emit_events(&mut self, on: bool) {
+        self.emit_events = on;
+    }
+
+    /// Take the events recorded since the last drain, in emission order.
+    pub fn drain_events(&mut self) -> Vec<ServeEvent> {
+        std::mem::take(&mut self.events)
+    }
+
     /// Serve a full trace to completion; requests must be sorted by
     /// arrival time. Equivalent to dispatching every request up front and
     /// stepping until idle.
     pub fn serve(&mut self, trace: &[Request]) -> Result<ServeResult> {
+        self.serve_pump(trace, None)
+    }
+
+    /// [`Scheduler::serve`] as an explicit event pump: emission is
+    /// enabled for the duration and every [`ServeEvent`] is forwarded to
+    /// `sink` right after the step that produced it. Scheduling is
+    /// byte-identical to `serve` (property-tested).
+    pub fn serve_with(
+        &mut self,
+        trace: &[Request],
+        sink: &mut dyn FnMut(ServeEvent),
+    ) -> Result<ServeResult> {
+        let prev = self.emit_events;
+        self.emit_events = true;
+        let res = self.serve_pump(trace, Some(sink));
+        self.emit_events = prev;
+        res
+    }
+
+    fn serve_pump(
+        &mut self,
+        trace: &[Request],
+        mut sink: Option<&mut dyn FnMut(ServeEvent)>,
+    ) -> Result<ServeResult> {
         let wall0 = std::time::Instant::now();
         for w in trace.windows(2) {
             if w[1].arrival < w[0].arrival {
@@ -385,7 +398,17 @@ impl<'e> Scheduler<'e> {
         for r in trace {
             self.dispatch(r.clone())?;
         }
-        while self.step()? == StepOutcome::Worked {}
+        loop {
+            let out = self.step()?;
+            if let Some(s) = sink.as_deref_mut() {
+                for ev in self.drain_events() {
+                    s(ev);
+                }
+            }
+            if out == StepOutcome::Idle {
+                break;
+            }
+        }
         let mut res = self.finish()?;
         res.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(res)
@@ -602,6 +625,13 @@ impl<'e> Scheduler<'e> {
             if let Some(kvb) = kvb {
                 self.kv.note_decode(kvb, toks.len())?;
             }
+            if self.emit_events && !toks.is_empty() {
+                self.events.push(ServeEvent::BranchTokens {
+                    request: self.requests[ridx].id,
+                    branch: bidx,
+                    tokens: toks.clone(),
+                });
+            }
         }
         self.chunk = chunk;
 
@@ -656,6 +686,20 @@ impl<'e> Scheduler<'e> {
             cache_hit_tokens: self.cache_hit_tokens_total,
             prompt_tokens: self.prompt_tokens_total,
         })
+    }
+
+    /// Non-destructive outcome lookup by external request id — the live
+    /// front end reads this the moment a `Finalized` event lands, while
+    /// [`Scheduler::finish`] stays the batch path. `None` if the id is
+    /// unknown here or the request has not finished. The latest
+    /// same-id dispatch wins (re-dispatched requests reuse ids).
+    pub fn outcome_by_id(&self, id: usize) -> Option<RequestOutcome> {
+        self.requests
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, r)| r.id == id && r.is_finished())
+            .and_then(|(i, r)| Self::build_outcome(r, self.truths[i]).ok())
     }
 
     /// The final per-request record for a finished [`RequestState`] —
@@ -995,6 +1039,12 @@ impl<'e> Scheduler<'e> {
                 req.branches.push(b);
                 self.branch_queue.push_back((ridx, req.branches.len() - 1));
             }
+            if self.emit_events {
+                self.events.push(ServeEvent::Admitted {
+                    request: self.requests[ridx].id,
+                    at: now,
+                });
+            }
         }
         // Blocked siblings go back to the queue front, order preserved.
         for &e in deferred.iter().rev() {
@@ -1107,6 +1157,13 @@ impl<'e> Scheduler<'e> {
                 }
                 self.running_tokens -= gen_len;
                 completed_now.push((ridx, bidx));
+                if self.emit_events && !done {
+                    self.events.push(ServeEvent::BranchCapped {
+                        request: self.requests[ridx].id,
+                        branch: bidx,
+                        at: now,
+                    });
+                }
             }
             self.scratch = snapshot;
         }
@@ -1215,6 +1272,13 @@ impl<'e> Scheduler<'e> {
                     }
                     self.terminate_branch(ridx, bidx, BranchStatus::Pruned, now)?;
                     self.requests[ridx].meta.num_pruned += 1;
+                    if self.emit_events {
+                        self.events.push(ServeEvent::BranchPruned {
+                            request: self.requests[ridx].id,
+                            branch: bidx,
+                            at: now,
+                        });
+                    }
                 }
                 self.scratch = snapshot;
             }
@@ -1227,9 +1291,15 @@ impl<'e> Scheduler<'e> {
             let n = self.cfg.policy.n_branches();
             let m = self.cfg.policy.m_required();
             let meta = &self.requests[ridx].meta;
-            if meta.num_completed >= m
-                || meta.num_harvested + meta.num_pruned >= n
-            {
+            let quorum = meta.num_completed >= m;
+            let exhausted = meta.num_harvested + meta.num_pruned >= n;
+            if quorum || exhausted {
+                if self.emit_events && quorum {
+                    self.events.push(ServeEvent::EarlyStop {
+                        request: self.requests[ridx].id,
+                        at: now,
+                    });
+                }
                 self.finalize(ridx, now)?;
             }
         }
@@ -1354,6 +1424,14 @@ impl<'e> Scheduler<'e> {
         req.final_answer = answer;
         req.finished_at = Some(now);
         self.finished_count += 1;
+        if self.emit_events {
+            self.events.push(ServeEvent::Finalized {
+                request: self.requests[ridx].id,
+                answer,
+                votes: self.requests[ridx].completed.len(),
+                at: now,
+            });
+        }
         Ok(())
     }
 

@@ -4,6 +4,48 @@ use crate::kvcache;
 use crate::tokenizer::Token;
 use crate::workload::Question;
 
+/// One observable scheduling decision, emitted by the event-emitting
+/// core (`Scheduler::step` with events enabled) as it happens — the
+/// stream the wall-clock front end forwards to live sessions, and the
+/// unit the byte-identity property tests cross-check against the final
+/// [`RequestOutcome`]s. `request` is the external request id
+/// (`Request::id`), `branch` the per-request branch index, and every
+/// `at` is in the serve's own timebase (virtual seconds under a
+/// `SimClock`, wall seconds under a `RealClock`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeEvent {
+    /// The request left the FCFS queue and acquired its KV reservation.
+    Admitted { request: usize, at: f64 },
+    /// Tokens one branch decoded this round, in generation order.
+    BranchTokens { request: usize, branch: usize, tokens: Vec<Token> },
+    /// SART pruned the branch (two-phase dynamic pruning).
+    BranchPruned { request: usize, branch: usize, at: f64 },
+    /// The branch hit the generation cap without an EOS.
+    BranchCapped { request: usize, branch: usize, at: f64 },
+    /// The early-stop quorum landed (M answered completions) — emitted
+    /// just before `Finalized` when the quorum, not branch exhaustion,
+    /// ended the request.
+    EarlyStop { request: usize, at: f64 },
+    /// The voted answer is final; `votes` counts the harvested
+    /// completions that took part in the vote.
+    Finalized { request: usize, answer: Option<u8>, votes: usize, at: f64 },
+}
+
+impl ServeEvent {
+    /// External id of the request this event belongs to (session
+    /// routing key of the live front end).
+    pub fn request(&self) -> usize {
+        match *self {
+            ServeEvent::Admitted { request, .. }
+            | ServeEvent::BranchTokens { request, .. }
+            | ServeEvent::BranchPruned { request, .. }
+            | ServeEvent::BranchCapped { request, .. }
+            | ServeEvent::EarlyStop { request, .. }
+            | ServeEvent::Finalized { request, .. } => request,
+        }
+    }
+}
+
 /// Scheduling policy — which method serves the request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Policy {

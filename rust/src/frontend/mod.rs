@@ -1,0 +1,493 @@
+//! Wall-clock serving runtime: a streaming session front end over the
+//! stepped scheduler core.
+//!
+//! The virtual-time serve (`Scheduler::serve`, `serve_cluster`) answers
+//! "what would this policy do" in simulated seconds; this module answers
+//! it *against the wall clock*. `sart listen` binds a TCP socket and
+//! accepts newline-delimited-JSON sessions ([`proto`]); every accepted
+//! request is dispatched into the same stepped `Scheduler` the
+//! virtual-time paths use, and scheduler steps are paced so virtual time
+//! tracks wall time at a configurable exchange rate: one virtual second
+//! costs `--time-scale` wall seconds (0.01 replays a 10-minute trace in
+//! 6 seconds). [`ServeEvent`]s stream back to each session's socket the
+//! moment its scheduler records them, so clients see tokens, prunes and
+//! early stops live rather than a report after the fact.
+//!
+//! Threading: the scheduler stack is deliberately not `Send`-friendly
+//! (it mutably borrows its engine), so ONE core thread owns every
+//! engine/PRM/scheduler and runs the pump; the accept loop and the
+//! per-connection handlers only talk to it through an mpsc control
+//! channel, and each session gets a private response channel whose
+//! hangup closes the connection. Backpressure is a bounded session
+//! table: past `--max-sessions` in-flight sessions, submits are rejected
+//! with a `retry_after_ms` hint instead of queueing without bound.
+//! Shutdown (`{"op":"shutdown"}` or [`ListenerHandle::shutdown`]) stops
+//! admitting, drains every in-flight session to its `finalized` event,
+//! then exits.
+//!
+//! Multi-replica specs (`--replicas R`) run R independent scheduler
+//! stacks off one shared wall clock, routed least-in-system at submit
+//! time — the live analogue of the virtual-time cluster dispatcher.
+
+pub mod proto;
+
+use crate::cluster::REPLICA_SEED_STRIDE;
+use crate::config::{EngineChoice, LiveConfig, Method, ServeSpec};
+use crate::coordinator::{
+    ClockHandle, RequestOutcome, Scheduler, ServeEvent, StepOutcome,
+};
+use crate::engine::Engine;
+use crate::prm::PrmScorer;
+use crate::server::{build_engine, build_prm, sched_cfg_for};
+use crate::tokenizer::Token;
+use crate::util::clock::SimClock;
+use crate::workload::{Question, Request};
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Control messages from connection handlers to the core thread.
+enum Ctl {
+    Submit {
+        dataset: String,
+        question: Question,
+        header: Vec<Token>,
+        /// The session's private event stream; dropping it closes the
+        /// connection.
+        resp: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// A running `sart listen` instance.
+pub struct ListenerHandle {
+    addr: SocketAddr,
+    ctl: mpsc::Sender<Ctl>,
+    done: Arc<AtomicBool>,
+    core: Option<JoinHandle<Result<()>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ListenerHandle {
+    /// The bound address (`--addr 127.0.0.1:0` binds an ephemeral port;
+    /// this reports the real one).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful shutdown: stop admitting sessions, drain the ones
+    /// in flight. Equivalent to a client sending `{"op":"shutdown"}`.
+    pub fn shutdown(&self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+    }
+
+    /// Wait for the listener to finish draining and tear down. Blocks
+    /// until shutdown is triggered (by [`ListenerHandle::shutdown`] or a
+    /// client's `{"op":"shutdown"}`) and every in-flight session has
+    /// received its `finalized` event.
+    pub fn join(mut self) -> Result<()> {
+        let res = match self.core.take().expect("join called once").join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("listener core thread panicked")),
+        };
+        self.done.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        res
+    }
+}
+
+/// Bind `live.addr` and serve `spec` against the wall clock. Returns as
+/// soon as the socket is listening; the serve itself runs on background
+/// threads until [`ListenerHandle::join`] observes shutdown.
+pub fn listen(spec: &ServeSpec, live: &LiveConfig) -> Result<ListenerHandle> {
+    if !matches!(spec.engine, EngineChoice::Sim) {
+        bail!(
+            "sart listen requires --engine sim (decode costs are virtual \
+             and paced against the wall clock via --time-scale)"
+        );
+    }
+    if matches!(spec.method, Method::Rebase { .. }) {
+        bail!(
+            "sart listen does not support the rebase baseline (it has no \
+             stepped scheduler to pump)"
+        );
+    }
+    let listener = TcpListener::bind(&live.addr)
+        .with_context(|| format!("binding {}", live.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+    let done = Arc::new(AtomicBool::new(false));
+
+    let core = {
+        let spec = spec.clone();
+        let live = live.clone();
+        let done = done.clone();
+        thread::Builder::new().name("sart-core".into()).spawn(move || {
+            let res = core_loop(&spec, &live, ctl_rx);
+            done.store(true, Ordering::SeqCst);
+            res
+        })?
+    };
+    let accept = {
+        let ctl = ctl_tx.clone();
+        let done = done.clone();
+        thread::Builder::new()
+            .name("sart-accept".into())
+            .spawn(move || accept_loop(listener, ctl, done))?
+    };
+    Ok(ListenerHandle {
+        addr,
+        ctl: ctl_tx,
+        done,
+        core: Some(core),
+        accept: Some(accept),
+    })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctl: mpsc::Sender<Ctl>,
+    done: Arc<AtomicBool>,
+) {
+    loop {
+        if done.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let ctl = ctl.clone();
+                let _ = thread::Builder::new()
+                    .name("sart-conn".into())
+                    .spawn(move || handle_conn(stream, ctl));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// One connection = one request line, then stream whatever the core
+/// sends for this session until it drops the channel.
+fn handle_conn(stream: TcpStream, ctl: mpsc::Sender<Ctl>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+        return;
+    }
+    let mut w = &stream;
+    match proto::parse_client_line(line.trim()) {
+        Err(e) => {
+            let _ = writeln!(w, "{}", proto::refused_line(&format!("{e:#}")));
+        }
+        Ok(proto::ClientMsg::Shutdown) => {
+            // The control send happens-before the ack: a client that has
+            // read the ack knows any submit it opens afterwards orders
+            // after the shutdown on the control channel, so it will be
+            // refused — that makes the graceful-shutdown test (and any
+            // script doing `shutdown; submit`) deterministic.
+            let _ = ctl.send(Ctl::Shutdown);
+            let _ = writeln!(w, "{}", proto::shutdown_ack_line());
+        }
+        Ok(proto::ClientMsg::Submit { dataset, question, header }) => {
+            let (tx, rx) = mpsc::channel::<String>();
+            if ctl
+                .send(Ctl::Submit { dataset, question, header, resp: tx })
+                .is_err()
+            {
+                let _ =
+                    writeln!(w, "{}", proto::refused_line("listener is down"));
+                return;
+            }
+            for ev in rx {
+                if writeln!(w, "{ev}").is_err() {
+                    return; // client hung up; the core notices on send
+                }
+                let _ = w.flush();
+            }
+        }
+    }
+}
+
+/// The single thread that owns every engine/PRM/scheduler stack and
+/// pumps them against the wall clock.
+fn core_loop(
+    spec: &ServeSpec,
+    live: &LiveConfig,
+    ctl: mpsc::Receiver<Ctl>,
+) -> Result<()> {
+    let replicas = spec.replicas.max(1);
+    let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(replicas);
+    let mut prms: Vec<Box<dyn PrmScorer>> = Vec::with_capacity(replicas);
+    let mut cfgs = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        // Same per-replica seed stride as the virtual-time cluster path.
+        let mut rspec = spec.clone();
+        rspec.seed = spec.seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+        engines.push(build_engine(&rspec)?);
+        prms.push(build_prm(&rspec)?);
+        cfgs.push(sched_cfg_for(&rspec)?);
+    }
+    let mut scheds: Vec<Scheduler> = Vec::with_capacity(replicas);
+    for ((e, p), cfg) in engines.iter_mut().zip(prms.iter_mut()).zip(cfgs) {
+        let mut s = Scheduler::new(
+            cfg,
+            e.as_mut(),
+            p.as_mut(),
+            ClockHandle::Sim(SimClock::new()),
+        );
+        s.set_emit_events(true);
+        scheds.push(s);
+    }
+
+    struct Session {
+        resp: mpsc::Sender<String>,
+    }
+    let start = Instant::now();
+    let ts = live.time_scale;
+    let mut sessions: HashMap<usize, Session> = HashMap::new();
+    let mut last_arrival = vec![0.0f64; replicas];
+    let mut next_id = 0usize;
+    let mut draining = false;
+    let mut pending: VecDeque<Ctl> = VecDeque::new();
+
+    loop {
+        // 1. Control messages: anything the idle wait deferred, then
+        // everything currently queued.
+        loop {
+            let msg = match pending.pop_front() {
+                Some(m) => m,
+                None => match ctl.try_recv() {
+                    Ok(m) => m,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
+                },
+            };
+            match msg {
+                Ctl::Shutdown => draining = true,
+                Ctl::Submit { dataset, question, header, resp } => {
+                    if draining {
+                        let _ =
+                            resp.send(proto::refused_line("shutting down"));
+                        continue;
+                    }
+                    if sessions.len() >= live.max_sessions {
+                        let _ = resp.send(proto::rejected_line(100));
+                        continue;
+                    }
+                    // The arrival instant is the wall clock read in
+                    // virtual units; per-replica clamping keeps each
+                    // scheduler's dispatch order sorted even when two
+                    // submits race onto one replica within a clock tick.
+                    let vnow = start.elapsed().as_secs_f64() / ts;
+                    let ri = (0..replicas)
+                        .min_by_key(|&i| {
+                            (scheds[i].load().requests_in_system(), i)
+                        })
+                        .expect("at least one replica");
+                    let arrival = vnow.max(last_arrival[ri]);
+                    last_arrival[ri] = arrival;
+                    let id = next_id;
+                    next_id += 1;
+                    scheds[ri].dispatch(Request {
+                        id,
+                        question,
+                        arrival,
+                        dataset,
+                        header,
+                    })?;
+                    let _ = resp.send(proto::accepted_line(id));
+                    sessions.insert(id, Session { resp });
+                }
+            }
+        }
+
+        // 2. Step every replica until its virtual clock catches up with
+        // the wall clock (bounded per pass so control stays responsive).
+        let vtarget = start.elapsed().as_secs_f64() / ts;
+        let mut worked = false;
+        for i in 0..replicas {
+            let mut budget = 64;
+            while scheds[i].now() < vtarget && budget > 0 {
+                match scheds[i].step()? {
+                    StepOutcome::Worked => {
+                        worked = true;
+                        budget -= 1;
+                    }
+                    StepOutcome::Idle => {
+                        scheds[i].advance_clock_to(vtarget);
+                        break;
+                    }
+                }
+            }
+            // 3. Stream freshly recorded events to their sessions.
+            for ev in scheds[i].drain_events() {
+                let id = ev.request();
+                let finalized = matches!(ev, ServeEvent::Finalized { .. });
+                let line = if finalized {
+                    let oc = scheds[i].outcome_by_id(id);
+                    proto::event_line(&ev, oc.as_ref())
+                } else {
+                    proto::event_line(&ev, None)
+                };
+                if let Some(sess) = sessions.get(&id) {
+                    let _ = sess.resp.send(line); // client may have hung up
+                }
+                if finalized {
+                    // Dropping the channel ends the handler's stream and
+                    // closes the connection.
+                    sessions.remove(&id);
+                }
+            }
+        }
+
+        if draining && sessions.is_empty() {
+            return Ok(());
+        }
+
+        // 4. Pacing: nothing stepped this pass — sleep on the control
+        // channel so a submit wakes the loop immediately.
+        if !worked {
+            match ctl.recv_timeout(Duration::from_millis(2)) {
+                Ok(m) => pending.push_back(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
+            }
+        }
+    }
+}
+
+/// What one replayed session ended as.
+enum SessionEnd {
+    Finished {
+        outcome: Box<RequestOutcome>,
+        wall_ttft: f64,
+        wall_e2e: f64,
+    },
+    Rejected,
+    Lost,
+}
+
+/// Result of replaying a trace against a live listener.
+#[derive(Debug, Default)]
+pub struct ReplayResult {
+    /// Server-reported outcome records, one per finalized session (the
+    /// same schema the virtual-time serve produces).
+    pub outcomes: Vec<RequestOutcome>,
+    /// Wall seconds from session open to the first `tokens` event.
+    pub wall_ttft: Vec<f64>,
+    /// Wall seconds from session open to `finalized`.
+    pub wall_e2e: Vec<f64>,
+    /// Accepted sessions that never saw `finalized` (plus transport
+    /// errors) — a correct listener replays with zero.
+    pub requests_lost: usize,
+    /// Sessions turned away (`rejected` backpressure or `refused`).
+    pub rejected: usize,
+}
+
+/// Fire `trace` at a live listener at trace rate: request `i` is
+/// submitted `arrival_i * time_scale` wall seconds after the first, each
+/// on its own connection, and all sessions are drained to completion.
+/// With `send_shutdown`, a `{"op":"shutdown"}` is sent after the last
+/// session finishes (and its ack awaited).
+pub fn replay(
+    addr: &str,
+    trace: &[Request],
+    time_scale: f64,
+    send_shutdown: bool,
+) -> Result<ReplayResult> {
+    if !(time_scale.is_finite() && time_scale > 0.0) {
+        bail!("time_scale must be a positive number, got {time_scale}");
+    }
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(trace.len());
+    for r in trace {
+        let due = r.arrival * time_scale;
+        let elapsed = start.elapsed().as_secs_f64();
+        if due > elapsed {
+            thread::sleep(Duration::from_secs_f64(due - elapsed));
+        }
+        let addr = addr.to_string();
+        let req = r.clone();
+        handles.push(thread::spawn(move || session(&addr, &req)));
+    }
+    let mut res = ReplayResult::default();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(SessionEnd::Finished { outcome, wall_ttft, wall_e2e })) => {
+                res.outcomes.push(*outcome);
+                res.wall_ttft.push(wall_ttft);
+                res.wall_e2e.push(wall_e2e);
+            }
+            Ok(Ok(SessionEnd::Rejected)) => res.rejected += 1,
+            Ok(Ok(SessionEnd::Lost)) | Ok(Err(_)) | Err(_) => {
+                res.requests_lost += 1;
+            }
+        }
+    }
+    if send_shutdown {
+        let stream =
+            TcpStream::connect(addr).context("connecting for shutdown")?;
+        let mut w = &stream;
+        writeln!(w, "{}", proto::shutdown_line())?;
+        let _ = w.flush();
+        let mut line = String::new();
+        let _ = BufReader::new(stream).read_line(&mut line); // await ack
+    }
+    Ok(res)
+}
+
+/// Drive one session: submit, then read events until `finalized`.
+fn session(addr: &str, req: &Request) -> Result<SessionEnd> {
+    let stream = TcpStream::connect(addr)?;
+    let t0 = Instant::now();
+    {
+        let mut w = &stream;
+        writeln!(
+            w,
+            "{}",
+            proto::submit_line(&req.dataset, &req.question, &req.header)
+        )?;
+        w.flush()?;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut ttft: Option<f64> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(SessionEnd::Lost); // server hung up mid-session
+        }
+        match proto::parse_server_line(line.trim())? {
+            proto::ServerMsg::Rejected { .. }
+            | proto::ServerMsg::Refused { .. } => {
+                return Ok(SessionEnd::Rejected)
+            }
+            proto::ServerMsg::Tokens { .. } => {
+                ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64());
+            }
+            proto::ServerMsg::Finalized { outcome, .. } => {
+                let wall_e2e = t0.elapsed().as_secs_f64();
+                return Ok(SessionEnd::Finished {
+                    outcome,
+                    wall_ttft: ttft.unwrap_or(wall_e2e),
+                    wall_e2e,
+                });
+            }
+            _ => {}
+        }
+    }
+}

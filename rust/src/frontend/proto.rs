@@ -1,0 +1,519 @@
+//! The wire protocol of the live front end: newline-delimited JSON.
+//!
+//! One connection carries one session. The client opens with a single
+//! request line (`{"op":"submit",...}` or `{"op":"shutdown"}`); the
+//! server answers with a stream of event lines, one per
+//! [`ServeEvent`], closing the connection after `finalized` (or after a
+//! single `rejected`/`refused` line). Everything is hand-rolled over
+//! [`crate::util::json`] — no serialization dependencies.
+//!
+//! The `finalized` line embeds the full [`RequestOutcome`] record, so a
+//! replay client can reconstruct the exact `RunOutput` schema the
+//! virtual-time server writes and every bench/gate tool keeps working
+//! on live runs.
+
+use crate::coordinator::{RequestOutcome, ServeEvent};
+use crate::tokenizer::Token;
+use crate::util::json::Json;
+use crate::workload::{Question, NUM_KEYS};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn unum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn tokens_json(toks: &[Token]) -> Json {
+    Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect())
+}
+
+fn tokens_from(j: &Json, what: &str) -> Result<Vec<Token>> {
+    j.as_arr()
+        .with_context(|| format!("`{what}` must be an array"))?
+        .iter()
+        .map(|t| {
+            t.as_i64()
+                .map(|v| v as Token)
+                .with_context(|| format!("`{what}` entries must be numbers"))
+        })
+        .collect()
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .with_context(|| format!("`{key}` must be a number"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .with_context(|| format!("`{key}` must be a number"))
+}
+
+/// Serialize one [`RequestOutcome`] (the `outcome` field of a
+/// `finalized` line and the `outcomes` array of a `RunOutput` dump).
+pub fn outcome_to_json(o: &RequestOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), unum(o.id));
+    m.insert("dataset".into(), Json::Str(o.dataset.clone()));
+    m.insert("arrival".into(), num(o.arrival));
+    m.insert("admitted_at".into(), num(o.admitted_at));
+    m.insert("prefill_done_at".into(), num(o.prefill_done_at));
+    m.insert("finished_at".into(), num(o.finished_at));
+    m.insert(
+        "answer".into(),
+        o.answer.map_or(Json::Null, |a| unum(a as usize)),
+    );
+    m.insert("truth".into(), unum(o.truth as usize));
+    m.insert("branches_started".into(), unum(o.branches_started));
+    m.insert("branches_pruned".into(), unum(o.branches_pruned));
+    m.insert("branches_completed".into(), unum(o.branches_completed));
+    m.insert("tokens_generated".into(), unum(o.tokens_generated));
+    m.insert(
+        "response_lengths".into(),
+        Json::Arr(o.response_lengths.iter().map(|&l| unum(l)).collect()),
+    );
+    m.insert("cached_prompt_tokens".into(), unum(o.cached_prompt_tokens));
+    m.insert("redispatches".into(), unum(o.redispatches));
+    Json::Obj(m)
+}
+
+/// Inverse of [`outcome_to_json`].
+pub fn outcome_from_json(j: &Json) -> Result<RequestOutcome> {
+    Ok(RequestOutcome {
+        id: req_usize(j, "id")?,
+        dataset: j
+            .req("dataset")?
+            .as_str()
+            .context("`dataset` must be a string")?
+            .to_string(),
+        arrival: req_f64(j, "arrival")?,
+        admitted_at: req_f64(j, "admitted_at")?,
+        prefill_done_at: req_f64(j, "prefill_done_at")?,
+        finished_at: req_f64(j, "finished_at")?,
+        answer: match j.req("answer")? {
+            Json::Null => None,
+            v => Some(
+                v.as_usize().context("`answer` must be a number or null")?
+                    as u8,
+            ),
+        },
+        truth: req_usize(j, "truth")? as u8,
+        branches_started: req_usize(j, "branches_started")?,
+        branches_pruned: req_usize(j, "branches_pruned")?,
+        branches_completed: req_usize(j, "branches_completed")?,
+        tokens_generated: req_usize(j, "tokens_generated")?,
+        response_lengths: j
+            .req("response_lengths")?
+            .as_arr()
+            .context("`response_lengths` must be an array")?
+            .iter()
+            .map(|l| {
+                l.as_usize()
+                    .context("`response_lengths` entries must be numbers")
+            })
+            .collect::<Result<_>>()?,
+        cached_prompt_tokens: req_usize(j, "cached_prompt_tokens")?,
+        redispatches: req_usize(j, "redispatches")?,
+    })
+}
+
+fn question_to_json(q: &Question) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "mapping".into(),
+        Json::Arr(q.mapping.iter().map(|&v| unum(v as usize)).collect()),
+    );
+    m.insert("start".into(), unum(q.start as usize));
+    m.insert("hops".into(), unum(q.hops as usize));
+    Json::Obj(m)
+}
+
+fn question_from_json(j: &Json) -> Result<Question> {
+    let arr = j
+        .req("mapping")?
+        .as_arr()
+        .context("`mapping` must be an array")?;
+    if arr.len() != NUM_KEYS {
+        bail!("`mapping` must have exactly {NUM_KEYS} entries");
+    }
+    let mut mapping = [0u8; NUM_KEYS];
+    for (i, v) in arr.iter().enumerate() {
+        mapping[i] =
+            v.as_usize().context("`mapping` entries must be numbers")? as u8;
+    }
+    Ok(Question {
+        mapping,
+        start: req_usize(j, "start")? as u8,
+        hops: req_usize(j, "hops")? as u8,
+    })
+}
+
+/// A parsed client → server request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    Submit { dataset: String, question: Question, header: Vec<Token> },
+    Shutdown,
+}
+
+/// One `{"op":"submit",...}` line.
+pub fn submit_line(
+    dataset: &str,
+    question: &Question,
+    header: &[Token],
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("submit".into()));
+    m.insert("dataset".into(), Json::Str(dataset.into()));
+    m.insert("question".into(), question_to_json(question));
+    m.insert("header".into(), tokens_json(header));
+    Json::Obj(m).to_string()
+}
+
+/// The `{"op":"shutdown"}` line.
+pub fn shutdown_line() -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("shutdown".into()));
+    Json::Obj(m).to_string()
+}
+
+/// Parse one client request line.
+pub fn parse_client_line(line: &str) -> Result<ClientMsg> {
+    let j = Json::parse(line).context("malformed request line")?;
+    match j.req("op")?.as_str().context("`op` must be a string")? {
+        "submit" => Ok(ClientMsg::Submit {
+            dataset: j
+                .req("dataset")?
+                .as_str()
+                .context("`dataset` must be a string")?
+                .to_string(),
+            question: question_from_json(j.req("question")?)?,
+            header: tokens_from(j.req("header")?, "header")?,
+        }),
+        "shutdown" => Ok(ClientMsg::Shutdown),
+        other => bail!("unknown op `{other}` (submit|shutdown)"),
+    }
+}
+
+/// A parsed server → client event line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// Session admitted to the session table; `request` is the id every
+    /// later event of this session carries.
+    Accepted { request: usize },
+    /// Bounded-queue backpressure: the session table is full, retry
+    /// after the hinted delay.
+    Rejected { retry_after_ms: u64 },
+    /// The listener is shutting down (or the request line was invalid).
+    Refused { error: String },
+    /// Acknowledgement of a `shutdown` op.
+    ShutdownAck,
+    Admitted { request: usize, t: f64 },
+    Tokens { request: usize, branch: usize, tokens: Vec<Token> },
+    Pruned { request: usize, branch: usize, t: f64 },
+    Capped { request: usize, branch: usize, t: f64 },
+    EarlyStop { request: usize, t: f64 },
+    Finalized {
+        request: usize,
+        answer: Option<u8>,
+        votes: usize,
+        t: f64,
+        outcome: Box<RequestOutcome>,
+    },
+}
+
+pub fn accepted_line(request: usize) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("accepted".into()));
+    m.insert("request".into(), unum(request));
+    Json::Obj(m).to_string()
+}
+
+pub fn rejected_line(retry_after_ms: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("rejected".into()));
+    m.insert("retry_after_ms".into(), unum(retry_after_ms as usize));
+    Json::Obj(m).to_string()
+}
+
+pub fn refused_line(error: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("refused".into()));
+    m.insert("error".into(), Json::Str(error.into()));
+    Json::Obj(m).to_string()
+}
+
+pub fn shutdown_ack_line() -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("shutdown_ack".into()));
+    Json::Obj(m).to_string()
+}
+
+/// Serialize one scheduler [`ServeEvent`] as a server event line. A
+/// `Finalized` event carries the full outcome record when the caller
+/// supplies one (the listener always does).
+pub fn event_line(ev: &ServeEvent, outcome: Option<&RequestOutcome>) -> String {
+    let mut m = BTreeMap::new();
+    match ev {
+        ServeEvent::Admitted { request, at } => {
+            m.insert("event".into(), Json::Str("admitted".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("t".into(), num(*at));
+        }
+        ServeEvent::BranchTokens { request, branch, tokens } => {
+            m.insert("event".into(), Json::Str("tokens".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("branch".into(), unum(*branch));
+            m.insert("tokens".into(), tokens_json(tokens));
+        }
+        ServeEvent::BranchPruned { request, branch, at } => {
+            m.insert("event".into(), Json::Str("pruned".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("branch".into(), unum(*branch));
+            m.insert("t".into(), num(*at));
+        }
+        ServeEvent::BranchCapped { request, branch, at } => {
+            m.insert("event".into(), Json::Str("capped".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("branch".into(), unum(*branch));
+            m.insert("t".into(), num(*at));
+        }
+        ServeEvent::EarlyStop { request, at } => {
+            m.insert("event".into(), Json::Str("early_stop".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("t".into(), num(*at));
+        }
+        ServeEvent::Finalized { request, answer, votes, at } => {
+            m.insert("event".into(), Json::Str("finalized".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert(
+                "answer".into(),
+                answer.map_or(Json::Null, |a| unum(a as usize)),
+            );
+            m.insert("votes".into(), unum(*votes));
+            m.insert("t".into(), num(*at));
+            if let Some(o) = outcome {
+                m.insert("outcome".into(), outcome_to_json(o));
+            }
+        }
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Parse one server event line.
+pub fn parse_server_line(line: &str) -> Result<ServerMsg> {
+    let j = Json::parse(line).context("malformed event line")?;
+    let ev = j.req("event")?.as_str().context("`event` must be a string")?;
+    Ok(match ev {
+        "accepted" => ServerMsg::Accepted { request: req_usize(&j, "request")? },
+        "rejected" => ServerMsg::Rejected {
+            retry_after_ms: req_usize(&j, "retry_after_ms")? as u64,
+        },
+        "refused" => ServerMsg::Refused {
+            error: j
+                .req("error")?
+                .as_str()
+                .context("`error` must be a string")?
+                .to_string(),
+        },
+        "shutdown_ack" => ServerMsg::ShutdownAck,
+        "admitted" => ServerMsg::Admitted {
+            request: req_usize(&j, "request")?,
+            t: req_f64(&j, "t")?,
+        },
+        "tokens" => ServerMsg::Tokens {
+            request: req_usize(&j, "request")?,
+            branch: req_usize(&j, "branch")?,
+            tokens: tokens_from(j.req("tokens")?, "tokens")?,
+        },
+        "pruned" => ServerMsg::Pruned {
+            request: req_usize(&j, "request")?,
+            branch: req_usize(&j, "branch")?,
+            t: req_f64(&j, "t")?,
+        },
+        "capped" => ServerMsg::Capped {
+            request: req_usize(&j, "request")?,
+            branch: req_usize(&j, "branch")?,
+            t: req_f64(&j, "t")?,
+        },
+        "early_stop" => ServerMsg::EarlyStop {
+            request: req_usize(&j, "request")?,
+            t: req_f64(&j, "t")?,
+        },
+        "finalized" => ServerMsg::Finalized {
+            request: req_usize(&j, "request")?,
+            answer: match j.req("answer")? {
+                Json::Null => None,
+                v => Some(
+                    v.as_usize()
+                        .context("`answer` must be a number or null")?
+                        as u8,
+                ),
+            },
+            votes: req_usize(&j, "votes")?,
+            t: req_f64(&j, "t")?,
+            outcome: Box::new(outcome_from_json(j.req("outcome")?)?),
+        },
+        other => bail!("unknown event `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::TaskSpec;
+
+    fn outcome() -> RequestOutcome {
+        RequestOutcome {
+            id: 7,
+            dataset: "synth-gaokao".into(),
+            arrival: 0.5,
+            admitted_at: 0.75,
+            prefill_done_at: 1.0,
+            finished_at: 4.25,
+            answer: Some(3),
+            truth: 3,
+            branches_started: 4,
+            branches_pruned: 1,
+            branches_completed: 2,
+            tokens_generated: 120,
+            response_lengths: vec![40, 80],
+            cached_prompt_tokens: 16,
+            redispatches: 0,
+        }
+    }
+
+    #[test]
+    fn outcome_round_trips() {
+        let o = outcome();
+        let line = outcome_to_json(&o).to_string();
+        let back =
+            outcome_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, o);
+        // None answer survives as JSON null.
+        let mut o = outcome();
+        o.answer = None;
+        let back = outcome_from_json(
+            &Json::parse(&outcome_to_json(&o).to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.answer, None);
+    }
+
+    #[test]
+    fn submit_round_trips() {
+        let task = TaskSpec::by_name("synth-gaokao").unwrap();
+        let q = Question::sample(&task, &mut Rng::new(7));
+        let line = submit_line("synth-gaokao", &q, &[5, 6, 7]);
+        match parse_client_line(&line).unwrap() {
+            ClientMsg::Submit { dataset, question, header } => {
+                assert_eq!(dataset, "synth-gaokao");
+                assert_eq!(question, q);
+                assert_eq!(header, vec![5, 6, 7]);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        assert_eq!(
+            parse_client_line(&shutdown_line()).unwrap(),
+            ClientMsg::Shutdown
+        );
+        assert!(parse_client_line("{\"op\":\"wat\"}").is_err());
+        assert!(parse_client_line("not json").is_err());
+    }
+
+    #[test]
+    fn every_event_variant_round_trips() {
+        let cases = vec![
+            ServeEvent::Admitted { request: 3, at: 1.5 },
+            ServeEvent::BranchTokens {
+                request: 3,
+                branch: 2,
+                tokens: vec![10, 11, 2],
+            },
+            ServeEvent::BranchPruned { request: 3, branch: 1, at: 2.0 },
+            ServeEvent::BranchCapped { request: 3, branch: 0, at: 2.5 },
+            ServeEvent::EarlyStop { request: 3, at: 3.0 },
+        ];
+        for ev in &cases {
+            let msg = parse_server_line(&event_line(ev, None)).unwrap();
+            match (ev, &msg) {
+                (
+                    ServeEvent::Admitted { request, at },
+                    ServerMsg::Admitted { request: r, t },
+                ) => {
+                    assert_eq!((r, t), (request, at));
+                }
+                (
+                    ServeEvent::BranchTokens { request, branch, tokens },
+                    ServerMsg::Tokens { request: r, branch: b, tokens: tk },
+                ) => {
+                    assert_eq!((r, b, tk), (request, branch, tokens));
+                }
+                (
+                    ServeEvent::BranchPruned { request, branch, at },
+                    ServerMsg::Pruned { request: r, branch: b, t },
+                ) => {
+                    assert_eq!((r, b, t), (request, branch, at));
+                }
+                (
+                    ServeEvent::BranchCapped { request, branch, at },
+                    ServerMsg::Capped { request: r, branch: b, t },
+                ) => {
+                    assert_eq!((r, b, t), (request, branch, at));
+                }
+                (
+                    ServeEvent::EarlyStop { request, at },
+                    ServerMsg::EarlyStop { request: r, t },
+                ) => {
+                    assert_eq!((r, t), (request, at));
+                }
+                (ev, msg) => panic!("mismatched parse: {ev:?} -> {msg:?}"),
+            }
+        }
+        // Finalized carries the embedded outcome.
+        let o = outcome();
+        let ev = ServeEvent::Finalized {
+            request: 7,
+            answer: Some(3),
+            votes: 2,
+            at: 4.25,
+        };
+        match parse_server_line(&event_line(&ev, Some(&o))).unwrap() {
+            ServerMsg::Finalized { request, answer, votes, t, outcome } => {
+                assert_eq!(request, 7);
+                assert_eq!(answer, Some(3));
+                assert_eq!(votes, 2);
+                assert_eq!(t, 4.25);
+                assert_eq!(*outcome, o);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_lines_round_trip() {
+        assert_eq!(
+            parse_server_line(&accepted_line(9)).unwrap(),
+            ServerMsg::Accepted { request: 9 }
+        );
+        assert_eq!(
+            parse_server_line(&rejected_line(100)).unwrap(),
+            ServerMsg::Rejected { retry_after_ms: 100 }
+        );
+        assert_eq!(
+            parse_server_line(&refused_line("shutting down")).unwrap(),
+            ServerMsg::Refused { error: "shutting down".into() }
+        );
+        assert_eq!(
+            parse_server_line(&shutdown_ack_line()).unwrap(),
+            ServerMsg::ShutdownAck
+        );
+        assert!(parse_server_line("{\"event\":\"wat\"}").is_err());
+    }
+}

@@ -31,6 +31,11 @@
 //!   power-of-two-choices, prefix-affinity), co-simulated in virtual
 //!   time; `--replicas 1` reduces byte-identically to the single-engine
 //!   path.
+//! * [`frontend`] — the wall-clock serving runtime: a newline-delimited
+//!   JSON TCP listener (`sart listen`) plus a trace-replay client
+//!   (`sart replay`), pumping real arrivals through the same stepped
+//!   scheduler core with virtual decode costs paced against the wall
+//!   clock (`--time-scale`).
 //! * [`analysis`] — the order-statistics machinery behind Lemma 1.
 //! * [`util`], [`testkit`] — std-only JSON/npy/RNG/stats substrates and an
 //!   in-repo property-testing helper (the offline registry has no
@@ -42,6 +47,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod frontend;
 pub mod kvcache;
 pub mod metrics;
 pub mod prm;

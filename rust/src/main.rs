@@ -3,17 +3,23 @@
 //! Subcommands:
 //!   serve     run one serving experiment and print the report
 //!   bench     run all methods on one shared workload (comparison table)
+//!   listen    serve live sessions over TCP, paced against the wall clock
+//!   replay    fire a workload trace at a live listener at trace rate
 //!   inspect   print artifact manifest / model inventory
 //!
 //! Examples:
 //!   sart serve --method sart:8 --dataset synth-gpqa --rate 4 --requests 64
 //!   sart serve --engine hlo --model r1mini-tiny --method sart:4 --slots 8
 //!   sart bench --requests 32 --rate 2
+//!   sart listen --addr 127.0.0.1:8477 --method sart:4 --time-scale 0.01
+//!   sart replay --addr 127.0.0.1:8477 --requests 64 --rate 4 \
+//!       --time-scale 0.01 --shutdown
 //!   sart inspect
 
 use anyhow::{bail, Result};
-use sart::config::{Args, Method, ServeSpec};
-use sart::metrics::ServeReport;
+use sart::config::{Args, LiveConfig, Method, ServeSpec};
+use sart::frontend;
+use sart::metrics::{ttft_split_line, ServeReport};
 use sart::server;
 use sart::util::stats::render_table;
 
@@ -34,12 +40,16 @@ fn real_main() -> Result<()> {
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "listen" => cmd_listen(&args),
+        "replay" => cmd_replay(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" => {
             println!("{}", HELP);
             Ok(())
         }
-        other => bail!("unknown command `{other}` (serve|bench|inspect)"),
+        other => bail!(
+            "unknown command `{other}` (serve|bench|listen|replay|inspect)"
+        ),
     }
 }
 
@@ -64,7 +74,15 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --prefix-share F       fraction of requests sharing a few-shot header
   --prefix-templates INT / --prefix-shots INT   header pool shape
   --prefill-chunk TOK    stream prompt prefill in TOK-token chunks (0=off)
-  --prefill-budget TOK   per-round streamed-prefill budget (default=chunk)";
+  --prefill-budget TOK   per-round streamed-prefill budget (default=chunk)
+  live serving (listen/replay):
+  --addr HOST:PORT   listen/connect address (default 127.0.0.1:8477; :0
+                     binds an ephemeral port and prints it)
+  --time-scale F     wall seconds per virtual second (1.0 real time,
+                     0.01 replays 100x faster)
+  --max-sessions N   listen: reject submits past N in-flight sessions
+  --shutdown         replay: send {\"op\":\"shutdown\"} after the trace
+  --json PATH        replay: write the RunOutput record to PATH";
 
 fn print_report(r: &ServeReport) {
     let rows = vec![r.row()];
@@ -119,6 +137,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c.request_skew,
             100.0 * c.cache_hit_rate,
         );
+        println!("{}", ttft_split_line(&out.outcomes));
         let g = &c.gossip;
         if g.gossip_rounds > 0 || g.probe_calls > 0 {
             println!(
@@ -184,6 +203,77 @@ fn cmd_bench(args: &Args) -> Result<()> {
         rows.push(out.report.row());
     }
     println!("{}", render_table(&ServeReport::ROW_HEADERS, &rows));
+    Ok(())
+}
+
+/// `sart listen`: bind a socket and serve live NDJSON sessions against
+/// the wall clock until a client sends `{"op":"shutdown"}`.
+fn cmd_listen(args: &Args) -> Result<()> {
+    let spec = ServeSpec::from_args(args)?;
+    let live = LiveConfig::from_args(args)?;
+    eprintln!("# spec: {spec:?}");
+    let handle = frontend::listen(&spec, &live)?;
+    println!("listening on {}", handle.addr());
+    println!(
+        "time-scale {} (1 virtual second = {} wall seconds), \
+         max-sessions {}",
+        live.time_scale, live.time_scale, live.max_sessions
+    );
+    handle.join()
+}
+
+/// `sart replay`: generate the spec's trace and fire it at a live
+/// listener at trace rate, then print the same report a virtual-time
+/// serve would.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let spec = ServeSpec::from_args(args)?;
+    let live = LiveConfig::from_args(args)?;
+    let trace = server::trace_for(&spec)?;
+    eprintln!("# replaying {} requests at {}", trace.len(), live.addr);
+    let res =
+        frontend::replay(&live.addr, &trace, live.time_scale, args.flag("shutdown"))?;
+    println!(
+        "live: {} finalized, {} rejected, {} lost ({} submitted)",
+        res.outcomes.len(),
+        res.rejected,
+        res.requests_lost,
+        trace.len()
+    );
+    if !res.outcomes.is_empty() {
+        let report =
+            ServeReport::from_outcomes(&spec.method.label(), &res.outcomes);
+        print_report(&report);
+        println!("{}", ttft_split_line(&res.outcomes));
+        let wall_p99 =
+            sart::util::stats::percentile(&res.wall_e2e, 99.0);
+        println!(
+            "wall: ttft p99 {:.3}s | e2e p99 {:.3}s over {} sessions",
+            sart::util::stats::percentile(&res.wall_ttft, 99.0),
+            wall_p99,
+            res.outcomes.len()
+        );
+        if let Some(path) = args.get("json") {
+            let run = server::RunOutput {
+                report,
+                timeline: sart::metrics::Timeline::default(),
+                engine_desc: format!("live({})", live.addr),
+                cluster: None,
+                cache_hit_tokens: res
+                    .outcomes
+                    .iter()
+                    .map(|o| o.cached_prompt_tokens)
+                    .sum(),
+                prompt_tokens: 0,
+                outcomes: res.outcomes,
+            };
+            std::fs::write(path, format!("{}\n", run.to_json()))?;
+            eprintln!("# wrote {path}");
+        }
+    }
+    if res.requests_lost > 0 {
+        bail!("{} requests lost (accepted but never finalized)",
+              res.requests_lost);
+    }
     Ok(())
 }
 

@@ -7,6 +7,7 @@
 //! running-token timelines of Fig. 3.
 
 use crate::coordinator::RequestOutcome;
+use crate::util::json::Json;
 use crate::util::stats::{percentile, Summary};
 
 /// One sample of engine/queue occupancy (taken once per decode round).
@@ -202,6 +203,68 @@ impl ServeReport {
         "method", "reqs", "acc", "e2e-p50", "e2e-p90", "e2e-p97", "e2e-p99",
         "queue-p50", "tok/req",
     ];
+
+    /// JSON form of the aggregate report (the `report` key of a
+    /// `RunOutput` dump — live replays write the same schema so every
+    /// bench/gate tool reads live and virtual runs identically).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("label".into(), Json::Str(self.label.clone()));
+        o.insert("n_requests".into(), Json::Num(self.n_requests as f64));
+        o.insert("accuracy".into(), Json::Num(self.accuracy));
+        o.insert("answered".into(), Json::Num(self.answered));
+        o.insert("e2e".into(), summary_to_json(&self.e2e));
+        o.insert("queue".into(), summary_to_json(&self.queue));
+        o.insert("inference".into(), summary_to_json(&self.inference));
+        o.insert("total_tokens".into(), Json::Num(self.total_tokens as f64));
+        o.insert(
+            "tokens_per_request".into(),
+            Json::Num(self.tokens_per_request),
+        );
+        o.insert(
+            "branches_started_per_request".into(),
+            Json::Num(self.branches_started_per_request),
+        );
+        o.insert(
+            "branches_pruned_per_request".into(),
+            Json::Num(self.branches_pruned_per_request),
+        );
+        Json::Obj(o)
+    }
+}
+
+fn summary_to_json(s: &Summary) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("n".into(), Json::Num(s.n as f64));
+    o.insert("mean".into(), Json::Num(s.mean));
+    o.insert("p50".into(), Json::Num(s.p50));
+    o.insert("p90".into(), Json::Num(s.p90));
+    o.insert("p97".into(), Json::Num(s.p97));
+    o.insert("p99".into(), Json::Num(s.p99));
+    o.insert("max".into(), Json::Num(s.max));
+    Json::Obj(o)
+}
+
+/// One-line TTFT decomposition for serve reports: the mean time to first
+/// token split into its queue-wait and prefill components, plus the tail.
+/// The split is the actionable part — a high-queue TTFT wants more
+/// replicas or admission headroom, a high-prefill TTFT wants chunking or
+/// a warmer prefix cache.
+pub fn ttft_split_line(outcomes: &[RequestOutcome]) -> String {
+    assert!(!outcomes.is_empty(), "empty outcome set");
+    let n = outcomes.len() as f64;
+    let ttft: Vec<f64> = outcomes.iter().map(|o| o.ttft()).collect();
+    let queue: f64 =
+        outcomes.iter().map(|o| o.queue_latency()).sum::<f64>() / n;
+    let prefill: f64 =
+        outcomes.iter().map(|o| o.prefill_latency()).sum::<f64>() / n;
+    format!(
+        "ttft mean {:.3}s = queue {:.3}s + prefill {:.3}s (p99 {:.3}s)",
+        ttft.iter().sum::<f64>() / n,
+        queue,
+        prefill,
+        percentile(&ttft, 99.0),
+    )
 }
 
 #[cfg(test)]
@@ -243,6 +306,49 @@ mod tests {
         assert_eq!(r.response_lengths.len(), 4);
         assert!((r.e2e.mean - 6.5).abs() < 1e-12);
         assert!((r.queue.mean - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_split_line_formats() {
+        // A: queue 1.0 + prefill 0.5 (ttft 1.5); B: queue 2.0 +
+        // prefill 0.5 (ttft 2.5). p99 over [1.5, 2.5] interpolates to
+        // 2.49.
+        let mut a = outcome(0, 0.0, 1.0, 5.0, true);
+        a.prefill_done_at = 1.5;
+        let mut b = outcome(1, 0.0, 2.0, 8.0, false);
+        b.prefill_done_at = 2.5;
+        assert_eq!(
+            ttft_split_line(&[a, b]),
+            "ttft mean 2.000s = queue 1.500s + prefill 0.500s \
+             (p99 2.490s)"
+        );
+    }
+
+    #[test]
+    fn report_to_json_round_trips_headline_numbers() {
+        let outs = vec![
+            outcome(0, 0.0, 1.0, 5.0, true),
+            outcome(1, 0.0, 2.0, 8.0, false),
+        ];
+        let r = ServeReport::from_outcomes("x", &outs);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req("label").unwrap().as_str().unwrap(), "x");
+        assert_eq!(
+            parsed.req("n_requests").unwrap().as_usize().unwrap(),
+            2
+        );
+        let e2e = parsed.req("e2e").unwrap();
+        assert!(
+            (e2e.req("mean").unwrap().as_f64().unwrap() - r.e2e.mean)
+                .abs()
+                < 1e-9
+        );
+        assert!(
+            (parsed.req("accuracy").unwrap().as_f64().unwrap() - 0.5)
+                .abs()
+                < 1e-12
+        );
     }
 
     #[test]

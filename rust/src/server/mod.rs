@@ -40,6 +40,64 @@ pub struct RunOutput {
     pub prompt_tokens: usize,
 }
 
+impl RunOutput {
+    /// The machine-readable record of one run (`sart replay --json`,
+    /// and anything else that wants to persist a run). Virtual and live
+    /// serves write the same schema, so downstream tooling reads both.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        o.insert("report".into(), self.report.to_json());
+        o.insert(
+            "timeline".into(),
+            Json::Arr(
+                self.timeline
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut t = BTreeMap::new();
+                        t.insert("t".into(), Json::Num(p.t));
+                        t.insert(
+                            "running_branches".into(),
+                            Json::Num(p.running_branches as f64),
+                        );
+                        t.insert(
+                            "running_tokens".into(),
+                            Json::Num(p.running_tokens as f64),
+                        );
+                        t.insert(
+                            "kv_pages_used".into(),
+                            Json::Num(p.kv_pages_used as f64),
+                        );
+                        t.insert(
+                            "queued_requests".into(),
+                            Json::Num(p.queued_requests as f64),
+                        );
+                        Json::Obj(t)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "outcomes".into(),
+            Json::Arr(
+                self.outcomes
+                    .iter()
+                    .map(crate::frontend::proto::outcome_to_json)
+                    .collect(),
+            ),
+        );
+        o.insert("engine_desc".into(), Json::Str(self.engine_desc.clone()));
+        o.insert(
+            "cache_hit_tokens".into(),
+            Json::Num(self.cache_hit_tokens as f64),
+        );
+        o.insert("prompt_tokens".into(), Json::Num(self.prompt_tokens as f64));
+        Json::Obj(o)
+    }
+}
+
 /// Generate the workload trace for a spec. A nonzero `--prefix-share`
 /// selects the templated prefix-heavy generator (shared few-shot headers
 /// + per-request questions); at share 0 it degenerates to the plain
@@ -222,9 +280,9 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
 }
 
 /// The scheduler configuration a spec maps to — shared by the
-/// single-engine and cluster paths so `--replicas 1` and `--replicas N`
-/// can never drift apart on a knob.
-fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
+/// single-engine, cluster, and live (`sart listen`) paths so none of
+/// them can drift apart on a knob.
+pub fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
     let policy = spec
         .method
         .policy()

@@ -76,6 +76,48 @@ impl Clock for SimClock {
     }
 }
 
+/// The single time authority of a serve: one enum instead of a trait
+/// object so the scheduler, the cluster dispatcher and the wall-clock
+/// front end all charge cost and idle through the same two methods, and
+/// the virtual/real distinction lives in exactly one place.
+pub enum ClockHandle {
+    Real(RealClock),
+    Sim(SimClock),
+}
+
+impl ClockHandle {
+    pub fn now(&self) -> f64 {
+        match self {
+            ClockHandle::Real(c) => c.now(),
+            ClockHandle::Sim(c) => c.now(),
+        }
+    }
+
+    /// Account engine cost: virtual clocks advance by it, real clocks
+    /// already paid it in wall time.
+    pub fn charge(&self, cost: f64) {
+        if let ClockHandle::Sim(c) = self {
+            c.advance(cost);
+        }
+    }
+
+    /// Idle until absolute time `t`: virtual clocks jump, real clocks
+    /// sleep in short slices so arrivals stay responsive.
+    pub fn idle_until(&self, t: f64) {
+        match self {
+            ClockHandle::Sim(c) => c.advance_to(t),
+            ClockHandle::Real(c) => {
+                let dt = t - c.now();
+                if dt > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        dt.min(0.01),
+                    ));
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +148,22 @@ mod tests {
         let a = c.now();
         let b = c.now();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn clock_handle_charges_virtual_only() {
+        let sim = SimClock::new();
+        let h = ClockHandle::Sim(sim.clone());
+        h.charge(2.0);
+        assert_eq!(h.now(), 2.0);
+        h.idle_until(5.0);
+        assert_eq!(sim.now(), 5.0);
+        h.idle_until(1.0); // never rewinds
+        assert_eq!(h.now(), 5.0);
+
+        let h = ClockHandle::Real(RealClock::new());
+        let before = h.now();
+        h.charge(100.0); // wall time is not advanced by charges
+        assert!(h.now() - before < 1.0);
     }
 }

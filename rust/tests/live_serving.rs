@@ -1,0 +1,186 @@
+//! Integration tests of the wall-clock front end: a loopback
+//! `listen`/`replay` pair over real sockets.
+//!
+//! Time scales here are aggressive (hundreds of times faster than real
+//! time) so a multi-minute virtual trace replays in well under a test
+//! timeout; the assertions are about *protocol* properties — nothing
+//! lost, everything finalized, shutdown refusing new work — not about
+//! wall-clock latency values, which depend on machine load.
+
+use sart::config::{Args, LiveConfig, ServeSpec};
+use sart::frontend::{self, proto};
+use sart::workload::Request;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn spec(extra: &str) -> ServeSpec {
+    let args = Args::parse(
+        format!("--requests 8 --rate 2 {extra}")
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    let mut s = ServeSpec::from_args(&args).unwrap();
+    s.kv_capacity_tokens = 8192;
+    s
+}
+
+fn live(time_scale: f64, max_sessions: usize) -> LiveConfig {
+    LiveConfig {
+        addr: "127.0.0.1:0".into(),
+        time_scale,
+        max_sessions,
+    }
+}
+
+#[test]
+fn loopback_replay_serves_full_trace() {
+    let s = spec("--method sart:4 --requests 64 --rate 8 --seed 7");
+    let trace = sart::server::trace_for(&s).unwrap();
+    assert_eq!(trace.len(), 64);
+    let handle = frontend::listen(&s, &live(0.002, 256)).unwrap();
+    let addr = handle.addr().to_string();
+    let res = frontend::replay(&addr, &trace, 0.002, true).unwrap();
+    handle.join().unwrap();
+
+    assert_eq!(res.requests_lost, 0, "accepted sessions must finalize");
+    assert_eq!(res.rejected, 0, "trace never exceeds the session table");
+    assert_eq!(res.outcomes.len(), 64);
+    assert_eq!(res.wall_ttft.len(), 64);
+    assert_eq!(res.wall_e2e.len(), 64);
+    for (ttft, e2e) in res.wall_ttft.iter().zip(&res.wall_e2e) {
+        assert!(*ttft >= 0.0 && *e2e >= *ttft, "wall times must order");
+    }
+    for o in &res.outcomes {
+        assert!(o.finished_at >= o.admitted_at);
+        assert!(o.branches_started > 0, "served request decoded nothing");
+    }
+    // Every outcome is a distinct session.
+    let mut ids: Vec<usize> = res.outcomes.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 64, "duplicate session ids in outcomes");
+}
+
+#[test]
+fn multi_replica_listener_serves_full_trace() {
+    let s = spec("--method sart:4 --requests 24 --rate 8 --replicas 3");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.002, 256)).unwrap();
+    let addr = handle.addr().to_string();
+    let res = frontend::replay(&addr, &trace, 0.002, true).unwrap();
+    handle.join().unwrap();
+    assert_eq!(res.requests_lost, 0);
+    assert_eq!(res.outcomes.len(), 24);
+}
+
+#[test]
+fn session_table_backpressure_rejects_not_hangs() {
+    // One-session table + a burst of arrivals at t=0: everything past
+    // the first in-flight session must be rejected with a retry hint,
+    // never silently queued or dropped.
+    let s = spec("--method sart:4 --requests 6 --rate 0");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.01, 1)).unwrap();
+    let addr = handle.addr().to_string();
+    let res = frontend::replay(&addr, &trace, 0.01, true).unwrap();
+    handle.join().unwrap();
+    assert_eq!(res.requests_lost, 0);
+    assert!(res.rejected > 0, "burst past a 1-session table must reject");
+    assert_eq!(res.outcomes.len() + res.rejected, 6);
+}
+
+/// Raw-socket client helper: submit one request, read lines lazily.
+struct RawSession {
+    reader: BufReader<TcpStream>,
+}
+
+impl RawSession {
+    fn submit(addr: &str, req: &Request) -> RawSession {
+        let stream = TcpStream::connect(addr).unwrap();
+        {
+            let mut w = &stream;
+            writeln!(
+                w,
+                "{}",
+                proto::submit_line(&req.dataset, &req.question, &req.header)
+            )
+            .unwrap();
+            w.flush().unwrap();
+        }
+        RawSession { reader: BufReader::new(stream) }
+    }
+
+    fn next_msg(&mut self) -> Option<proto::ServerMsg> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line).unwrap_or(0) == 0 {
+            return None;
+        }
+        Some(proto::parse_server_line(line.trim()).unwrap())
+    }
+}
+
+#[test]
+fn graceful_shutdown_drains_inflight_and_refuses_new() {
+    let s = spec("--method sart:4 --requests 6 --rate 0 --seed 3");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.005, 64)).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Open six sessions and wait for each `accepted` line — once read,
+    // the session is in the core's table and shutdown must drain it.
+    let mut sessions: Vec<RawSession> = trace
+        .iter()
+        .map(|r| RawSession::submit(&addr, r))
+        .collect();
+    for sess in &mut sessions {
+        match sess.next_msg().expect("accepted line") {
+            proto::ServerMsg::Accepted { .. } => {}
+            other => panic!("expected accepted, got {other:?}"),
+        }
+    }
+
+    // Shutdown mid-trace. The ack is written only after the shutdown
+    // message is on the control channel, so any submit opened after
+    // reading it orders after the shutdown and must be refused.
+    {
+        let ctl = TcpStream::connect(&addr).unwrap();
+        let mut w = &ctl;
+        writeln!(w, "{}", proto::shutdown_line()).unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        BufReader::new(ctl).read_line(&mut line).unwrap();
+        assert_eq!(
+            proto::parse_server_line(line.trim()).unwrap(),
+            proto::ServerMsg::ShutdownAck
+        );
+    }
+
+    // New sessions are refused with a clean error line.
+    let mut late = RawSession::submit(&addr, &trace[0]);
+    match late.next_msg().expect("refusal line") {
+        proto::ServerMsg::Refused { error } => {
+            assert!(error.contains("shutting down"), "error: {error}");
+        }
+        other => panic!("expected refused, got {other:?}"),
+    }
+    drop(late);
+
+    // Every accepted session still drains to its `finalized` event.
+    for (i, sess) in sessions.iter_mut().enumerate() {
+        let mut finalized = false;
+        while let Some(msg) = sess.next_msg() {
+            if let proto::ServerMsg::Finalized { outcome, .. } = msg {
+                assert!(outcome.finished_at >= outcome.admitted_at);
+                finalized = true;
+                break;
+            }
+        }
+        assert!(finalized, "session {i} never saw finalized");
+        // Server closes the connection after finalized.
+        assert!(sess.next_msg().is_none(), "data after finalized");
+    }
+    drop(sessions);
+
+    handle.join().unwrap();
+}

@@ -2,9 +2,12 @@
 //! the in-repo stand-in for proptest — see DESIGN.md §2).
 
 use sart::cluster::{
-    serve_cluster, ClusterConfig, LbPolicy, REPLICA_SEED_STRIDE,
+    serve_cluster, serve_cluster_with, ClusterConfig, LbPolicy,
+    REPLICA_SEED_STRIDE,
 };
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{
+    ClockHandle, Policy, SchedConfig, Scheduler, ServeEvent,
+};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
 use sart::kvcache::KvCacheManager;
@@ -353,6 +356,136 @@ fn prop_scheduler_audit_matches_fast_path() {
             fast.timeline.points == audited.timeline.points,
             "timeline differs"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_pump_serve_is_byte_identical() {
+    // The wall-clock front end rests on this identity: `serve_with`
+    // (emission on, every event forwarded to a sink as it happens) must
+    // schedule byte-identically to the plain `serve` — same outcomes,
+    // same timeline, same round count, audit on in both — and the event
+    // stream must agree with the outcomes it narrates: exactly one
+    // `Finalized` per request carrying the voted answer at the finish
+    // instant, one `Admitted` at the admission instant, branch token
+    // events summing to `tokens_generated`, pruned events matching
+    // `branches_pruned`.
+    check("event_pump_identity", 10, |rng| {
+        let policy = random_policy(rng);
+        let slots = 2 + rng.below(14);
+        let n_req = 4 + rng.below(12);
+        let rate = 0.5 + 4.0 * rng.f64();
+        let spec = if rng.chance(0.5) {
+            TaskSpec::synth_gaokao()
+        } else {
+            TaskSpec::synth_gpqa()
+        };
+        let seed = rng.next_u64();
+        let t_round = 8 + rng.below(24);
+        // Budget always admits at least one full request (no stalls).
+        let min_pages = 2 + policy.n_branches() * 14 + 4;
+        let kv_tokens = 16 * (min_pages + rng.below(1024));
+        let trace = poisson_trace(&spec, n_req, rate, seed);
+        let mut run = |events: Option<&mut Vec<ServeEvent>>| {
+            let mut engine = SimEngine::new(slots, 256, spec.clone(),
+                                            SimCostModel::default());
+            let mut prm = OraclePrm::new(0.1, seed ^ 7);
+            let cfg = SchedConfig {
+                policy,
+                t_round,
+                temperature: 1.0,
+                max_new: 224,
+                kv_capacity_tokens: kv_tokens,
+                kv_page_tokens: 16,
+                prefix_cache_pages: 0,
+                prefill_chunk_tokens: 0,
+                max_batched_prefill_tokens: 0,
+                seed,
+            };
+            let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
+                                           ClockHandle::Sim(SimClock::new()));
+            sched.set_audit(true);
+            match events {
+                None => sched.serve(&trace),
+                Some(evs) => {
+                    sched.serve_with(&trace, &mut |ev| evs.push(ev))
+                }
+            }
+            .map_err(|e| e.to_string())
+        };
+        let plain = run(None)?;
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let pumped = run(Some(&mut events))?;
+        prop_assert!(plain.outcomes == pumped.outcomes, "outcomes differ");
+        prop_assert!(
+            plain.timeline.points == pumped.timeline.points,
+            "timeline differs"
+        );
+        prop_assert!(plain.rounds == pumped.rounds, "rounds differ");
+        for o in &pumped.outcomes {
+            let mine: Vec<ServeEvent> = events
+                .iter()
+                .filter(|e| e.request() == o.id)
+                .cloned()
+                .collect();
+            let finals: Vec<(Option<u8>, usize, f64)> = mine
+                .iter()
+                .filter_map(|e| match e {
+                    ServeEvent::Finalized { answer, votes, at, .. } => {
+                        Some((*answer, *votes, *at))
+                    }
+                    _ => None,
+                })
+                .collect();
+            prop_assert!(
+                finals.len() == 1,
+                "request {} finalized {} times",
+                o.id,
+                finals.len()
+            );
+            let (answer, votes, at) = finals[0];
+            prop_assert!(answer == o.answer, "finalized answer diverges");
+            prop_assert!(
+                votes == o.response_lengths.len(),
+                "vote count {votes} != {} harvested completions",
+                o.response_lengths.len()
+            );
+            prop_assert!(at == o.finished_at, "finalized instant diverges");
+            let admits: Vec<f64> = mine
+                .iter()
+                .filter_map(|e| match e {
+                    ServeEvent::Admitted { at, .. } => Some(*at),
+                    _ => None,
+                })
+                .collect();
+            prop_assert!(
+                admits == vec![o.admitted_at],
+                "admitted events {admits:?} != [{}]",
+                o.admitted_at
+            );
+            let streamed: usize = mine
+                .iter()
+                .map(|e| match e {
+                    ServeEvent::BranchTokens { tokens, .. } => tokens.len(),
+                    _ => 0,
+                })
+                .sum();
+            prop_assert!(
+                streamed == o.tokens_generated,
+                "streamed {streamed} tokens != {} generated",
+                o.tokens_generated
+            );
+            let pruned = mine
+                .iter()
+                .filter(|e| matches!(e, ServeEvent::BranchPruned { .. }))
+                .count();
+            prop_assert!(
+                pruned == o.branches_pruned,
+                "pruned events {pruned} != {}",
+                o.branches_pruned
+            );
+        }
         Ok(())
     });
 }
@@ -774,6 +907,94 @@ fn prop_cluster_serves_all_under_every_policy() {
             prop_assert!(
                 report.request_skew >= 1.0 - 1e-12,
                 "skew below 1 under {lb:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_event_pump_is_byte_identical() {
+    // `serve_cluster_with` must schedule byte-identically to
+    // `serve_cluster` (audit on in every replica): same merged outcomes,
+    // same per-replica timelines and assignments. Its replica-tagged
+    // event stream must finalize every trace entry exactly once, on the
+    // replica the dispatcher assigned it to.
+    check("cluster_event_pump", 6, |rng| {
+        let c = cluster_case(rng);
+        let replicas = 2;
+        let lb = LbPolicy::ALL[rng.below(LbPolicy::ALL.len())];
+        let ccfg = ClusterConfig {
+            replicas,
+            lb,
+            sched: case_sched_cfg(&c),
+            seed: c.seed,
+            audit: true,
+            gossip_rounds: 0,
+            gossip_adapt: false,
+            fault_plan: Default::default(),
+            scale: None,
+        };
+        let (mut engines, mut prms) = case_stacks(&c, replicas);
+        let plain = serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
+            .map_err(|e| format!("{lb:?}: {e}"))?;
+        let (mut engines, mut prms) = case_stacks(&c, replicas);
+        let mut events: Vec<(usize, ServeEvent)> = Vec::new();
+        let pumped = serve_cluster_with(
+            &ccfg,
+            &mut engines,
+            &mut prms,
+            &c.trace,
+            &mut |replica, ev| events.push((replica, ev)),
+        )
+        .map_err(|e| format!("{lb:?} (pumped): {e}"))?;
+        prop_assert!(
+            plain.outcomes == pumped.outcomes,
+            "outcomes diverge under {lb:?}"
+        );
+        prop_assert!(
+            plain.assignments == pumped.assignments,
+            "assignments diverge under {lb:?}"
+        );
+        for (i, (a, b)) in plain
+            .replica_results
+            .iter()
+            .zip(&pumped.replica_results)
+            .enumerate()
+        {
+            prop_assert!(
+                a.timeline.points == b.timeline.points,
+                "replica {i} timeline diverges under {lb:?}"
+            );
+        }
+        prop_assert!(
+            events.iter().all(|(r, _)| *r < replicas),
+            "replica tag out of range"
+        );
+        for (i, req) in c.trace.iter().enumerate() {
+            let finals: Vec<usize> = events
+                .iter()
+                .filter_map(|(replica, ev)| match ev {
+                    ServeEvent::Finalized { request, .. }
+                        if *request == req.id =>
+                    {
+                        Some(*replica)
+                    }
+                    _ => None,
+                })
+                .collect();
+            prop_assert!(
+                finals.len() == 1,
+                "request {} finalized {} times under {lb:?}",
+                req.id,
+                finals.len()
+            );
+            prop_assert!(
+                finals[0] == pumped.assignments[i],
+                "request {} finalized on replica {} but assigned {}",
+                req.id,
+                finals[0],
+                pumped.assignments[i]
             );
         }
         Ok(())

@@ -46,6 +46,14 @@ Gates (bench name → assertions)
   ``rewarm_hit_rate_recovery >= 0.5`` — the cluster cache-hit rate over
   the last quarter of arrivals (after the replica rejoins and re-warms
   via gossip) reaches at least half the pre-failure rate.
+* ``serving``: ``serving_requests_lost == 0`` — the loopback
+  listen/replay pair must finalize every accepted session (an accepted
+  submit that never streams its ``finalized`` event is a lost request);
+  ``wall_vs_virtual_p99_ratio < 50.0`` — the live serve's p99 wall e2e
+  latency stays within 50x the virtual serve's p99 scaled to wall units
+  (virtual p99 × time-scale): stepping granularity, socket hops and
+  thread scheduling may stretch the tail at an aggressive time scale,
+  not blow it up.
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -216,12 +224,34 @@ def gate_faults(doc: dict, path: str) -> None:
         )
 
 
+def gate_serving(doc: dict, path: str) -> None:
+    lost = _metric(doc, path, "serving_requests_lost")
+    if lost != 0.0:
+        _fail(
+            path,
+            f"serving_requests_lost = {lost:.0f}: the loopback replay must "
+            "be loss-free — every accepted session streams to its "
+            "`finalized` event (did the core drop a session channel, or "
+            "the drain loop return before the table emptied?)",
+        )
+    ratio = _metric(doc, path, "wall_vs_virtual_p99_ratio")
+    if not ratio < 50.0:
+        _fail(
+            path,
+            f"wall_vs_virtual_p99_ratio = {ratio:.3f}: the live serve's "
+            "p99 wall e2e latency must stay within 50x the virtual p99 "
+            "scaled to wall units (is the core loop stalling between "
+            "steps, or the pacing clock drifting past the wall target?)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
     "chunked": gate_chunked,
     "gossip": gate_gossip,
     "faults": gate_faults,
+    "serving": gate_serving,
 }
 
 

@@ -218,6 +218,52 @@ class TestFaultsGate(CheckBenchCase):
         self.assertIn("faults_requests_lost", err)
 
 
+def serving_metrics(**overrides):
+    metrics = {
+        "serving_requests_lost": 0.0,
+        "wall_vs_virtual_p99_ratio": 3.0,
+    }
+    metrics.update(overrides)
+    return metrics
+
+
+class TestServingGate(CheckBenchCase):
+    def test_serving_gate_passes_on_good_report(self):
+        doc = report(bench="serving", metrics=serving_metrics())
+        path = self.write("BENCH_serving.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `serving`: PASS", out)
+
+    def test_serving_gate_fails_on_any_lost_request(self):
+        doc = report(
+            bench="serving",
+            metrics=serving_metrics(serving_requests_lost=1.0),
+        )
+        path = self.write("BENCH_serving.json", doc)
+        code, out, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gate `serving`: FAIL", out)
+        self.assertIn("serving_requests_lost", err)
+
+    def test_serving_gate_fails_at_ratio_ceiling(self):
+        doc = report(
+            bench="serving",
+            metrics=serving_metrics(wall_vs_virtual_p99_ratio=50.0),
+        )
+        path = self.write("BENCH_serving.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("wall_vs_virtual_p99_ratio", err)
+
+    def test_serving_gate_fails_on_missing_metric(self):
+        doc = report(bench="serving", metrics={})
+        path = self.write("BENCH_serving.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("serving_requests_lost", err)
+
+
 class TestRequire(CheckBenchCase):
     def test_require_fails_on_missing_bench(self):
         path = self.write("BENCH_scheduler.json", report())
