@@ -1,0 +1,137 @@
+//! Bench: what does a replica failure cost on the *wall-clock* path?
+//!
+//! Replays one trace through a loopback `sart listen` + `sart replay`
+//! pair twice — fault-free, and with replica 1 killed a third of the way
+//! into the arrivals and restarted at the two-thirds mark — with the
+//! client's resilience layer armed (`--retry-max 3`). Records, in
+//! `BENCH_live_faults.json` (schema in EXPERIMENTS.md §Benches):
+//!
+//! 1. **Is the live failure loss-free?** `live_faults_requests_lost`
+//!    must be exactly 0 (`tools/check_bench.py` gates it): every session
+//!    on the dead replica is re-dispatched to a survivor *without its
+//!    socket closing* and streams to its single `finalized` line.
+//! 2. **Did the fault actually bite?** `live_faults_migrated_sessions`
+//!    (sessions that saw a `migrated` event) is gated >= 1 — a plan that
+//!    fires into an idle replica would make the loss-free gate vacuous.
+//! 3. **What does the detour cost in wall time?**
+//!    `live_faulted_vs_clean_p99_ratio` = faulted p99 wall e2e over the
+//!    clean run's, gated < 10: survivors absorb the dead replica's load
+//!    and re-prefill its lost KV state, stretching but not exploding
+//!    the tail.
+//! 4. **Client-side tallies** ride along: `live_faults_retries` and
+//!    `live_faults_rejected` size how much the resilience layer worked.
+//!
+//!     cargo bench --bench live_faults
+
+use sart::config::{Args, LiveConfig, ReplayConfig, ServeSpec};
+use sart::frontend;
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::stats::percentile;
+use std::time::Instant;
+
+const N_REQUESTS: usize = 60;
+const RATE: f64 = 6.0;
+const REPLICAS: usize = 3;
+const TIME_SCALE: f64 = 0.01;
+
+fn spec(fault_plan: &str) -> ServeSpec {
+    let plan = if fault_plan.is_empty() {
+        String::new()
+    } else {
+        format!("--fault-plan {fault_plan}")
+    };
+    let args = Args::parse(
+        format!(
+            "--method sart:4 --requests {N_REQUESTS} --rate {RATE} \
+             --replicas {REPLICAS} --kv-tokens 8192 --seed 42 {plan}"
+        )
+        .split_whitespace()
+        .map(String::from),
+    )
+    .expect("bench args");
+    ServeSpec::from_args(&args).expect("bench spec")
+}
+
+fn run_live(spec: &ServeSpec) -> (frontend::ReplayResult, f64) {
+    let trace = sart::server::trace_for(spec).expect("bench trace");
+    let live = LiveConfig {
+        addr: "127.0.0.1:0".into(),
+        time_scale: TIME_SCALE,
+        max_sessions: 256,
+    };
+    let cfg = ReplayConfig {
+        retry_max: 3,
+        retry_base_ms: 25,
+        session_deadline_s: 0.0,
+        seed: 42,
+    };
+    let handle = frontend::listen(spec, &live).expect("loopback listener");
+    let addr = handle.addr().to_string();
+    let t0 = Instant::now();
+    let res = frontend::replay_with(&addr, &trace, TIME_SCALE, true, &cfg)
+        .expect("loopback replay");
+    let wall_s = t0.elapsed().as_secs_f64();
+    handle.join().expect("listener drain");
+    (res, wall_s)
+}
+
+fn main() {
+    println!(
+        "== live_faults ({N_REQUESTS} requests, {REPLICAS} replicas, \
+         loopback NDJSON, time-scale {TIME_SCALE}) =="
+    );
+    let mut report = BenchReport::new("live_faults");
+
+    // Fault times derived from the trace, exactly like the virtual-time
+    // fault bench: kill replica 1 a third of the way into the arrivals,
+    // restart it at the two-thirds mark.
+    let trace = sart::server::trace_for(&spec("")).expect("bench trace");
+    let t_fail = trace[N_REQUESTS / 3].arrival;
+    let t_restart = trace[2 * N_REQUESTS / 3].arrival;
+    let plan = format!("fail@{t_fail}:1,restart@{t_restart}:1");
+
+    let (clean, clean_wall_s) = run_live(&spec(""));
+    let (faulted, faulted_wall_s) = run_live(&spec(&plan));
+
+    let lost = faulted.requests_lost as f64;
+    let migrated = faulted.migrated_sessions as f64;
+    let p99_clean = percentile(&clean.wall_e2e, 99.0);
+    let p99_faulted = percentile(&faulted.wall_e2e, 99.0);
+    let ratio = p99_faulted / p99_clean.max(1e-12);
+    println!(
+        "clean: {}/{} finalized in {clean_wall_s:.2}s wall",
+        clean.outcomes.len(),
+        trace.len(),
+    );
+    println!(
+        "faulted (fail@{t_fail:.2}, restart@{t_restart:.2}): {}/{} \
+         finalized, {migrated:.0} migrated, {} retries, {lost:.0} lost \
+         in {faulted_wall_s:.2}s wall",
+        faulted.outcomes.len(),
+        trace.len(),
+        faulted.retries,
+    );
+    println!(
+        "p99 wall e2e: clean {p99_clean:.3}s vs faulted {p99_faulted:.3}s \
+         (ratio {ratio:.2}, gate < 10)"
+    );
+
+    report.metric("live_faults_requests_lost", lost);
+    report.metric("live_faults_migrated_sessions", migrated);
+    report.metric("live_faults_retries", faulted.retries as f64);
+    report.metric("live_faults_rejected", faulted.rejected as f64);
+    report.metric("wall_e2e_p99_clean_s", p99_clean);
+    report.metric("wall_e2e_p99_faulted_s", p99_faulted);
+    report.metric("live_faulted_vs_clean_p99_ratio", ratio);
+
+    // Wall cost of the faulted loopback replay (one sample — re-running
+    // would re-pay the whole scaled trace).
+    report.push(bench::run_timed(
+        &format!("faulted loopback replay {N_REQUESTS} reqs"),
+        0,
+        1,
+        || faulted_wall_s * 1e6,
+    ));
+
+    report.write().expect("writing BENCH_live_faults.json");
+}

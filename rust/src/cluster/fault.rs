@@ -111,6 +111,29 @@ pub struct ScaleConfig {
 }
 
 impl ScaleConfig {
+    /// Scale-up decision from the controller's inputs: Σ
+    /// requests-in-system and Σ pending prefill tokens over the `live`
+    /// currently-live replicas. Pure so the virtual-time dispatcher and
+    /// the wall-clock listener share one threshold definition.
+    pub fn wants_scale_up(
+        &self,
+        queued: usize,
+        prefill_backlog: usize,
+        live: usize,
+    ) -> bool {
+        queued > self.scale_up_queue * live
+            || (self.scale_up_prefill_tokens > 0
+                && prefill_backlog > self.scale_up_prefill_tokens)
+    }
+
+    /// Scale-down decision (the other edge of the hysteresis band);
+    /// `false` whenever scale-down is disabled or the floor is reached.
+    pub fn wants_scale_down(&self, queued: usize, live: usize) -> bool {
+        self.scale_down_queue > 0
+            && live > self.min_live
+            && queued < self.scale_down_queue * live
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.min_live == 0 {
             bail!("scale controller needs min_live >= 1");
@@ -197,6 +220,37 @@ mod tests {
             .unwrap();
         let reps: Vec<usize> = p.events.iter().map(|e| e.replica).collect();
         assert_eq!(reps, vec![0, 2, 0]);
+    }
+
+    #[test]
+    fn scale_thresholds_are_a_hysteresis_band() {
+        let sc = ScaleConfig {
+            min_live: 1,
+            scale_up_queue: 4,
+            scale_up_prefill_tokens: 100,
+            scale_down_queue: 2,
+            cooldown_arrivals: 0,
+        };
+        // Queue trigger: strictly above up-threshold × live.
+        assert!(!sc.wants_scale_up(8, 0, 2));
+        assert!(sc.wants_scale_up(9, 0, 2));
+        // Prefill-backlog trigger is independent of queue depth.
+        assert!(sc.wants_scale_up(0, 101, 2));
+        assert!(!sc.wants_scale_up(0, 100, 2));
+        // Scale-down: strictly below down-threshold × live, floored.
+        assert!(sc.wants_scale_down(3, 2));
+        assert!(!sc.wants_scale_down(4, 2));
+        assert!(!sc.wants_scale_down(0, 1), "min_live floor must hold");
+        let off = ScaleConfig { scale_down_queue: 0, ..sc };
+        assert!(!off.wants_scale_down(0, 2), "0 disables scale-down");
+        // No overlap: a state that wants up never simultaneously wants
+        // down (the hysteresis band validate() enforces).
+        for q in 0..32 {
+            assert!(
+                !(sc.wants_scale_up(q, 0, 2) && sc.wants_scale_down(q, 2)),
+                "flapping at queued={q}"
+            );
+        }
     }
 
     #[test]

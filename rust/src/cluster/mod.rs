@@ -462,8 +462,10 @@ fn catch_up(s: &mut Scheduler, t: f64) -> Result<usize> {
 }
 
 /// Where a replica is in its lifecycle, from the dispatcher's seat.
+/// Shared with the wall-clock front end, whose live fault/scale path
+/// tracks replicas through the same lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ReplicaState {
+pub enum ReplicaState {
     /// Routed to and stepped.
     Live,
     /// Draining (scale-down): no new requests, but still stepped until
@@ -836,10 +838,7 @@ impl<'e> Fleet<'e> {
             .iter()
             .map(|&i| self.scheds[i].load().pending_prefill_tokens)
             .sum();
-        let up = queued > sc.scale_up_queue * n
-            || (sc.scale_up_prefill_tokens > 0
-                && backlog > sc.scale_up_prefill_tokens);
-        if up {
+        if sc.wants_scale_up(queued, backlog, n) {
             // Draining replicas re-activate first: their caches are
             // still warm. Cold standbys join at the current instant.
             let target = (0..self.state.len())
@@ -859,10 +858,7 @@ impl<'e> Fleet<'e> {
             }
             return;
         }
-        if sc.scale_down_queue > 0
-            && n > sc.min_live
-            && queued < sc.scale_down_queue * n
-        {
+        if sc.wants_scale_down(queued, n) {
             let backlogs: Vec<usize> = self
                 .scheds
                 .iter()
@@ -886,7 +882,7 @@ impl<'e> Fleet<'e> {
 /// the requests that are most expensive to finish — their headers are
 /// half-streamed and cannot move — so the controller prefers the
 /// replica that can empty fastest.
-fn pick_drain_candidate(
+pub fn pick_drain_candidate(
     state: &[ReplicaState],
     prefill_backlog: &[usize],
 ) -> Option<usize> {

@@ -436,6 +436,106 @@ impl LiveConfig {
     }
 }
 
+/// Listener-side robustness knobs, split from [`LiveConfig`] so the
+/// historical three-field config keeps its exact shape (everything here
+/// has a safe default and most callers never touch it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ListenerTuning {
+    /// Reap a connection with no in-flight session after this many wall
+    /// seconds without a complete request line (`--idle-timeout`) — the
+    /// slow-loris defence. Connections with live sessions are never
+    /// reaped; their events keep flowing.
+    pub idle_timeout_s: f64,
+    /// Per-session bound on queued-but-unwritten event lines
+    /// (`--session-queue`). A reader too slow to drain its socket sheds
+    /// non-terminal `tokens` lines past this depth (counted on the
+    /// `finalized` line); `accepted`/`admitted`/`migrated`/`finalized`
+    /// are never shed. 0 sheds every `tokens` line — a deliberate
+    /// headers-only mode (and the deterministic way to test shedding).
+    pub session_queue: usize,
+}
+
+impl Default for ListenerTuning {
+    fn default() -> Self {
+        ListenerTuning { idle_timeout_s: 30.0, session_queue: 256 }
+    }
+}
+
+impl ListenerTuning {
+    pub fn from_args(args: &Args) -> Result<ListenerTuning> {
+        let d = ListenerTuning::default();
+        let idle_timeout_s = args.f64_or("idle-timeout", d.idle_timeout_s)?;
+        if !(idle_timeout_s.is_finite() && idle_timeout_s > 0.0) {
+            bail!(
+                "--idle-timeout must be a positive number of seconds, \
+                 got {idle_timeout_s}"
+            );
+        }
+        Ok(ListenerTuning {
+            idle_timeout_s,
+            session_queue: args.usize_or("session-queue", d.session_queue)?,
+        })
+    }
+}
+
+/// Client-side resilience knobs of `sart replay`. The default
+/// (`retry_max = 0`, no deadline) reproduces the original single-shot
+/// client: one connection per session, first hiccup loses it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplayConfig {
+    /// Retry budget per session (`--retry-max`): reconnect-and-resubmit
+    /// attempts after a rejection, connection loss, or transport error.
+    /// 0 disables retries *and* client ids (exact legacy wire format).
+    pub retry_max: usize,
+    /// Base backoff in wall milliseconds (`--retry-base-ms`). Attempt k
+    /// sleeps `base * 2^k`, jittered to 50–100% by the session's seeded
+    /// RNG; a server `retry_after_ms` hint replaces the base for that
+    /// attempt.
+    pub retry_base_ms: u64,
+    /// Per-session wall-clock deadline in seconds (`--session-deadline`);
+    /// a session that has not finalized by then counts as expired
+    /// (and lost). 0 = no deadline.
+    pub session_deadline_s: f64,
+    /// Seed for the backoff jitter (`--seed`, shared with the trace):
+    /// the whole retry schedule is deterministic under a fixed seed.
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            retry_max: 0,
+            retry_base_ms: 25,
+            session_deadline_s: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ReplayConfig {
+    pub fn from_args(args: &Args) -> Result<ReplayConfig> {
+        let d = ReplayConfig::default();
+        let retry_base_ms = args.u64_or("retry-base-ms", d.retry_base_ms)?;
+        if retry_base_ms == 0 {
+            bail!("--retry-base-ms must be at least 1");
+        }
+        let session_deadline_s =
+            args.f64_or("session-deadline", d.session_deadline_s)?;
+        if !(session_deadline_s.is_finite() && session_deadline_s >= 0.0) {
+            bail!(
+                "--session-deadline must be a non-negative number of \
+                 seconds (0 = none), got {session_deadline_s}"
+            );
+        }
+        Ok(ReplayConfig {
+            retry_max: args.usize_or("retry-max", d.retry_max)?,
+            retry_base_ms,
+            session_deadline_s,
+            seed: args.u64_or("seed", 0)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -651,6 +751,47 @@ mod tests {
         let a = args("--shutdown --addr 127.0.0.1:9");
         assert!(a.flag("shutdown"));
         assert_eq!(a.get("addr"), Some("127.0.0.1:9"));
+    }
+
+    #[test]
+    fn listener_tuning_flags() {
+        let t = ListenerTuning::from_args(&args("")).unwrap();
+        assert_eq!(t, ListenerTuning::default());
+        assert_eq!(t.idle_timeout_s, 30.0);
+        assert_eq!(t.session_queue, 256);
+        let t = ListenerTuning::from_args(&args(
+            "--idle-timeout 0.5 --session-queue 0",
+        ))
+        .unwrap();
+        assert_eq!(t.idle_timeout_s, 0.5);
+        assert_eq!(t.session_queue, 0, "0 = shed every tokens line");
+        assert!(ListenerTuning::from_args(&args("--idle-timeout 0")).is_err());
+        assert!(ListenerTuning::from_args(&args("--idle-timeout -2")).is_err());
+        assert!(
+            ListenerTuning::from_args(&args("--idle-timeout inf")).is_err()
+        );
+    }
+
+    #[test]
+    fn replay_config_flags() {
+        let c = ReplayConfig::from_args(&args("")).unwrap();
+        assert_eq!(c, ReplayConfig::default());
+        assert_eq!(c.retry_max, 0, "retries must default off (legacy wire)");
+        assert_eq!(c.retry_base_ms, 25);
+        assert_eq!(c.session_deadline_s, 0.0);
+        let c = ReplayConfig::from_args(&args(
+            "--retry-max 3 --retry-base-ms 10 --session-deadline 2.5 \
+             --seed 41",
+        ))
+        .unwrap();
+        assert_eq!(c.retry_max, 3);
+        assert_eq!(c.retry_base_ms, 10);
+        assert_eq!(c.session_deadline_s, 2.5);
+        assert_eq!(c.seed, 41, "jitter seed rides on --seed");
+        assert!(ReplayConfig::from_args(&args("--retry-base-ms 0")).is_err());
+        assert!(
+            ReplayConfig::from_args(&args("--session-deadline -1")).is_err()
+        );
     }
 
     #[test]

@@ -361,6 +361,18 @@ impl<'e> Scheduler<'e> {
         std::mem::take(&mut self.events)
     }
 
+    /// Drop any recorded-but-undrained events. [`fail_and_drain`]
+    /// deliberately leaves the buffer alone (its branch terminations are
+    /// event-silent, but events from steps before the failure may still
+    /// be sitting there); a live front end that has already forwarded
+    /// them calls this so a dead incarnation's leftovers never leak into
+    /// the restarted one's stream.
+    ///
+    /// [`fail_and_drain`]: Scheduler::fail_and_drain
+    pub fn discard_events(&mut self) {
+        self.events.clear();
+    }
+
     /// Serve a full trace to completion; requests must be sorted by
     /// arrival time. Equivalent to dispatching every request up front and
     /// stepping until idle.

@@ -13,17 +13,45 @@
 //! moment its scheduler records them, so clients see tokens, prunes and
 //! early stops live rather than a report after the fact.
 //!
+//! Robustness is the same story the virtual-time cluster path tells,
+//! replayed against real sockets:
+//!
+//! - **Fault plans on the wall clock.** The spec's `--fault-plan` and
+//!   `--scale-*` knobs arm here too: event times are virtual and map
+//!   through `--time-scale` onto the wall clock. When a replica fails,
+//!   its in-flight sessions re-dispatch to survivors *without closing
+//!   their sockets* — the client sees a `migrated` line (with a
+//!   cumulative hop count) and exactly one terminal `finalized`. With no
+//!   survivor the work parks until a restart or scale-up re-homes it.
+//! - **Connection robustness.** Request lines are read under a bound
+//!   (64 KiB) with a poll-based deadline; connections idle past
+//!   `--idle-timeout` with no in-flight session are reaped. A malformed
+//!   line is answered with a structured `error` line — never by killing
+//!   the connection. One connection may pipeline many submits,
+//!   multiplexed by request id / client id. Each session's outgoing
+//!   queue is bounded (`--session-queue`): a reader too slow to drain
+//!   its socket sheds `tokens` lines (counted on `finalized`);
+//!   `accepted`/`admitted`/`migrated`/`finalized` are never shed.
+//! - **Idempotent resubmits.** A submit may carry a client-assigned
+//!   `client_id`. If that id's session is still in flight on a dead
+//!   connection, the new connection adopts it mid-stream; if it already
+//!   finalized, the retained `finalized` line replays. That makes the
+//!   client's reconnect-and-resubmit loop safe against double execution.
+//! - **Client resilience.** [`replay_with`] grows per-session deadlines,
+//!   seeded jittered exponential backoff honouring the server's
+//!   `retry_after_ms`, and reconnect-and-resubmit on connection loss.
+//!
 //! Threading: the scheduler stack is deliberately not `Send`-friendly
 //! (it mutably borrows its engine), so ONE core thread owns every
 //! engine/PRM/scheduler and runs the pump; the accept loop and the
-//! per-connection handlers only talk to it through an mpsc control
-//! channel, and each session gets a private response channel whose
-//! hangup closes the connection. Backpressure is a bounded session
-//! table: past `--max-sessions` in-flight sessions, submits are rejected
-//! with a `retry_after_ms` hint instead of queueing without bound.
-//! Shutdown (`{"op":"shutdown"}` or [`ListenerHandle::shutdown`]) stops
-//! admitting, drains every in-flight session to its `finalized` event,
-//! then exits.
+//! per-connection reader/writer pairs only talk to it through an mpsc
+//! control channel and per-connection outgoing queues. Backpressure is a
+//! bounded session table: past `--max-sessions` in-flight sessions,
+//! submits are rejected with a load-derived `retry_after_ms` hint and
+//! `queue_position` instead of queueing without bound. Shutdown
+//! (`{"op":"shutdown"}`, [`ListenerHandle::shutdown`], or SIGTERM via
+//! [`ListenerHandle::shutdown_handle`]) stops admitting, drains every
+//! in-flight session to its `finalized` event, then exits.
 //!
 //! Multi-replica specs (`--replicas R`) run R independent scheduler
 //! stacks off one shared wall clock, routed least-in-system at submit
@@ -31,35 +59,136 @@
 
 pub mod proto;
 
-use crate::cluster::REPLICA_SEED_STRIDE;
-use crate::config::{EngineChoice, LiveConfig, Method, ServeSpec};
+use crate::cluster::{
+    pick_drain_candidate, FaultKind, ReplicaState, REPLICA_SEED_STRIDE,
+};
+use crate::config::{
+    EngineChoice, ListenerTuning, LiveConfig, Method, ReplayConfig, ServeSpec,
+};
 use crate::coordinator::{
-    ClockHandle, RequestOutcome, Scheduler, ServeEvent, StepOutcome,
+    ClockHandle, DrainItem, RequestOutcome, Scheduler, ServeEvent, StepOutcome,
 };
 use crate::engine::Engine;
 use crate::prm::PrmScorer;
 use crate::server::{build_engine, build_prm, sched_cfg_for};
 use crate::tokenizer::Token;
 use crate::util::clock::SimClock;
+use crate::util::rng::Rng;
 use crate::workload::{Question, Request};
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-/// Control messages from connection handlers to the core thread.
+/// Longest request line the reader will buffer. Anything longer is
+/// discarded in constant memory (the reader skips to the next newline)
+/// and answered with an `error` line.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Reader poll interval: how often a blocked read wakes to check the
+/// idle clock and the connection's closed flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Finalized lines retained per client id for resubmit-after-completion
+/// dedup, FIFO-evicted past this many distinct ids.
+const FINISHED_RETENTION: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Connection plumbing
+// ---------------------------------------------------------------------------
+
+/// One queued outgoing line. `pending` is the owning session's
+/// queued-line counter for sheddable lines (decremented by the writer
+/// once the line hits the socket); terminal/critical lines carry `None`
+/// and are never shed.
+struct QItem {
+    line: String,
+    pending: Option<Arc<AtomicUsize>>,
+}
+
+/// State shared between a connection's reader thread, its writer thread,
+/// and the core. The writer is the *only* thread that touches the socket
+/// write half; everyone else enqueues lines through [`ConnShared::push`].
+struct ConnShared {
+    q: Mutex<VecDeque<QItem>>,
+    cv: Condvar,
+    /// No new pushes accepted; the writer drains what is queued, then
+    /// shuts the socket down. Set by the writer on write failure or
+    /// exit, and by the reader on client EOF.
+    closed: AtomicBool,
+    /// The reader has stopped (EOF, error, idle reap, or panic): no
+    /// further submits can arrive on this connection.
+    reader_done: AtomicBool,
+    /// At least one submit was ever parsed — distinguishes "drained all
+    /// sessions, close" from "nothing submitted yet, keep waiting".
+    submitted: AtomicBool,
+    /// Sessions currently attached to this connection (admitted or
+    /// awaiting a terminal reply). The writer only closes a quiet
+    /// connection once this reaches zero.
+    active: AtomicUsize,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            reader_done: AtomicBool::new(false),
+            submitted: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        }
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Queue a line for the writer. Returns false — dropping the line —
+    /// if the connection is already closed.
+    fn push(&self, line: String, pending: Option<&Arc<AtomicUsize>>) -> bool {
+        if self.is_closed() {
+            return false;
+        }
+        if let Some(p) = pending {
+            p.fetch_add(1, Ordering::SeqCst);
+        }
+        let mut q = self.q.lock().unwrap();
+        q.push_back(QItem { line, pending: pending.map(Arc::clone) });
+        drop(q);
+        self.cv.notify_all();
+        true
+    }
+
+    /// One session attached to this connection reached a terminal reply
+    /// (finalized / rejected / refused / error / dedup replay). Always
+    /// called *after* that reply was pushed, so the writer cannot
+    /// observe `active == 0` with the terminal line still unqueued.
+    fn release_session(&self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// Control messages from connection readers to the core thread.
 enum Ctl {
     Submit {
         dataset: String,
         question: Question,
         header: Vec<Token>,
-        /// The session's private event stream; dropping it closes the
-        /// connection.
-        resp: mpsc::Sender<String>,
+        /// Client-assigned idempotency key (reconnect-and-resubmit).
+        client_id: Option<String>,
+        /// The connection this session's events stream to.
+        conn: Arc<ConnShared>,
     },
     Shutdown,
 }
@@ -69,6 +198,7 @@ pub struct ListenerHandle {
     addr: SocketAddr,
     ctl: mpsc::Sender<Ctl>,
     done: Arc<AtomicBool>,
+    aborted: Arc<AtomicUsize>,
     core: Option<JoinHandle<Result<()>>>,
     accept: Option<JoinHandle<()>>,
 }
@@ -84,6 +214,20 @@ impl ListenerHandle {
     /// in flight. Equivalent to a client sending `{"op":"shutdown"}`.
     pub fn shutdown(&self) {
         let _ = self.ctl.send(Ctl::Shutdown);
+    }
+
+    /// A cloneable, `Send` handle that can trigger the same graceful
+    /// shutdown from another thread — the SIGTERM watcher's hook.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { ctl: self.ctl.clone() }
+    }
+
+    /// Sessions whose connection died before their terminal event could
+    /// be delivered and that carried no `client_id` to reconnect with:
+    /// their table slots were reclaimed and their work dropped.
+    /// (Client-id sessions detach instead and wait for a resubmit.)
+    pub fn session_aborted(&self) -> usize {
+        self.aborted.load(Ordering::SeqCst)
     }
 
     /// Wait for the listener to finish draining and tear down. Blocks
@@ -103,10 +247,32 @@ impl ListenerHandle {
     }
 }
 
-/// Bind `live.addr` and serve `spec` against the wall clock. Returns as
-/// soon as the socket is listening; the serve itself runs on background
-/// threads until [`ListenerHandle::join`] observes shutdown.
+/// See [`ListenerHandle::shutdown_handle`].
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    ctl: mpsc::Sender<Ctl>,
+}
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+    }
+}
+
+/// Bind `live.addr` and serve `spec` against the wall clock with default
+/// [`ListenerTuning`]. Returns as soon as the socket is listening; the
+/// serve itself runs on background threads until
+/// [`ListenerHandle::join`] observes shutdown.
 pub fn listen(spec: &ServeSpec, live: &LiveConfig) -> Result<ListenerHandle> {
+    listen_with(spec, live, &ListenerTuning::default())
+}
+
+/// [`listen`] with explicit robustness knobs.
+pub fn listen_with(
+    spec: &ServeSpec,
+    live: &LiveConfig,
+    tuning: &ListenerTuning,
+) -> Result<ListenerHandle> {
     if !matches!(spec.engine, EngineChoice::Sim) {
         bail!(
             "sart listen requires --engine sim (decode costs are virtual \
@@ -125,13 +291,16 @@ pub fn listen(spec: &ServeSpec, live: &LiveConfig) -> Result<ListenerHandle> {
     listener.set_nonblocking(true)?;
     let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
     let done = Arc::new(AtomicBool::new(false));
+    let aborted = Arc::new(AtomicUsize::new(0));
 
     let core = {
         let spec = spec.clone();
         let live = live.clone();
+        let tuning = *tuning;
         let done = done.clone();
+        let aborted = aborted.clone();
         thread::Builder::new().name("sart-core".into()).spawn(move || {
-            let res = core_loop(&spec, &live, ctl_rx);
+            let res = core_loop(&spec, &live, &tuning, ctl_rx, aborted);
             done.store(true, Ordering::SeqCst);
             res
         })?
@@ -139,14 +308,16 @@ pub fn listen(spec: &ServeSpec, live: &LiveConfig) -> Result<ListenerHandle> {
     let accept = {
         let ctl = ctl_tx.clone();
         let done = done.clone();
+        let tuning = *tuning;
         thread::Builder::new()
             .name("sart-accept".into())
-            .spawn(move || accept_loop(listener, ctl, done))?
+            .spawn(move || accept_loop(listener, ctl, done, tuning))?
     };
     Ok(ListenerHandle {
         addr,
         ctl: ctl_tx,
         done,
+        aborted,
         core: Some(core),
         accept: Some(accept),
     })
@@ -156,6 +327,7 @@ fn accept_loop(
     listener: TcpListener,
     ctl: mpsc::Sender<Ctl>,
     done: Arc<AtomicBool>,
+    tuning: ListenerTuning,
 ) {
     loop {
         if done.load(Ordering::SeqCst) {
@@ -166,9 +338,9 @@ fn accept_loop(
                 let ctl = ctl.clone();
                 let _ = thread::Builder::new()
                     .name("sart-conn".into())
-                    .spawn(move || handle_conn(stream, ctl));
+                    .spawn(move || handle_conn(stream, ctl, tuning));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(2));
             }
             Err(_) => return,
@@ -176,19 +348,215 @@ fn accept_loop(
     }
 }
 
-/// One connection = one request line, then stream whatever the core
-/// sends for this session until it drops the channel.
-fn handle_conn(stream: TcpStream, ctl: mpsc::Sender<Ctl>) {
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Closes the connection's shared state (and sends FIN) even if the
+/// writer thread panics, so the core's next push fails fast and the
+/// session-table slot is reclaimed rather than orphaned.
+struct WriterGuard<'a> {
+    sh: &'a ConnShared,
+    stream: &'a TcpStream,
+}
+
+impl Drop for WriterGuard<'_> {
+    fn drop(&mut self) {
+        self.sh.close();
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Marks the reader as gone even if it panics: the writer then exits
+/// once every attached session has been answered, instead of waiting on
+/// submits that can never arrive.
+struct ReaderGuard<'a>(&'a ConnShared);
+
+impl Drop for ReaderGuard<'_> {
+    fn drop(&mut self) {
+        self.0.reader_done.store(true, Ordering::SeqCst);
+        self.0.cv.notify_all();
+    }
+}
+
+/// One connection: a reader thread (this one) parsing pipelined request
+/// lines, and a writer thread multiplexing every attached session's
+/// event lines back. The connection closes once the client is done
+/// (all submitted sessions answered, or EOF with none in flight).
+fn handle_conn(
+    stream: TcpStream,
+    ctl: mpsc::Sender<Ctl>,
+    tuning: ListenerTuning,
+) {
+    let sh = Arc::new(ConnShared::new());
     let Ok(read_half) = stream.try_clone() else { return };
+    let writer = {
+        let sh = sh.clone();
+        thread::Builder::new()
+            .name("sart-conn-w".into())
+            .spawn(move || writer_loop(stream, &sh))
+    };
+    let Ok(writer) = writer else { return };
+    reader_loop(read_half, &sh, &ctl, &tuning);
+    let _ = writer.join();
+}
+
+/// Sole owner of the socket's write half: pop queued lines and write
+/// them. Exits (shutting the socket down) when the connection is closed,
+/// a write fails, or everything this client asked for has been answered:
+/// queue drained, no attached session, and either a submit happened or
+/// the reader is gone.
+fn writer_loop(stream: TcpStream, sh: &ConnShared) {
+    let _guard = WriterGuard { sh, stream: &stream };
+    loop {
+        let item = {
+            let mut q = sh.q.lock().unwrap();
+            loop {
+                if let Some(it) = q.pop_front() {
+                    break Some(it);
+                }
+                if sh.is_closed() {
+                    break None;
+                }
+                if sh.active.load(Ordering::SeqCst) == 0
+                    && (sh.submitted.load(Ordering::SeqCst)
+                        || sh.reader_done.load(Ordering::SeqCst))
+                {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let Some(item) = item else { return };
+        let mut w = &stream;
+        let ok = writeln!(w, "{}", item.line).is_ok() && w.flush().is_ok();
+        if let Some(p) = item.pending {
+            p.fetch_sub(1, Ordering::SeqCst);
+        }
+        if !ok {
+            return; // guard closes; the core notices on its next push
+        }
+    }
+}
+
+enum SkipOutcome {
+    Done,
+    WouldBlock,
+    Gone,
+}
+
+/// Discard buffered bytes up to and including the next newline without
+/// ever growing a buffer — the oversized-line path.
+fn skip_to_newline(reader: &mut BufReader<TcpStream>) -> SkipOutcome {
+    loop {
+        let (n, done) = match reader.fill_buf() {
+            Ok(b) if b.is_empty() => return SkipOutcome::Gone,
+            Ok(b) => match b.iter().position(|&x| x == b'\n') {
+                Some(p) => (p + 1, true),
+                None => (b.len(), false),
+            },
+            Err(e) if would_block(&e) => return SkipOutcome::WouldBlock,
+            Err(_) => return SkipOutcome::Gone,
+        };
+        reader.consume(n);
+        if done {
+            return SkipOutcome::Done;
+        }
+    }
+}
+
+/// Parse pipelined request lines until the client goes away or idles
+/// out. Reads are bounded ([`MAX_LINE_BYTES`]) and polled
+/// ([`READ_POLL`]) so a stalled or abusive peer cannot pin memory or the
+/// thread.
+fn reader_loop(
+    read_half: TcpStream,
+    sh: &Arc<ConnShared>,
+    ctl: &mpsc::Sender<Ctl>,
+    tuning: &ListenerTuning,
+) {
+    let _guard = ReaderGuard(sh);
+    let _ = read_half.set_read_timeout(Some(READ_POLL));
     let mut reader = BufReader::new(read_half);
     let mut line = String::new();
-    if reader.read_line(&mut line).unwrap_or(0) == 0 {
-        return;
+    let mut skipping = false;
+    let mut idle_since = Instant::now();
+    let idle_timeout = Duration::from_secs_f64(tuning.idle_timeout_s);
+    loop {
+        if sh.is_closed() {
+            return;
+        }
+        if skipping {
+            match skip_to_newline(&mut reader) {
+                SkipOutcome::Done => {
+                    skipping = false;
+                    idle_since = Instant::now();
+                    sh.push(
+                        proto::error_line(&format!(
+                            "request line exceeds {MAX_LINE_BYTES} bytes"
+                        )),
+                        None,
+                    );
+                }
+                SkipOutcome::Gone => {
+                    sh.close();
+                    return;
+                }
+                SkipOutcome::WouldBlock => {}
+            }
+            continue;
+        }
+        let cap = (MAX_LINE_BYTES + 1 - line.len()) as u64;
+        match (&mut reader).take(cap).read_line(&mut line) {
+            Ok(0) => {
+                // Client EOF. Parse a trailing unterminated line, then
+                // close: nothing further can arrive, and a client that
+                // closed its socket is not reading events either.
+                let last = line.trim().to_string();
+                if !last.is_empty() {
+                    handle_line(&last, sh, ctl);
+                }
+                sh.close();
+                return;
+            }
+            Ok(_) if line.ends_with('\n') => {
+                let msg = line.trim().to_string();
+                line.clear();
+                idle_since = Instant::now();
+                if !msg.is_empty() {
+                    handle_line(&msg, sh, ctl);
+                }
+            }
+            Ok(_) if line.len() > MAX_LINE_BYTES => {
+                line.clear();
+                skipping = true;
+            }
+            Ok(_) => {} // partial line under the cap: keep accumulating
+            Err(e) if would_block(&e) => {
+                if sh.active.load(Ordering::SeqCst) == 0
+                    && idle_since.elapsed() >= idle_timeout
+                {
+                    sh.push(
+                        proto::error_line(
+                            "idle timeout: no request line and no session \
+                             in flight",
+                        ),
+                        None,
+                    );
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
     }
-    let mut w = &stream;
-    match proto::parse_client_line(line.trim()) {
+}
+
+/// Dispatch one complete request line. Malformed input is answered with
+/// a structured `error` line; the connection keeps serving.
+fn handle_line(line: &str, sh: &Arc<ConnShared>, ctl: &mpsc::Sender<Ctl>) {
+    match proto::parse_client_line(line) {
         Err(e) => {
-            let _ = writeln!(w, "{}", proto::refused_line(&format!("{e:#}")));
+            sh.push(proto::error_line(&format!("{e:#}")), None);
         }
         Ok(proto::ClientMsg::Shutdown) => {
             // The control send happens-before the ack: a client that has
@@ -197,23 +565,166 @@ fn handle_conn(stream: TcpStream, ctl: mpsc::Sender<Ctl>) {
             // refused — that makes the graceful-shutdown test (and any
             // script doing `shutdown; submit`) deterministic.
             let _ = ctl.send(Ctl::Shutdown);
-            let _ = writeln!(w, "{}", proto::shutdown_ack_line());
+            sh.push(proto::shutdown_ack_line(), None);
         }
-        Ok(proto::ClientMsg::Submit { dataset, question, header }) => {
-            let (tx, rx) = mpsc::channel::<String>();
-            if ctl
-                .send(Ctl::Submit { dataset, question, header, resp: tx })
-                .is_err()
-            {
-                let _ =
-                    writeln!(w, "{}", proto::refused_line("listener is down"));
-                return;
+        Ok(proto::ClientMsg::Submit { dataset, question, header, client_id }) => {
+            // active before submitted: the writer's quiescence check
+            // reads them in the opposite order, so it can never observe
+            // "submitted, zero active" inside this window.
+            sh.active.fetch_add(1, Ordering::SeqCst);
+            sh.submitted.store(true, Ordering::SeqCst);
+            let msg = Ctl::Submit {
+                dataset,
+                question,
+                header,
+                client_id,
+                conn: sh.clone(),
+            };
+            if ctl.send(msg).is_err() {
+                sh.push(proto::refused_line("listener is down"), None);
+                sh.release_session();
             }
-            for ev in rx {
-                if writeln!(w, "{ev}").is_err() {
-                    return; // client hung up; the core notices on send
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core loop
+// ---------------------------------------------------------------------------
+
+/// Load-derived retry hint for a rejected submit, in wall milliseconds:
+/// grows with how far past capacity the session table is and with the
+/// cluster's pending-prefill backlog, scaled by `--time-scale` so the
+/// number means the same thing at any replay speed. Monotone in both
+/// load inputs; clamped to [1 ms, 60 s].
+pub fn retry_hint_ms(
+    in_system: usize,
+    max_sessions: usize,
+    prefill_backlog_tokens: usize,
+    time_scale: f64,
+) -> u64 {
+    let over = in_system.saturating_sub(max_sessions) + 1;
+    let virtual_wait =
+        0.04 * over as f64 + 0.0005 * prefill_backlog_tokens as f64;
+    (virtual_wait * time_scale * 1000.0).ceil().clamp(1.0, 60_000.0) as u64
+}
+
+/// One live session's bookkeeping in the core's table.
+struct LiveSession {
+    conn: Arc<ConnShared>,
+    /// Queued-but-unwritten sheddable lines on `conn` for this session.
+    pending: Arc<AtomicUsize>,
+    client_id: Option<String>,
+    /// Cumulative replica migrations (mirrors the outcome's
+    /// `redispatches`).
+    hops: usize,
+    /// `tokens` lines shed under backpressure (reported on `finalized`).
+    shed: usize,
+    /// Original arrival instant, preserved across migrations so
+    /// latencies measure from first submission.
+    arrival0: f64,
+    /// The connection died but the session has a `client_id`: keep
+    /// computing and wait for a reconnect-resubmit to adopt the stream.
+    detached: bool,
+}
+
+struct SessionTable {
+    sessions: HashMap<usize, LiveSession>,
+    by_client: HashMap<String, usize>,
+    /// Retained `finalized` lines per client id (resubmit-after-
+    /// completion replays these instead of re-running the request).
+    finished_by_client: HashMap<String, (usize, String)>,
+    finished_order: VecDeque<String>,
+    aborted: Arc<AtomicUsize>,
+    queue_cap: usize,
+}
+
+impl SessionTable {
+    fn retain_finalized(&mut self, cid: String, id: usize, line: String) {
+        if self.finished_by_client.insert(cid.clone(), (id, line)).is_none() {
+            self.finished_order.push_back(cid);
+            if self.finished_order.len() > FINISHED_RETENTION {
+                if let Some(old) = self.finished_order.pop_front() {
+                    self.finished_by_client.remove(&old);
                 }
-                let _ = w.flush();
+            }
+        }
+    }
+
+    /// The session's connection died mid-stream. Reconnectable sessions
+    /// (with a client id) detach and keep computing; anonymous ones
+    /// abort — their slot is reclaimed and the abort counted.
+    fn conn_died(&mut self, id: usize) {
+        let reconnectable = match self.sessions.get_mut(&id) {
+            None => return,
+            Some(s) if s.client_id.is_some() => {
+                s.detached = true;
+                true
+            }
+            Some(_) => false,
+        };
+        if !reconnectable {
+            if let Some(s) = self.sessions.remove(&id) {
+                s.conn.release_session();
+                self.aborted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Stream freshly recorded scheduler events to their sessions, applying
+/// the shed policy and terminal-line bookkeeping.
+fn forward_events(sched: &mut Scheduler<'_>, st: &mut SessionTable) {
+    for ev in sched.drain_events() {
+        let id = ev.request();
+        if matches!(ev, ServeEvent::Finalized { .. }) {
+            let Some(sess) = st.sessions.get(&id) else {
+                continue; // aborted earlier: nobody is listening
+            };
+            let mut oc = sched.outcome_by_id(id);
+            if let Some(o) = oc.as_mut() {
+                // The live fault layer owns migration accounting, same
+                // as the cluster dispatcher does in virtual time: the
+                // outcome keeps the *original* arrival (re-dispatch
+                // delay shows up in its latencies) and the hop count.
+                o.arrival = sess.arrival0;
+                o.redispatches = sess.hops;
+            }
+            let line = proto::event_line(&ev, oc.as_ref(), sess.shed);
+            let delivered =
+                !sess.detached && sess.conn.push(line.clone(), None);
+            let sess = st.sessions.remove(&id).expect("session present");
+            sess.conn.release_session();
+            if let Some(cid) = sess.client_id {
+                st.by_client.remove(&cid);
+                st.retain_finalized(cid, id, line);
+            } else if !delivered {
+                st.aborted.fetch_add(1, Ordering::SeqCst);
+            }
+        } else {
+            let sheddable = matches!(ev, ServeEvent::BranchTokens { .. });
+            let Some(sess) = st.sessions.get_mut(&id) else { continue };
+            if sheddable {
+                if sess.detached
+                    || sess.pending.load(Ordering::SeqCst) >= st.queue_cap
+                {
+                    sess.shed += 1;
+                    continue;
+                }
+                if !sess
+                    .conn
+                    .push(proto::event_line(&ev, None, 0), Some(&sess.pending))
+                {
+                    sess.shed += 1;
+                    st.conn_died(id);
+                }
+            } else {
+                if sess.detached {
+                    continue;
+                }
+                if !sess.conn.push(proto::event_line(&ev, None, 0), None) {
+                    st.conn_died(id);
+                }
             }
         }
     }
@@ -224,7 +735,9 @@ fn handle_conn(stream: TcpStream, ctl: mpsc::Sender<Ctl>) {
 fn core_loop(
     spec: &ServeSpec,
     live: &LiveConfig,
+    tuning: &ListenerTuning,
     ctl: mpsc::Receiver<Ctl>,
+    aborted: Arc<AtomicUsize>,
 ) -> Result<()> {
     let replicas = spec.replicas.max(1);
     let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(replicas);
@@ -250,15 +763,34 @@ fn core_loop(
         scheds.push(s);
     }
 
-    struct Session {
-        resp: mpsc::Sender<String>,
-    }
     let start = Instant::now();
     let ts = live.time_scale;
-    let mut sessions: HashMap<usize, Session> = HashMap::new();
+    let mut st = SessionTable {
+        sessions: HashMap::new(),
+        by_client: HashMap::new(),
+        finished_by_client: HashMap::new(),
+        finished_order: VecDeque::new(),
+        aborted,
+        queue_cap: tuning.session_queue,
+    };
+    // Replica lifecycle mirrors the virtual-time dispatcher: all live
+    // unless a scale controller starts the fleet at its floor.
+    let mut state = vec![ReplicaState::Live; replicas];
+    if let Some(sc) = &spec.scale {
+        for s in state.iter_mut().skip(sc.min_live) {
+            *s = ReplicaState::Down;
+        }
+    }
+    // Fault-plan times are virtual: `--time-scale` maps them onto the
+    // wall clock exactly as it paces the schedulers.
+    let mut faults: VecDeque<_> = spec.fault_plan.events.clone().into();
+    // Requests stranded by a failure with no live survivor, re-homed on
+    // the next restart/scale-up. `(failed replica, request)`.
+    let mut parked: Vec<(usize, Request)> = Vec::new();
     let mut last_arrival = vec![0.0f64; replicas];
     let mut next_id = 0usize;
     let mut draining = false;
+    let mut since_scale = 0usize;
     let mut pending: VecDeque<Ctl> = VecDeque::new();
 
     loop {
@@ -278,26 +810,98 @@ fn core_loop(
             };
             match msg {
                 Ctl::Shutdown => draining = true,
-                Ctl::Submit { dataset, question, header, resp } => {
+                Ctl::Submit { dataset, question, header, client_id, conn } => {
                     if draining {
-                        let _ =
-                            resp.send(proto::refused_line("shutting down"));
+                        conn.push(proto::refused_line("shutting down"), None);
+                        conn.release_session();
                         continue;
                     }
-                    if sessions.len() >= live.max_sessions {
-                        let _ = resp.send(proto::rejected_line(100));
+                    // Idempotent resubmit: a known client id adopts its
+                    // in-flight session (if its old connection is gone)
+                    // or replays its retained finalized line, instead of
+                    // double-running the request.
+                    if let Some(cid) = client_id.as_deref() {
+                        if let Some(&sid) = st.by_client.get(cid) {
+                            let sess = st
+                                .sessions
+                                .get_mut(&sid)
+                                .expect("by_client maps to live sessions");
+                            if sess.detached || sess.conn.is_closed() {
+                                let old =
+                                    std::mem::replace(&mut sess.conn, conn);
+                                old.release_session();
+                                sess.detached = false;
+                                // Fresh counter: the old connection's
+                                // queued lines died with it.
+                                sess.pending = Arc::new(AtomicUsize::new(0));
+                                if !sess.conn.push(
+                                    proto::accepted_line_with(sid, Some(cid)),
+                                    None,
+                                ) {
+                                    sess.detached = true;
+                                }
+                            } else {
+                                conn.push(
+                                    proto::error_line(&format!(
+                                        "client_id `{cid}` already in \
+                                         flight on another connection"
+                                    )),
+                                    None,
+                                );
+                                conn.release_session();
+                            }
+                            continue;
+                        }
+                        if let Some((rid, line)) =
+                            st.finished_by_client.get(cid)
+                        {
+                            conn.push(
+                                proto::accepted_line_with(*rid, Some(cid)),
+                                None,
+                            );
+                            conn.push(line.clone(), None);
+                            conn.release_session();
+                            continue;
+                        }
+                    }
+                    if conn.is_closed() && client_id.is_none() {
+                        // The client vanished before its submit was even
+                        // tabled and cannot reconnect: reclaim now.
+                        st.aborted.fetch_add(1, Ordering::SeqCst);
+                        conn.release_session();
                         continue;
                     }
+                    let vnow = start.elapsed().as_secs_f64() / ts;
+                    let table_full = st.sessions.len() >= live.max_sessions;
+                    let target = (0..replicas)
+                        .filter(|&i| state[i] == ReplicaState::Live)
+                        .min_by_key(|&i| {
+                            (scheds[i].load().requests_in_system(), i)
+                        });
+                    let Some(ri) = target.filter(|_| !table_full) else {
+                        // Table full, or no live replica right now:
+                        // reject with a load-derived retry hint.
+                        let backlog: usize = (0..replicas)
+                            .filter(|&i| state[i] == ReplicaState::Live)
+                            .map(|i| scheds[i].load().pending_prefill_tokens)
+                            .sum();
+                        let hint = retry_hint_ms(
+                            st.sessions.len() + 1,
+                            live.max_sessions,
+                            backlog,
+                            ts,
+                        );
+                        let qpos = (st.sessions.len() + 1)
+                            .saturating_sub(live.max_sessions)
+                            .max(1);
+                        conn.push(proto::rejected_line(hint, qpos), None);
+                        conn.release_session();
+                        continue;
+                    };
                     // The arrival instant is the wall clock read in
                     // virtual units; per-replica clamping keeps each
                     // scheduler's dispatch order sorted even when two
                     // submits race onto one replica within a clock tick.
-                    let vnow = start.elapsed().as_secs_f64() / ts;
-                    let ri = (0..replicas)
-                        .min_by_key(|&i| {
-                            (scheds[i].load().requests_in_system(), i)
-                        })
-                        .expect("at least one replica");
                     let arrival = vnow.max(last_arrival[ri]);
                     last_arrival[ri] = arrival;
                     let id = next_id;
@@ -309,17 +913,217 @@ fn core_loop(
                         dataset,
                         header,
                     })?;
-                    let _ = resp.send(proto::accepted_line(id));
-                    sessions.insert(id, Session { resp });
+                    let pushed = conn.push(
+                        proto::accepted_line_with(id, client_id.as_deref()),
+                        None,
+                    );
+                    if !pushed && client_id.is_none() {
+                        // Dead before `accepted` and unable to ever
+                        // reconnect: don't table it (the request
+                        // finishes as an orphan; its events are skipped).
+                        st.aborted.fetch_add(1, Ordering::SeqCst);
+                        conn.release_session();
+                    } else {
+                        st.sessions.insert(
+                            id,
+                            LiveSession {
+                                conn,
+                                pending: Arc::new(AtomicUsize::new(0)),
+                                client_id: client_id.clone(),
+                                hops: 0,
+                                shed: 0,
+                                arrival0: arrival,
+                                detached: !pushed,
+                            },
+                        );
+                        if let Some(cid) = client_id {
+                            st.by_client.insert(cid, id);
+                        }
+                    }
+                    // Scale controller, evaluated per admitted arrival —
+                    // same thresholds and cooldown as the virtual path.
+                    since_scale += 1;
+                    if let Some(sc) = &spec.scale {
+                        if since_scale >= sc.cooldown_arrivals {
+                            let live_n = state
+                                .iter()
+                                .filter(|&&s| s == ReplicaState::Live)
+                                .count();
+                            let queued: usize = (0..replicas)
+                                .filter(|&i| state[i] == ReplicaState::Live)
+                                .map(|i| {
+                                    scheds[i].load().requests_in_system()
+                                })
+                                .sum();
+                            let backlog: usize = (0..replicas)
+                                .filter(|&i| state[i] == ReplicaState::Live)
+                                .map(|i| {
+                                    scheds[i].load().pending_prefill_tokens
+                                })
+                                .sum();
+                            if sc.wants_scale_up(queued, backlog, live_n) {
+                                // Draining first (warm cache), then cold.
+                                let cand = (0..replicas)
+                                    .find(|&i| {
+                                        state[i] == ReplicaState::Draining
+                                    })
+                                    .or_else(|| {
+                                        (0..replicas).find(|&i| {
+                                            state[i] == ReplicaState::Down
+                                        })
+                                    });
+                                if let Some(i) = cand {
+                                    if state[i] == ReplicaState::Down {
+                                        scheds[i].advance_clock_to(vnow);
+                                    }
+                                    state[i] = ReplicaState::Live;
+                                    since_scale = 0;
+                                }
+                            } else if sc.wants_scale_down(queued, live_n) {
+                                let backlogs: Vec<usize> = scheds
+                                    .iter()
+                                    .map(|s| s.load().pending_prefill_tokens)
+                                    .collect();
+                                if let Some(i) =
+                                    pick_drain_candidate(&state, &backlogs)
+                                {
+                                    state[i] = ReplicaState::Draining;
+                                    since_scale = 0;
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
 
-        // 2. Step every replica until its virtual clock catches up with
-        // the wall clock (bounded per pass so control stays responsive).
         let vtarget = start.elapsed().as_secs_f64() / ts;
+
+        // 2. Scripted faults whose (virtual) instant the wall clock has
+        // reached, in plan order.
+        while let Some(&ev) = faults.front() {
+            if ev.t > vtarget {
+                break;
+            }
+            faults.pop_front();
+            let f = ev.replica;
+            match ev.kind {
+                FaultKind::Fail => {
+                    if state[f] == ReplicaState::Down {
+                        bail!(
+                            "live fault plan fails replica {f} at t={} but \
+                             it is already down",
+                            ev.t
+                        );
+                    }
+                    // Catch the victim up to the failure instant and
+                    // flush what it managed to emit, then take it down.
+                    while scheds[f].now() < ev.t {
+                        match scheds[f].step()? {
+                            StepOutcome::Worked => {}
+                            StepOutcome::Idle => {
+                                scheds[f].advance_clock_to(ev.t);
+                                break;
+                            }
+                        }
+                    }
+                    forward_events(&mut scheds[f], &mut st);
+                    let (items, _partial) = scheds[f].fail_and_drain()?;
+                    // Anything recorded between the flush and the drain
+                    // died with the replica.
+                    scheds[f].discard_events();
+                    state[f] = ReplicaState::Down;
+                    last_arrival[f] = 0.0;
+                    for item in items {
+                        let DrainItem::Unfinished(mut req) = item else {
+                            continue; // finished: already forwarded above
+                        };
+                        let id = req.id;
+                        if !st.sessions.contains_key(&id) {
+                            continue; // aborted: nobody is waiting
+                        }
+                        let target = (0..replicas)
+                            .filter(|&i| state[i] == ReplicaState::Live)
+                            .min_by_key(|&i| {
+                                (scheds[i].load().requests_in_system(), i)
+                            });
+                        let Some(t) = target else {
+                            parked.push((f, req));
+                            continue;
+                        };
+                        let arrival = ev.t.max(last_arrival[t]);
+                        last_arrival[t] = arrival;
+                        req.arrival = arrival;
+                        if let Some(sess) = st.sessions.get_mut(&id) {
+                            sess.hops += 1;
+                            let line = proto::migrated_line(
+                                id, f, t, sess.hops, ev.t,
+                            );
+                            if !sess.detached && !sess.conn.push(line, None) {
+                                st.conn_died(id);
+                            }
+                        }
+                        // conn_died may have aborted an anonymous
+                        // session — only re-run work someone awaits.
+                        if st.sessions.contains_key(&id) {
+                            scheds[t].dispatch(req)?;
+                        }
+                    }
+                }
+                FaultKind::Restart => {
+                    if state[f] != ReplicaState::Down {
+                        bail!(
+                            "live fault plan restarts replica {f} at t={} \
+                             but it is not down",
+                            ev.t
+                        );
+                    }
+                    scheds[f].advance_clock_to(ev.t);
+                    state[f] = ReplicaState::Live;
+                }
+            }
+        }
+
+        // 2b. Re-home parked sessions the moment a live replica exists.
+        if !parked.is_empty()
+            && state.iter().any(|&s| s == ReplicaState::Live)
+        {
+            for (from, mut req) in std::mem::take(&mut parked) {
+                let id = req.id;
+                if !st.sessions.contains_key(&id) {
+                    continue;
+                }
+                let t = (0..replicas)
+                    .filter(|&i| state[i] == ReplicaState::Live)
+                    .min_by_key(|&i| {
+                        (scheds[i].load().requests_in_system(), i)
+                    })
+                    .expect("a live replica exists");
+                let arrival = vtarget.max(last_arrival[t]);
+                last_arrival[t] = arrival;
+                req.arrival = arrival;
+                if let Some(sess) = st.sessions.get_mut(&id) {
+                    sess.hops += 1;
+                    let line =
+                        proto::migrated_line(id, from, t, sess.hops, vtarget);
+                    if !sess.detached && !sess.conn.push(line, None) {
+                        st.conn_died(id);
+                    }
+                }
+                if st.sessions.contains_key(&id) {
+                    scheds[t].dispatch(req)?;
+                }
+            }
+        }
+
+        // 3. Step every running replica until its virtual clock catches
+        // up with the wall clock (bounded per pass so control stays
+        // responsive), streaming fresh events to their sessions.
         let mut worked = false;
         for i in 0..replicas {
+            if state[i] == ReplicaState::Down {
+                continue;
+            }
             let mut budget = 64;
             while scheds[i].now() < vtarget && budget > 0 {
                 match scheds[i].step()? {
@@ -333,28 +1137,10 @@ fn core_loop(
                     }
                 }
             }
-            // 3. Stream freshly recorded events to their sessions.
-            for ev in scheds[i].drain_events() {
-                let id = ev.request();
-                let finalized = matches!(ev, ServeEvent::Finalized { .. });
-                let line = if finalized {
-                    let oc = scheds[i].outcome_by_id(id);
-                    proto::event_line(&ev, oc.as_ref())
-                } else {
-                    proto::event_line(&ev, None)
-                };
-                if let Some(sess) = sessions.get(&id) {
-                    let _ = sess.resp.send(line); // client may have hung up
-                }
-                if finalized {
-                    // Dropping the channel ends the handler's stream and
-                    // closes the connection.
-                    sessions.remove(&id);
-                }
-            }
+            forward_events(&mut scheds[i], &mut st);
         }
 
-        if draining && sessions.is_empty() {
+        if draining && st.sessions.is_empty() {
             return Ok(());
         }
 
@@ -370,15 +1156,26 @@ fn core_loop(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Replay client
+// ---------------------------------------------------------------------------
+
 /// What one replayed session ended as.
 enum SessionEnd {
     Finished {
         outcome: Box<RequestOutcome>,
         wall_ttft: f64,
         wall_e2e: f64,
+        /// The session survived at least one replica migration (a
+        /// `migrated` line, or a non-zero `redispatches` in the outcome
+        /// if the line was missed while reconnecting).
+        migrated: bool,
     },
     Rejected,
     Lost,
+    /// The per-session `--session-deadline` expired first (also counted
+    /// as lost).
+    DeadlineExpired,
 }
 
 /// Result of replaying a trace against a live listener.
@@ -392,22 +1189,47 @@ pub struct ReplayResult {
     /// Wall seconds from session open to `finalized`.
     pub wall_e2e: Vec<f64>,
     /// Accepted sessions that never saw `finalized` (plus transport
-    /// errors) — a correct listener replays with zero.
+    /// errors and expired deadlines) — a correct listener replays with
+    /// zero.
     pub requests_lost: usize,
-    /// Sessions turned away (`rejected` backpressure or `refused`).
+    /// Sessions turned away (`rejected` backpressure or `refused`) after
+    /// exhausting any retry budget.
     pub rejected: usize,
+    /// Finalized sessions that survived at least one replica migration.
+    pub migrated_sessions: usize,
+    /// Reconnect/resubmit/backoff attempts across all sessions (0 with
+    /// retries off).
+    pub retries: usize,
+    /// Sessions dropped at their `--session-deadline` (subset of
+    /// `requests_lost`).
+    pub deadline_expired: usize,
 }
 
-/// Fire `trace` at a live listener at trace rate: request `i` is
-/// submitted `arrival_i * time_scale` wall seconds after the first, each
-/// on its own connection, and all sessions are drained to completion.
-/// With `send_shutdown`, a `{"op":"shutdown"}` is sent after the last
-/// session finishes (and its ack awaited).
+/// Fire `trace` at a live listener at trace rate with the legacy
+/// single-shot client (no retries, no deadline — see [`replay_with`]).
 pub fn replay(
     addr: &str,
     trace: &[Request],
     time_scale: f64,
     send_shutdown: bool,
+) -> Result<ReplayResult> {
+    replay_with(addr, trace, time_scale, send_shutdown, &ReplayConfig::default())
+}
+
+/// Fire `trace` at a live listener at trace rate: request `i` is
+/// submitted `arrival_i * time_scale` wall seconds after the first, each
+/// on its own connection, and all sessions are drained to completion.
+/// `cfg` arms the resilience layer: per-session deadlines, seeded
+/// jittered exponential backoff on rejection, and reconnect-and-resubmit
+/// (with an idempotent client id) on connection loss. With
+/// `send_shutdown`, a `{"op":"shutdown"}` is sent after the last session
+/// finishes (and its ack awaited).
+pub fn replay_with(
+    addr: &str,
+    trace: &[Request],
+    time_scale: f64,
+    send_shutdown: bool,
+    cfg: &ReplayConfig,
 ) -> Result<ReplayResult> {
     if !(time_scale.is_finite() && time_scale > 0.0) {
         bail!("time_scale must be a positive number, got {time_scale}");
@@ -422,20 +1244,37 @@ pub fn replay(
         }
         let addr = addr.to_string();
         let req = r.clone();
-        handles.push(thread::spawn(move || session(&addr, &req)));
+        let cfg = *cfg;
+        handles.push(thread::spawn(move || session_with(&addr, &req, &cfg)));
     }
     let mut res = ReplayResult::default();
     for h in handles {
         match h.join() {
-            Ok(Ok(SessionEnd::Finished { outcome, wall_ttft, wall_e2e })) => {
-                res.outcomes.push(*outcome);
-                res.wall_ttft.push(wall_ttft);
-                res.wall_e2e.push(wall_e2e);
+            Ok((end, retries)) => {
+                res.retries += retries;
+                match end {
+                    SessionEnd::Finished {
+                        outcome,
+                        wall_ttft,
+                        wall_e2e,
+                        migrated,
+                    } => {
+                        res.outcomes.push(*outcome);
+                        res.wall_ttft.push(wall_ttft);
+                        res.wall_e2e.push(wall_e2e);
+                        if migrated {
+                            res.migrated_sessions += 1;
+                        }
+                    }
+                    SessionEnd::Rejected => res.rejected += 1,
+                    SessionEnd::Lost => res.requests_lost += 1,
+                    SessionEnd::DeadlineExpired => {
+                        res.requests_lost += 1;
+                        res.deadline_expired += 1;
+                    }
+                }
             }
-            Ok(Ok(SessionEnd::Rejected)) => res.rejected += 1,
-            Ok(Ok(SessionEnd::Lost)) | Ok(Err(_)) | Err(_) => {
-                res.requests_lost += 1;
-            }
+            Err(_) => res.requests_lost += 1,
         }
     }
     if send_shutdown {
@@ -450,44 +1289,224 @@ pub fn replay(
     Ok(res)
 }
 
-/// Drive one session: submit, then read events until `finalized`.
-fn session(addr: &str, req: &Request) -> Result<SessionEnd> {
-    let stream = TcpStream::connect(addr)?;
-    let t0 = Instant::now();
-    {
-        let mut w = &stream;
-        writeln!(
-            w,
-            "{}",
-            proto::submit_line(&req.dataset, &req.question, &req.header)
-        )?;
-        w.flush()?;
+/// The wall wait before retry `attempt` (1-based): `base * 2^(attempt-1)`
+/// milliseconds, jittered to 50–100% by the session's seeded RNG.
+fn backoff_wait(rng: &mut Rng, base_ms: u64, attempt: usize) -> Duration {
+    let exp = base_ms.saturating_mul(1u64 << (attempt - 1).min(16));
+    let jitter = 0.5 + 0.5 * rng.f64();
+    Duration::from_secs_f64(exp as f64 * jitter / 1000.0)
+}
+
+/// Sleep out the backoff before retry `attempt`. A server-supplied
+/// `retry_after_ms` replaces the configured base for this wait. Returns
+/// false if the deadline expires inside (after sleeping only up to it).
+fn backoff(
+    rng: &mut Rng,
+    cfg: &ReplayConfig,
+    attempt: usize,
+    server_hint_ms: Option<u64>,
+    deadline: Option<Instant>,
+) -> bool {
+    let base = server_hint_ms.unwrap_or(cfg.retry_base_ms).max(1);
+    let wait = backoff_wait(rng, base, attempt);
+    if let Some(d) = deadline {
+        let now = Instant::now();
+        if now >= d {
+            return false;
+        }
+        let remaining = d - now;
+        if wait >= remaining {
+            thread::sleep(remaining);
+            return false;
+        }
     }
-    let mut reader = BufReader::new(stream);
+    thread::sleep(wait);
+    true
+}
+
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+/// Drive one session with the resilience knobs in `cfg`: submit, read
+/// events until `finalized`, and on rejection / connection loss /
+/// transport error reconnect-and-resubmit under the retry budget. With
+/// retries enabled, submits carry a deterministic client id
+/// (`r<seed>-<request id>`) so the server deduplicates resubmits instead
+/// of double-running them.
+fn session_with(
+    addr: &str,
+    req: &Request,
+    cfg: &ReplayConfig,
+) -> (SessionEnd, usize) {
+    let t0 = Instant::now();
+    let deadline = (cfg.session_deadline_s > 0.0)
+        .then(|| t0 + Duration::from_secs_f64(cfg.session_deadline_s));
+    let client_id =
+        (cfg.retry_max > 0).then(|| format!("r{}-{}", cfg.seed, req.id));
+    let mut rng = Rng::new(
+        cfg.seed ^ (req.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut retries = 0usize;
     let mut ttft: Option<f64> = None;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(SessionEnd::Lost); // server hung up mid-session
+    let mut migrated = false;
+
+    // One failed attempt = one backoff + reconnect, shared by every
+    // transient failure mode below.
+    macro_rules! retry_or {
+        ($terminal:expr, $hint:expr) => {{
+            if retries >= cfg.retry_max {
+                return ($terminal, retries);
+            }
+            retries += 1;
+            if !backoff(&mut rng, cfg, retries, $hint, deadline) {
+                return (SessionEnd::DeadlineExpired, retries);
+            }
+            continue 'attempt;
+        }};
+    }
+
+    'attempt: loop {
+        if expired(deadline) {
+            return (SessionEnd::DeadlineExpired, retries);
         }
-        match proto::parse_server_line(line.trim())? {
-            proto::ServerMsg::Rejected { .. }
-            | proto::ServerMsg::Refused { .. } => {
-                return Ok(SessionEnd::Rejected)
-            }
-            proto::ServerMsg::Tokens { .. } => {
-                ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64());
-            }
-            proto::ServerMsg::Finalized { outcome, .. } => {
-                let wall_e2e = t0.elapsed().as_secs_f64();
-                return Ok(SessionEnd::Finished {
-                    outcome,
-                    wall_ttft: ttft.unwrap_or(wall_e2e),
-                    wall_e2e,
-                });
-            }
-            _ => {}
+        let stream = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(_) => retry_or!(SessionEnd::Lost, None),
+        };
+        if deadline.is_some() {
+            // Poll so a stalled server cannot out-wait the deadline.
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
         }
+        {
+            let mut w = &stream;
+            let line = proto::submit_line_with(
+                &req.dataset,
+                &req.question,
+                &req.header,
+                client_id.as_deref(),
+            );
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                retry_or!(SessionEnd::Lost, None);
+            }
+        }
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => retry_or!(SessionEnd::Lost, None),
+                Ok(_) if line.ends_with('\n') => {}
+                Ok(_) => continue, // EOF mid-line surfaces as Ok(0) next
+                Err(e) if would_block(&e) => {
+                    if expired(deadline) {
+                        return (SessionEnd::DeadlineExpired, retries);
+                    }
+                    continue;
+                }
+                Err(_) => retry_or!(SessionEnd::Lost, None),
+            }
+            let msg = proto::parse_server_line(line.trim());
+            line.clear();
+            match msg {
+                Err(_) => retry_or!(SessionEnd::Lost, None),
+                Ok(proto::ServerMsg::Rejected { retry_after_ms, .. }) => {
+                    retry_or!(SessionEnd::Rejected, Some(retry_after_ms));
+                }
+                Ok(proto::ServerMsg::Refused { .. }) => {
+                    // Refusals are deliberate (draining listener) — not
+                    // worth burning the retry budget on.
+                    return (SessionEnd::Rejected, retries);
+                }
+                Ok(proto::ServerMsg::Error { .. }) => {
+                    // e.g. our own resubmit racing a half-dead
+                    // predecessor connection: transient.
+                    retry_or!(SessionEnd::Lost, None);
+                }
+                Ok(proto::ServerMsg::Migrated { .. }) => migrated = true,
+                Ok(proto::ServerMsg::Tokens { .. }) => {
+                    ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64());
+                }
+                Ok(proto::ServerMsg::Finalized { outcome, .. }) => {
+                    let wall_e2e = t0.elapsed().as_secs_f64();
+                    // A migration while we were reconnecting shows up
+                    // only in the outcome.
+                    let migrated = migrated || outcome.redispatches > 0;
+                    return (
+                        SessionEnd::Finished {
+                            outcome,
+                            wall_ttft: ttft.unwrap_or(wall_e2e),
+                            wall_e2e,
+                            migrated,
+                        },
+                        retries,
+                    );
+                }
+                Ok(_) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_hint_is_monotone_in_load() {
+        // More sessions past capacity never shrinks the hint...
+        let mut prev = 0;
+        for in_system in 9..64 {
+            let h = retry_hint_ms(in_system, 8, 0, 1.0);
+            assert!(h >= prev, "hint fell at in_system={in_system}");
+            prev = h;
+        }
+        // ...nor does a deeper prefill backlog.
+        let mut prev = 0;
+        for backlog in (0..12).map(|k| k * 1000) {
+            let h = retry_hint_ms(9, 8, backlog, 1.0);
+            assert!(h >= prev, "hint fell at backlog={backlog}");
+            prev = h;
+        }
+        // Strictly increasing away from the clamp, in both inputs.
+        assert!(retry_hint_ms(10, 8, 0, 1.0) > retry_hint_ms(9, 8, 0, 1.0));
+        assert!(
+            retry_hint_ms(9, 8, 4000, 1.0) > retry_hint_ms(9, 8, 0, 1.0)
+        );
+    }
+
+    #[test]
+    fn retry_hint_scales_with_time_and_clamps() {
+        // --time-scale compresses the hint like it compresses the serve.
+        let slow = retry_hint_ms(12, 8, 2000, 1.0);
+        let fast = retry_hint_ms(12, 8, 2000, 0.01);
+        assert!(fast < slow);
+        assert!(fast >= 1, "floor is 1ms");
+        // Saturated load pegs at the 60s ceiling instead of overflowing.
+        assert_eq!(
+            retry_hint_ms(usize::MAX / 2, 1, usize::MAX / 2, 1.0),
+            60_000
+        );
+        assert!(retry_hint_ms(2, 1, 0, 1e-12) >= 1);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for attempt in 1..8 {
+            let wa = backoff_wait(&mut a, 25, attempt);
+            let wb = backoff_wait(&mut b, 25, attempt);
+            assert_eq!(wa, wb, "same seed must give the same schedule");
+            let full = 25u64 * (1 << (attempt - 1));
+            let lo = Duration::from_secs_f64(full as f64 * 0.5 / 1000.0);
+            let hi = Duration::from_secs_f64(full as f64 / 1000.0);
+            assert!(wa >= lo && wa <= hi, "jitter outside [50%, 100%]");
+        }
+        // A different seed de-synchronizes the herd.
+        let mut c = Rng::new(43);
+        let mut d = Rng::new(42);
+        let distinct = (1..8)
+            .any(|k| backoff_wait(&mut c, 25, k) != backoff_wait(&mut d, 25, k));
+        assert!(distinct);
     }
 }

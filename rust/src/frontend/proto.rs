@@ -1,16 +1,32 @@
 //! The wire protocol of the live front end: newline-delimited JSON.
 //!
-//! One connection carries one session. The client opens with a single
-//! request line (`{"op":"submit",...}` or `{"op":"shutdown"}`); the
-//! server answers with a stream of event lines, one per
-//! [`ServeEvent`], closing the connection after `finalized` (or after a
-//! single `rejected`/`refused` line). Everything is hand-rolled over
-//! [`crate::util::json`] — no serialization dependencies.
+//! One connection carries one *or more* sessions. The client sends
+//! request lines (`{"op":"submit",...}` or `{"op":"shutdown"}`); the
+//! server answers each submit with a control line, then streams event
+//! lines, one per [`ServeEvent`], and closes the connection once every
+//! session submitted on it has seen its `finalized` line. Submits may be
+//! pipelined: a submit can carry a caller-chosen `client_id`, echoed on
+//! the `accepted` line, so the client can correlate the server-assigned
+//! request id of each session (all later event lines carry only the
+//! request id). A resubmitted `client_id` is deduplicated server-side —
+//! the reconnecting client reattaches to its in-flight session (or gets
+//! the retained `finalized` line if it already completed) instead of
+//! dispatching the work twice.
+//!
+//! A malformed line is answered with a structured `error` line and the
+//! connection keeps serving; `refused` is reserved for submits the
+//! listener will not take (draining after shutdown, listener down).
+//! Everything is hand-rolled over [`crate::util::json`] — no
+//! serialization dependencies.
 //!
 //! The `finalized` line embeds the full [`RequestOutcome`] record, so a
 //! replay client can reconstruct the exact `RunOutput` schema the
 //! virtual-time server writes and every bench/gate tool keeps working
-//! on live runs.
+//! on live runs. Under a live fault plan a session may see a `migrated`
+//! line (its replica died; the request re-dispatched to a survivor)
+//! before its single `finalized`; under slow-reader backpressure the
+//! `finalized` line reports how many non-terminal `tokens` lines were
+//! shed on its way there.
 
 use crate::coordinator::{RequestOutcome, ServeEvent};
 use crate::tokenizer::Token;
@@ -157,21 +173,42 @@ fn question_from_json(j: &Json) -> Result<Question> {
 /// A parsed client → server request line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
-    Submit { dataset: String, question: Question, header: Vec<Token> },
+    Submit {
+        dataset: String,
+        question: Question,
+        header: Vec<Token>,
+        /// Caller-chosen correlation id: echoed on the `accepted` line
+        /// and the key for server-side resubmit deduplication. `None`
+        /// keeps the PR-7 single-shot wire format byte-identical.
+        client_id: Option<String>,
+    },
     Shutdown,
 }
 
-/// One `{"op":"submit",...}` line.
+/// One `{"op":"submit",...}` line (no client id — the single-shot form).
 pub fn submit_line(
     dataset: &str,
     question: &Question,
     header: &[Token],
+) -> String {
+    submit_line_with(dataset, question, header, None)
+}
+
+/// [`submit_line`] carrying an optional client-assigned correlation id.
+pub fn submit_line_with(
+    dataset: &str,
+    question: &Question,
+    header: &[Token],
+    client_id: Option<&str>,
 ) -> String {
     let mut m = BTreeMap::new();
     m.insert("op".into(), Json::Str("submit".into()));
     m.insert("dataset".into(), Json::Str(dataset.into()));
     m.insert("question".into(), question_to_json(question));
     m.insert("header".into(), tokens_json(header));
+    if let Some(cid) = client_id {
+        m.insert("client_id".into(), Json::Str(cid.into()));
+    }
     Json::Obj(m).to_string()
 }
 
@@ -194,6 +231,14 @@ pub fn parse_client_line(line: &str) -> Result<ClientMsg> {
                 .to_string(),
             question: question_from_json(j.req("question")?)?,
             header: tokens_from(j.req("header")?, "header")?,
+            client_id: match j.get("client_id") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .context("`client_id` must be a string")?
+                        .to_string(),
+                ),
+            },
         }),
         "shutdown" => Ok(ClientMsg::Shutdown),
         other => bail!("unknown op `{other}` (submit|shutdown)"),
@@ -204,13 +249,19 @@ pub fn parse_client_line(line: &str) -> Result<ClientMsg> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServerMsg {
     /// Session admitted to the session table; `request` is the id every
-    /// later event of this session carries.
-    Accepted { request: usize },
-    /// Bounded-queue backpressure: the session table is full, retry
-    /// after the hinted delay.
-    Rejected { retry_after_ms: u64 },
-    /// The listener is shutting down (or the request line was invalid).
+    /// later event of this session carries. Echoes the submit's
+    /// `client_id` (if any) so pipelined submits correlate.
+    Accepted { request: usize, client_id: Option<String> },
+    /// Bounded-queue backpressure: the session table is full. The retry
+    /// hint is load-derived (table occupancy + prefill backlog, scaled
+    /// to wall milliseconds) and `queue_position` is where this submit
+    /// would have stood in the wait line (1 = next slot to free).
+    Rejected { retry_after_ms: u64, queue_position: usize },
+    /// The listener will not take this submit (draining, down).
     Refused { error: String },
+    /// A malformed or abusive request line; the connection keeps
+    /// serving — only the offending line is answered, never the socket.
+    Error { error: String },
     /// Acknowledgement of a `shutdown` op.
     ShutdownAck,
     Admitted { request: usize, t: f64 },
@@ -218,26 +269,42 @@ pub enum ServerMsg {
     Pruned { request: usize, branch: usize, t: f64 },
     Capped { request: usize, branch: usize, t: f64 },
     EarlyStop { request: usize, t: f64 },
+    /// The session's replica failed; its request re-dispatched from
+    /// replica `from` to `to` without the socket closing. `hops` is the
+    /// cumulative migration count (== the outcome's `redispatches`).
+    Migrated { request: usize, from: usize, to: usize, hops: usize, t: f64 },
     Finalized {
         request: usize,
         answer: Option<u8>,
         votes: usize,
         t: f64,
+        /// `tokens` lines shed under slow-reader backpressure (0 and
+        /// absent on the wire for a well-drained session).
+        shed: usize,
         outcome: Box<RequestOutcome>,
     },
 }
 
 pub fn accepted_line(request: usize) -> String {
+    accepted_line_with(request, None)
+}
+
+/// [`accepted_line`] echoing the submit's client-assigned id.
+pub fn accepted_line_with(request: usize, client_id: Option<&str>) -> String {
     let mut m = BTreeMap::new();
     m.insert("event".into(), Json::Str("accepted".into()));
     m.insert("request".into(), unum(request));
+    if let Some(cid) = client_id {
+        m.insert("client_id".into(), Json::Str(cid.into()));
+    }
     Json::Obj(m).to_string()
 }
 
-pub fn rejected_line(retry_after_ms: u64) -> String {
+pub fn rejected_line(retry_after_ms: u64, queue_position: usize) -> String {
     let mut m = BTreeMap::new();
     m.insert("event".into(), Json::Str("rejected".into()));
     m.insert("retry_after_ms".into(), unum(retry_after_ms as usize));
+    m.insert("queue_position".into(), unum(queue_position));
     Json::Obj(m).to_string()
 }
 
@@ -245,6 +312,33 @@ pub fn refused_line(error: &str) -> String {
     let mut m = BTreeMap::new();
     m.insert("event".into(), Json::Str("refused".into()));
     m.insert("error".into(), Json::Str(error.into()));
+    Json::Obj(m).to_string()
+}
+
+/// A recoverable per-line failure (malformed JSON, unknown op, oversized
+/// line, duplicate client id): answered in-band, connection preserved.
+pub fn error_line(error: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("error".into()));
+    m.insert("error".into(), Json::Str(error.into()));
+    Json::Obj(m).to_string()
+}
+
+/// The live fault path's migration notice (see [`ServerMsg::Migrated`]).
+pub fn migrated_line(
+    request: usize,
+    from: usize,
+    to: usize,
+    hops: usize,
+    t: f64,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("event".into(), Json::Str("migrated".into()));
+    m.insert("request".into(), unum(request));
+    m.insert("from".into(), unum(from));
+    m.insert("to".into(), unum(to));
+    m.insert("hops".into(), unum(hops));
+    m.insert("t".into(), num(t));
     Json::Obj(m).to_string()
 }
 
@@ -256,8 +350,14 @@ pub fn shutdown_ack_line() -> String {
 
 /// Serialize one scheduler [`ServeEvent`] as a server event line. A
 /// `Finalized` event carries the full outcome record when the caller
-/// supplies one (the listener always does).
-pub fn event_line(ev: &ServeEvent, outcome: Option<&RequestOutcome>) -> String {
+/// supplies one (the listener always does), plus a `shed` count when any
+/// `tokens` lines were dropped under backpressure (`shed == 0` keeps the
+/// line byte-identical to the PR-7 format).
+pub fn event_line(
+    ev: &ServeEvent,
+    outcome: Option<&RequestOutcome>,
+    shed: usize,
+) -> String {
     let mut m = BTreeMap::new();
     match ev {
         ServeEvent::Admitted { request, at } => {
@@ -297,6 +397,9 @@ pub fn event_line(ev: &ServeEvent, outcome: Option<&RequestOutcome>) -> String {
             );
             m.insert("votes".into(), unum(*votes));
             m.insert("t".into(), num(*at));
+            if shed > 0 {
+                m.insert("shed".into(), unum(shed));
+            }
             if let Some(o) = outcome {
                 m.insert("outcome".into(), outcome_to_json(o));
             }
@@ -310,9 +413,20 @@ pub fn parse_server_line(line: &str) -> Result<ServerMsg> {
     let j = Json::parse(line).context("malformed event line")?;
     let ev = j.req("event")?.as_str().context("`event` must be a string")?;
     Ok(match ev {
-        "accepted" => ServerMsg::Accepted { request: req_usize(&j, "request")? },
+        "accepted" => ServerMsg::Accepted {
+            request: req_usize(&j, "request")?,
+            client_id: match j.get("client_id") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .context("`client_id` must be a string")?
+                        .to_string(),
+                ),
+            },
+        },
         "rejected" => ServerMsg::Rejected {
             retry_after_ms: req_usize(&j, "retry_after_ms")? as u64,
+            queue_position: req_usize(&j, "queue_position")?,
         },
         "refused" => ServerMsg::Refused {
             error: j
@@ -321,7 +435,21 @@ pub fn parse_server_line(line: &str) -> Result<ServerMsg> {
                 .context("`error` must be a string")?
                 .to_string(),
         },
+        "error" => ServerMsg::Error {
+            error: j
+                .req("error")?
+                .as_str()
+                .context("`error` must be a string")?
+                .to_string(),
+        },
         "shutdown_ack" => ServerMsg::ShutdownAck,
+        "migrated" => ServerMsg::Migrated {
+            request: req_usize(&j, "request")?,
+            from: req_usize(&j, "from")?,
+            to: req_usize(&j, "to")?,
+            hops: req_usize(&j, "hops")?,
+            t: req_f64(&j, "t")?,
+        },
         "admitted" => ServerMsg::Admitted {
             request: req_usize(&j, "request")?,
             t: req_f64(&j, "t")?,
@@ -357,6 +485,12 @@ pub fn parse_server_line(line: &str) -> Result<ServerMsg> {
             },
             votes: req_usize(&j, "votes")?,
             t: req_f64(&j, "t")?,
+            shed: match j.get("shed") {
+                None => 0,
+                Some(v) => {
+                    v.as_usize().context("`shed` must be a number")?
+                }
+            },
             outcome: Box::new(outcome_from_json(j.req("outcome")?)?),
         },
         other => bail!("unknown event `{other}`"),
@@ -411,11 +545,21 @@ mod tests {
         let task = TaskSpec::by_name("synth-gaokao").unwrap();
         let q = Question::sample(&task, &mut Rng::new(7));
         let line = submit_line("synth-gaokao", &q, &[5, 6, 7]);
+        assert!(!line.contains("client_id"));
         match parse_client_line(&line).unwrap() {
-            ClientMsg::Submit { dataset, question, header } => {
+            ClientMsg::Submit { dataset, question, header, client_id } => {
                 assert_eq!(dataset, "synth-gaokao");
                 assert_eq!(question, q);
                 assert_eq!(header, vec![5, 6, 7]);
+                assert_eq!(client_id, None);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        let line =
+            submit_line_with("synth-gaokao", &q, &[5, 6, 7], Some("r7-0"));
+        match parse_client_line(&line).unwrap() {
+            ClientMsg::Submit { client_id, .. } => {
+                assert_eq!(client_id.as_deref(), Some("r7-0"));
             }
             other => panic!("wrong message: {other:?}"),
         }
@@ -441,7 +585,7 @@ mod tests {
             ServeEvent::EarlyStop { request: 3, at: 3.0 },
         ];
         for ev in &cases {
-            let msg = parse_server_line(&event_line(ev, None)).unwrap();
+            let msg = parse_server_line(&event_line(ev, None, 0)).unwrap();
             match (ev, &msg) {
                 (
                     ServeEvent::Admitted { request, at },
@@ -484,31 +628,61 @@ mod tests {
             votes: 2,
             at: 4.25,
         };
-        match parse_server_line(&event_line(&ev, Some(&o))).unwrap() {
-            ServerMsg::Finalized { request, answer, votes, t, outcome } => {
+        let clean = event_line(&ev, Some(&o), 0);
+        assert!(!clean.contains("\"shed\""));
+        match parse_server_line(&clean).unwrap() {
+            ServerMsg::Finalized {
+                request,
+                answer,
+                votes,
+                t,
+                shed,
+                outcome,
+            } => {
                 assert_eq!(request, 7);
                 assert_eq!(answer, Some(3));
                 assert_eq!(votes, 2);
                 assert_eq!(t, 4.25);
+                assert_eq!(shed, 0);
                 assert_eq!(*outcome, o);
             }
+            other => panic!("wrong message: {other:?}"),
+        }
+        // A shed count rides on the finalized line only when nonzero.
+        let shedded = event_line(&ev, Some(&o), 5);
+        match parse_server_line(&shedded).unwrap() {
+            ServerMsg::Finalized { shed, .. } => assert_eq!(shed, 5),
             other => panic!("wrong message: {other:?}"),
         }
     }
 
     #[test]
     fn control_lines_round_trip() {
+        let bare = accepted_line(9);
+        assert!(!bare.contains("client_id"));
         assert_eq!(
-            parse_server_line(&accepted_line(9)).unwrap(),
-            ServerMsg::Accepted { request: 9 }
+            parse_server_line(&bare).unwrap(),
+            ServerMsg::Accepted { request: 9, client_id: None }
         );
         assert_eq!(
-            parse_server_line(&rejected_line(100)).unwrap(),
-            ServerMsg::Rejected { retry_after_ms: 100 }
+            parse_server_line(&accepted_line_with(9, Some("r7-9"))).unwrap(),
+            ServerMsg::Accepted { request: 9, client_id: Some("r7-9".into()) }
+        );
+        assert_eq!(
+            parse_server_line(&rejected_line(100, 3)).unwrap(),
+            ServerMsg::Rejected { retry_after_ms: 100, queue_position: 3 }
         );
         assert_eq!(
             parse_server_line(&refused_line("shutting down")).unwrap(),
             ServerMsg::Refused { error: "shutting down".into() }
+        );
+        assert_eq!(
+            parse_server_line(&error_line("malformed request line")).unwrap(),
+            ServerMsg::Error { error: "malformed request line".into() }
+        );
+        assert_eq!(
+            parse_server_line(&migrated_line(4, 1, 0, 2, 3.5)).unwrap(),
+            ServerMsg::Migrated { request: 4, from: 1, to: 0, hops: 2, t: 3.5 }
         );
         assert_eq!(
             parse_server_line(&shutdown_ack_line()).unwrap(),

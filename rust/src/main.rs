@@ -17,9 +17,11 @@
 //!   sart inspect
 
 use anyhow::{bail, Result};
-use sart::config::{Args, LiveConfig, Method, ServeSpec};
+use sart::config::{
+    Args, ListenerTuning, LiveConfig, Method, ReplayConfig, ServeSpec,
+};
 use sart::frontend;
-use sart::metrics::{ttft_split_line, ServeReport};
+use sart::metrics::{live_resilience_line, ttft_split_line, ServeReport};
 use sart::server;
 use sart::util::stats::render_table;
 
@@ -28,6 +30,48 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// SIGTERM observed (set asynchronously by the signal handler; polled by
+/// the listener's watcher thread). Stored rather than acted on — only
+/// async-signal-safe work is allowed inside a handler.
+#[cfg(unix)]
+static SIGTERM_SEEN: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_signum: i32) {
+    SIGTERM_SEEN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Install the SIGTERM flag-setter via libc's `signal` (declared here —
+/// the crate is std-only and this is the one libc symbol it needs; std
+/// itself links libc on unix).
+#[cfg(unix)]
+fn install_sigterm_handler() {
+    extern "C" {
+        fn signal(
+            signum: i32,
+            handler: extern "C" fn(i32),
+        ) -> extern "C" fn(i32);
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm);
+    }
+}
+
+#[cfg(unix)]
+fn sigterm_seen() -> bool {
+    SIGTERM_SEEN.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+#[cfg(not(unix))]
+fn install_sigterm_handler() {}
+
+#[cfg(not(unix))]
+fn sigterm_seen() -> bool {
+    false
 }
 
 fn real_main() -> Result<()> {
@@ -81,6 +125,17 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --time-scale F     wall seconds per virtual second (1.0 real time,
                      0.01 replays 100x faster)
   --max-sessions N   listen: reject submits past N in-flight sessions
+  --idle-timeout S   listen: reap session-less connections idle S seconds
+  --session-queue N  listen: shed `tokens` lines past N queued per session
+                     (terminal lines are never shed; 0 = headers only)
+  --fault-plan/--scale-*  listen: also arm the live fault/scale path —
+                     event times are virtual, mapped via --time-scale
+  --retry-max N      replay: reconnect/resubmit budget per session (0=off;
+                     >0 adds idempotent client ids)
+  --retry-base-ms N  replay: backoff base (doubles per attempt, jittered
+                     50-100% by --seed; server retry_after_ms overrides)
+  --session-deadline S  replay: drop sessions not finalized in S wall
+                     seconds (counted as lost; 0 = none)
   --shutdown         replay: send {\"op\":\"shutdown\"} after the trace
   --json PATH        replay: write the RunOutput record to PATH";
 
@@ -207,19 +262,33 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 /// `sart listen`: bind a socket and serve live NDJSON sessions against
-/// the wall clock until a client sends `{"op":"shutdown"}`.
+/// the wall clock until a client sends `{"op":"shutdown"}` or the
+/// process receives SIGTERM (both drain in-flight sessions first).
 fn cmd_listen(args: &Args) -> Result<()> {
     let spec = ServeSpec::from_args(args)?;
     let live = LiveConfig::from_args(args)?;
+    let tuning = ListenerTuning::from_args(args)?;
     eprintln!("# spec: {spec:?}");
-    let handle = frontend::listen(&spec, &live)?;
+    let handle = frontend::listen_with(&spec, &live, &tuning)?;
     println!("listening on {}", handle.addr());
     println!(
         "time-scale {} (1 virtual second = {} wall seconds), \
          max-sessions {}",
         live.time_scale, live.time_scale, live.max_sessions
     );
-    handle.join()
+    install_sigterm_handler();
+    let watcher = handle.shutdown_handle();
+    std::thread::spawn(move || loop {
+        if sigterm_seen() {
+            eprintln!("# SIGTERM: draining in-flight sessions");
+            watcher.shutdown();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    let res = handle.join();
+    eprintln!("# listener drained and exiting");
+    res
 }
 
 /// `sart replay`: generate the spec's trace and fire it at a live
@@ -228,16 +297,30 @@ fn cmd_listen(args: &Args) -> Result<()> {
 fn cmd_replay(args: &Args) -> Result<()> {
     let spec = ServeSpec::from_args(args)?;
     let live = LiveConfig::from_args(args)?;
+    let replay_cfg = ReplayConfig::from_args(args)?;
     let trace = server::trace_for(&spec)?;
     eprintln!("# replaying {} requests at {}", trace.len(), live.addr);
-    let res =
-        frontend::replay(&live.addr, &trace, live.time_scale, args.flag("shutdown"))?;
+    let res = frontend::replay_with(
+        &live.addr,
+        &trace,
+        live.time_scale,
+        args.flag("shutdown"),
+        &replay_cfg,
+    )?;
     println!(
         "live: {} finalized, {} rejected, {} lost ({} submitted)",
         res.outcomes.len(),
         res.rejected,
         res.requests_lost,
         trace.len()
+    );
+    println!(
+        "{}",
+        live_resilience_line(
+            res.migrated_sessions,
+            res.retries,
+            res.deadline_expired,
+        )
     );
     if !res.outcomes.is_empty() {
         let report =

@@ -267,6 +267,21 @@ pub fn ttft_split_line(outcomes: &[RequestOutcome]) -> String {
     )
 }
 
+/// One-line resilience summary for live replays: how much of the fault
+/// machinery actually fired. All-zero on a clean replay against a
+/// healthy listener — the line still prints so operators can grep for
+/// it unconditionally.
+pub fn live_resilience_line(
+    migrated_sessions: usize,
+    retries: usize,
+    deadline_expired: usize,
+) -> String {
+    format!(
+        "resilience: {migrated_sessions} migrated sessions, {retries} \
+         retries, {deadline_expired} deadline-expired"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -7,11 +7,14 @@
 //! lost, everything finalized, shutdown refusing new work — not about
 //! wall-clock latency values, which depend on machine load.
 
-use sart::config::{Args, LiveConfig, ServeSpec};
+use sart::config::{Args, ListenerTuning, LiveConfig, ServeSpec};
 use sart::frontend::{self, proto};
 use sart::workload::Request;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
 
 fn spec(extra: &str) -> ServeSpec {
     let args = Args::parse(
@@ -182,5 +185,368 @@ fn graceful_shutdown_drains_inflight_and_refuses_new() {
     }
     drop(sessions);
 
+    handle.join().unwrap();
+}
+
+/// Raw connection split into a write half and a line reader, for tests
+/// that need to send arbitrary (including malformed) request lines.
+fn raw_conn(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
+}
+
+fn read_msg(reader: &mut BufReader<TcpStream>) -> Option<proto::ServerMsg> {
+    let mut line = String::new();
+    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+        return None;
+    }
+    Some(proto::parse_server_line(line.trim()).unwrap())
+}
+
+#[test]
+fn protocol_abuse_is_answered_in_band_and_never_fatal() {
+    let s = spec("--method sart:4 --requests 4 --rate 0 --seed 5");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.005, 64)).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Four abusive lines on one connection: not JSON, an unknown op,
+    // truncated JSON, and a line past the 64 KiB cap. Each must come
+    // back as a structured `error` line — never a dropped socket.
+    let (mut w, mut r) = raw_conn(&addr);
+    send_line(&mut w, "this is not json");
+    send_line(&mut w, "{\"op\":\"dance\"}");
+    send_line(&mut w, "{\"op\":\"submit\",\"question\":");
+    let huge =
+        format!("{{\"op\":\"{}\"}}", "x".repeat(frontend::MAX_LINE_BYTES));
+    send_line(&mut w, &huge);
+    for i in 0..4 {
+        match read_msg(&mut r) {
+            Some(proto::ServerMsg::Error { error }) => {
+                assert!(!error.is_empty(), "abuse line {i}: empty error");
+            }
+            other => panic!("abuse line {i}: expected error, got {other:?}"),
+        }
+    }
+
+    // The abused connection still serves a full session.
+    let req = &trace[0];
+    send_line(
+        &mut w,
+        &proto::submit_line(&req.dataset, &req.question, &req.header),
+    );
+    match read_msg(&mut r).expect("accepted after abuse") {
+        proto::ServerMsg::Accepted { .. } => {}
+        other => panic!("expected accepted, got {other:?}"),
+    }
+    let mut finalized = false;
+    while let Some(msg) = read_msg(&mut r) {
+        if matches!(msg, proto::ServerMsg::Finalized { .. }) {
+            finalized = true;
+            break;
+        }
+    }
+    assert!(finalized, "post-abuse session never finalized");
+
+    // A client id already in flight on a *live* connection is an in-band
+    // error on the second connection; the first session is untouched.
+    let (mut w1, mut r1) = raw_conn(&addr);
+    let t1 = &trace[1];
+    send_line(
+        &mut w1,
+        &proto::submit_line_with(&t1.dataset, &t1.question, &t1.header, Some("dup")),
+    );
+    match read_msg(&mut r1).expect("accepted") {
+        proto::ServerMsg::Accepted { client_id, .. } => {
+            assert_eq!(client_id.as_deref(), Some("dup"));
+        }
+        other => panic!("expected accepted, got {other:?}"),
+    }
+    let (mut w2, mut r2) = raw_conn(&addr);
+    let t2 = &trace[2];
+    send_line(
+        &mut w2,
+        &proto::submit_line_with(&t2.dataset, &t2.question, &t2.header, Some("dup")),
+    );
+    match read_msg(&mut r2).expect("duplicate-id answer") {
+        proto::ServerMsg::Error { error } => {
+            assert!(error.contains("in flight"), "error: {error}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    let mut finalized = false;
+    while let Some(msg) = read_msg(&mut r1) {
+        if matches!(msg, proto::ServerMsg::Finalized { .. }) {
+            finalized = true;
+            break;
+        }
+    }
+    assert!(finalized, "first `dup` session must be unaffected");
+    drop((w, r, w1, r1, w2, r2));
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn mid_session_disconnect_reclaims_slot_and_counts_abort() {
+    let s = spec("--method sart:4 --requests 2 --rate 0 --seed 11");
+    let trace = sart::server::trace_for(&s).unwrap();
+    // One-session table: the second submit only fits if the first —
+    // whose client vanishes mid-stream — gets reaped, not leaked.
+    let handle = frontend::listen(&s, &live(0.1, 1)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut doomed = RawSession::submit(&addr, &trace[0]);
+    match doomed.next_msg().expect("accepted") {
+        proto::ServerMsg::Accepted { .. } => {}
+        other => panic!("expected accepted, got {other:?}"),
+    }
+    drop(doomed); // socket dies mid-decode, no goodbye
+
+    // The core notices the dead socket on its next event push, reclaims
+    // the table slot, and counts the abort.
+    let t0 = Instant::now();
+    while handle.session_aborted() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "session_aborted never incremented after client disconnect"
+        );
+        thread::sleep(Duration::from_millis(10));
+    }
+
+    // The freed slot admits and serves a fresh session to completion.
+    let mut next = RawSession::submit(&addr, &trace[1]);
+    match next.next_msg().expect("accepted in reclaimed slot") {
+        proto::ServerMsg::Accepted { .. } => {}
+        other => panic!("expected accepted, got {other:?}"),
+    }
+    let mut finalized = false;
+    while let Some(msg) = next.next_msg() {
+        if matches!(msg, proto::ServerMsg::Finalized { .. }) {
+            finalized = true;
+            break;
+        }
+    }
+    assert!(finalized, "reclaimed slot never served");
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn replica_failure_migrates_sessions_without_closing_sockets() {
+    // Two replicas, 16 sessions arriving in one burst, replica 1 killed
+    // at virtual t = 0.75 — well inside the burst's service time. The
+    // clients are legacy single-shot connections with no retry budget,
+    // so zero lost sessions proves the migration happened *without*
+    // closing any socket.
+    let s = spec(
+        "--method sart:4 --requests 16 --rate 0 --seed 13 --replicas 2 \
+         --fault-plan fail@0.75:1",
+    );
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.1, 64)).unwrap();
+    let addr = handle.addr().to_string();
+    let res = frontend::replay(&addr, &trace, 0.1, true).unwrap();
+    handle.join().unwrap();
+
+    assert_eq!(res.requests_lost, 0, "migration must not lose sessions");
+    assert_eq!(res.rejected, 0);
+    assert_eq!(res.outcomes.len(), 16);
+    assert!(
+        res.migrated_sessions >= 1,
+        "failing a replica mid-burst must migrate at least one session"
+    );
+    // The client-side tally (migrated lines seen) and the server-side
+    // outcome records (redispatch hops) must agree.
+    let redispatched =
+        res.outcomes.iter().filter(|o| o.redispatches > 0).count();
+    assert_eq!(redispatched, res.migrated_sessions);
+}
+
+#[test]
+fn pipelined_submits_multiplex_one_connection() {
+    let s = spec("--method sart:4 --requests 3 --rate 0 --seed 17");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let handle = frontend::listen(&s, &live(0.01, 64)).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Three pipelined submits on one socket, correlated by client id.
+    let (mut w, mut r) = raw_conn(&addr);
+    for (i, req) in trace.iter().enumerate() {
+        send_line(
+            &mut w,
+            &proto::submit_line_with(
+                &req.dataset,
+                &req.question,
+                &req.header,
+                Some(&format!("c{i}")),
+            ),
+        );
+    }
+    let mut accepted: HashMap<String, usize> = HashMap::new();
+    let mut finalized: HashMap<usize, usize> = HashMap::new();
+    while let Some(msg) = read_msg(&mut r) {
+        match msg {
+            proto::ServerMsg::Accepted { request, client_id } => {
+                let cid = client_id.expect("accepted must echo client id");
+                assert!(
+                    accepted.insert(cid, request).is_none(),
+                    "client id accepted twice"
+                );
+            }
+            proto::ServerMsg::Finalized { request, .. } => {
+                *finalized.entry(request).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+    // EOF only once every session on the connection finalized.
+    assert_eq!(accepted.len(), 3);
+    let mut ids: Vec<usize> = accepted.values().copied().collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3, "sessions must get distinct request ids");
+    for (cid, id) in &accepted {
+        assert_eq!(
+            finalized.get(id),
+            Some(&1),
+            "session {cid} (request {id}) must finalize exactly once"
+        );
+    }
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn reconnect_and_resubmit_dedups_by_client_id() {
+    let s = spec("--method sart:4 --requests 1 --rate 0 --seed 23");
+    let trace = sart::server::trace_for(&s).unwrap();
+    let req = &trace[0];
+    // Slow enough (wall e2e well past the reconnect) that the session is
+    // still in flight when the client comes back.
+    let handle = frontend::listen(&s, &live(0.2, 8)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let (mut w, mut r) = raw_conn(&addr);
+    send_line(
+        &mut w,
+        &proto::submit_line_with(&req.dataset, &req.question, &req.header, Some("cid-0")),
+    );
+    let first_id = match read_msg(&mut r).expect("accepted") {
+        proto::ServerMsg::Accepted { request, client_id } => {
+            assert_eq!(client_id.as_deref(), Some("cid-0"));
+            request
+        }
+        other => panic!("expected accepted, got {other:?}"),
+    };
+    drop((w, r)); // connection lost mid-stream
+
+    // Reconnect and resubmit under the same client id: the server
+    // reattaches to the in-flight session (same request id) instead of
+    // dispatching the work twice. The old socket's death is noticed
+    // asynchronously, so a transient duplicate-id error gets retried.
+    let mut attempt = 0;
+    let (reattached_id, mut r2) = loop {
+        attempt += 1;
+        assert!(attempt <= 50, "reattach never succeeded");
+        let (mut w2, mut r2) = raw_conn(&addr);
+        send_line(
+            &mut w2,
+            &proto::submit_line_with(
+                &req.dataset,
+                &req.question,
+                &req.header,
+                Some("cid-0"),
+            ),
+        );
+        match read_msg(&mut r2).expect("reattach answer") {
+            proto::ServerMsg::Accepted { request, client_id } => {
+                assert_eq!(client_id.as_deref(), Some("cid-0"));
+                break (request, r2);
+            }
+            proto::ServerMsg::Error { .. } => {
+                thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("expected accepted or error, got {other:?}"),
+        }
+    };
+    assert_eq!(reattached_id, first_id, "resubmit must dedup, not redo");
+    let mut finals = 0;
+    while let Some(msg) = read_msg(&mut r2) {
+        if let proto::ServerMsg::Finalized { request, outcome, .. } = msg {
+            assert_eq!(request, first_id);
+            assert_eq!(outcome.id, first_id);
+            finals += 1;
+        }
+    }
+    assert_eq!(finals, 1, "exactly one finalized after reattach");
+
+    // A resubmit after completion replays the retained record — the
+    // work is not dispatched a second time.
+    let (mut w3, mut r3) = raw_conn(&addr);
+    send_line(
+        &mut w3,
+        &proto::submit_line_with(&req.dataset, &req.question, &req.header, Some("cid-0")),
+    );
+    match read_msg(&mut r3).expect("replayed accepted") {
+        proto::ServerMsg::Accepted { request, .. } => {
+            assert_eq!(request, first_id);
+        }
+        other => panic!("expected accepted, got {other:?}"),
+    }
+    let mut replayed = false;
+    while let Some(msg) = read_msg(&mut r3) {
+        if let proto::ServerMsg::Finalized { request, .. } = msg {
+            assert_eq!(request, first_id);
+            replayed = true;
+        }
+    }
+    assert!(replayed, "retained finalized line must replay");
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn slow_reader_sheds_tokens_but_never_terminal_lines() {
+    let s = spec("--method sart:4 --requests 1 --rate 0 --seed 29");
+    let trace = sart::server::trace_for(&s).unwrap();
+    // A zero-depth session queue is the deterministic slow reader: every
+    // `tokens` line sheds; control and terminal lines still land.
+    let tuning =
+        ListenerTuning { session_queue: 0, ..ListenerTuning::default() };
+    let handle = frontend::listen_with(&s, &live(0.01, 8), &tuning).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut sess = RawSession::submit(&addr, &trace[0]);
+    let mut saw_admitted = false;
+    let mut saw_tokens = false;
+    let mut fin = None;
+    while let Some(msg) = sess.next_msg() {
+        match msg {
+            proto::ServerMsg::Admitted { .. } => saw_admitted = true,
+            proto::ServerMsg::Tokens { .. } => saw_tokens = true,
+            proto::ServerMsg::Finalized { shed, outcome, .. } => {
+                fin = Some((shed, outcome));
+            }
+            _ => {}
+        }
+    }
+    let (shed, outcome) = fin.expect("finalized despite shedding");
+    assert!(saw_admitted, "admitted is a control line, never shed");
+    assert!(!saw_tokens, "queue depth 0 must shed every tokens line");
+    assert!(shed > 0, "finalized must report the shed count");
+    assert!(outcome.tokens_generated > 0);
+
+    handle.shutdown();
     handle.join().unwrap();
 }

@@ -54,6 +54,13 @@ Gates (bench name → assertions)
   (virtual p99 × time-scale): stepping granularity, socket hops and
   thread scheduling may stretch the tail at an aggressive time scale,
   not blow it up.
+* ``live_faults``: ``live_faults_requests_lost == 0`` — killing a
+  replica under the wall-clock listener must lose no sessions (in-flight
+  work re-dispatches to survivors without closing client sockets);
+  ``live_faults_migrated_sessions >= 1`` — the scripted failure must
+  actually hit in-flight sessions (otherwise the loss-free gate is
+  vacuous); ``live_faulted_vs_clean_p99_ratio < 10.0`` — the faulted
+  replay's p99 wall e2e stays within 10x the clean replay's.
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -245,6 +252,37 @@ def gate_serving(doc: dict, path: str) -> None:
         )
 
 
+def gate_live_faults(doc: dict, path: str) -> None:
+    lost = _metric(doc, path, "live_faults_requests_lost")
+    if lost != 0.0:
+        _fail(
+            path,
+            f"live_faults_requests_lost = {lost:.0f}: a replica failure "
+            "under the live listener must be loss-free — every in-flight "
+            "session re-dispatches to a survivor without its socket "
+            "closing (did the core drop the drain list, or close a "
+            "connection on migration?)",
+        )
+    migrated = _metric(doc, path, "live_faults_migrated_sessions")
+    if not migrated >= 1.0:
+        _fail(
+            path,
+            f"live_faults_migrated_sessions = {migrated:.0f}: the scripted "
+            "failure hit no in-flight session, so the loss-free gate "
+            "proved nothing (did the fault plan fire before arrivals, or "
+            "after the burst drained?)",
+        )
+    ratio = _metric(doc, path, "live_faulted_vs_clean_p99_ratio")
+    if not ratio < 10.0:
+        _fail(
+            path,
+            f"live_faulted_vs_clean_p99_ratio = {ratio:.3f}: the faulted "
+            "replay's p99 wall e2e must stay within 10x the clean "
+            "replay's (are migrated sessions re-queued at the failure "
+            "time, or is the core still stepping the dead replica?)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
@@ -252,6 +290,7 @@ GATES = {
     "gossip": gate_gossip,
     "faults": gate_faults,
     "serving": gate_serving,
+    "live_faults": gate_live_faults,
 }
 
 

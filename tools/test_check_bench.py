@@ -264,6 +264,65 @@ class TestServingGate(CheckBenchCase):
         self.assertIn("serving_requests_lost", err)
 
 
+def live_faults_metrics(**overrides):
+    metrics = {
+        "live_faults_requests_lost": 0.0,
+        "live_faults_migrated_sessions": 4.0,
+        "live_faulted_vs_clean_p99_ratio": 1.8,
+    }
+    metrics.update(overrides)
+    return metrics
+
+
+class TestLiveFaultsGate(CheckBenchCase):
+    def test_live_faults_gate_passes_on_good_report(self):
+        doc = report(bench="live_faults", metrics=live_faults_metrics())
+        path = self.write("BENCH_live_faults.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `live_faults`: PASS", out)
+
+    def test_live_faults_gate_fails_on_any_lost_session(self):
+        doc = report(
+            bench="live_faults",
+            metrics=live_faults_metrics(live_faults_requests_lost=1.0),
+        )
+        path = self.write("BENCH_live_faults.json", doc)
+        code, out, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gate `live_faults`: FAIL", out)
+        self.assertIn("live_faults_requests_lost", err)
+
+    def test_live_faults_gate_fails_when_no_session_migrated(self):
+        doc = report(
+            bench="live_faults",
+            metrics=live_faults_metrics(live_faults_migrated_sessions=0.0),
+        )
+        path = self.write("BENCH_live_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("live_faults_migrated_sessions", err)
+
+    def test_live_faults_gate_fails_at_ratio_ceiling(self):
+        doc = report(
+            bench="live_faults",
+            metrics=live_faults_metrics(
+                live_faulted_vs_clean_p99_ratio=10.0
+            ),
+        )
+        path = self.write("BENCH_live_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("live_faulted_vs_clean_p99_ratio", err)
+
+    def test_live_faults_gate_fails_on_missing_metric(self):
+        doc = report(bench="live_faults", metrics={})
+        path = self.write("BENCH_live_faults.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("live_faults_requests_lost", err)
+
+
 class TestRequire(CheckBenchCase):
     def test_require_fails_on_missing_bench(self):
         path = self.write("BENCH_scheduler.json", report())
