@@ -19,7 +19,7 @@
 //!
 //!     cargo bench --bench chunked_prefill
 
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::prm::OraclePrm;
 use sart::testkit::bench::{self, BenchReport};
@@ -58,11 +58,8 @@ fn serve(chunk: usize, budget: usize) -> sart::coordinator::ServeResult {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: KV_TOKENS,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: chunk,
-        max_batched_prefill_tokens: budget,
+        kv: KvConfig::new(KV_TOKENS, 16)
+            .with_chunked_prefill(chunk, budget),
         seed: SEED,
     };
     let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 1.0, 6, 5);

@@ -17,7 +17,7 @@
 //!     cargo bench --bench cluster_dispatch
 
 use sart::cluster::{serve_cluster, ClusterConfig, ClusterResult, LbPolicy};
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
 use sart::prm::{OraclePrm, PrmScorer};
@@ -41,11 +41,7 @@ fn sched_cfg() -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: KV_TOKENS,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(KV_TOKENS, 16),
         seed: SEED,
     }
 }

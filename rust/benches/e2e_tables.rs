@@ -33,6 +33,8 @@ fn spec() -> ServeSpec {
         prefix_cache_pages: 0,
         prefill_chunk_tokens: 0,
         max_batched_prefill_tokens: 0,
+        kv_stream: false,
+        kv_preempt: false,
         prefix_share: 0.0,
         prefix_templates: 3,
         prefix_shots: 3,

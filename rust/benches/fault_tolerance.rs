@@ -33,7 +33,7 @@ use sart::cluster::{
     serve_cluster, ClusterConfig, ClusterResult, FaultPlan, LbPolicy,
     ScaleConfig,
 };
-use sart::coordinator::{Policy, SchedConfig};
+use sart::coordinator::{KvConfig, Policy, SchedConfig};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
 use sart::metrics::ServeReport;
@@ -60,11 +60,8 @@ fn sched_cfg() -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: KV_TOKENS,
-        kv_page_tokens: 16,
-        prefix_cache_pages: CACHE_PAGES,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(KV_TOKENS, 16)
+            .with_prefix_cache(CACHE_PAGES),
         seed: SEED,
     }
 }
@@ -146,6 +143,7 @@ fn main() {
             min_live: 2,
             scale_up_queue: 3,
             scale_up_prefill_tokens: 0,
+            scale_up_pressure: 0.0,
             scale_down_queue: 1,
             cooldown_arrivals: 4,
         }),

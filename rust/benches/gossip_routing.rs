@@ -22,7 +22,7 @@
 //!     cargo bench --bench gossip_routing
 
 use sart::cluster::{serve_cluster, ClusterConfig, ClusterResult, LbPolicy};
-use sart::coordinator::{Policy, SchedConfig};
+use sart::coordinator::{KvConfig, Policy, SchedConfig};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
 use sart::prm::{OraclePrm, PrmScorer};
@@ -50,11 +50,8 @@ fn sched_cfg() -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: KV_TOKENS,
-        kv_page_tokens: 16,
-        prefix_cache_pages: CACHE_PAGES,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(KV_TOKENS, 16)
+            .with_prefix_cache(CACHE_PAGES),
         seed: SEED,
     }
 }

@@ -9,7 +9,7 @@
 //!
 //!     cargo bench --bench kvcache_ops
 
-use sart::kvcache::KvCacheManager;
+use sart::kvcache::{AdmissionOutcome, AdmissionRequest, KvCacheManager};
 use sart::testkit::bench::{self, BenchReport};
 use sart::util::rng::Rng;
 
@@ -17,10 +17,16 @@ fn main() {
     println!("== kvcache_ops ==");
     let mut report = BenchReport::new("kvcache");
 
+    let prompt: Vec<i32> = (0..27).collect();
+
     report.push(bench::run("admit+release 8-branch request", 100, 5000, || {
         let mut kv = KvCacheManager::new(16384, 16);
-        let (_, bs) = kv.admit(27, 224, 8).unwrap();
-        for b in bs {
+        let adm = kv
+            .admit(&AdmissionRequest::monolithic(&prompt, 224, 8))
+            .unwrap()
+            .into_admission()
+            .unwrap();
+        for b in adm.branches {
             kv.release_branch(b).unwrap();
         }
     }));
@@ -30,8 +36,11 @@ fn main() {
     let mut live = Vec::new();
     let mut rng = Rng::new(0);
     for _ in 0..40 {
-        if let Ok((_, bs)) = kv.admit(27, 224, 4) {
-            live.extend(bs);
+        if let AdmissionOutcome::Admitted(adm) = kv
+            .admit(&AdmissionRequest::monolithic(&prompt, 224, 4))
+            .unwrap()
+        {
+            live.extend(adm.branches);
         }
     }
     report.push(bench::run("steady-state admit/release churn", 100, 5000, || {
@@ -39,9 +48,11 @@ fn main() {
             let i = rng.below(live.len());
             let b = live.swap_remove(i);
             kv.release_branch(b).unwrap();
-        } else if kv.can_admit(27, 224, 4) {
-            let (_, bs) = kv.admit(27, 224, 4).unwrap();
-            live.extend(bs);
+        } else if let AdmissionOutcome::Admitted(adm) = kv
+            .admit(&AdmissionRequest::monolithic(&prompt, 224, 4))
+            .unwrap()
+        {
+            live.extend(adm.branches);
         }
     }));
 
@@ -52,8 +63,13 @@ fn main() {
         std::hint::black_box(kv.live_decoded_tokens());
     }));
 
-    report.push(bench::run("can_admit check", 100, 20000, || {
-        std::hint::black_box(kv.can_admit(27, 224, 8));
+    // The side-effect-free path: an oversized request is always
+    // Deferred, so the probe mutates nothing (the old `can_admit`).
+    report.push(bench::run("deferred admission probe", 100, 20000, || {
+        let out = kv
+            .admit(&AdmissionRequest::monolithic(&prompt, 1 << 20, 8))
+            .unwrap();
+        std::hint::black_box(out.is_deferred());
     }));
 
     report.push(bench::run("invariant check (diagnostic path)", 10, 2000, || {

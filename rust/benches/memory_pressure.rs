@@ -1,0 +1,150 @@
+//! Bench: serving under memory pressure — stream-aware admission plus
+//! reward-driven preemption vs all-or-nothing admission at the *same*
+//! tight page budget.
+//!
+//! The workload keeps the budget the bottleneck: every prompt carries a
+//! cold 5-shot header (cache off, ~17 pages) ahead of a 4-branch SART
+//! request (4 x 14 reserved pages), under a budget that holds barely one
+//! request whole. All-or-nothing admission must wait for the whole
+//! uncovered suffix plus reservations to fit; streamed admission enters
+//! once the first chunk fits and grows its pledge as the prompt streams,
+//! and preemption reclaims the lowest-reward running branches when an
+//! admission still falls short.
+//!
+//! Recorded in `BENCH_pressure.json` (schema in EXPERIMENTS.md §Reading
+//! BENCH_pressure.json), gated by `tools/check_bench.py`:
+//!
+//! * `pressure_requests_lost` — must be 0: swapping branches out and
+//!   recomputing them on resume may never drop a request.
+//! * `pressure_admitted_at_budget_ratio` — requests admitted by the
+//!   baseline's median admission time, pressure / baseline. Must stay
+//!   > 1.0: the pressure path admits strictly more with the same pages.
+//!
+//!     cargo bench --bench memory_pressure
+
+use sart::coordinator::{
+    ClockHandle, KvConfig, Policy, SchedConfig, Scheduler, ServeResult,
+};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::prm::OraclePrm;
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::clock::SimClock;
+use sart::workload::{templated_trace, TaskSpec};
+
+const SLOTS: usize = 8;
+// 96 pages x 16 tokens: one headered 4-branch request (~73 pages) fits
+// whole, a second only via streaming + preemption.
+const KV_TOKENS: usize = 96 * 16;
+const SEED: u64 = 23;
+const N_REQUESTS: usize = 48;
+const RATE: f64 = 6.0;
+const CHUNK: usize = 32;
+const BUDGET: usize = 64;
+
+fn spec() -> TaskSpec {
+    TaskSpec::synth_gaokao()
+}
+
+fn serve(stream: bool, preempt: bool) -> ServeResult {
+    // Cold 5-shot headers (~240 tokens + question): prompt bucket must
+    // exceed the default 256, and the engine must hold prompt + max_new.
+    let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 1.0, 6, 5);
+    let mut engine = SimEngine::new(
+        SLOTS,
+        560,
+        spec(),
+        SimCostModel { prefill_per_token: 0.2e-3, ..SimCostModel::default() },
+    );
+    engine.set_prompt_bucket(288);
+    let mut prm = OraclePrm::new(0.08, SEED ^ 7);
+    let cfg = SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv: KvConfig::new(KV_TOKENS, 16)
+            .with_chunked_prefill(CHUNK, BUDGET)
+            .with_stream_admission(stream)
+            .with_preemption(preempt),
+        seed: SEED,
+    };
+    let mut sched = Scheduler::new(
+        cfg,
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.serve(&trace).expect("pressure serve")
+}
+
+fn makespan(res: &ServeResult) -> f64 {
+    res.outcomes.iter().map(|o| o.finished_at).fold(0.0f64, f64::max)
+}
+
+fn main() {
+    println!(
+        "== memory_pressure ({SLOTS} slots, {N_REQUESTS} requests, \
+         {} kv pages) ==",
+        KV_TOKENS / 16
+    );
+    let mut report = BenchReport::new("pressure");
+
+    let base = serve(false, false);
+    let pressure = serve(true, true);
+
+    let base_lost = N_REQUESTS - base.outcomes.len();
+    let pressure_lost = N_REQUESTS - pressure.outcomes.len();
+    assert_eq!(pressure_lost, 0, "pressure serve dropped requests");
+    assert_eq!(base_lost, 0, "baseline serve dropped requests");
+
+    // Admission horizon: the baseline's median admission time. The
+    // pressure path must have admitted strictly more requests by then —
+    // same pages, earlier entry.
+    let mut admitted: Vec<f64> =
+        base.outcomes.iter().map(|o| o.admitted_at).collect();
+    admitted.sort_by(f64::total_cmp);
+    let horizon = admitted[admitted.len() / 2];
+    let by_horizon = |res: &ServeResult| {
+        res.outcomes.iter().filter(|o| o.admitted_at <= horizon).count()
+    };
+    let base_admits = by_horizon(&base);
+    let pressure_admits = by_horizon(&pressure);
+    let ratio = pressure_admits as f64 / base_admits.max(1) as f64;
+    assert!(
+        ratio > 1.0,
+        "streamed + preempting admission must beat all-or-nothing at the \
+         same budget: {pressure_admits} vs {base_admits} by t={horizon:.2}s"
+    );
+
+    let preemptions: usize =
+        pressure.outcomes.iter().map(|o| o.preemptions).sum();
+    let mk_base = makespan(&base);
+    let mk_pressure = makespan(&pressure);
+    println!(
+        "admitted by t={horizon:.2}s: pressure {pressure_admits} vs \
+         baseline {base_admits} (ratio {ratio:.3}, must stay > 1.0)"
+    );
+    println!(
+        "preemptions {preemptions}, makespan pressure {mk_pressure:.2}s \
+         vs baseline {mk_base:.2}s, lost {pressure_lost}/{base_lost}"
+    );
+
+    report.metric("pressure_requests_lost", pressure_lost as f64);
+    report.metric("baseline_requests_lost", base_lost as f64);
+    report.metric("pressure_admitted_at_budget_ratio", ratio);
+    report.metric("admission_horizon_seconds", horizon);
+    report.metric("pressure_admits_by_horizon", pressure_admits as f64);
+    report.metric("baseline_admits_by_horizon", base_admits as f64);
+    report.metric("pressure_preemptions_total", preemptions as f64);
+    report.metric("pressure_makespan_seconds", mk_pressure);
+    report.metric("baseline_makespan_seconds", mk_base);
+
+    report.push(bench::run("serve 48 reqs all-or-nothing (96 pages)", 1, 5, || {
+        std::hint::black_box(serve(false, false));
+    }));
+    report.push(bench::run("serve 48 reqs streamed+preempt (96 pages)", 1, 5, || {
+        std::hint::black_box(serve(true, true));
+    }));
+
+    report.write().expect("writing BENCH_pressure.json");
+}

@@ -21,16 +21,16 @@
 //!    pages already live. The headline `aff_vs_p2c_hit_rate_delta` must
 //!    stay > 0.
 //!
-//! The kv-level micro rows time warm/cold `admit_tokens` against the
+//! The kv-level micro rows time warm/cold monolithic admission against the
 //! scalar `admit` baseline.
 //!
 //!     cargo bench --bench prefix_cache
 
 use sart::cluster::{serve_cluster, ClusterConfig, LbPolicy};
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
-use sart::kvcache::KvCacheManager;
+use sart::kvcache::{AdmissionRequest, KvCacheManager};
 use sart::prm::{OraclePrm, PrmScorer};
 use sart::testkit::bench::{self, BenchReport};
 use sart::util::clock::SimClock;
@@ -59,11 +59,8 @@ fn sched_cfg(prefix_cache_pages: usize) -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: KV_TOKENS,
-        kv_page_tokens: 16,
-        prefix_cache_pages,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(KV_TOKENS, 16)
+            .with_prefix_cache(prefix_cache_pages),
         seed: SEED,
     }
 }
@@ -200,21 +197,33 @@ fn main() {
     let header: Vec<i32> = (1000..1000 + 128).collect();
     let mut kv = KvCacheManager::with_prefix_cache(KV_TOKENS, 16, CACHE_PAGES);
     // Warm the tree once so the timed admissions hit.
-    let seed_adm = kv.admit_tokens(&header, 32, 1).unwrap();
+    let seed_adm = kv
+        .admit(&AdmissionRequest::monolithic(&header, 32, 1))
+        .unwrap()
+        .into_admission()
+        .unwrap();
     for b in seed_adm.branches {
         kv.release_branch(b).unwrap();
     }
-    report.push(bench::run("admit_tokens warm (8-page hit)", 100, 5000, || {
-        let adm = kv.admit_tokens(&header, 32, 1).unwrap();
+    report.push(bench::run("monolithic admit warm (8-page hit)", 100, 5000, || {
+        let adm = kv
+            .admit(&AdmissionRequest::monolithic(&header, 32, 1))
+            .unwrap()
+            .into_admission()
+            .unwrap();
         std::hint::black_box(adm.cached_tokens);
         for b in adm.branches {
             kv.release_branch(b).unwrap();
         }
     }));
     let mut cold_kv = KvCacheManager::new(KV_TOKENS, 16);
-    report.push(bench::run("scalar admit baseline (cache off)", 100, 5000, || {
-        let (_, bs) = cold_kv.admit(128, 32, 1).unwrap();
-        for b in bs {
+    report.push(bench::run("monolithic admit baseline (cache off)", 100, 5000, || {
+        let adm = cold_kv
+            .admit(&AdmissionRequest::monolithic(&header, 32, 1))
+            .unwrap()
+            .into_admission()
+            .unwrap();
+        for b in adm.branches {
             cold_kv.release_branch(b).unwrap();
         }
     }));

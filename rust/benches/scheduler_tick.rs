@@ -15,7 +15,7 @@
 //!
 //!     cargo bench --bench scheduler_tick
 
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::prm::OraclePrm;
 use sart::testkit::bench::{self, BenchReport};
@@ -38,11 +38,7 @@ fn serve_once(
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: kv_tokens,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(kv_tokens, 16),
         seed: 42,
     };
     let mut sched =

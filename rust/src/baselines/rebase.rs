@@ -16,7 +16,7 @@
 
 use crate::coordinator::{ClockHandle, RequestOutcome};
 use crate::engine::{Engine, PrefillEntry, ReplayEntry, SlotId};
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{AdmissionRequest, KvCacheManager};
 use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
 use crate::tokenizer as tok;
@@ -280,10 +280,12 @@ impl<'e> RebaseScheduler<'e> {
                     .iter()
                     .map(|c| c.2)
                     .collect(),
-                // Rebase never consults the cross-request cache and has
-                // no cluster path, so neither field can be non-zero.
+                // Rebase never consults the cross-request cache, has no
+                // cluster path and never preempts, so none of these can
+                // be non-zero.
                 cached_prompt_tokens: 0,
                 redispatches: 0,
+                preemptions: 0,
             });
         }
         self.kv.check_invariants()?;
@@ -329,16 +331,22 @@ impl<'e> RebaseScheduler<'e> {
         {
             let n = self.cfg.n_leaves;
             let prompt = self.requests[ridx].question.prompt_tokens();
-            if !self.kv.can_admit(prompt.len(), self.cfg.max_new, n) {
+            let Some(adm) = self
+                .kv
+                .admit(&AdmissionRequest::monolithic(
+                    &prompt,
+                    self.cfg.max_new,
+                    n,
+                ))?
+                .admitted()
+            else {
                 break;
-            }
+            };
             self.request_queue.pop_front();
-            let (prefix, kvbs) =
-                self.kv.admit(prompt.len(), self.cfg.max_new, n)?;
             let req = &mut self.requests[ridx];
             req.admitted_at = Some(now);
-            req.prefix = Some(prefix);
-            for kvb in kvbs {
+            req.prefix = Some(adm.prefix);
+            for kvb in adm.branches {
                 let seed = self.rng.next_u64();
                 req.leaves.push(Leaf {
                     status: LeafStatus::Queued,
@@ -547,13 +555,18 @@ impl<'e> RebaseScheduler<'e> {
                 if fork.is_empty() {
                     break; // nothing worth inheriting yet
                 }
-                let Ok(kvbs) = self.kv.grow(
-                    self.requests[ridx].prefix.unwrap(),
-                    self.cfg.max_new,
-                    1,
-                ) else {
+                let Some(grown) = self
+                    .kv
+                    .admit(&AdmissionRequest::grow(
+                        self.requests[ridx].prefix.unwrap(),
+                        self.cfg.max_new,
+                        1,
+                    ))?
+                    .admitted()
+                else {
                     break; // memory-gated
                 };
+                let kvbs = grown.branches;
                 let seed = self.rng.next_u64();
                 let prompt = self.requests[ridx].question.prompt_tokens();
                 let req = &mut self.requests[ridx];

@@ -103,6 +103,13 @@ pub struct ScaleConfig {
     /// Also scale up when Σ pending prefill tokens exceeds this
     /// (0 disables the prefill-backlog trigger).
     pub scale_up_prefill_tokens: usize,
+    /// Also scale up when any live replica's KV pressure — (used +
+    /// pledged) / capacity pages — exceeds this (`--scale-pressure`;
+    /// 0.0 disables the trigger). A saturated cache stalls streamed
+    /// admissions and triggers preemptions long before the queue deepens,
+    /// so memory pressure is a leading indicator the queue-depth
+    /// thresholds lag.
+    pub scale_up_pressure: f64,
     /// Scale down when Σ requests-in-system < this × live replicas
     /// (0 disables scale-down). Must stay below `scale_up_queue`.
     pub scale_down_queue: usize,
@@ -112,18 +119,22 @@ pub struct ScaleConfig {
 
 impl ScaleConfig {
     /// Scale-up decision from the controller's inputs: Σ
-    /// requests-in-system and Σ pending prefill tokens over the `live`
-    /// currently-live replicas. Pure so the virtual-time dispatcher and
-    /// the wall-clock listener share one threshold definition.
+    /// requests-in-system, Σ pending prefill tokens, and the worst
+    /// per-replica KV pressure over the `live` currently-live replicas.
+    /// Pure so the virtual-time dispatcher and the wall-clock listener
+    /// share one threshold definition.
     pub fn wants_scale_up(
         &self,
         queued: usize,
         prefill_backlog: usize,
+        max_kv_pressure: f64,
         live: usize,
     ) -> bool {
         queued > self.scale_up_queue * live
             || (self.scale_up_prefill_tokens > 0
                 && prefill_backlog > self.scale_up_prefill_tokens)
+            || (self.scale_up_pressure > 0.0
+                && max_kv_pressure > self.scale_up_pressure)
     }
 
     /// Scale-down decision (the other edge of the hysteresis band);
@@ -147,6 +158,13 @@ impl ScaleConfig {
                  — no hysteresis band means the controller flaps",
                 self.scale_down_queue,
                 self.scale_up_queue
+            );
+        }
+        if !(0.0..=1.0).contains(&self.scale_up_pressure) {
+            bail!(
+                "scale_up_pressure must be in [0, 1] (a fraction of the \
+                 page budget), got {}",
+                self.scale_up_pressure
             );
         }
         Ok(())
@@ -228,15 +246,22 @@ mod tests {
             min_live: 1,
             scale_up_queue: 4,
             scale_up_prefill_tokens: 100,
+            scale_up_pressure: 0.9,
             scale_down_queue: 2,
             cooldown_arrivals: 0,
         };
         // Queue trigger: strictly above up-threshold × live.
-        assert!(!sc.wants_scale_up(8, 0, 2));
-        assert!(sc.wants_scale_up(9, 0, 2));
+        assert!(!sc.wants_scale_up(8, 0, 0.0, 2));
+        assert!(sc.wants_scale_up(9, 0, 0.0, 2));
         // Prefill-backlog trigger is independent of queue depth.
-        assert!(sc.wants_scale_up(0, 101, 2));
-        assert!(!sc.wants_scale_up(0, 100, 2));
+        assert!(sc.wants_scale_up(0, 101, 0.0, 2));
+        assert!(!sc.wants_scale_up(0, 100, 0.0, 2));
+        // KV-pressure trigger: strictly above the threshold, and 0.0
+        // disables it.
+        assert!(sc.wants_scale_up(0, 0, 0.95, 2));
+        assert!(!sc.wants_scale_up(0, 0, 0.9, 2));
+        let no_pressure = ScaleConfig { scale_up_pressure: 0.0, ..sc };
+        assert!(!no_pressure.wants_scale_up(0, 0, 1.0, 2));
         // Scale-down: strictly below down-threshold × live, floored.
         assert!(sc.wants_scale_down(3, 2));
         assert!(!sc.wants_scale_down(4, 2));
@@ -247,7 +272,8 @@ mod tests {
         // down (the hysteresis band validate() enforces).
         for q in 0..32 {
             assert!(
-                !(sc.wants_scale_up(q, 0, 2) && sc.wants_scale_down(q, 2)),
+                !(sc.wants_scale_up(q, 0, 0.0, 2)
+                    && sc.wants_scale_down(q, 2)),
                 "flapping at queued={q}"
             );
         }
@@ -259,6 +285,7 @@ mod tests {
             min_live: 2,
             scale_up_queue: 6,
             scale_up_prefill_tokens: 0,
+            scale_up_pressure: 0.0,
             scale_down_queue: 2,
             cooldown_arrivals: 8,
         };
@@ -268,6 +295,12 @@ mod tests {
         assert!(
             ScaleConfig { scale_down_queue: 6, ..ok }.validate().is_err(),
             "down threshold touching up threshold must be rejected"
+        );
+        assert!(
+            ScaleConfig { scale_up_pressure: 1.5, ..ok }
+                .validate()
+                .is_err(),
+            "pressure threshold above 1.0 must be rejected"
         );
     }
 }

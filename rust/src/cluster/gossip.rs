@@ -212,7 +212,9 @@ impl DigestTable {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::{prompt_page_digests, KvCacheManager};
+    use crate::kvcache::{
+        prompt_page_digests, AdmissionRequest, KvCacheManager,
+    };
 
     fn prompt(base: i32, len: usize) -> Vec<Token> {
         (base..base + len as i32).collect()
@@ -338,7 +340,11 @@ mod tests {
         shared.extend(prompt(700, 32)); // 4 pages: 2 shared + 2 tail
         let other = prompt(300, 48);
         for p in [&shared, &other] {
-            let a = kv.admit_tokens(p, 16, 1).unwrap();
+            let a = kv
+                .admit(&AdmissionRequest::monolithic(p, 16, 1))
+                .unwrap()
+                .into_admission()
+                .unwrap();
             for br in a.branches {
                 kv.release_branch(br).unwrap();
             }

@@ -838,7 +838,11 @@ impl<'e> Fleet<'e> {
             .iter()
             .map(|&i| self.scheds[i].load().pending_prefill_tokens)
             .sum();
-        if sc.wants_scale_up(queued, backlog, n) {
+        let pressure = live
+            .iter()
+            .map(|&i| self.scheds[i].load().kv_pressure)
+            .fold(0.0, f64::max);
+        if sc.wants_scale_up(queued, backlog, pressure, n) {
             // Draining replicas re-activate first: their caches are
             // still warm. Cold standbys join at the current instant.
             let target = (0..self.state.len())
@@ -1032,7 +1036,7 @@ fn serve_cluster_impl(
         scale: cfg.scale,
         scheds,
         state,
-        table: DigestTable::new(r, cfg.sched.kv_page_tokens),
+        table: DigestTable::new(r, cfg.sched.kv.page_tokens),
         steps_since_advert: vec![0; r],
         period: cfg.gossip_rounds,
         adapt_mark: (0, 0),

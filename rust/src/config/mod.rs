@@ -239,6 +239,15 @@ pub struct ServeSpec {
     /// defaults to the chunk size when chunking is on — one chunk per
     /// round — and 0 = unlimited otherwise).
     pub max_batched_prefill_tokens: usize,
+    /// Stream-aware admission (`--kv-stream`; needs `--prefill-chunk`):
+    /// admit once the first prefill chunk fits and grow the page pledge
+    /// per chunk, instead of pledging the whole uncovered suffix up
+    /// front.
+    pub kv_stream: bool,
+    /// Reward-driven preemption (`--kv-preempt`): under page pressure,
+    /// swap out the lowest-reward running branches and resume them by
+    /// recomputation when pages free up.
+    pub kv_preempt: bool,
     /// Fraction of requests carrying a shared few-shot header
     /// (`--prefix-share`; 0 = the plain trace generators).
     pub prefix_share: f64,
@@ -314,6 +323,7 @@ impl ServeSpec {
                     "scale-up-queue",
                     "scale-down-queue",
                     "scale-up-prefill",
+                    "scale-pressure",
                     "scale-cooldown",
                 ] {
                     if args.get(k).is_some() {
@@ -331,6 +341,7 @@ impl ServeSpec {
                     scale_up_queue: args.usize_or("scale-up-queue", 4)?,
                     scale_up_prefill_tokens: args
                         .usize_or("scale-up-prefill", 0)?,
+                    scale_up_pressure: args.f64_or("scale-pressure", 0.0)?,
                     scale_down_queue: args.usize_or("scale-down-queue", 0)?,
                     cooldown_arrivals: args.usize_or("scale-cooldown", 8)?,
                 };
@@ -361,6 +372,14 @@ impl ServeSpec {
                  monolithic prefill cannot be budgeted per round"
             );
         }
+        let kv_stream = args.flag("kv-stream");
+        if kv_stream && prefill_chunk_tokens == 0 {
+            bail!(
+                "--kv-stream needs chunked prefill (--prefill-chunk > 0): \
+                 a monolithic prefill has no chunks to grow a pledge over"
+            );
+        }
+        let kv_preempt = args.flag("kv-preempt");
         let prefix_shots = args.usize_or("prefix-shots", 3)?;
         if prefix_share > 0.0 && prefix_shots == 0 {
             bail!(
@@ -388,6 +407,8 @@ impl ServeSpec {
             prefix_cache_pages: args.usize_or("prefix-cache", 0)?,
             prefill_chunk_tokens,
             max_batched_prefill_tokens,
+            kv_stream,
+            kv_preempt,
             prefix_share,
             prefix_templates,
             prefix_shots,

@@ -11,7 +11,7 @@ pub mod scheduler;
 pub mod types;
 
 pub use scheduler::{
-    ClockHandle, DrainItem, LoadSnapshot, SchedConfig, Scheduler,
+    ClockHandle, DrainItem, KvConfig, LoadSnapshot, SchedConfig, Scheduler,
     ServeResult, StepOutcome,
 };
 pub use types::{

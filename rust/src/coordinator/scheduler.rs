@@ -57,9 +57,12 @@
 
 use super::types::*;
 use crate::engine::{
-    ChunkResult, Engine, PrefillChunkEntry, PrefillEntry, SlotId,
+    ChunkResult, Engine, PrefillChunkEntry, PrefillEntry, ReplayEntry,
+    SlotId,
 };
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{
+    AdmissionOutcome, AdmissionRequest, KvCacheManager,
+};
 use crate::metrics::{Timeline, TimelinePoint};
 use crate::prm::PrmScorer;
 use crate::sampler;
@@ -68,20 +71,17 @@ use crate::util::rng::Rng;
 use crate::workload::Request;
 use anyhow::{bail, Context, Result};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
-/// Scheduler knobs (paper defaults: M = N/2, alpha = 0.5, beta = N/2,
-/// T = 400 — scaled to this testbed's token scale in `config`).
+/// KV-manager knobs, nested under [`SchedConfig::kv`] so the pressure
+/// and preemption additions don't keep widening an already-flat struct.
+/// Built with the `with_*` chain; the defaults reproduce the historical
+/// behaviour exactly (pressure features off, property-tested
+/// byte-identical).
 #[derive(Debug, Clone)]
-pub struct SchedConfig {
-    pub policy: Policy,
-    /// Decode steps per round (the paper's T).
-    pub t_round: usize,
-    pub temperature: f32,
-    /// Per-branch generation cap (tokens after the prompt).
-    pub max_new: usize,
-    pub kv_capacity_tokens: usize,
-    pub kv_page_tokens: usize,
+pub struct KvConfig {
+    pub capacity_tokens: usize,
+    pub page_tokens: usize,
     /// Retention budget (pages) of the cross-request radix prefix cache;
     /// 0 disables it, reproducing the pre-cache admission accounting
     /// byte for byte (property-tested).
@@ -97,6 +97,82 @@ pub struct SchedConfig {
     /// round so prefill cannot starve; the budget is what bounds the
     /// decode stall one round can absorb.
     pub max_batched_prefill_tokens: usize,
+    /// Stream-aware admission: admit a request once its *first* prefill
+    /// chunk fits and grow the page pledge as the stream progresses,
+    /// instead of pledging the whole uncovered suffix up front. Requires
+    /// chunked prefill (`prefill_chunk_tokens > 0`); ignored otherwise.
+    /// Streams pump strictly FIFO, so a pledge-stalled front stream
+    /// blocks later ones (and new streamed admissions) rather than being
+    /// overtaken — the head-of-line rule that prevents half-grown
+    /// streams from livelocking each other.
+    pub stream_admission: bool,
+    /// Reward-driven preemption: when an admission is deferred for pages,
+    /// swap out the lowest-reward running branches (release their pages,
+    /// keep the generated tokens, resume later by recomputation) and
+    /// retry. Rewards come from the scheduler's per-round PRM scores, so
+    /// the manager reclaims exactly the branches SART was about to
+    /// prune; policies that never score running branches (vanilla,
+    /// self-consistency) leave the candidate pool empty.
+    pub preempt: bool,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            capacity_tokens: 4096,
+            page_tokens: 16,
+            prefix_cache_pages: 0,
+            prefill_chunk_tokens: 0,
+            max_batched_prefill_tokens: 0,
+            stream_admission: false,
+            preempt: false,
+        }
+    }
+}
+
+impl KvConfig {
+    pub fn new(capacity_tokens: usize, page_tokens: usize) -> Self {
+        KvConfig { capacity_tokens, page_tokens, ..KvConfig::default() }
+    }
+
+    pub fn with_prefix_cache(mut self, pages: usize) -> Self {
+        self.prefix_cache_pages = pages;
+        self
+    }
+
+    pub fn with_chunked_prefill(
+        mut self,
+        chunk_tokens: usize,
+        round_budget_tokens: usize,
+    ) -> Self {
+        self.prefill_chunk_tokens = chunk_tokens;
+        self.max_batched_prefill_tokens = round_budget_tokens;
+        self
+    }
+
+    pub fn with_stream_admission(mut self, on: bool) -> Self {
+        self.stream_admission = on;
+        self
+    }
+
+    pub fn with_preemption(mut self, on: bool) -> Self {
+        self.preempt = on;
+        self
+    }
+}
+
+/// Scheduler knobs (paper defaults: M = N/2, alpha = 0.5, beta = N/2,
+/// T = 400 — scaled to this testbed's token scale in `config`).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub policy: Policy,
+    /// Decode steps per round (the paper's T).
+    pub t_round: usize,
+    pub temperature: f32,
+    /// Per-branch generation cap (tokens after the prompt).
+    pub max_new: usize,
+    /// KV budget, paging, prefix cache and pressure knobs.
+    pub kv: KvConfig,
     pub seed: u64,
 }
 
@@ -107,11 +183,7 @@ impl Default for SchedConfig {
             t_round: 16,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: 4096,
-            kv_page_tokens: 16,
-            prefix_cache_pages: 0,
-            prefill_chunk_tokens: 0,
-            max_batched_prefill_tokens: 0,
+            kv: KvConfig::default(),
             seed: 0,
         }
     }
@@ -176,6 +248,11 @@ pub struct LoadSnapshot {
     pub pending_prefill_tokens: usize,
     /// Lifetime requests dispatched to this scheduler.
     pub dispatched_total: usize,
+    /// KV memory pressure: (used + pledged) / capacity pages, in [0, 1].
+    /// The cluster's scale controller can treat a saturated cache like a
+    /// deep queue (`--scale-pressure`); routing policies may shy away
+    /// from replicas about to preempt.
+    pub kv_pressure: f64,
 }
 
 impl LoadSnapshot {
@@ -247,6 +324,23 @@ pub struct Scheduler<'e> {
     /// Install-only chunk entries (fully cached starts) accumulated by
     /// `fill_batch` for this round's `pump_prefill` dispatch.
     pending_installs: Vec<PrefillChunkEntry>,
+    /// Preempted branches resuming this round: their slots recompute
+    /// prompt + kept generated tokens (`Engine::replay`), charged like a
+    /// prefill — the honest cost of a swap-in. Drained every `step`.
+    pending_replays: Vec<ReplayEntry>,
+    /// KV branch handle → (request, branch) — the scheduler's side of the
+    /// preemption handshake (the manager ranks handles, the scheduler
+    /// maps them back to branches). Maintained for every live
+    /// reservation; audit-rebuilt.
+    kv_index: HashMap<crate::kvcache::BranchId, (usize, usize)>,
+    /// Lifetime branch/stream swap-outs (audited against the per-request
+    /// counts).
+    preemptions_total: usize,
+    /// Streamed admission: the front stream could not grow its pledge
+    /// last pump. While set, no new streamed admission may enter (the
+    /// head-of-line anti-livelock rule); cleared when the front stream
+    /// makes progress or resolves.
+    stream_stalled: bool,
     /// Requests whose prompt became fully resident this round; stamped
     /// with `prefill_done_at` *after* the round's prefill dispatches are
     /// charged, so the TTFT split includes the dispatch cost in both
@@ -297,9 +391,9 @@ impl<'e> Scheduler<'e> {
     ) -> Scheduler<'e> {
         let slots = engine.caps().slots;
         let kv = KvCacheManager::with_prefix_cache(
-            cfg.kv_capacity_tokens,
-            cfg.kv_page_tokens,
-            cfg.prefix_cache_pages,
+            cfg.kv.capacity_tokens,
+            cfg.kv.page_tokens,
+            cfg.kv.prefix_cache_pages,
         );
         let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
         Scheduler {
@@ -323,6 +417,10 @@ impl<'e> Scheduler<'e> {
             prefill_queue: VecDeque::new(),
             queued_prefill_tokens: 0,
             pending_installs: Vec::new(),
+            pending_replays: Vec::new(),
+            kv_index: HashMap::new(),
+            preemptions_total: 0,
+            stream_stalled: false,
             prefill_done_buf: Vec::new(),
             prefill_seconds: 0.0,
             timeline: Timeline::default(),
@@ -488,6 +586,7 @@ impl<'e> Scheduler<'e> {
             running_tokens: self.running_tokens,
             pending_prefill_tokens: self.queued_prefill_tokens,
             dispatched_total: self.dispatched_total,
+            kv_pressure: self.kv.pressure(),
         }
     }
 
@@ -529,6 +628,7 @@ impl<'e> Scheduler<'e> {
                 cached_prompt_tokens: 0,
                 expected_cached_tokens: expected,
                 final_answer: None,
+                preemptions: 0,
             });
             self.request_queue.push_back(idx);
         }
@@ -541,10 +641,19 @@ impl<'e> Scheduler<'e> {
             self.prefill_seconds += cost;
             self.clock.charge(cost);
         }
+        // 2a. Resuming preempted branches recompute their prompt + kept
+        // generated tokens; charged like a prefill (the swap-in cost).
+        if !self.pending_replays.is_empty() {
+            let replays = std::mem::take(&mut self.pending_replays);
+            let cost = self.engine.replay(&replays)?;
+            self.engine_seconds += cost;
+            self.prefill_seconds += cost;
+            self.clock.charge(cost);
+        }
         // 2b. Chunked mode: dispatch this round's prefill work (installs
         // + budget-bounded stream chunks), so a long cold header trickles
         // in across rounds while resident branches keep decoding.
-        let streamed = if self.cfg.prefill_chunk_tokens > 0 {
+        let streamed = if self.cfg.kv.prefill_chunk_tokens > 0 {
             self.pump_prefill()?
         } else {
             false
@@ -584,6 +693,18 @@ impl<'e> Scheduler<'e> {
                     self.audit_check()?;
                 }
                 self.push_timeline_point();
+                return Ok(StepOutcome::Worked);
+            }
+            // Streamed admission deadlock: nothing decodes and the front
+            // stream cannot grow its pledge. Evict the *youngest* stream
+            // (pages fully released, request re-queued at the FCFS front)
+            // so the head of line finishes first — the anti-livelock rule
+            // between half-grown streams.
+            if self.cfg.kv.stream_admission
+                && self.stream_stalled
+                && !self.prefill_queue.is_empty()
+                && self.preempt_youngest_stream(now)?
+            {
                 return Ok(StepOutcome::Worked);
             }
             if let Some((next, _)) = self.incoming.front() {
@@ -751,6 +872,7 @@ impl<'e> Scheduler<'e> {
                 .collect(),
             cached_prompt_tokens: r.cached_prompt_tokens,
             redispatches: 0,
+            preemptions: r.preemptions,
         })
     }
 
@@ -783,6 +905,9 @@ impl<'e> Scheduler<'e> {
         self.request_queue.clear();
         self.branch_queue.clear();
         self.pending_installs.clear();
+        self.pending_replays.clear();
+        self.kv_index.clear();
+        self.stream_stalled = false;
         self.prefill_done_buf.clear();
         // Every lease and pledge must be gone now — a page still charged
         // is stranded budget the restarted incarnation would inherit.
@@ -835,9 +960,9 @@ impl<'e> Scheduler<'e> {
         // Cold reset: the next incarnation boots with an empty radix
         // cache (it re-warms through gossip) and fresh counters.
         self.kv = KvCacheManager::with_prefix_cache(
-            self.cfg.kv_capacity_tokens,
-            self.cfg.kv_page_tokens,
-            self.cfg.prefix_cache_pages,
+            self.cfg.kv.capacity_tokens,
+            self.cfg.kv.page_tokens,
+            self.cfg.kv.prefix_cache_pages,
         );
         self.round = 0;
         self.running_tokens = 0;
@@ -850,6 +975,7 @@ impl<'e> Scheduler<'e> {
         self.dispatched_total = 0;
         self.table_routed_admissions = 0;
         self.stale_admissions = 0;
+        self.preemptions_total = 0;
         Ok((items, partial))
     }
 
@@ -904,9 +1030,11 @@ impl<'e> Scheduler<'e> {
     /// stream cursor (uncovered suffix > 0) or queue an install-only
     /// chunk, and `pump_prefill` dispatches both.
     fn fill_batch(&mut self) -> Result<Vec<PrefillEntry>> {
-        let chunked = self.cfg.prefill_chunk_tokens > 0;
+        let chunked = self.cfg.kv.prefill_chunk_tokens > 0;
+        let streamed_mode = chunked && self.cfg.kv.stream_admission;
         let mut entries = Vec::new();
         let mut deferred: Vec<(usize, usize)> = Vec::new();
+        let mut resume_blocked = false;
         let now = self.clock.now();
         loop {
             let Some(&Reverse(free_slot)) = self.free_slots.peek() else {
@@ -929,6 +1057,78 @@ impl<'e> Scheduler<'e> {
                 if chunked && self.requests[ridx].stream_slot.is_some() {
                     deferred.push((ridx, bidx));
                     continue;
+                }
+                // A queued branch without a page reservation was
+                // preempted: re-grow its reservation and replay its kept
+                // tokens into the slot instead of starting fresh.
+                if self.requests[ridx].branches[bidx].kv.is_none() {
+                    let Some(prefix) = self.requests[ridx].prefix else {
+                        // Stream-preemption leftover: the whole request
+                        // was un-admitted and re-queued; this stale
+                        // entry re-queues with the re-admission.
+                        continue;
+                    };
+                    let has_holder = self.requests[ridx]
+                        .branches
+                        .iter()
+                        .any(|b| b.kv.is_some());
+                    let outcome = if has_holder {
+                        self.kv.admit(&AdmissionRequest::grow(
+                            prefix,
+                            self.cfg.max_new,
+                            1,
+                        ))?
+                    } else {
+                        // The prefix died with its last running sibling;
+                        // re-admit this branch's pages from scratch (the
+                        // prompt usually re-covers through the radix
+                        // cache its commit interned).
+                        self.kv.admit(&AdmissionRequest::monolithic(
+                            &self.requests[ridx].prompt,
+                            self.cfg.max_new,
+                            1,
+                        ))?
+                    };
+                    let Some(adm) = outcome.admitted() else {
+                        // A half-done branch outranks new admissions:
+                        // hold the line until pages free up (strict
+                        // resume priority — the alternative livelocks
+                        // half-resumed requests behind fresh arrivals).
+                        self.branch_queue.push_front((ridx, bidx));
+                        resume_blocked = true;
+                        break;
+                    };
+                    let kvb = adm.branches[0];
+                    let gen_len;
+                    {
+                        let req = &mut self.requests[ridx];
+                        if !has_holder {
+                            req.prefix = Some(adm.prefix);
+                        }
+                        let b = &mut req.branches[bidx];
+                        gen_len = b.generated.len();
+                        b.kv = Some(kvb);
+                        b.status = BranchStatus::Running;
+                        b.slot = Some(free_slot);
+                        b.started_at.get_or_insert(now);
+                        let pos = req.running.partition_point(|&x| x < bidx);
+                        req.running.insert(pos, bidx);
+                    }
+                    self.kv.note_decode(kvb, gen_len)?;
+                    self.kv_index.insert(kvb, (ridx, bidx));
+                    self.running_tokens += gen_len;
+                    self.slots[free_slot] = Some((ridx, bidx));
+                    self.free_slots.pop();
+                    self.pending_replays.push(ReplayEntry {
+                        slot: free_slot,
+                        prompt: self.requests[ridx].prompt.clone(),
+                        forced: self.requests[ridx].branches[bidx]
+                            .generated
+                            .clone(),
+                        seed: self.requests[ridx].branches[bidx].seed,
+                    });
+                    assigned = true;
+                    break;
                 }
                 let req = &mut self.requests[ridx];
                 let prompt_len = req.prompt.len();
@@ -1000,33 +1200,41 @@ impl<'e> Scheduler<'e> {
             if assigned {
                 continue;
             }
+            if resume_blocked {
+                break; // a preempted branch waits for pages: no new work
+            }
             // Lines 6-7: admit the head request (FCFS, blocking on
             // budget). Token-level admission: the radix cache discounts
             // the covered prompt prefix, so a warm few-shot header costs
-            // pages (and prefill) only for the uncovered suffix.
-            // try_admit_tokens folds the budget check and the admission
-            // into one tree walk; over-budget is a side-effect-free None.
-            // Chunked admissions pledge the uncovered suffix instead of
+            // pages (and prefill) only for the uncovered suffix. Deferred
+            // is a side-effect-free head-of-line block. Chunked
+            // admissions pledge the uncovered suffix instead of
             // materializing it (pages lease in per chunk, the radix tree
-            // interns on completion).
+            // interns on completion); streamed admissions pledge only the
+            // first chunk and grow in `pump_prefill`.
             let Some(&ridx) = self.request_queue.front() else {
                 break;
             };
-            let n = self.cfg.policy.n_branches();
-            let admission = if chunked {
-                self.kv.try_admit_tokens_chunked(
-                    &self.requests[ridx].prompt,
-                    self.cfg.max_new,
-                    n,
-                )?
-            } else {
-                self.kv.try_admit_tokens(
-                    &self.requests[ridx].prompt,
-                    self.cfg.max_new,
-                    n,
-                )?
-            };
-            let Some(admission) = admission else {
+            // Head-of-line rule: while the front stream cannot grow its
+            // pledge, admitting more half-grown streams only deepens the
+            // livelock they would form.
+            if streamed_mode && self.stream_stalled {
+                break;
+            }
+            let mut outcome = self.try_admit_head(ridx)?;
+            if self.cfg.kv.preempt {
+                if let AdmissionOutcome::Deferred { need_pages, free_pages } =
+                    outcome
+                {
+                    // Under pressure: swap out the lowest-reward running
+                    // branches to cover the shortfall, then retry once.
+                    let deficit = need_pages.saturating_sub(free_pages);
+                    if deficit > 0 && self.preempt_pages(deficit, now)? {
+                        outcome = self.try_admit_head(ridx)?;
+                    }
+                }
+            }
+            let Some(admission) = outcome.admitted() else {
                 break; // head-of-line blocks until memory frees up
             };
             self.request_queue.pop_front();
@@ -1044,12 +1252,35 @@ impl<'e> Scheduler<'e> {
                     self.stale_admissions += 1;
                 }
             }
-            for kvb in admission.branches {
-                let seed = self.rng.next_u64();
-                let mut b = Branch::new(seed);
-                b.kv = Some(kvb);
-                req.branches.push(b);
-                self.branch_queue.push_back((ridx, req.branches.len() - 1));
+            if req.branches.is_empty() {
+                for kvb in admission.branches {
+                    let seed = self.rng.next_u64();
+                    let mut b = Branch::new(seed);
+                    b.kv = Some(kvb);
+                    req.branches.push(b);
+                    let bidx = req.branches.len() - 1;
+                    self.kv_index.insert(kvb, (ridx, bidx));
+                    self.branch_queue.push_back((ridx, bidx));
+                }
+            } else {
+                // Re-admission after a stream preemption: the branches
+                // (and their sampling seeds) survived un-admission; only
+                // the page reservations are new.
+                debug_assert_eq!(
+                    req.branches.len(),
+                    admission.branches.len()
+                );
+                for (bidx, (b, kvb)) in req
+                    .branches
+                    .iter_mut()
+                    .zip(admission.branches)
+                    .enumerate()
+                {
+                    debug_assert!(b.kv.is_none());
+                    b.kv = Some(kvb);
+                    self.kv_index.insert(kvb, (ridx, bidx));
+                    self.branch_queue.push_back((ridx, bidx));
+                }
             }
             if self.emit_events {
                 self.events.push(ServeEvent::Admitted {
@@ -1065,6 +1296,187 @@ impl<'e> Scheduler<'e> {
         Ok(entries)
     }
 
+    /// Build and run the head request's admission under the configured
+    /// mode: monolithic charges the uncovered prompt up front, chunked
+    /// pledges the whole uncovered suffix, streamed pledges only the
+    /// first chunk (the pledge then grows per chunk in `pump_prefill`).
+    fn try_admit_head(&mut self, ridx: usize) -> Result<AdmissionOutcome> {
+        let n = self.cfg.policy.n_branches();
+        let prompt = &self.requests[ridx].prompt;
+        let req = if self.cfg.kv.prefill_chunk_tokens == 0 {
+            AdmissionRequest::monolithic(prompt, self.cfg.max_new, n)
+        } else if self.cfg.kv.stream_admission {
+            AdmissionRequest::streamed(
+                prompt,
+                self.cfg.max_new,
+                n,
+                self.cfg.kv.prefill_chunk_tokens,
+            )
+        } else {
+            AdmissionRequest::chunked(prompt, self.cfg.max_new, n)
+        };
+        self.kv.admit(&req)
+    }
+
+    /// Reward-driven preemption (`--kv-preempt`): swap out the
+    /// lowest-reward running branches until `need` pages come free or the
+    /// candidate pool runs dry. A candidate is skipped unless it is
+    /// decoding (Running, not mid-prefill) and at least one sibling keeps
+    /// a page reservation — the prefix lease must survive so the resume
+    /// can grow from it. Returns whether anything was swapped out.
+    fn preempt_pages(&mut self, need: usize, now: f64) -> Result<bool> {
+        let free0 = self.kv.free_pages();
+        let mut any = false;
+        for kvb in self.kv.preemption_candidates(need) {
+            if self.kv.free_pages() - free0 >= need {
+                break;
+            }
+            let Some(&(ridx, bidx)) = self.kv_index.get(&kvb) else {
+                bail!("preemption candidate {kvb:?} missing from kv index");
+            };
+            let req = &self.requests[ridx];
+            let b = &req.branches[bidx];
+            if b.status != BranchStatus::Running {
+                continue;
+            }
+            let Some(slot) = b.slot else { continue };
+            if self.prefilling[slot].is_some() {
+                continue; // streams are evicted whole, not mid-chunk
+            }
+            if req.branches.iter().filter(|b| b.kv.is_some()).count() < 2 {
+                continue; // the last holder keeps the prefix leased
+            }
+            self.preempt_branch(ridx, bidx, now)?;
+            any = true;
+        }
+        Ok(any)
+    }
+
+    /// Swap one running branch out: release its pages and engine slot,
+    /// keep its generated tokens, PRM reward and sampling seed, and
+    /// re-queue it. It resumes through a `Grow` admission plus an engine
+    /// replay of the kept tokens (recompute-on-resume) in `fill_batch`.
+    fn preempt_branch(
+        &mut self,
+        ridx: usize,
+        bidx: usize,
+        now: f64,
+    ) -> Result<()> {
+        let req = &mut self.requests[ridx];
+        let b = &mut req.branches[bidx];
+        debug_assert_eq!(b.status, BranchStatus::Running);
+        let gen_len = b.generated.len();
+        b.status = BranchStatus::Queued;
+        let slot = b.slot.take();
+        let kvb = b.kv.take();
+        if let Some(p) = req.running.iter().position(|&x| x == bidx) {
+            req.running.remove(p);
+        }
+        req.preemptions += 1;
+        self.running_tokens -= gen_len;
+        if let Some(slot) = slot {
+            self.slots[slot] = None;
+            self.free_slots.push(Reverse(slot));
+            self.engine.release(slot);
+        }
+        if let Some(kvb) = kvb {
+            self.kv.release_branch(kvb)?;
+            self.kv_index.remove(&kvb);
+        }
+        self.preemptions_total += 1;
+        self.branch_queue.push_back((ridx, bidx));
+        if self.emit_events {
+            self.events.push(ServeEvent::BranchPreempted {
+                request: self.requests[ridx].id,
+                branch: bidx,
+                at: now,
+            });
+        }
+        Ok(())
+    }
+
+    /// Resolve a streamed-admission deadlock: evict the *youngest*
+    /// half-grown stream entirely — release every page its request holds
+    /// (the last release cancels the staged prefix's outstanding pledge),
+    /// forget the admission, and push the request back to the FCFS queue
+    /// front — so the older streams finish growing first. FCFS order is
+    /// preserved: the youngest admission is the first to re-admit.
+    ///
+    /// Returns false when fewer than two streams are in flight: a lone
+    /// stream can always grow (admission rejects oversized streams up
+    /// front), so such a stall is a genuine budget deadlock and falls
+    /// through to the stalled-scheduler error.
+    fn preempt_youngest_stream(&mut self, now: f64) -> Result<bool> {
+        if self.prefill_queue.len() < 2 {
+            return Ok(false);
+        }
+        let slot = *self.prefill_queue.back().unwrap();
+        let Some(cur) = self.prefilling[slot].take() else {
+            bail!("stream preemption hit slot {slot} without a cursor");
+        };
+        let (ridx, bidx) = (cur.ridx, cur.bidx);
+        self.prefill_queue.pop_back();
+        let remaining = self.requests[ridx].prompt.len() - cur.cursor;
+        self.queued_prefill_tokens -= remaining;
+        // Roll the admission's counters back — the re-admission below
+        // re-counts them, and the audit scans per-request records.
+        self.cache_hit_tokens_total -=
+            self.requests[ridx].cached_prompt_tokens;
+        self.prompt_tokens_total -= self.requests[ridx].prompt.len();
+        if self.requests[ridx].expected_cached_tokens > 0 {
+            self.table_routed_admissions -= 1;
+            if self.requests[ridx].cached_prompt_tokens
+                < self.requests[ridx].expected_cached_tokens
+            {
+                self.stale_admissions -= 1;
+            }
+        }
+        // Tear the streaming branch out of the batch…
+        {
+            let req = &mut self.requests[ridx];
+            let b = &mut req.branches[bidx];
+            debug_assert_eq!(b.status, BranchStatus::Running);
+            debug_assert!(b.generated.is_empty());
+            b.status = BranchStatus::Queued;
+            b.slot = None;
+            b.started_at = None;
+            if let Some(p) = req.running.iter().position(|&x| x == bidx) {
+                req.running.remove(p);
+            }
+            req.stream_slot = None;
+            req.admitted_at = None;
+            req.prefill_done_at = None;
+            req.cached_prompt_tokens = 0;
+            req.prefix = None;
+            req.preemptions += 1;
+        }
+        self.slots[slot] = None;
+        self.free_slots.push(Reverse(slot));
+        self.engine.release(slot);
+        // …and release every sibling's reservation: the last release
+        // drops the staged prefix and cancels the outstanding pledge.
+        for b in self.requests[ridx].branches.iter_mut() {
+            if let Some(kvb) = b.kv.take() {
+                self.kv.release_branch(kvb)?;
+                self.kv_index.remove(&kvb);
+            }
+        }
+        // Un-admit: the request rejoins the queue head; its branches
+        // (seeds intact) wait for the re-admission to re-attach pages.
+        self.branch_queue.retain(|&(r, _)| r != ridx);
+        self.request_queue.push_front(ridx);
+        self.stream_stalled = false;
+        self.preemptions_total += 1;
+        if self.emit_events {
+            self.events.push(ServeEvent::BranchPreempted {
+                request: self.requests[ridx].id,
+                branch: bidx,
+                at: now,
+            });
+        }
+        Ok(true)
+    }
+
     /// Chunked mode, once per round: dispatch every install-only entry
     /// plus streamed chunks from the FIFO queue under the per-round token
     /// budget (the first chunk always goes, so prefill cannot starve; the
@@ -1073,8 +1485,11 @@ impl<'e> Scheduler<'e> {
     /// prefix — making the slot decodable and unblocking its siblings —
     /// when a stream completes. Returns whether anything was dispatched.
     fn pump_prefill(&mut self) -> Result<bool> {
+        // Re-evaluated every pump: decode may have freed the pages the
+        // front stream was stalled on.
+        self.stream_stalled = false;
         let mut entries = std::mem::take(&mut self.pending_installs);
-        let budget = match self.cfg.max_batched_prefill_tokens {
+        let budget = match self.cfg.kv.max_batched_prefill_tokens {
             0 => usize::MAX,
             b => b,
         };
@@ -1093,12 +1508,22 @@ impl<'e> Scheduler<'e> {
             let req = &self.requests[ridx];
             let prompt_len = req.prompt.len();
             debug_assert!(cursor < prompt_len);
-            let len = self.cfg.prefill_chunk_tokens.min(prompt_len - cursor);
+            let len = self.cfg.kv.prefill_chunk_tokens.min(prompt_len - cursor);
             let seed = req.branches[bidx].seed;
             let cached_tokens = req.cached_prompt_tokens;
             let prefix = req
                 .prefix
                 .context("streaming request lost its kv prefix")?;
+            // Stream-aware admission pledged only the first chunk: grow
+            // the pledge to cover this chunk before leasing it. A stall
+            // blocks the whole FIFO (no overtaking — the head-of-line
+            // rule) and flags `fill_batch` to stop admitting streams.
+            if self.cfg.kv.stream_admission
+                && !self.kv.ensure_pledged(prefix, len)?
+            {
+                self.stream_stalled = true;
+                break;
+            }
             // Lease the pages this chunk spans (pledge → used).
             self.kv.note_prefill(prefix, len)?;
             self.queued_prefill_tokens -= len;
@@ -1222,6 +1647,22 @@ impl<'e> Scheduler<'e> {
             for (&(ridx, bidx), score) in queries.iter().zip(scores) {
                 self.requests[ridx].branches[bidx].reward = score;
             }
+            // Reward-driven preemption: mirror the fresh PRM rewards into
+            // the KV manager's eviction priorities, so under pressure it
+            // ranks exactly the branches SART would prune first.
+            if self.cfg.kv.preempt {
+                for &(ridx, bidx) in &queries {
+                    let b = &self.requests[ridx].branches[bidx];
+                    if b.status != BranchStatus::Running
+                        || b.reward.is_nan()
+                    {
+                        continue;
+                    }
+                    if let Some(kvb) = b.kv {
+                        self.kv.set_branch_priority(kvb, b.reward)?;
+                    }
+                }
+            }
             self.prm_seqs = seqs;
         }
 
@@ -1337,6 +1778,7 @@ impl<'e> Scheduler<'e> {
         }
         if let Some(kvb) = kvb {
             self.kv.release_branch(kvb)?;
+            self.kv_index.remove(&kvb);
         }
         let meta = &mut self.requests[ridx].meta;
         meta.num_harvested += 1;
@@ -1396,6 +1838,7 @@ impl<'e> Scheduler<'e> {
         }
         if let Some(kvb) = kvb {
             self.kv.release_branch(kvb)?;
+            self.kv_index.remove(&kvb);
         }
         Ok(())
     }
@@ -1578,7 +2021,7 @@ impl<'e> Scheduler<'e> {
                 self.prompt_tokens_total
             );
         }
-        if self.cfg.prefix_cache_pages == 0
+        if self.cfg.kv.prefix_cache_pages == 0
             && self.cache_hit_tokens_total != 0
         {
             bail!("audit: cache hits recorded with the cache disabled");
@@ -1605,7 +2048,7 @@ impl<'e> Scheduler<'e> {
             );
         }
         // Chunked-prefill structures vs full scans.
-        if self.cfg.prefill_chunk_tokens == 0
+        if self.cfg.kv.prefill_chunk_tokens == 0
             && (self.queued_prefill_tokens != 0
                 || !self.prefill_queue.is_empty()
                 || self.prefilling.iter().any(|c| c.is_some())
@@ -1706,6 +2149,46 @@ impl<'e> Scheduler<'e> {
                      nor streaming"
                 );
             }
+        }
+        // Preemption structures vs full scans.
+        if !self.pending_replays.is_empty() {
+            bail!("audit: replay entries survived the round's dispatch");
+        }
+        let mut index_scan: HashMap<crate::kvcache::BranchId, (usize, usize)> =
+            HashMap::new();
+        for (i, r) in self.requests.iter().enumerate() {
+            for (j, b) in r.branches.iter().enumerate() {
+                if let Some(kvb) = b.kv {
+                    index_scan.insert(kvb, (i, j));
+                }
+            }
+        }
+        if index_scan != self.kv_index {
+            bail!(
+                "audit: kv index holds {} entries != scanned {}",
+                self.kv_index.len(),
+                index_scan.len()
+            );
+        }
+        let preempt_scan: usize =
+            self.requests.iter().map(|r| r.preemptions).sum();
+        if preempt_scan != self.preemptions_total {
+            bail!(
+                "audit: preemptions_total {} != scanned {preempt_scan}",
+                self.preemptions_total
+            );
+        }
+        if !self.cfg.kv.preempt && self.kv.preemptable_pages() != 0 {
+            bail!("audit: eviction priorities set with preemption disabled");
+        }
+        if !self.cfg.kv.preempt
+            && !self.cfg.kv.stream_admission
+            && self.preemptions_total != 0
+        {
+            bail!("audit: preemptions recorded with the pressure knobs off");
+        }
+        if !self.cfg.kv.stream_admission && self.stream_stalled {
+            bail!("audit: stream stall flagged with streamed admission off");
         }
         self.kv.check_invariants()
     }

@@ -20,6 +20,11 @@ pub enum ServeEvent {
     BranchTokens { request: usize, branch: usize, tokens: Vec<Token> },
     /// SART pruned the branch (two-phase dynamic pruning).
     BranchPruned { request: usize, branch: usize, at: f64 },
+    /// Memory pressure swapped the branch out: its pages are released,
+    /// its generated tokens are kept, and it re-queues to resume by
+    /// recomputation when pages free up. Only emitted with preemption
+    /// enabled (`--kv-preempt`).
+    BranchPreempted { request: usize, branch: usize, at: f64 },
     /// The branch hit the generation cap without an EOS.
     BranchCapped { request: usize, branch: usize, at: f64 },
     /// The early-stop quorum landed (M answered completions) — emitted
@@ -39,6 +44,7 @@ impl ServeEvent {
             ServeEvent::Admitted { request, .. }
             | ServeEvent::BranchTokens { request, .. }
             | ServeEvent::BranchPruned { request, .. }
+            | ServeEvent::BranchPreempted { request, .. }
             | ServeEvent::BranchCapped { request, .. }
             | ServeEvent::EarlyStop { request, .. }
             | ServeEvent::Finalized { request, .. } => request,
@@ -245,6 +251,9 @@ pub struct RequestState {
     /// which is what drives the adaptive gossip period.
     pub expected_cached_tokens: usize,
     pub final_answer: Option<u8>,
+    /// Branch swap-outs this request absorbed under memory pressure
+    /// (each costs a recompute-on-resume; 0 with preemption off).
+    pub preemptions: usize,
 }
 
 impl RequestState {
@@ -306,6 +315,11 @@ pub struct RequestOutcome {
     /// latency shows up in the ordinary latency fields, measured from the
     /// original arrival.
     pub redispatches: usize,
+    /// Branch swap-outs under memory pressure: a running branch released
+    /// its pages to a higher-priority admission and later resumed by
+    /// recomputing through the prefix cache. 0 with `--kv-preempt` off;
+    /// the recompute latency lands in the ordinary latency fields.
+    pub preemptions: usize,
 }
 
 impl RequestOutcome {
@@ -396,6 +410,7 @@ mod tests {
             response_lengths: vec![10, 20],
             cached_prompt_tokens: 0,
             redispatches: 0,
+            preemptions: 0,
         };
         assert!(o.correct());
         assert_eq!(o.e2e_latency(), 9.0);

@@ -961,7 +961,13 @@ fn core_loop(
                                     scheds[i].load().pending_prefill_tokens
                                 })
                                 .sum();
-                            if sc.wants_scale_up(queued, backlog, live_n) {
+                            let pressure = (0..replicas)
+                                .filter(|&i| state[i] == ReplicaState::Live)
+                                .map(|i| scheds[i].load().kv_pressure)
+                                .fold(0.0, f64::max);
+                            if sc.wants_scale_up(
+                                queued, backlog, pressure, live_n,
+                            ) {
                                 // Draining first (warm cache), then cold.
                                 let cand = (0..replicas)
                                     .find(|&i| {

@@ -96,6 +96,7 @@ pub fn outcome_to_json(o: &RequestOutcome) -> Json {
     );
     m.insert("cached_prompt_tokens".into(), unum(o.cached_prompt_tokens));
     m.insert("redispatches".into(), unum(o.redispatches));
+    m.insert("preemptions".into(), unum(o.preemptions));
     Json::Obj(m)
 }
 
@@ -136,6 +137,13 @@ pub fn outcome_from_json(j: &Json) -> Result<RequestOutcome> {
             .collect::<Result<_>>()?,
         cached_prompt_tokens: req_usize(j, "cached_prompt_tokens")?,
         redispatches: req_usize(j, "redispatches")?,
+        // Absent in dumps that predate memory-pressure serving.
+        preemptions: match j.get("preemptions") {
+            Some(v) => {
+                v.as_usize().context("`preemptions` must be a number")?
+            }
+            None => 0,
+        },
     })
 }
 
@@ -268,6 +276,12 @@ pub enum ServerMsg {
     Tokens { request: usize, branch: usize, tokens: Vec<Token> },
     Pruned { request: usize, branch: usize, t: f64 },
     Capped { request: usize, branch: usize, t: f64 },
+    /// A running branch swapped out under memory pressure (its pages
+    /// went to a higher-priority admission); the session keeps
+    /// streaming — the branch resumes later by recomputation and its
+    /// `tokens` lines pick up where they left off. The outcome's
+    /// `preemptions` counts these.
+    Preempted { request: usize, branch: usize, t: f64 },
     EarlyStop { request: usize, t: f64 },
     /// The session's replica failed; its request re-dispatched from
     /// replica `from` to `to` without the socket closing. `hops` is the
@@ -383,6 +397,12 @@ pub fn event_line(
             m.insert("branch".into(), unum(*branch));
             m.insert("t".into(), num(*at));
         }
+        ServeEvent::BranchPreempted { request, branch, at } => {
+            m.insert("event".into(), Json::Str("preempted".into()));
+            m.insert("request".into(), unum(*request));
+            m.insert("branch".into(), unum(*branch));
+            m.insert("t".into(), num(*at));
+        }
         ServeEvent::EarlyStop { request, at } => {
             m.insert("event".into(), Json::Str("early_stop".into()));
             m.insert("request".into(), unum(*request));
@@ -469,6 +489,11 @@ pub fn parse_server_line(line: &str) -> Result<ServerMsg> {
             branch: req_usize(&j, "branch")?,
             t: req_f64(&j, "t")?,
         },
+        "preempted" => ServerMsg::Preempted {
+            request: req_usize(&j, "request")?,
+            branch: req_usize(&j, "branch")?,
+            t: req_f64(&j, "t")?,
+        },
         "early_stop" => ServerMsg::EarlyStop {
             request: req_usize(&j, "request")?,
             t: req_f64(&j, "t")?,
@@ -520,6 +545,7 @@ mod tests {
             response_lengths: vec![40, 80],
             cached_prompt_tokens: 16,
             redispatches: 0,
+            preemptions: 0,
         }
     }
 
@@ -582,6 +608,7 @@ mod tests {
             },
             ServeEvent::BranchPruned { request: 3, branch: 1, at: 2.0 },
             ServeEvent::BranchCapped { request: 3, branch: 0, at: 2.5 },
+            ServeEvent::BranchPreempted { request: 3, branch: 2, at: 2.75 },
             ServeEvent::EarlyStop { request: 3, at: 3.0 },
         ];
         for ev in &cases {
@@ -608,6 +635,12 @@ mod tests {
                 (
                     ServeEvent::BranchCapped { request, branch, at },
                     ServerMsg::Capped { request: r, branch: b, t },
+                ) => {
+                    assert_eq!((r, b, t), (request, branch, at));
+                }
+                (
+                    ServeEvent::BranchPreempted { request, branch, at },
+                    ServerMsg::Preempted { request: r, branch: b, t },
                 ) => {
                     assert_eq!((r, b, t), (request, branch, at));
                 }

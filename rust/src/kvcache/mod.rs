@@ -23,9 +23,10 @@
 //! prompt token sequences are additionally interned into a **page-granular
 //! radix tree** (one node per full page of prompt tokens, SGLang-style):
 //!
-//! * [`KvCacheManager::admit_tokens`] walks the tree for the longest
-//!   cached prefix and only charges pages for the *uncovered* suffix —
-//!   two requests sharing a few-shot header pay for its pages once;
+//! * a [`AdmissionMode::Monolithic`] admission walks the tree for the
+//!   longest cached prefix and only charges pages for the *uncovered*
+//!   suffix — two requests sharing a few-shot header pay for its pages
+//!   once;
 //! * every node carries a lease refcount (number of live prefixes whose
 //!   interned path includes it). When the last lease drops, the node's
 //!   page is **retained** instead of freed: it moves to an LRU-stamped
@@ -39,8 +40,9 @@
 //!   cross-check the incremental bookkeeping every round.
 //!
 //! A zero cache budget (the [`KvCacheManager::new`] default) disables the
-//! tree entirely: `admit_tokens` delegates to the scalar [`admit`] path,
-//! byte-for-byte reproducing the pre-cache accounting (property-tested).
+//! tree entirely: admission falls back to content-blind scalar
+//! accounting, byte-for-byte reproducing the pre-cache behaviour
+//! (property-tested).
 //!
 //! # Prefix digests (cross-replica gossip)
 //!
@@ -60,7 +62,7 @@
 //!
 //! # Chunked prefill (incremental page leasing)
 //!
-//! [`KvCacheManager::try_admit_tokens_chunked`] admits a request whose
+//! A [`AdmissionMode::Chunked`] admission takes a request whose
 //! uncovered prompt suffix will stream in over several scheduling rounds:
 //! the suffix's pages are **pledged** (held against the budget so no later
 //! admission can strand the prefill) and convert to used pages chunk by
@@ -68,9 +70,16 @@
 //! the radix tree only at [`KvCacheManager::commit_prefix`], once their KV
 //! actually exists. A request released mid-prefill frees its partial pages
 //! and cancels the outstanding pledge without ever touching the tree.
+//! [`AdmissionMode::Streamed`] relaxes the all-or-nothing pledge: only
+//! the first prefill chunk's pages are pledged up front, and the pledge
+//! grows chunk by chunk through [`KvCacheManager::ensure_pledged`].
 //!
-//! Admission control asks `can_admit`/`can_admit_tokens`; the scheduler
-//! combines this with engine-slot availability.
+//! All admission goes through the one typed entry point
+//! [`KvCacheManager::admit`], which answers [`AdmissionOutcome::Deferred`]
+//! — side-effect free — when the budget falls short; the scheduler
+//! combines this with engine-slot availability (and, under pressure, with
+//! reward-driven preemption via
+//! [`KvCacheManager::preemption_candidates`]).
 //!
 //! Storage is slab-style: prefixes and branches live in `Vec`s indexed by
 //! their handle, with a free list for reuse and a per-slot generation
@@ -137,7 +146,7 @@ pub struct BranchId {
 }
 
 /// Chunked-prefill staging state of a prefix (see
-/// [`KvCacheManager::try_admit_tokens_chunked`]): the uncovered prompt
+/// [`AdmissionMode::Chunked`]): the uncovered prompt
 /// suffix's pages are *pledged* — held against the budget but not yet
 /// materialized — at admission, convert to used pages as prefill chunks
 /// land ([`KvCacheManager::note_prefill`]), and the full pages intern
@@ -151,6 +160,12 @@ struct StagedPrefill {
     prompt_tokens: usize,
     /// Uncovered tokens whose prefill has landed so far.
     staged_tokens: usize,
+    /// Uncovered tokens whose pages are secured against the budget
+    /// (pledged or already materialized). Equals the whole uncovered
+    /// suffix for [`AdmissionMode::Chunked`]; starts at the first chunk
+    /// and grows via [`KvCacheManager::ensure_pledged`] for
+    /// [`AdmissionMode::Streamed`].
+    pledged_tokens: usize,
     /// Uncovered pages not yet materialized (the remaining pledge).
     pledged_pages: usize,
 }
@@ -179,6 +194,11 @@ struct BranchAlloc {
     /// Tokens actually decoded so far (informational — the budget is
     /// charged at reservation time).
     grown_tokens: usize,
+    /// Eviction priority fed by the scheduler (the branch's PRM reward;
+    /// lower evicts first). `None` = not a preemption candidate. The
+    /// reserved pages of prioritized branches sum to
+    /// `KvCacheManager::preemptable_pages`.
+    priority: Option<f32>,
 }
 
 /// One radix-tree node: exactly one page of prompt tokens (the edge label
@@ -264,7 +284,7 @@ impl<T> Slab<T> {
     }
 }
 
-/// What [`KvCacheManager::admit_tokens`] hands back: the usual handles
+/// What an admitted [`AdmissionRequest`] hands back: the usual handles
 /// plus how many prompt tokens the cross-request cache already covered
 /// (a multiple of the page size; 0 on cold admits or with the cache
 /// disabled). The engine's cost model charges only the uncovered suffix.
@@ -273,6 +293,123 @@ pub struct Admission {
     pub prefix: PrefixId,
     pub branches: Vec<BranchId>,
     pub cached_tokens: usize,
+}
+
+/// How an [`AdmissionRequest`] secures pages for its prompt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionMode {
+    /// The whole prompt materializes at admission: the radix-covered
+    /// prefix is leased, the uncovered suffix (and private tail page) is
+    /// allocated up front. With the cache disabled this is the scalar
+    /// pre-cache accounting (the Rebase baseline's path).
+    Monolithic,
+    /// Chunked prefill: the uncovered suffix's pages are *pledged* in
+    /// full at admission and convert to used pages as chunks land
+    /// ([`KvCacheManager::note_prefill`]); the prompt interns only at
+    /// [`KvCacheManager::commit_prefix`].
+    Chunked,
+    /// Stream-aware admission: admit as soon as the *first* prefill
+    /// chunk (of `first_chunk_tokens`) fits, pledging only its pages.
+    /// The pledge grows chunk by chunk via
+    /// [`KvCacheManager::ensure_pledged`] as the stream progresses — so
+    /// a tight budget admits requests the all-or-nothing pledge would
+    /// defer, at the cost of streams that can stall mid-prompt (the
+    /// scheduler's head-of-line rules handle that).
+    Streamed { first_chunk_tokens: usize },
+    /// Attach `branches` more reservations to an existing prefix (tree
+    /// expansion: a Rebase fork, or re-reserving pages for a preempted
+    /// branch that resumes). `prompt` is ignored.
+    Grow { prefix: PrefixId },
+}
+
+/// The one typed admission entry point: what is being admitted and how
+/// its pages are secured. Replaces the old eight-way
+/// `admit`/`admit_tokens`/`try_*`/`can_*`/`grow` surface.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionRequest<'a> {
+    pub prompt: &'a [Token],
+    pub max_new: usize,
+    pub branches: usize,
+    pub mode: AdmissionMode,
+}
+
+impl<'a> AdmissionRequest<'a> {
+    pub fn monolithic(
+        prompt: &'a [Token],
+        max_new: usize,
+        branches: usize,
+    ) -> Self {
+        AdmissionRequest { prompt, max_new, branches, mode: AdmissionMode::Monolithic }
+    }
+
+    pub fn chunked(
+        prompt: &'a [Token],
+        max_new: usize,
+        branches: usize,
+    ) -> Self {
+        AdmissionRequest { prompt, max_new, branches, mode: AdmissionMode::Chunked }
+    }
+
+    pub fn streamed(
+        prompt: &'a [Token],
+        max_new: usize,
+        branches: usize,
+        first_chunk_tokens: usize,
+    ) -> Self {
+        AdmissionRequest {
+            prompt,
+            max_new,
+            branches,
+            mode: AdmissionMode::Streamed { first_chunk_tokens },
+        }
+    }
+
+    pub fn grow(prefix: PrefixId, max_new: usize, branches: usize) -> Self {
+        AdmissionRequest {
+            prompt: &[],
+            max_new,
+            branches,
+            mode: AdmissionMode::Grow { prefix },
+        }
+    }
+}
+
+/// What [`KvCacheManager::admit`] decides. `Deferred` is side-effect
+/// free: the caller may retry later (or free pages by preempting
+/// low-priority branches and retry immediately).
+#[derive(Debug)]
+pub enum AdmissionOutcome {
+    Admitted(Admission),
+    /// Over budget: the admission would have to secure `need_pages`
+    /// (including retained pages it would re-lease) but only
+    /// `free_pages` are unheld.
+    Deferred { need_pages: usize, free_pages: usize },
+}
+
+impl AdmissionOutcome {
+    /// The admission, or `None` if deferred.
+    pub fn admitted(self) -> Option<Admission> {
+        match self {
+            AdmissionOutcome::Admitted(a) => Some(a),
+            AdmissionOutcome::Deferred { .. } => None,
+        }
+    }
+
+    /// The admission, or an error carrying the budget shortfall —
+    /// for callers that sized the budget to always fit.
+    pub fn into_admission(self) -> Result<Admission> {
+        match self {
+            AdmissionOutcome::Admitted(a) => Ok(a),
+            AdmissionOutcome::Deferred { need_pages, free_pages } => bail!(
+                "kv budget exceeded: need {need_pages} pages, \
+                 {free_pages} free"
+            ),
+        }
+    }
+
+    pub fn is_deferred(&self) -> bool {
+        matches!(self, AdmissionOutcome::Deferred { .. })
+    }
 }
 
 /// Version-keyed change set between two advertisements of one replica's
@@ -347,10 +484,14 @@ pub struct KvCacheManager {
     /// the first take — forcing that take to be a Full snapshot).
     advertised_version: Option<u64>,
     lru_clock: u64,
-    /// Σ cached_tokens over all `admit_tokens` calls (metrics).
+    /// Σ cached_tokens over all admissions (metrics).
     hit_tokens_total: usize,
     /// Pages evicted from the retained pool (metrics).
     evicted_pages_total: usize,
+    /// Incrementally maintained Σ `reserved_pages` over branches with an
+    /// eviction priority set — the pages reward-driven preemption could
+    /// reclaim right now. Rebuilt from scratch by `check_invariants`.
+    preemptable_pages: usize,
 }
 
 fn pages_for(tokens: usize, page_tokens: usize) -> usize {
@@ -393,6 +534,7 @@ impl KvCacheManager {
             lru_clock: 0,
             hit_tokens_total: 0,
             evicted_pages_total: 0,
+            preemptable_pages: 0,
         }
     }
 
@@ -427,6 +569,14 @@ impl KvCacheManager {
     }
 
     /// Retained refcount-0 prefix pages currently resident.
+    /// Fraction of the page budget currently held (used + pledged) —
+    /// the pressure signal `LoadSnapshot` carries to the cluster's
+    /// scale/routing layer. 0.0 idle, 1.0 fully committed.
+    pub fn pressure(&self) -> f64 {
+        (self.used_pages + self.pledged_pages) as f64
+            / self.capacity_pages as f64
+    }
+
     pub fn cached_pages(&self) -> usize {
         self.cached_pages
     }
@@ -512,18 +662,6 @@ impl KvCacheManager {
             + n_branches * pages_for(max_new, self.page_tokens)
     }
 
-    /// Would admitting a request with `n_branches` branches fit the
-    /// budget? Scalar form: ignores the prefix cache (a cache hit can
-    /// only need fewer pages, so `true` here is conservative-safe).
-    pub fn can_admit(&self, prompt_len: usize, max_new: usize, n_branches: usize) -> bool {
-        self.admission_pages(prompt_len, max_new, n_branches) <= self.free_pages()
-    }
-
-    /// Can `n_more` additional branches be attached to an existing prefix?
-    pub fn can_grow(&self, max_new: usize, n_more: usize) -> bool {
-        n_more * pages_for(max_new, self.page_tokens) <= self.free_pages()
-    }
-
     /// Walk the radix tree for the longest interned full-page prefix of
     /// `prompt`. Returns the matched node path, root-first.
     fn walk_path(&self, prompt: &[Token]) -> Vec<u32> {
@@ -567,7 +705,7 @@ impl KvCacheManager {
     /// One tree walk's worth of admission arithmetic: the matched path,
     /// the pages the admission must newly allocate, and the retained
     /// (refcount-0) pages it would re-lease. Single source of the budget
-    /// formula for `can_admit_tokens` and `try_admit_tokens`.
+    /// formula for every token-level admission mode.
     fn admission_need_tokens(
         &self,
         prompt: &[Token],
@@ -586,26 +724,6 @@ impl KvCacheManager {
             + tail_pages
             + n_branches * pages_for(max_new, pt);
         (path, need, hit_retained)
-    }
-
-    /// Token-level admission check: charges only the prompt suffix not
-    /// covered by the radix cache. Retained pages the admission would
-    /// re-lease stop being evictable, so they count against the headroom.
-    /// (Callers that will admit on success should prefer
-    /// [`KvCacheManager::try_admit_tokens`], which shares one tree walk
-    /// between the check and the admission.)
-    pub fn can_admit_tokens(
-        &self,
-        prompt: &[Token],
-        max_new: usize,
-        n_branches: usize,
-    ) -> bool {
-        if self.prefix_cache_pages == 0 {
-            return self.can_admit(prompt.len(), max_new, n_branches);
-        }
-        let (_, need, hit_retained) =
-            self.admission_need_tokens(prompt, max_new, n_branches);
-        need + hit_retained <= self.free_pages()
     }
 
     /// Evict the least-recently-retained refcount-0 node with no
@@ -799,6 +917,7 @@ impl KvCacheManager {
                 prefix,
                 reserved_pages: branch_pages,
                 grown_tokens: 0,
+                priority: None,
             });
             self.used_pages += branch_pages;
             ids.push(BranchId { idx: bidx, gen: bgen });
@@ -806,23 +925,54 @@ impl KvCacheManager {
         ids
     }
 
-    /// Admit a request (scalar form): allocate the whole prompt privately
-    /// plus one reservation per branch. Never consults the radix cache —
-    /// this is the pre-cache accounting, kept for the Rebase baseline and
-    /// as the delegation target when the cache is disabled. Fails
-    /// (without side effects) if over budget.
+    /// The unified admission entry point: dispatches on
+    /// [`AdmissionRequest::mode`]. Every outcome is side-effect free when
+    /// `Deferred`; errors are reserved for protocol misuse (unknown
+    /// prefix handles, zero-sized streamed chunks).
     pub fn admit(
+        &mut self,
+        req: &AdmissionRequest,
+    ) -> Result<AdmissionOutcome> {
+        match req.mode {
+            AdmissionMode::Monolithic => {
+                self.admit_monolithic(req.prompt, req.max_new, req.branches)
+            }
+            AdmissionMode::Chunked => {
+                self.admit_staged(req.prompt, req.max_new, req.branches, None)
+            }
+            AdmissionMode::Streamed { first_chunk_tokens } => {
+                if first_chunk_tokens == 0 {
+                    bail!("streamed admission needs first_chunk_tokens >= 1");
+                }
+                self.admit_staged(
+                    req.prompt,
+                    req.max_new,
+                    req.branches,
+                    Some(first_chunk_tokens),
+                )
+            }
+            AdmissionMode::Grow { prefix } => {
+                self.grow_branches(prefix, req.max_new, req.branches)
+            }
+        }
+    }
+
+    /// Scalar admission: allocate the whole prompt privately plus one
+    /// reservation per branch. Never consults the radix cache — this is
+    /// the pre-cache accounting, the delegation target when the cache is
+    /// disabled (and thereby the Rebase baseline's path).
+    fn admit_scalar(
         &mut self,
         prompt_len: usize,
         max_new: usize,
         n_branches: usize,
-    ) -> Result<(PrefixId, Vec<BranchId>)> {
-        if !self.can_admit(prompt_len, max_new, n_branches) {
-            bail!(
-                "kv budget exceeded: need {} pages, {} free",
-                self.admission_pages(prompt_len, max_new, n_branches),
-                self.free_pages()
-            );
+    ) -> Result<AdmissionOutcome> {
+        let need = self.admission_pages(prompt_len, max_new, n_branches);
+        if need > self.free_pages() {
+            return Ok(AdmissionOutcome::Deferred {
+                need_pages: need,
+                free_pages: self.free_pages(),
+            });
         }
         let prefix_pages = pages_for(prompt_len, self.page_tokens);
         let branch_pages = pages_for(max_new, self.page_tokens);
@@ -838,54 +988,36 @@ impl KvCacheManager {
         self.used_pages += prefix_pages;
         let branch_ids = self.reserve_branches(prefix, n_branches, branch_pages);
         self.peak_pages = self.peak_pages.max(self.used_pages);
-        Ok((prefix, branch_ids))
+        Ok(AdmissionOutcome::Admitted(Admission {
+            prefix,
+            branches: branch_ids,
+            cached_tokens: 0,
+        }))
     }
 
-    /// Admit a request by prompt *tokens*: intern the prompt's full pages
+    /// Monolithic token-level admission: intern the prompt's full pages
     /// into the radix tree, lease the longest cached prefix for free, and
     /// only charge pages for the uncovered suffix (plus the private tail
-    /// page and the per-branch reservations). With the cache disabled
-    /// this delegates to the scalar [`KvCacheManager::admit`] and is
-    /// byte-identical to it. Fails without side effects if over budget.
-    pub fn admit_tokens(
+    /// page and the per-branch reservations). One tree walk shared
+    /// between the budget check and the admission — the scheduler's
+    /// head-of-line gate sits on this path. With the cache disabled this
+    /// delegates to the scalar accounting, byte-identical to it.
+    fn admit_monolithic(
         &mut self,
         prompt: &[Token],
         max_new: usize,
         n_branches: usize,
-    ) -> Result<Admission> {
-        match self.try_admit_tokens(prompt, max_new, n_branches)? {
-            Some(admission) => Ok(admission),
-            None => bail!(
-                "kv budget exceeded admitting a {}-token prompt with \
-                 {n_branches} branches ({} pages free)",
-                prompt.len(),
-                self.free_pages()
-            ),
-        }
-    }
-
-    /// [`KvCacheManager::admit_tokens`] with "over budget" as a
-    /// side-effect-free `Ok(None)` instead of an error, and one tree walk
-    /// shared between the budget check and the admission — the
-    /// scheduler's head-of-line gate calls this directly on the hot path.
-    pub fn try_admit_tokens(
-        &mut self,
-        prompt: &[Token],
-        max_new: usize,
-        n_branches: usize,
-    ) -> Result<Option<Admission>> {
+    ) -> Result<AdmissionOutcome> {
         if self.prefix_cache_pages == 0 {
-            if !self.can_admit(prompt.len(), max_new, n_branches) {
-                return Ok(None);
-            }
-            let (prefix, branches) =
-                self.admit(prompt.len(), max_new, n_branches)?;
-            return Ok(Some(Admission { prefix, branches, cached_tokens: 0 }));
+            return self.admit_scalar(prompt.len(), max_new, n_branches);
         }
         let (path, need, hit_retained) =
             self.admission_need_tokens(prompt, max_new, n_branches);
         if need + hit_retained > self.free_pages() {
-            return Ok(None);
+            return Ok(AdmissionOutcome::Deferred {
+                need_pages: need + hit_retained,
+                free_pages: self.free_pages(),
+            });
         }
         let pt = self.page_tokens;
         let tail_pages = usize::from(prompt.len() % pt > 0);
@@ -917,50 +1049,83 @@ impl KvCacheManager {
         self.peak_pages = self.peak_pages.max(self.used_pages);
         let cached_tokens = path.len() * pt;
         self.hit_tokens_total += cached_tokens;
-        Ok(Some(Admission { prefix, branches: branch_ids, cached_tokens }))
+        Ok(AdmissionOutcome::Admitted(Admission {
+            prefix,
+            branches: branch_ids,
+            cached_tokens,
+        }))
     }
 
-    /// Chunked-prefill admission: lease the radix-covered prefix and the
-    /// per-branch reservations exactly like
-    /// [`KvCacheManager::try_admit_tokens`], but *pledge* the uncovered
-    /// prompt suffix's pages instead of materializing them — they convert
-    /// to used pages as prefill chunks land
-    /// ([`KvCacheManager::note_prefill`]), and the full pages intern into
-    /// the radix tree only when the prefill completes
+    /// Staged (chunked or streamed) admission: lease the radix-covered
+    /// prefix and the per-branch reservations exactly like the monolithic
+    /// path, but *pledge* the uncovered prompt suffix's pages instead of
+    /// materializing them — they convert to used pages as prefill chunks
+    /// land ([`KvCacheManager::note_prefill`]), and the full pages intern
+    /// into the radix tree only when the prefill completes
     /// ([`KvCacheManager::commit_prefix`]). Interning on completion means
     /// a second identical prompt admitted while the first still streams
     /// sees no hit (its pages are not computed yet) — the monolithic path
     /// could intern optimistically at admission, this one cannot.
     ///
-    /// The budget check is identical to the monolithic one (pledged pages
-    /// count against [`KvCacheManager::free_pages`]), so a chunked
-    /// admission can never be stranded mid-prefill by a later admission.
-    /// Over budget is a side-effect-free `Ok(None)`. Works with the cache
-    /// disabled too (no path, no interning — the whole prompt streams and
-    /// stays private).
-    pub fn try_admit_tokens_chunked(
+    /// `first_chunk` selects the pledge discipline. `None` (chunked): the
+    /// whole uncovered suffix is pledged up front, so the admission can
+    /// never be stranded mid-prefill by a later admission. `Some(c)`
+    /// (streamed): only the pages spanned by the first `c` uncovered
+    /// tokens are pledged, and the pledge grows per chunk via
+    /// [`KvCacheManager::ensure_pledged`] — tighter budgets admit more,
+    /// but a stream may stall mid-prompt waiting for pages. A streamed
+    /// request whose *total* footprint exceeds the whole budget is
+    /// deferred outright (it could never complete), keeping the stall
+    /// transient by construction.
+    ///
+    /// Works with the cache disabled too (no path, no interning — the
+    /// whole prompt streams and stays private).
+    fn admit_staged(
         &mut self,
         prompt: &[Token],
         max_new: usize,
         n_branches: usize,
-    ) -> Result<Option<Admission>> {
-        let (path, need, hit_retained) =
+        first_chunk: Option<usize>,
+    ) -> Result<AdmissionOutcome> {
+        let (path, full_need, hit_retained) =
             self.admission_need_tokens(prompt, max_new, n_branches);
-        if need + hit_retained > self.free_pages() {
-            return Ok(None);
-        }
         let pt = self.page_tokens;
         let covered_pages = path.len();
         let covered_tokens = covered_pages * pt;
-        let uncovered_pages = pages_for(prompt.len(), pt) - covered_pages;
+        let uncovered_tokens = prompt.len() - covered_tokens;
         let branch_pages = pages_for(max_new, pt);
+        // Pledge discipline: whole suffix (chunked) vs first chunk
+        // (streamed), measured in uncovered tokens whose pages must be
+        // secured now.
+        let pledged_tokens = match first_chunk {
+            None => uncovered_tokens,
+            Some(c) => uncovered_tokens.min(c),
+        };
+        let secured_pages =
+            pages_for(covered_tokens + pledged_tokens, pt) - covered_pages;
+        let need = secured_pages + n_branches * branch_pages;
+        if first_chunk.is_some() && full_need > self.capacity_pages {
+            // The stream could admit on its first chunk but never finish:
+            // defer permanently rather than deadlock mid-prompt.
+            return Ok(AdmissionOutcome::Deferred {
+                need_pages: full_need,
+                free_pages: self.free_pages(),
+            });
+        }
+        if need + hit_retained > self.free_pages() {
+            return Ok(AdmissionOutcome::Deferred {
+                need_pages: need + hit_retained,
+                free_pages: self.free_pages(),
+            });
+        }
 
         // 1. Lease the already-interned path (protects the hit nodes from
         //    the eviction pass below; retained hits move cached → used).
         self.lease_path(&path);
 
-        // 2. Make physical room for everything this admission will ever
-        //    materialize (branch reservations now, pledged pages later).
+        // 2. Make physical room for everything this admission secures now
+        //    (branch reservations immediately, pledged pages as chunks
+        //    land).
         self.make_room(need)?;
 
         // 3. Prefix record: nothing is interned or materialized for the
@@ -970,7 +1135,8 @@ impl KvCacheManager {
                 covered_tokens,
                 prompt_tokens: prompt.len(),
                 staged_tokens: 0,
-                pledged_pages: uncovered_pages,
+                pledged_tokens,
+                pledged_pages: secured_pages,
             })
         } else {
             None // fully covered: nothing to stream
@@ -982,16 +1148,57 @@ impl KvCacheManager {
             leaf: path.last().copied(),
             staged,
         });
-        self.pledged_pages += uncovered_pages;
+        self.pledged_pages += secured_pages;
         let prefix = PrefixId { idx: pidx, gen: pgen };
         let branch_ids = self.reserve_branches(prefix, n_branches, branch_pages);
         self.peak_pages = self.peak_pages.max(self.used_pages);
         self.hit_tokens_total += covered_tokens;
-        Ok(Some(Admission {
+        Ok(AdmissionOutcome::Admitted(Admission {
             prefix,
             branches: branch_ids,
             cached_tokens: covered_tokens,
         }))
+    }
+
+    /// Grow a streamed pledge: secure the pages spanned by the next
+    /// `more_tokens` of the uncovered suffix (beyond what is already
+    /// staged). Returns `Ok(false)` — with no side effects — when the
+    /// budget cannot cover them yet; the stream stalls and retries after
+    /// decode frees pages (or preemption reclaims them). A no-op
+    /// `Ok(true)` when the pledge already covers the span (always the
+    /// case for chunked admissions, whose pledge is the whole suffix).
+    pub fn ensure_pledged(
+        &mut self,
+        prefix: PrefixId,
+        more_tokens: usize,
+    ) -> Result<bool> {
+        let pt = self.page_tokens;
+        let free = self.free_pages();
+        let Some(p) = self.prefixes.get_mut(prefix.idx, prefix.gen) else {
+            bail!("ensure_pledged on unknown prefix {prefix:?}");
+        };
+        let Some(st) = p.staged.as_mut() else {
+            bail!("ensure_pledged on a prefix with no prefill in flight");
+        };
+        let uncovered = st.prompt_tokens - st.covered_tokens;
+        let target = uncovered.min(st.staged_tokens + more_tokens);
+        if target <= st.pledged_tokens {
+            return Ok(true);
+        }
+        let covered_pages = st.covered_tokens / pt;
+        let secured_now =
+            pages_for(st.covered_tokens + st.pledged_tokens, pt) - covered_pages;
+        let secured_target =
+            pages_for(st.covered_tokens + target, pt) - covered_pages;
+        let delta = secured_target - secured_now;
+        if delta > free {
+            return Ok(false);
+        }
+        st.pledged_tokens = target;
+        st.pledged_pages += delta;
+        self.pledged_pages += delta;
+        self.make_room(0)?; // evict retained pages the pledge now displaces
+        Ok(true)
     }
 
     /// Record `new_tokens` of chunked-prefill progress on `prefix`: pages
@@ -1017,6 +1224,15 @@ impl KvCacheManager {
                 "prefill progress overruns the uncovered suffix: \
                  {} + {new_tokens} > {uncovered}",
                 st.staged_tokens
+            );
+        }
+        if st.staged_tokens + new_tokens > st.pledged_tokens {
+            bail!(
+                "prefill progress overruns the streamed pledge: \
+                 {} + {new_tokens} > {} pledged (grow the pledge via \
+                 ensure_pledged first)",
+                st.staged_tokens,
+                st.pledged_tokens
             );
         }
         st.staged_tokens += new_tokens;
@@ -1098,34 +1314,94 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Attach `n_more` branches to an existing shared prefix (Rebase tree
-    /// expansion: a fork reuses the prompt pages and reserves fresh decode
-    /// pages). Fails without side effects if over budget.
-    pub fn grow(
+    /// Attach `n_more` branches to an existing shared prefix (tree
+    /// expansion: a Rebase fork — or a preempted branch resuming — reuses
+    /// the prompt pages and reserves fresh decode pages).
+    fn grow_branches(
         &mut self,
         prefix: PrefixId,
         max_new: usize,
         n_more: usize,
-    ) -> Result<Vec<BranchId>> {
+    ) -> Result<AdmissionOutcome> {
         if self.prefixes.get(prefix.idx, prefix.gen).is_none() {
             bail!("grow on unknown prefix {prefix:?}");
         }
-        if !self.can_grow(max_new, n_more) {
-            bail!(
-                "kv budget exceeded on grow: need {} pages, {} free",
-                n_more * pages_for(max_new, self.page_tokens),
-                self.free_pages()
-            );
-        }
         let branch_pages = pages_for(max_new, self.page_tokens);
-        self.make_room(n_more * branch_pages)?;
+        let need = n_more * branch_pages;
+        if need > self.free_pages() {
+            return Ok(AdmissionOutcome::Deferred {
+                need_pages: need,
+                free_pages: self.free_pages(),
+            });
+        }
+        self.make_room(need)?;
         let out = self.reserve_branches(prefix, n_more, branch_pages);
         self.prefixes
             .get_mut(prefix.idx, prefix.gen)
             .unwrap()
             .refcount += n_more;
         self.peak_pages = self.peak_pages.max(self.used_pages);
-        Ok(out)
+        Ok(AdmissionOutcome::Admitted(Admission {
+            prefix,
+            branches: out,
+            cached_tokens: 0,
+        }))
+    }
+
+    /// Feed a branch's PRM reward in as its eviction priority: under
+    /// pressure the scheduler preempts the lowest-priority branches first
+    /// — exactly the ones SART's pruning phase was about to kill. NaN is
+    /// rejected (it would poison the candidate ordering).
+    pub fn set_branch_priority(
+        &mut self,
+        branch: BranchId,
+        priority: f32,
+    ) -> Result<()> {
+        if priority.is_nan() {
+            bail!("branch eviction priority must not be NaN");
+        }
+        let Some(b) = self.branches.get_mut(branch.idx, branch.gen) else {
+            bail!("set_branch_priority on unknown branch {branch:?}");
+        };
+        if b.priority.is_none() {
+            self.preemptable_pages += b.reserved_pages;
+        }
+        b.priority = Some(priority);
+        Ok(())
+    }
+
+    /// Pages currently reclaimable by reward-driven preemption (Σ
+    /// reserved pages over prioritized branches). O(1): maintained
+    /// incrementally, rebuilt by `check_invariants`.
+    pub fn preemptable_pages(&self) -> usize {
+        self.preemptable_pages
+    }
+
+    /// The lowest-priority branches whose combined reservations cover
+    /// `need_pages` — the manager's side of reward-driven preemption.
+    /// Ordered worst reward first (slab index breaks ties
+    /// deterministically); returns fewer than requested when the whole
+    /// prioritized pool is smaller than the need.
+    pub fn preemption_candidates(&self, need_pages: usize) -> Vec<BranchId> {
+        let mut ranked: Vec<(f32, u32, u32, usize)> = Vec::new();
+        for (idx, slot) in self.branches.slots.iter().enumerate() {
+            if let Some(b) = &slot.val {
+                if let Some(pri) = b.priority {
+                    ranked.push((pri, idx as u32, slot.gen, b.reserved_pages));
+                }
+            }
+        }
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut out = Vec::new();
+        let mut freed = 0usize;
+        for (_, idx, gen, reserved) in ranked {
+            if freed >= need_pages {
+                break;
+            }
+            out.push(BranchId { idx, gen });
+            freed += reserved;
+        }
+        out
     }
 
     /// Record decode progress (informational; reservation already charged).
@@ -1196,6 +1472,10 @@ impl KvCacheManager {
         self.used_pages -= b.reserved_pages;
         debug_assert!(self.live_decoded >= b.grown_tokens);
         self.live_decoded -= b.grown_tokens;
+        if b.priority.is_some() {
+            debug_assert!(self.preemptable_pages >= b.reserved_pages);
+            self.preemptable_pages -= b.reserved_pages;
+        }
         let prefix = self
             .prefixes
             .get_mut(b.prefix.idx, b.prefix.gen)
@@ -1255,13 +1535,21 @@ impl KvCacheManager {
                 }
             }
             // Total prompt pages split exactly into interned path +
-            // private remainder + (mid-prefill) outstanding pledge.
+            // private remainder + outstanding pledge + (streamed-only)
+            // not-yet-pledged remainder.
             let pledged = p.staged.as_ref().map_or(0, |st| st.pledged_pages);
+            let unpledged = p.staged.as_ref().map_or(0, |st| {
+                pages_for(st.prompt_tokens, self.page_tokens)
+                    - pages_for(
+                        st.covered_tokens + st.pledged_tokens,
+                        self.page_tokens,
+                    )
+            });
             pledged_scan += pledged;
-            if p.pages != p.private_pages + steps + pledged {
+            if p.pages != p.private_pages + steps + pledged + unpledged {
                 bail!(
                     "prefix page split drift: {} != {} private + {steps} \
-                     interned + {pledged} pledged",
+                     interned + {pledged} pledged + {unpledged} unpledged",
                     p.pages,
                     p.private_pages
                 );
@@ -1269,8 +1557,10 @@ impl KvCacheManager {
             if let Some(st) = &p.staged {
                 // Mid-prefill bookkeeping must be self-consistent: the
                 // leased path is exactly the covered prefix, progress
-                // stays within the uncovered suffix, and the private
-                // pages are exactly the ones the cursor has spanned.
+                // stays within the pledged span (itself within the
+                // uncovered suffix), the private pages are exactly the
+                // ones the cursor has spanned, and the grown pledge
+                // rebuilds from the pledged-token cursor.
                 if st.covered_tokens != steps * self.page_tokens {
                     bail!(
                         "staged prefix covered_tokens {} != {} path pages",
@@ -1287,6 +1577,18 @@ impl KvCacheManager {
                         st.prompt_tokens
                     );
                 }
+                if st.staged_tokens > st.pledged_tokens
+                    || st.covered_tokens + st.pledged_tokens
+                        > st.prompt_tokens
+                {
+                    bail!(
+                        "staged prefix pledge cursor out of bounds: \
+                         {} staged / {} pledged / {} uncovered",
+                        st.staged_tokens,
+                        st.pledged_tokens,
+                        st.prompt_tokens - st.covered_tokens
+                    );
+                }
                 let materialized = pages_for(
                     st.covered_tokens + st.staged_tokens,
                     self.page_tokens,
@@ -1296,6 +1598,18 @@ impl KvCacheManager {
                         "staged prefix materialized {materialized} pages \
                          but holds {} private",
                         p.private_pages
+                    );
+                }
+                let secured = pages_for(
+                    st.covered_tokens + st.pledged_tokens,
+                    self.page_tokens,
+                ) - steps;
+                if st.pledged_pages != secured - materialized {
+                    bail!(
+                        "grown pledge drift: {} pledged pages != {} \
+                         secured - {materialized} materialized",
+                        st.pledged_pages,
+                        secured
                     );
                 }
             }
@@ -1472,6 +1786,22 @@ impl KvCacheManager {
                 self.live_decoded
             );
         }
+        let preemptable: usize = self
+            .branches
+            .iter()
+            .filter(|b| b.priority.is_some())
+            .map(|b| b.reserved_pages)
+            .sum();
+        if preemptable != self.preemptable_pages {
+            bail!(
+                "preemptable_pages drift: recomputed {preemptable} != \
+                 counter {}",
+                self.preemptable_pages
+            );
+        }
+        if self.branches.iter().any(|b| b.priority.is_some_and(f32::is_nan)) {
+            bail!("NaN branch eviction priority");
+        }
         for b in self.branches.iter() {
             if self.prefixes.get(b.prefix.idx, b.prefix.gen).is_none() {
                 bail!("branch references dead prefix");
@@ -1494,10 +1824,49 @@ mod tests {
         (base..base + len as i32).collect()
     }
 
+    /// Scalar-style admission by prompt length: token content is
+    /// irrelevant on the cache-disabled path, so a synthetic prompt
+    /// stands in for it.
+    fn admit_len(
+        kv: &mut KvCacheManager,
+        len: usize,
+        max_new: usize,
+        n: usize,
+    ) -> Result<(PrefixId, Vec<BranchId>)> {
+        let p = prompt(-20_000, len);
+        let a = kv
+            .admit(&AdmissionRequest::monolithic(&p, max_new, n))?
+            .into_admission()?;
+        Ok((a.prefix, a.branches))
+    }
+
+    /// Monolithic admission that errors when deferred.
+    fn admit_tokens(
+        kv: &mut KvCacheManager,
+        p: &[Token],
+        max_new: usize,
+        n: usize,
+    ) -> Result<Admission> {
+        kv.admit(&AdmissionRequest::monolithic(p, max_new, n))?
+            .into_admission()
+    }
+
+    /// Chunked admission: `None` when deferred.
+    fn admit_chunked(
+        kv: &mut KvCacheManager,
+        p: &[Token],
+        max_new: usize,
+        n: usize,
+    ) -> Option<Admission> {
+        kv.admit(&AdmissionRequest::chunked(p, max_new, n))
+            .unwrap()
+            .admitted()
+    }
+
     #[test]
     fn admit_and_release_roundtrip() {
         let mut kv = KvCacheManager::new(1024, 16);
-        let (_, branches) = kv.admit(30, 100, 4).unwrap();
+        let (_, branches) = admit_len(&mut kv, 30, 100, 4).unwrap();
         // prefix: ceil(30/16)=2, branch: ceil(100/16)=7 → 2 + 28 = 30.
         assert_eq!(kv.used_pages(), 30);
         kv.check_invariants().unwrap();
@@ -1516,18 +1885,25 @@ mod tests {
     #[test]
     fn admission_control_blocks() {
         let mut kv = KvCacheManager::new(160, 16); // 10 pages
-        assert!(kv.can_admit(16, 32, 4)); // 1 + 4*2 = 9
-        let (_, _b) = kv.admit(16, 32, 4).unwrap();
-        assert!(!kv.can_admit(16, 32, 1)); // needs 3 more, only 1 free
-        assert!(kv.admit(16, 32, 1).is_err());
-        assert_eq!(kv.used_pages(), 9); // failed admit has no side effects
+        let (_, _b) = admit_len(&mut kv, 16, 32, 4).unwrap(); // 1 + 4*2 = 9
+        // Needs 3 more pages with only 1 free: deferred, and the outcome
+        // reports the exact shortfall.
+        let p = prompt(0, 16);
+        match kv.admit(&AdmissionRequest::monolithic(&p, 32, 1)).unwrap() {
+            AdmissionOutcome::Deferred { need_pages, free_pages } => {
+                assert_eq!((need_pages, free_pages), (3, 1));
+            }
+            AdmissionOutcome::Admitted(_) => panic!("over-budget admit"),
+        }
+        assert!(admit_len(&mut kv, 16, 32, 1).is_err());
+        assert_eq!(kv.used_pages(), 9); // deferred admit has no side effects
         kv.check_invariants().unwrap();
     }
 
     #[test]
     fn double_release_rejected() {
         let mut kv = KvCacheManager::new(1024, 16);
-        let (_, branches) = kv.admit(10, 10, 1).unwrap();
+        let (_, branches) = admit_len(&mut kv, 10, 10, 1).unwrap();
         kv.release_branch(branches[0]).unwrap();
         assert!(kv.release_branch(branches[0]).is_err());
     }
@@ -1535,14 +1911,14 @@ mod tests {
     #[test]
     fn stale_handles_rejected_after_slot_reuse() {
         let mut kv = KvCacheManager::new(4096, 16);
-        let (p1, b1) = kv.admit(16, 16, 1).unwrap();
+        let (p1, b1) = admit_len(&mut kv, 16, 16, 1).unwrap();
         kv.release_branch(b1[0]).unwrap();
         // The next admit reuses the freed slab slots with a bumped
         // generation; the stale handles must still be rejected.
-        let (p2, b2) = kv.admit(16, 16, 1).unwrap();
+        let (p2, b2) = admit_len(&mut kv, 16, 16, 1).unwrap();
         assert!(kv.note_decode(b1[0], 4).is_err());
         assert!(kv.release_branch(b1[0]).is_err());
-        assert!(kv.grow(p1, 16, 1).is_err());
+        assert!(kv.admit(&AdmissionRequest::grow(p1, 16, 1)).is_err());
         assert_ne!(p1, p2);
         assert_ne!(b1[0], b2[0]);
         kv.note_decode(b2[0], 4).unwrap();
@@ -1553,7 +1929,7 @@ mod tests {
     #[test]
     fn live_decoded_tokens_tracks_growth() {
         let mut kv = KvCacheManager::new(4096, 16);
-        let (_, bs) = kv.admit(27, 64, 2).unwrap();
+        let (_, bs) = admit_len(&mut kv, 27, 64, 2).unwrap();
         assert_eq!(kv.live_decoded_tokens(), 0);
         kv.note_decode(bs[0], 10).unwrap();
         kv.note_decode(bs[1], 5).unwrap();
@@ -1570,10 +1946,10 @@ mod tests {
     #[test]
     fn prefix_sharing_saves_pages() {
         let mut shared = KvCacheManager::new(10_000, 16);
-        shared.admit(64, 64, 8).unwrap(); // 4 + 8*4 = 36
+        admit_len(&mut shared, 64, 64, 8).unwrap(); // 4 + 8*4 = 36
         let mut unshared = KvCacheManager::new(10_000, 16);
         for _ in 0..8 {
-            unshared.admit(64, 64, 1).unwrap(); // 8 * (4+4) = 64
+            admit_len(&mut unshared, 64, 64, 1).unwrap(); // 8 * (4+4) = 64
         }
         assert!(shared.used_pages() < unshared.used_pages());
         assert_eq!(shared.used_pages(), 36);
@@ -1583,7 +1959,7 @@ mod tests {
     #[test]
     fn peak_tracking() {
         let mut kv = KvCacheManager::new(1024, 16);
-        let (_, b) = kv.admit(16, 16, 2).unwrap();
+        let (_, b) = admit_len(&mut kv, 16, 16, 2).unwrap();
         let peak = kv.used_pages();
         for bid in b {
             kv.release_branch(bid).unwrap();
@@ -1611,14 +1987,14 @@ mod tests {
         let mut scalar = KvCacheManager::new(4096, 16);
         let mut tokens = KvCacheManager::new(4096, 16);
         let p = prompt(100, 30);
-        let (_, bs1) = scalar.admit(p.len(), 100, 4).unwrap();
-        let adm = tokens.admit_tokens(&p, 100, 4).unwrap();
+        let (_, bs1) = admit_len(&mut scalar, p.len(), 100, 4).unwrap();
+        let adm = admit_tokens(&mut tokens, &p, 100, 4).unwrap();
         assert_eq!(adm.cached_tokens, 0);
         assert_eq!(scalar.used_pages(), tokens.used_pages());
         assert_eq!(tokens.cached_pages(), 0);
         // Second identical prompt: still no sharing with the cache off.
         let before = tokens.used_pages();
-        let adm2 = tokens.admit_tokens(&p, 100, 4).unwrap();
+        let adm2 = admit_tokens(&mut tokens, &p, 100, 4).unwrap();
         assert_eq!(adm2.cached_tokens, 0);
         assert_eq!(tokens.used_pages(), 2 * before);
         for b in bs1 {
@@ -1636,11 +2012,11 @@ mod tests {
     fn concurrent_identical_prompts_share_interned_pages() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 48); // 3 full pages
-        let a = kv.admit_tokens(&p, 32, 2).unwrap();
+        let a = admit_tokens(&mut kv, &p, 32, 2).unwrap();
         assert_eq!(a.cached_tokens, 0); // cold
         // 3 tree pages + 2 branches × 2 pages.
         assert_eq!(kv.used_pages(), 3 + 4);
-        let b = kv.admit_tokens(&p, 32, 2).unwrap();
+        let b = admit_tokens(&mut kv, &p, 32, 2).unwrap();
         assert_eq!(b.cached_tokens, 48); // full-page hit while live
         // Only the new branch reservations are charged.
         assert_eq!(kv.used_pages(), 3 + 4 + 4);
@@ -1658,7 +2034,7 @@ mod tests {
     fn retained_prefix_serves_later_request() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 40); // 2 full pages + 8-token tail
-        let a = kv.admit_tokens(&p, 32, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 32, 1).unwrap();
         assert_eq!(a.cached_tokens, 0);
         assert_eq!(kv.used_pages(), 2 + 1 + 2); // tree + tail + branch
         for b in a.branches {
@@ -1668,7 +2044,7 @@ mod tests {
         assert_eq!(kv.cached_pages(), 2);
         assert_eq!(kv.cached_prefix_tokens(&p), 32);
         // Re-admit: the 2 full pages come from the cache.
-        let b = kv.admit_tokens(&p, 32, 1).unwrap();
+        let b = admit_tokens(&mut kv, &p, 32, 1).unwrap();
         assert_eq!(b.cached_tokens, 32);
         assert_eq!(kv.used_pages(), 2 + 1 + 2);
         assert_eq!(kv.cached_pages(), 0);
@@ -1689,8 +2065,8 @@ mod tests {
         p1.extend(prompt(500, 16));
         let mut p2 = prompt(0, 32);
         p2.extend(prompt(900, 16));
-        let a = kv.admit_tokens(&p1, 16, 1).unwrap();
-        let b = kv.admit_tokens(&p2, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p1, 16, 1).unwrap();
+        let b = admit_tokens(&mut kv, &p2, 16, 1).unwrap();
         assert_eq!(a.cached_tokens, 0);
         assert_eq!(b.cached_tokens, 32);
         // 2 shared + 2 divergent tree pages + 2 branch pages.
@@ -1709,7 +2085,7 @@ mod tests {
         // its 2 shallowest pages (deepest stamped oldest → evicted first).
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 2);
         let p = prompt(0, 64);
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         for b in a.branches {
             kv.release_branch(b).unwrap();
         }
@@ -1727,11 +2103,11 @@ mod tests {
         // pressure; only refcount-0 pages are evictable.
         let mut kv = KvCacheManager::with_prefix_cache(16 * 24, 16, 4);
         let live_prompt = prompt(0, 48); // 3 tree pages
-        let live = kv.admit_tokens(&live_prompt, 16, 1).unwrap(); // +1 branch page
+        let live = admit_tokens(&mut kv, &live_prompt, 16, 1).unwrap(); // +1 branch page
         // Fill and churn the retained pool with released one-page prompts.
         for i in 0..6 {
             let p = prompt(1000 + 100 * i, 16);
-            let a = kv.admit_tokens(&p, 16, 1).unwrap();
+            let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
             for b in a.branches {
                 kv.release_branch(b).unwrap();
             }
@@ -1757,14 +2133,14 @@ mod tests {
         // 8-page budget total. A retained 3-page prefix must be evicted
         // to make room for a fresh admission that needs the space.
         let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
-        let a = kv.admit_tokens(&prompt(0, 48), 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &prompt(0, 48), 16, 1).unwrap();
         for b in a.branches {
             kv.release_branch(b).unwrap();
         }
         assert_eq!(kv.cached_pages(), 3);
         // New prompt: 4 tree pages + 2 branch pages = 6 fresh; physical
         // free is 8 - 3 retained, so one retained page must go.
-        let b = kv.admit_tokens(&prompt(2000, 64), 32, 1).unwrap();
+        let b = admit_tokens(&mut kv, &prompt(2000, 64), 32, 1).unwrap();
         assert_eq!(b.cached_tokens, 0);
         assert_eq!(kv.used_pages(), 6);
         assert!(kv.used_pages() + kv.cached_pages() <= kv.capacity_pages());
@@ -1779,17 +2155,19 @@ mod tests {
         // be rejected: the hit pages stop being evictable.
         let mut kv = KvCacheManager::with_prefix_cache(16 * 6, 16, 6);
         let p = prompt(0, 32);
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         for b in a.branches {
             kv.release_branch(b).unwrap();
         }
         assert_eq!(kv.cached_pages(), 2);
         // Re-lease 2 retained + 5 branch pages > 6 total: must refuse.
-        assert!(!kv.can_admit_tokens(&p, 16 * 5, 1));
-        assert!(kv.admit_tokens(&p, 16 * 5, 1).is_err());
+        assert!(kv
+            .admit(&AdmissionRequest::monolithic(&p, 16 * 5, 1))
+            .unwrap()
+            .is_deferred());
+        assert!(admit_tokens(&mut kv, &p, 16 * 5, 1).is_err());
         // 2 retained + 4 branch pages == 6: fits exactly.
-        assert!(kv.can_admit_tokens(&p, 16 * 4, 1));
-        let b = kv.admit_tokens(&p, 16 * 4, 1).unwrap();
+        let b = admit_tokens(&mut kv, &p, 16 * 4, 1).unwrap();
         assert_eq!(b.cached_tokens, 32);
         assert_eq!(kv.used_pages(), 6);
         kv.check_invariants().unwrap();
@@ -1803,7 +2181,7 @@ mod tests {
     fn chunked_admission_leases_pages_incrementally() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 48); // 3 full pages, no tail
-        let adm = kv.try_admit_tokens_chunked(&p, 32, 2).unwrap().unwrap();
+        let adm = admit_chunked(&mut kv, &p, 32, 2).unwrap();
         assert_eq!(adm.cached_tokens, 0);
         // Only the 2×2 branch reservations are materialized; the prompt's
         // 3 pages are pledged.
@@ -1836,7 +2214,7 @@ mod tests {
         assert_eq!(kv.cached_pages(), 3);
         kv.check_invariants().unwrap();
         // A later admission re-leases the committed pages like any hit.
-        let warm = kv.admit_tokens(&p, 32, 1).unwrap();
+        let warm = admit_tokens(&mut kv, &p, 32, 1).unwrap();
         assert_eq!(warm.cached_tokens, 48);
     }
 
@@ -1844,7 +2222,7 @@ mod tests {
     fn mid_prefill_release_frees_partial_pages_and_pledge() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 50); // 3 full pages + 2-token tail
-        let adm = kv.try_admit_tokens_chunked(&p, 16, 2).unwrap().unwrap();
+        let adm = admit_chunked(&mut kv, &p, 16, 2).unwrap();
         assert_eq!(kv.pledged_pages(), 4);
         kv.note_prefill(adm.prefix, 20).unwrap(); // 2 pages materialized
         assert_eq!(kv.used_pages(), 2 + 2 * 1);
@@ -1871,19 +2249,16 @@ mod tests {
         // though only 2 pages are physically used.
         let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
         let p = prompt(0, 48);
-        let adm = kv.try_admit_tokens_chunked(&p, 32, 1).unwrap().unwrap();
+        let adm = admit_chunked(&mut kv, &p, 32, 1).unwrap();
         assert_eq!(kv.used_pages(), 2);
         assert_eq!(kv.free_pages(), 3);
+        assert!(admit_chunked(&mut kv, &prompt(500, 32), 32, 1).is_none());
         assert!(kv
-            .try_admit_tokens_chunked(&prompt(500, 32), 32, 1)
+            .admit(&AdmissionRequest::monolithic(&prompt(500, 32), 32, 1))
             .unwrap()
-            .is_none());
-        assert!(kv.try_admit_tokens(&prompt(500, 32), 32, 1).unwrap().is_none());
+            .is_deferred());
         // 3 pages fits exactly (1 prompt page + 2 branch pages).
-        assert!(kv
-            .try_admit_tokens_chunked(&prompt(500, 16), 32, 1)
-            .unwrap()
-            .is_some());
+        assert!(admit_chunked(&mut kv, &prompt(500, 16), 32, 1).is_some());
         kv.check_invariants().unwrap();
         kv.note_prefill(adm.prefix, 48).unwrap();
         kv.commit_prefix(adm.prefix, &p).unwrap();
@@ -1894,14 +2269,14 @@ mod tests {
     fn fully_covered_chunked_admission_streams_nothing() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 32); // page-aligned: fully internable
-        let cold = kv.admit_tokens(&p, 16, 1).unwrap();
+        let cold = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         for b in cold.branches {
             kv.release_branch(b).unwrap();
         }
         assert_eq!(kv.cached_pages(), 2);
         // Chunked re-admission of the retained prompt: zero uncovered
         // tokens, so there is no staging state at all.
-        let warm = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        let warm = admit_chunked(&mut kv, &p, 16, 1).unwrap();
         assert_eq!(warm.cached_tokens, 32);
         assert_eq!(kv.pledged_pages(), 0);
         assert!(kv.note_prefill(warm.prefix, 1).is_err(), "nothing to stream");
@@ -1921,8 +2296,8 @@ mod tests {
         let mut scalar = KvCacheManager::new(4096, 16);
         let mut chunked = KvCacheManager::new(4096, 16);
         let p = prompt(0, 40); // 2 full pages + tail
-        let (_, bs) = scalar.admit(p.len(), 64, 3).unwrap();
-        let adm = chunked.try_admit_tokens_chunked(&p, 64, 3).unwrap().unwrap();
+        let (_, bs) = admit_len(&mut scalar, p.len(), 64, 3).unwrap();
+        let adm = admit_chunked(&mut chunked, &p, 64, 3).unwrap();
         assert_eq!(adm.cached_tokens, 0);
         assert_eq!(
             chunked.used_pages() + chunked.pledged_pages(),
@@ -1974,7 +2349,7 @@ mod tests {
         let p = prompt(0, 48); // 3 full pages
         let ds = prompt_page_digests(&p, 16);
         assert_eq!(kv.advertised_digest_count(), 0);
-        let a = kv.admit_tokens(&p, 32, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 32, 1).unwrap();
         assert!(ds.iter().all(|d| kv.has_digest(*d)));
         assert_eq!(kv.advertised_digest_count(), 3);
         kv.check_invariants().unwrap();
@@ -1992,7 +2367,7 @@ mod tests {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 2);
         let p = prompt(0, 64); // 4 pages; retention budget 2
         let ds = prompt_page_digests(&p, 16);
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         assert_eq!(kv.advertised_digest_count(), 4);
         for b in a.branches {
             kv.release_branch(b).unwrap();
@@ -2010,7 +2385,7 @@ mod tests {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 48);
         let ds = prompt_page_digests(&p, 16);
-        let adm = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        let adm = admit_chunked(&mut kv, &p, 16, 1).unwrap();
         kv.note_prefill(adm.prefix, 32).unwrap();
         assert_eq!(kv.advertised_digest_count(), 0, "digest before commit");
         kv.check_invariants().unwrap();
@@ -2026,7 +2401,7 @@ mod tests {
 
         // Mid-prefill release: the half-streamed suffix never digests.
         let q = prompt(9000, 48);
-        let adm2 = kv.try_admit_tokens_chunked(&q, 16, 1).unwrap().unwrap();
+        let adm2 = admit_chunked(&mut kv, &q, 16, 1).unwrap();
         kv.note_prefill(adm2.prefix, 20).unwrap();
         for b in adm2.branches {
             kv.release_branch(b).unwrap();
@@ -2046,8 +2421,8 @@ mod tests {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 1);
         let p = prompt(0, 16); // one page
         let d = prompt_page_digests(&p, 16)[0];
-        let a = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
-        let b = kv.try_admit_tokens_chunked(&p, 16, 1).unwrap().unwrap();
+        let a = admit_chunked(&mut kv, &p, 16, 1).unwrap();
+        let b = admit_chunked(&mut kv, &p, 16, 1).unwrap();
         kv.note_prefill(a.prefix, 16).unwrap();
         kv.commit_prefix(a.prefix, &p).unwrap();
         kv.note_prefill(b.prefix, 16).unwrap();
@@ -2079,7 +2454,7 @@ mod tests {
 
         let p = prompt(0, 48); // 3 pages
         let ds = prompt_page_digests(&p, 16);
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         let Advertisement::Delta(d1) = kv.take_advertisement() else {
             panic!("second take must be a delta");
         };
@@ -2120,7 +2495,7 @@ mod tests {
         kv.take_advertisement(); // arm delta mode
         let p = prompt(0, 32); // 2 pages against a 1-page budget
         let ds = prompt_page_digests(&p, 16);
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         for b in a.branches {
             kv.release_branch(b).unwrap();
         }
@@ -2140,15 +2515,198 @@ mod tests {
     fn sub_page_prompts_stay_private() {
         let mut kv = KvCacheManager::with_prefix_cache(4096, 16, 64);
         let p = prompt(0, 10); // below one page: nothing to intern
-        let a = kv.admit_tokens(&p, 16, 1).unwrap();
+        let a = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         assert_eq!(a.cached_tokens, 0);
         assert_eq!(kv.used_pages(), 1 + 1);
-        let b = kv.admit_tokens(&p, 16, 1).unwrap();
+        let b = admit_tokens(&mut kv, &p, 16, 1).unwrap();
         assert_eq!(b.cached_tokens, 0, "partial pages are never shared");
         for br in a.branches.into_iter().chain(b.branches) {
             kv.release_branch(br).unwrap();
         }
         assert_eq!(kv.cached_pages(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    // -----------------------------------------------------------------
+    // Streamed admission: first-chunk pledges that grow with the stream.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn streamed_admission_pledges_only_the_first_chunk() {
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
+        let p = prompt(0, 64); // 4 prompt pages, cold
+        // Chunked would pledge 4 prompt pages up front; streamed with a
+        // 16-token first chunk secures 1 prompt page + 1 branch page.
+        let adm = kv
+            .admit(&AdmissionRequest::streamed(&p, 16, 1, 16))
+            .unwrap()
+            .into_admission()
+            .unwrap();
+        assert_eq!(kv.used_pages(), 1); // branch reservation
+        assert_eq!(kv.pledged_pages(), 1); // first chunk's page
+        kv.check_invariants().unwrap();
+        // The stream may not outrun its pledge...
+        assert!(kv.note_prefill(adm.prefix, 32).is_err());
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        assert_eq!((kv.used_pages(), kv.pledged_pages()), (2, 0));
+        // ...and growing the pledge secures the next chunk's pages.
+        assert!(kv.ensure_pledged(adm.prefix, 32).unwrap());
+        assert_eq!(kv.pledged_pages(), 2);
+        kv.note_prefill(adm.prefix, 32).unwrap();
+        assert!(kv.ensure_pledged(adm.prefix, 16).unwrap());
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        assert_eq!(kv.pledged_pages(), 0);
+        kv.commit_prefix(adm.prefix, &p).unwrap();
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.cached_prefix_tokens(&p), 64);
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn streamed_pledge_growth_stalls_without_free_pages() {
+        // 6 pages. Stream a 4-page prompt (plus 1 branch page) next to a
+        // 3-page resident: the first chunk fits, but the pledge cannot
+        // grow past the budget until the resident releases.
+        let mut kv = KvCacheManager::new(16 * 6, 16);
+        let resident =
+            admit_tokens(&mut kv, &prompt(1000, 32), 16, 1).unwrap();
+        let p = prompt(0, 64);
+        // Chunked (whole-suffix pledge) would need 5 of the 3 free pages.
+        assert!(admit_chunked(&mut kv, &p, 16, 1).is_none());
+        // Streamed needs 2 now: admitted.
+        let adm = kv
+            .admit(&AdmissionRequest::streamed(&p, 16, 1, 16))
+            .unwrap()
+            .into_admission()
+            .unwrap();
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        assert!(kv.ensure_pledged(adm.prefix, 16).unwrap());
+        kv.note_prefill(adm.prefix, 16).unwrap();
+        // All 6 pages spoken for (3 resident + 2 materialized + 1
+        // branch): the next grow stalls, with no side effects.
+        assert!(!kv.ensure_pledged(adm.prefix, 16).unwrap());
+        kv.check_invariants().unwrap();
+        // Freeing the resident unblocks the stream.
+        for b in resident.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert!(kv.ensure_pledged(adm.prefix, 32).unwrap());
+        kv.note_prefill(adm.prefix, 32).unwrap();
+        kv.commit_prefix(adm.prefix, &p).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_stream_is_deferred_not_deadlocked() {
+        // An empty 4-page manager could admit the first chunk of a
+        // 6-page prompt, but the stream could never finish: defer it
+        // outright, reporting the full footprint as the need.
+        let mut kv = KvCacheManager::new(16 * 4, 16);
+        let p = prompt(0, 96);
+        match kv.admit(&AdmissionRequest::streamed(&p, 16, 1, 16)).unwrap() {
+            AdmissionOutcome::Deferred { need_pages, free_pages } => {
+                assert_eq!((need_pages, free_pages), (7, 4));
+            }
+            AdmissionOutcome::Admitted(_) => panic!("stream cannot finish"),
+        }
+        assert_eq!(kv.used_pages(), 0);
+        // A zero-length first chunk is a caller bug, not a deferral.
+        assert!(kv.admit(&AdmissionRequest::streamed(&p, 16, 1, 0)).is_err());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_counts_used_and_pledged_pages() {
+        let mut kv = KvCacheManager::new(16 * 10, 16);
+        assert_eq!(kv.pressure(), 0.0);
+        let adm = admit_chunked(&mut kv, &prompt(0, 48), 32, 1).unwrap();
+        // 3 pledged prompt pages + 2 branch pages of 10.
+        assert!((kv.pressure() - 0.5).abs() < 1e-12);
+        kv.note_prefill(adm.prefix, 48).unwrap();
+        assert!((kv.pressure() - 0.5).abs() < 1e-12);
+        for b in adm.branches {
+            kv.release_branch(b).unwrap();
+        }
+        assert_eq!(kv.pressure(), 0.0);
+    }
+
+    // -----------------------------------------------------------------
+    // Reward-driven eviction priority.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn preemption_candidates_rank_lowest_reward_first() {
+        let mut kv = KvCacheManager::new(4096, 16);
+        let (_, bs) = admit_len(&mut kv, 16, 64, 3).unwrap(); // 4 pages each
+        assert_eq!(kv.preemptable_pages(), 0);
+        assert!(kv.preemption_candidates(1).is_empty());
+        kv.set_branch_priority(bs[0], 0.9).unwrap();
+        kv.set_branch_priority(bs[1], 0.2).unwrap();
+        kv.set_branch_priority(bs[2], 0.5).unwrap();
+        assert_eq!(kv.preemptable_pages(), 12);
+        assert!(kv.set_branch_priority(bs[0], f32::NAN).is_err());
+        // One page of need: the single worst branch covers it.
+        assert_eq!(kv.preemption_candidates(1), vec![bs[1]]);
+        // Five pages: the worst two, in reward order.
+        assert_eq!(kv.preemption_candidates(5), vec![bs[1], bs[2]]);
+        // More than the pool holds: every candidate, still ranked.
+        assert_eq!(kv.preemption_candidates(100), vec![bs[1], bs[2], bs[0]]);
+        kv.check_invariants().unwrap();
+        // Re-prioritizing reranks without double-counting the pool...
+        kv.set_branch_priority(bs[1], 0.95).unwrap();
+        assert_eq!(kv.preemption_candidates(1), vec![bs[2]]);
+        assert_eq!(kv.preemptable_pages(), 12);
+        // ...and releasing a prioritized branch shrinks it.
+        kv.release_branch(bs[1]).unwrap();
+        assert_eq!(kv.preemptable_pages(), 8);
+        kv.check_invariants().unwrap();
+        assert!(kv.set_branch_priority(bs[1], 0.1).is_err(), "stale handle");
+    }
+
+    #[test]
+    fn invariants_rebuild_pledge_and_priority_structures() {
+        // The audit recomputes the grown-pledge split and the
+        // preemptable-page pool from the slabs: drift seeded into any of
+        // the incremental counters must be caught.
+        let mut kv = KvCacheManager::with_prefix_cache(16 * 8, 16, 8);
+        let p = prompt(0, 64);
+        let adm = kv
+            .admit(&AdmissionRequest::streamed(&p, 16, 1, 16))
+            .unwrap()
+            .into_admission()
+            .unwrap();
+        kv.set_branch_priority(adm.branches[0], 0.3).unwrap();
+        kv.check_invariants().unwrap();
+
+        kv.preemptable_pages += 1;
+        assert!(kv.check_invariants().is_err(), "preemptable pool drift");
+        kv.preemptable_pages -= 1;
+
+        kv.pledged_pages += 1;
+        assert!(kv.check_invariants().is_err(), "global pledge drift");
+        kv.pledged_pages -= 1;
+
+        // Pledge cursor drift inside the staged record: the per-prefix
+        // secured/materialized split no longer matches the cursor.
+        let pid = adm.prefix;
+        kv.prefixes
+            .get_mut(pid.idx, pid.gen)
+            .unwrap()
+            .staged
+            .as_mut()
+            .unwrap()
+            .pledged_tokens += 16;
+        assert!(kv.check_invariants().is_err(), "pledge cursor drift");
+        kv.prefixes
+            .get_mut(pid.idx, pid.gen)
+            .unwrap()
+            .staged
+            .as_mut()
+            .unwrap()
+            .pledged_tokens -= 16;
         kv.check_invariants().unwrap();
     }
 }

@@ -304,6 +304,7 @@ mod tests {
             response_lengths: vec![10, 30],
             cached_prompt_tokens: 0,
             redispatches: 0,
+            preemptions: 0,
         }
     }
 

@@ -10,7 +10,7 @@ use crate::cluster::{
     serve_cluster, ClusterConfig, ClusterReport, REPLICA_SEED_STRIDE,
 };
 use crate::config::{EngineChoice, Method, PrmChoice, ServeSpec};
-use crate::coordinator::{ClockHandle, SchedConfig, Scheduler};
+use crate::coordinator::{ClockHandle, KvConfig, SchedConfig, Scheduler};
 use crate::engine::hlo::{DecodeMode, HloEngine};
 use crate::engine::sim::{SimCostModel, SimEngine};
 use crate::engine::Engine;
@@ -292,11 +292,14 @@ pub fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
         t_round: spec.t_round,
         temperature: spec.temperature,
         max_new: spec.max_new,
-        kv_capacity_tokens: spec.kv_capacity_tokens,
-        kv_page_tokens: spec.kv_page_tokens,
-        prefix_cache_pages: spec.prefix_cache_pages,
-        prefill_chunk_tokens: spec.prefill_chunk_tokens,
-        max_batched_prefill_tokens: spec.max_batched_prefill_tokens,
+        kv: KvConfig::new(spec.kv_capacity_tokens, spec.kv_page_tokens)
+            .with_prefix_cache(spec.prefix_cache_pages)
+            .with_chunked_prefill(
+                spec.prefill_chunk_tokens,
+                spec.max_batched_prefill_tokens,
+            )
+            .with_stream_admission(spec.kv_stream)
+            .with_preemption(spec.kv_preempt),
         seed: spec.seed,
     })
 }

@@ -18,7 +18,7 @@
 //!   stall (prefill seconds absorbed by a round with resident branches)
 //!   must be strictly smaller than under monolithic prefill.
 
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::metrics::Timeline;
 use sart::prm::OraclePrm;
@@ -91,11 +91,9 @@ impl Case {
             t_round: self.t_round,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: self.kv_tokens,
-            kv_page_tokens: 16,
-            prefix_cache_pages: self.prefix_cache_pages,
-            prefill_chunk_tokens: chunk,
-            max_batched_prefill_tokens: budget,
+            kv: KvConfig::new(self.kv_tokens, 16)
+                .with_prefix_cache(self.prefix_cache_pages)
+                .with_chunked_prefill(chunk, budget),
             seed: self.seed,
         };
         let mut sched = Scheduler::new(
@@ -245,11 +243,8 @@ fn long_cold_headers_overlap_decode_and_cut_worst_round_stall() {
             t_round: 16,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: 32768,
-            kv_page_tokens: 16,
-            prefix_cache_pages: 0,
-            prefill_chunk_tokens: chunk,
-            max_batched_prefill_tokens: budget,
+            kv: KvConfig::new(32768, 16)
+                .with_chunked_prefill(chunk, budget),
             seed: 11,
         };
         let mut sched = Scheduler::new(
@@ -322,11 +317,9 @@ fn warm_headers_skip_streaming_under_cache() {
             t_round: 16,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: 32768,
-            kv_page_tokens: 16,
-            prefix_cache_pages: 64,
-            prefill_chunk_tokens: chunk,
-            max_batched_prefill_tokens: chunk,
+            kv: KvConfig::new(32768, 16)
+                .with_prefix_cache(64)
+                .with_chunked_prefill(chunk, chunk),
             seed: 9,
         };
         let mut sched = Scheduler::new(

@@ -12,7 +12,7 @@ use sart::cluster::{
     serve_cluster, ClusterConfig, FaultPlan, LbPolicy, ScaleConfig,
     REPLICA_SEED_STRIDE,
 };
-use sart::coordinator::{Policy, SchedConfig};
+use sart::coordinator::{KvConfig, Policy, SchedConfig};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
 use sart::prm::{OraclePrm, PrmScorer};
@@ -29,11 +29,8 @@ fn sched_cfg(seed: u64, kv_tokens: usize, cache_pages: usize) -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: kv_tokens,
-        kv_page_tokens: 16,
-        prefix_cache_pages: cache_pages,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(kv_tokens, 16)
+            .with_prefix_cache(cache_pages),
         seed,
     }
 }
@@ -112,6 +109,7 @@ fn prop_armed_but_inert_fault_layer_is_byte_identical() {
             min_live: replicas,
             scale_up_queue: 1_000_000,
             scale_up_prefill_tokens: 0,
+            scale_up_pressure: 0.0,
             scale_down_queue: 0,
             cooldown_arrivals: 0,
         });
@@ -285,12 +283,8 @@ fn failure_during_chunked_prefill_releases_pledges() {
     let spec = TaskSpec::synth_gaokao();
     let trace = templated_trace(&spec, 10, 0.0, seed, 1.0, 4, 4);
     let mut cfg = base_cfg(replicas, LbPolicy::JoinShortestQueue, seed);
-    cfg.sched = SchedConfig {
-        prefill_chunk_tokens: 24,
-        max_batched_prefill_tokens: 48,
-        prefix_cache_pages: 32,
-        ..sched_cfg(seed, 16 * 2048, 32)
-    };
+    cfg.sched = sched_cfg(seed, 16 * 2048, 32);
+    cfg.sched.kv = cfg.sched.kv.clone().with_chunked_prefill(24, 48);
     cfg.fault_plan = FaultPlan::parse("fail@0.01:1").unwrap();
     let cost = SimCostModel {
         prefill_per_token: 0.2e-3,
@@ -333,6 +327,7 @@ fn scale_controller_respects_hysteresis_and_floor() {
         min_live: 1,
         scale_up_queue: 2,
         scale_up_prefill_tokens: 0,
+        scale_up_pressure: 0.0,
         scale_down_queue: 1,
         cooldown_arrivals: 1,
     });
@@ -386,6 +381,7 @@ fn fault_plan_validation_errors_are_caught() {
         min_live: 3,
         scale_up_queue: 4,
         scale_up_prefill_tokens: 0,
+        scale_up_pressure: 0.0,
         scale_down_queue: 0,
         cooldown_arrivals: 1,
     });

@@ -14,10 +14,10 @@
 use sart::cluster::{
     serve_cluster, ClusterConfig, DigestTable, LbPolicy, REPLICA_SEED_STRIDE,
 };
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
-use sart::kvcache::{prompt_page_digests, KvCacheManager};
+use sart::kvcache::{prompt_page_digests, AdmissionRequest, KvCacheManager};
 use sart::prm::{OraclePrm, PrmScorer};
 use sart::prop_assert;
 use sart::testkit::check;
@@ -91,11 +91,8 @@ impl GossipCase {
             t_round: self.t_round,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: self.kv_tokens,
-            kv_page_tokens: 16,
-            prefix_cache_pages: self.prefix_cache_pages,
-            prefill_chunk_tokens: 0,
-            max_batched_prefill_tokens: 0,
+            kv: KvConfig::new(self.kv_tokens, 16)
+                .with_prefix_cache(self.prefix_cache_pages),
             seed: self.seed,
         }
     }
@@ -260,7 +257,11 @@ fn stale_table_entry_survives_eviction_until_readvertised() {
     // stale; (c) the next advertisement retracts it.
     let mut kv = KvCacheManager::with_prefix_cache(16 * 256, 16, 4);
     let a = tokens(0, 64); // 4 pages — fills the retention budget
-    let adm = kv.admit_tokens(&a, 16, 1).unwrap();
+    let adm = kv
+        .admit(&AdmissionRequest::monolithic(&a, 16, 1))
+        .unwrap()
+        .into_admission()
+        .unwrap();
     for b in adm.branches {
         kv.release_branch(b).unwrap();
     }
@@ -272,7 +273,11 @@ fn stale_table_entry_survives_eviction_until_readvertised() {
 
     // Churn the pool: a different 4-page prefix evicts every page of `a`.
     let b = tokens(5000, 64);
-    let adm = kv.admit_tokens(&b, 16, 1).unwrap();
+    let adm = kv
+        .admit(&AdmissionRequest::monolithic(&b, 16, 1))
+        .unwrap()
+        .into_admission()
+        .unwrap();
     for br in adm.branches {
         kv.release_branch(br).unwrap();
     }
@@ -354,11 +359,8 @@ fn stale_gossip_hit_reprefills_and_counts() {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: 16 * (request_pages + 6),
-        kv_page_tokens: 16,
-        prefix_cache_pages: full_a_pages + 1,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(16 * (request_pages + 6), 16)
+            .with_prefix_cache(full_a_pages + 1),
         seed: 42,
     };
     let replicas = 2;

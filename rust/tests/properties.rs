@@ -6,11 +6,11 @@ use sart::cluster::{
     REPLICA_SEED_STRIDE,
 };
 use sart::coordinator::{
-    ClockHandle, Policy, SchedConfig, Scheduler, ServeEvent,
+    ClockHandle, KvConfig, Policy, SchedConfig, Scheduler, ServeEvent,
 };
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::Engine;
-use sart::kvcache::KvCacheManager;
+use sart::kvcache::{AdmissionOutcome, AdmissionRequest, KvCacheManager};
 use sart::prm::{OraclePrm, PrmScorer};
 use sart::prop_assert;
 use sart::testkit::{check, default_cases};
@@ -37,19 +37,32 @@ fn prop_kvcache_accounting_never_drifts() {
                 let b = live.swap_remove(i);
                 kv.release_branch(b).map_err(|e| e.to_string())?;
             } else {
-                let prompt = 1 + rng.below(64);
+                let plen = 1 + rng.below(64);
                 let max_new = 1 + rng.below(256);
                 let n = 1 + rng.below(8);
-                if kv.can_admit(prompt, max_new, n) {
-                    let (_, bs) =
-                        kv.admit(prompt, max_new, n).map_err(|e| e.to_string())?;
-                    live.extend(bs);
-                } else {
-                    // can_admit=false must imply admit() errors too.
-                    prop_assert!(
-                        kv.admit(prompt, max_new, n).is_err(),
-                        "admit succeeded after can_admit said no"
-                    );
+                let prompt: Vec<tok::Token> =
+                    (0..plen as tok::Token).collect();
+                let req = AdmissionRequest::monolithic(&prompt, max_new, n);
+                match kv.admit(&req).map_err(|e| e.to_string())? {
+                    AdmissionOutcome::Admitted(adm) => {
+                        live.extend(adm.branches);
+                    }
+                    AdmissionOutcome::Deferred { need_pages, free_pages } => {
+                        // Deferred must be honestly sized and
+                        // side-effect free: an immediate retry defers
+                        // again with the same shortfall.
+                        prop_assert!(
+                            need_pages > free_pages,
+                            "deferred but {need_pages} <= {free_pages}"
+                        );
+                        prop_assert!(
+                            kv.admit(&req)
+                                .map_err(|e| e.to_string())?
+                                .is_deferred(),
+                            "retry admitted after a deferral \
+                             (deferral had side effects)"
+                        );
+                    }
                 }
             }
             kv.check_invariants().map_err(|e| e.to_string())?;
@@ -74,16 +87,26 @@ fn prop_kvcache_accounting_never_drifts() {
 fn prop_kvcache_grow_shares_prefix() {
     check("kvcache_grow", default_cases(), |rng| {
         let mut kv = KvCacheManager::new(64 * 16, 16);
-        let (prefix, mut bs) = kv.admit(30, 60, 2).map_err(|e| e.to_string())?;
+        let p: Vec<tok::Token> = (0..30).collect();
+        let adm = kv
+            .admit(&AdmissionRequest::monolithic(&p, 60, 2))
+            .map_err(|e| e.to_string())?
+            .into_admission()
+            .map_err(|e| e.to_string())?;
+        let prefix = adm.prefix;
+        let mut bs = adm.branches;
         let before = kv.used_pages();
         let more = 1 + rng.below(3);
-        if let Ok(grown) = kv.grow(prefix, 60, more) {
+        if let AdmissionOutcome::Admitted(grown) = kv
+            .admit(&AdmissionRequest::grow(prefix, 60, more))
+            .map_err(|e| e.to_string())?
+        {
             // Grow adds only branch pages (ceil(60/16)=4), no prefix pages.
             prop_assert!(
                 kv.used_pages() == before + more * 4,
                 "grow page math wrong"
             );
-            bs.extend(grown);
+            bs.extend(grown.branches);
         }
         for b in bs {
             kv.release_branch(b).map_err(|e| e.to_string())?;
@@ -95,10 +118,13 @@ fn prop_kvcache_grow_shares_prefix() {
 }
 
 #[test]
-fn prop_kv_cache_disabled_matches_scalar_admit() {
-    // With a zero prefix-cache budget, admit_tokens must be byte-for-byte
-    // the scalar admit path: same admission decisions, same page
-    // accounting, zero reported hits — the pre-cache behaviour.
+fn prop_kv_cache_disabled_admission_is_content_blind() {
+    // With a zero prefix-cache budget, monolithic admission must be the
+    // pre-cache scalar accounting: prompt *content* cannot matter, only
+    // length. Two managers fed same-length prompts — one a constant
+    // header repeated every step (maximum sharing opportunity), one
+    // unique per step — must make identical admission decisions with
+    // identical page accounting and zero reported hits.
     check("kv_cache_disabled_scalar", default_cases(), |rng| {
         let page = 1 + rng.below(32);
         let cap_pages = 8 + rng.below(128);
@@ -117,27 +143,30 @@ fn prop_kv_cache_disabled_matches_scalar_admit() {
                 let plen = 1 + rng.below(64);
                 let max_new = 1 + rng.below(256);
                 let n = 1 + rng.below(8);
-                let prompt: Vec<tok::Token> =
+                let constant: Vec<tok::Token> = vec![7; plen];
+                let unique: Vec<tok::Token> =
                     (0..plen).map(|t| (step * 100 + t) as tok::Token).collect();
-                let can_s = scalar.can_admit(plen, max_new, n);
-                let can_t = tokens.can_admit_tokens(&prompt, max_new, n);
+                let out_s = scalar
+                    .admit(&AdmissionRequest::monolithic(&constant, max_new, n))
+                    .map_err(|e| e.to_string())?;
+                let out_t = tokens
+                    .admit(&AdmissionRequest::monolithic(&unique, max_new, n))
+                    .map_err(|e| e.to_string())?;
                 prop_assert!(
-                    can_s == can_t,
-                    "admission decision diverged: scalar {can_s} tokens {can_t}"
+                    out_s.is_deferred() == out_t.is_deferred(),
+                    "admission decision diverged on prompt content"
                 );
-                if can_s {
-                    let (_, bs) = scalar
-                        .admit(plen, max_new, n)
-                        .map_err(|e| e.to_string())?;
-                    let adm = tokens
-                        .admit_tokens(&prompt, max_new, n)
-                        .map_err(|e| e.to_string())?;
+                if let (
+                    AdmissionOutcome::Admitted(a),
+                    AdmissionOutcome::Admitted(b),
+                ) = (out_s, out_t)
+                {
                     prop_assert!(
-                        adm.cached_tokens == 0,
+                        a.cached_tokens == 0 && b.cached_tokens == 0,
                         "cache-disabled admit reported a hit"
                     );
-                    live_s.extend(bs);
-                    live_t.extend(adm.branches);
+                    live_s.extend(a.branches);
+                    live_t.extend(b.branches);
                 }
             }
             prop_assert!(
@@ -202,11 +231,7 @@ fn prop_scheduler_serves_every_request_exactly_once() {
             t_round: 8 + rng.below(24),
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: 16 * (64 + rng.below(1024)),
-            kv_page_tokens: 16,
-            prefix_cache_pages: 0,
-            prefill_chunk_tokens: 0,
-            max_batched_prefill_tokens: 0,
+            kv: KvConfig::new(16 * (64 + rng.below(1024)), 16),
             seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -267,11 +292,7 @@ fn prop_early_stopping_dominates_waiting_for_all() {
                 t_round: 16,
                 temperature: 1.0,
                 max_new: 224,
-                kv_capacity_tokens: 16384,
-                kv_page_tokens: 16,
-                prefix_cache_pages: 0,
-                prefill_chunk_tokens: 0,
-                max_batched_prefill_tokens: 0,
+                kv: KvConfig::new(16384, 16),
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -331,11 +352,7 @@ fn prop_scheduler_audit_matches_fast_path() {
                 t_round,
                 temperature: 1.0,
                 max_new: 224,
-                kv_capacity_tokens: kv_tokens,
-                kv_page_tokens: 16,
-                prefix_cache_pages: 0,
-                prefill_chunk_tokens: 0,
-                max_batched_prefill_tokens: 0,
+                kv: KvConfig::new(kv_tokens, 16),
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -396,11 +413,7 @@ fn prop_event_pump_serve_is_byte_identical() {
                 t_round,
                 temperature: 1.0,
                 max_new: 224,
-                kv_capacity_tokens: kv_tokens,
-                kv_page_tokens: 16,
-                prefix_cache_pages: 0,
-                prefill_chunk_tokens: 0,
-                max_batched_prefill_tokens: 0,
+                kv: KvConfig::new(kv_tokens, 16),
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -533,11 +546,8 @@ impl TemplatedCase {
             t_round: self.t_round,
             temperature: 1.0,
             max_new: 224,
-            kv_capacity_tokens: self.kv_tokens,
-            kv_page_tokens: 16,
-            prefix_cache_pages: self.prefix_cache_pages,
-            prefill_chunk_tokens: 0,
-            max_batched_prefill_tokens: 0,
+            kv: KvConfig::new(self.kv_tokens, 16)
+                .with_prefix_cache(self.prefix_cache_pages),
             seed: self.seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -674,10 +684,12 @@ fn prop_kvcache_live_decoded_matches_mirror() {
                 }
                 _ => {
                     let n = 1 + rng.below(4);
-                    if kv.can_admit(27, 64, n) {
-                        let (_, bs) =
-                            kv.admit(27, 64, n).map_err(|e| e.to_string())?;
-                        live.extend(bs.into_iter().map(|b| (b, 0)));
+                    let p: Vec<tok::Token> = (0..27).collect();
+                    if let AdmissionOutcome::Admitted(adm) = kv
+                        .admit(&AdmissionRequest::monolithic(&p, 64, n))
+                        .map_err(|e| e.to_string())?
+                    {
+                        live.extend(adm.branches.into_iter().map(|b| (b, 0)));
                     }
                 }
             }
@@ -753,11 +765,7 @@ fn case_sched_cfg(c: &ClusterCase) -> SchedConfig {
         t_round: c.t_round,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: c.kv_tokens,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(c.kv_tokens, 16),
         seed: c.seed,
     }
 }
@@ -1036,11 +1044,8 @@ fn affinity_routing_beats_p2c_on_cache_hits() {
                 t_round: 16,
                 temperature: 1.0,
                 max_new: 224,
-                kv_capacity_tokens: 32768,
-                kv_page_tokens: 16,
-                prefix_cache_pages: 24,
-                prefill_chunk_tokens: 0,
-                max_batched_prefill_tokens: 0,
+                kv: KvConfig::new(32768, 16)
+                    .with_prefix_cache(24),
                 seed: 42,
             },
             seed: 42,

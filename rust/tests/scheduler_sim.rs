@@ -4,7 +4,7 @@
 //! batching, early stopping, two-phase pruning, finalization, metrics —
 //! deterministically and without artifacts.
 
-use sart::coordinator::{ClockHandle, Policy, SchedConfig, Scheduler};
+use sart::coordinator::{ClockHandle, KvConfig, Policy, SchedConfig, Scheduler};
 use sart::engine::sim::{SimCostModel, SimEngine};
 use sart::engine::{
     ChunkResult, Engine, EngineCaps, PrefillEntry, ReplayEntry, SlotId,
@@ -35,11 +35,7 @@ fn run(policy: Policy, n_requests: usize, rate: f64, slots: usize,
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: kv_tokens,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(kv_tokens, 16),
         seed,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -200,11 +196,8 @@ fn prefix_cache_saves_over_30pct_of_prefill_tokens() {
         t_round: 16,
         temperature: 1.0,
         max_new: 224,
-        kv_capacity_tokens: 32768,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 64,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(32768, 16)
+            .with_prefix_cache(64),
         seed: 5,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -337,11 +330,7 @@ fn toy_cfg(policy: Policy, max_new: usize) -> SchedConfig {
         t_round: 16,
         temperature: 1.0,
         max_new,
-        kv_capacity_tokens: 4096,
-        kv_page_tokens: 16,
-        prefix_cache_pages: 0,
-        prefill_chunk_tokens: 0,
-        max_batched_prefill_tokens: 0,
+        kv: KvConfig::new(4096, 16),
         seed: 0,
     }
 }

@@ -61,6 +61,12 @@ Gates (bench name → assertions)
   actually hit in-flight sessions (otherwise the loss-free gate is
   vacuous); ``live_faulted_vs_clean_p99_ratio < 10.0`` — the faulted
   replay's p99 wall e2e stays within 10x the clean replay's.
+* ``pressure``: ``pressure_requests_lost == 0`` — swapping branches out
+  under memory pressure and recomputing them on resume may never drop a
+  request; ``pressure_admitted_at_budget_ratio > 1.0`` — by the
+  baseline's median admission time, stream-aware admission plus
+  reward-driven preemption must have admitted strictly more requests
+  than all-or-nothing admission at the same page budget.
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -283,6 +289,30 @@ def gate_live_faults(doc: dict, path: str) -> None:
         )
 
 
+def gate_pressure(doc: dict, path: str) -> None:
+    lost = _metric(doc, path, "pressure_requests_lost")
+    if lost != 0.0:
+        _fail(
+            path,
+            f"pressure_requests_lost = {lost:.0f}: memory-pressure serving "
+            "must be loss-free — a preempted branch keeps its script "
+            "cursor and generated tokens and resumes by recomputation "
+            "(did a swap-out drop branch state, or a deferred resume "
+            "never retry?)",
+        )
+    ratio = _metric(doc, path, "pressure_admitted_at_budget_ratio")
+    if not ratio > 1.0:
+        _fail(
+            path,
+            f"pressure_admitted_at_budget_ratio = {ratio:.3f}: streamed "
+            "admission plus reward-driven preemption must admit strictly "
+            "more requests than all-or-nothing admission by the baseline's "
+            "median admission time at the same page budget (is the first-"
+            "chunk pledge sizing the whole suffix, or preemption finding "
+            "no scored candidates?)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
@@ -291,6 +321,7 @@ GATES = {
     "faults": gate_faults,
     "serving": gate_serving,
     "live_faults": gate_live_faults,
+    "pressure": gate_pressure,
 }
 
 

@@ -323,6 +323,54 @@ class TestLiveFaultsGate(CheckBenchCase):
         self.assertIn("live_faults_requests_lost", err)
 
 
+def pressure_metrics(**overrides):
+    metrics = {
+        "pressure_requests_lost": 0.0,
+        "pressure_admitted_at_budget_ratio": 1.4,
+    }
+    metrics.update(overrides)
+    return metrics
+
+
+class TestPressureGate(CheckBenchCase):
+    def test_pressure_gate_passes_on_good_report(self):
+        doc = report(bench="pressure", metrics=pressure_metrics())
+        path = self.write("BENCH_pressure.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `pressure`: PASS", out)
+
+    def test_pressure_gate_fails_on_any_lost_request(self):
+        doc = report(
+            bench="pressure",
+            metrics=pressure_metrics(pressure_requests_lost=1.0),
+        )
+        path = self.write("BENCH_pressure.json", doc)
+        code, out, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("gate `pressure`: FAIL", out)
+        self.assertIn("pressure_requests_lost", err)
+
+    def test_pressure_gate_fails_at_ratio_one(self):
+        # Exactly 1.0 means streaming + preemption admitted no more than
+        # all-or-nothing: the headline must be *strictly* better.
+        doc = report(
+            bench="pressure",
+            metrics=pressure_metrics(pressure_admitted_at_budget_ratio=1.0),
+        )
+        path = self.write("BENCH_pressure.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("pressure_admitted_at_budget_ratio", err)
+
+    def test_pressure_gate_fails_on_missing_metric(self):
+        doc = report(bench="pressure", metrics={})
+        path = self.write("BENCH_pressure.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("pressure_requests_lost", err)
+
+
 class TestRequire(CheckBenchCase):
     def test_require_fails_on_missing_bench(self):
         path = self.write("BENCH_scheduler.json", report())
