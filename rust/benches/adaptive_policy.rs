@@ -1,0 +1,198 @@
+//! Bench: adaptive per-request test-time compute vs the static SART
+//! configuration on a mixed easy/hard workload.
+//!
+//! The trace interleaves easy (synth-gaokao, 3-5 hop) and hard
+//! (synth-gpqa, 5-8 hop) questions. The static serve spends N = 4
+//! branches on every request; the adaptive serve learns online that the
+//! easy dataset finishes short with high first-round rewards and routes
+//! its later arrivals to the 1-branch no-think fast path, prunes
+//! agreeing branch sets down to 2, and tightens the per-branch cap on
+//! requests in the over-thinking tail — same trace, same seed, same
+//! engine substrate.
+//!
+//! Recorded in `BENCH_adaptive.json` (schema in EXPERIMENTS.md §Reading
+//! BENCH_adaptive.json), gated by `tools/check_bench.py`:
+//!
+//! * `adaptive_requests_lost` / `baseline_requests_lost` — must be 0.
+//! * `adaptive_vs_static_tokens_ratio` — tokens per request, adaptive /
+//!   static. Must stay < 1.0: adapting may never cost tokens.
+//! * `adaptive_vs_static_accuracy_delta` — adaptive accuracy minus
+//!   static accuracy. Must stay >= -0.05: the savings may not buy more
+//!   than a marginal accuracy dip.
+//! * `adaptive_fast_path_share` — fraction of requests routed to the
+//!   fast path. Must be > 0 on the mixed workload: the easy traffic
+//!   exists and the classifier must find it.
+//!
+//!     cargo bench --bench adaptive_policy
+
+use sart::coordinator::{
+    AdaptiveConfig, ClockHandle, KvConfig, Policy, SchedConfig, Scheduler,
+    ServeResult,
+};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::metrics::ServeReport;
+use sart::prm::OraclePrm;
+use sart::testkit::bench::{self, BenchReport};
+use sart::util::clock::SimClock;
+use sart::workload::{mixed_trace, TaskSpec};
+
+const SLOTS: usize = 8;
+const KV_TOKENS: usize = 32768;
+const SEED: u64 = 31;
+const N_REQUESTS: usize = 128;
+const RATE: f64 = 4.0;
+const HARD_SHARE: f64 = 0.5;
+
+fn adaptive_cfg() -> AdaptiveConfig {
+    AdaptiveConfig {
+        // OraclePrm noise is sigma 0.08: a 0.15 band separates "all
+        // branches agree" from genuine reward dispersion.
+        spread_tol: 0.15,
+        prune_keep: 2,
+        tail_pct: 90.0,
+        // 2x the observed mean/tail keeps honest chains unclipped; only
+        // the over-thinking outliers hit the tightened cap.
+        cap_slack: 2.0,
+        min_samples: 8,
+        fast_reward: 0.55,
+        fast_len: 64.0,
+    }
+}
+
+fn serve(adaptive: Option<AdaptiveConfig>) -> ServeResult {
+    let trace = mixed_trace(
+        &TaskSpec::synth_gaokao(),
+        &TaskSpec::synth_gpqa(),
+        N_REQUESTS,
+        RATE,
+        SEED,
+        HARD_SHARE,
+    );
+    let mut engine = SimEngine::new(
+        SLOTS,
+        256,
+        TaskSpec::synth_gaokao(),
+        SimCostModel::default(),
+    );
+    let mut prm = OraclePrm::new(0.08, SEED ^ 7);
+    let cfg = SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv: KvConfig::new(KV_TOKENS, 16),
+        adaptive,
+        seed: SEED,
+    };
+    let mut sched = Scheduler::new(
+        cfg,
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.serve(&trace).expect("adaptive bench serve")
+}
+
+fn makespan(res: &ServeResult) -> f64 {
+    res.outcomes.iter().map(|o| o.finished_at).fold(0.0f64, f64::max)
+}
+
+fn main() {
+    println!(
+        "== adaptive_policy ({SLOTS} slots, {N_REQUESTS} requests, \
+         hard share {HARD_SHARE}) =="
+    );
+    let mut report = BenchReport::new("adaptive");
+
+    let base = serve(None);
+    let adapted = serve(Some(adaptive_cfg()));
+
+    let base_lost = N_REQUESTS - base.outcomes.len();
+    let adaptive_lost = N_REQUESTS - adapted.outcomes.len();
+    assert_eq!(adaptive_lost, 0, "adaptive serve dropped requests");
+    assert_eq!(base_lost, 0, "static serve dropped requests");
+
+    let base_report = ServeReport::from_outcomes("static", &base.outcomes);
+    let adapt_report =
+        ServeReport::from_outcomes("adaptive", &adapted.outcomes);
+
+    let tokens_ratio =
+        adapt_report.tokens_per_request / base_report.tokens_per_request;
+    let accuracy_delta = adapt_report.accuracy - base_report.accuracy;
+    let stats = &adapted.adaptive;
+    let fast_share = stats.fast_path_requests as f64 / N_REQUESTS as f64;
+
+    assert!(
+        tokens_ratio < 1.0,
+        "adaptive must cut tokens per request: ratio {tokens_ratio:.3} \
+         ({:.1} vs {:.1})",
+        adapt_report.tokens_per_request,
+        base_report.tokens_per_request
+    );
+    assert!(
+        accuracy_delta >= -0.05,
+        "adaptive accuracy fell too far: {:.3} vs {:.3}",
+        adapt_report.accuracy,
+        base_report.accuracy
+    );
+    assert!(
+        fast_share > 0.0,
+        "the mixed workload classified no dataset easy"
+    );
+
+    println!(
+        "tokens/req adaptive {:.1} vs static {:.1} (ratio {tokens_ratio:.3}, \
+         must stay < 1.0)",
+        adapt_report.tokens_per_request, base_report.tokens_per_request
+    );
+    println!(
+        "accuracy adaptive {:.3} vs static {:.3} (delta {accuracy_delta:+.3}, \
+         must stay >= -0.05)",
+        adapt_report.accuracy, base_report.accuracy
+    );
+    println!(
+        "decisions: {} fast-path ({:.0}% of requests), {} spread-pruned \
+         branches, {} caps tightened, {} static fallbacks",
+        stats.fast_path_requests,
+        100.0 * fast_share,
+        stats.spread_pruned_branches,
+        stats.cap_tightened_requests,
+        stats.static_fallbacks,
+    );
+
+    report.metric("adaptive_requests_lost", adaptive_lost as f64);
+    report.metric("baseline_requests_lost", base_lost as f64);
+    report.metric("adaptive_vs_static_tokens_ratio", tokens_ratio);
+    report.metric("adaptive_vs_static_accuracy_delta", accuracy_delta);
+    report.metric("adaptive_fast_path_share", fast_share);
+    report.metric("adaptive_accuracy", adapt_report.accuracy);
+    report.metric("baseline_accuracy", base_report.accuracy);
+    report.metric(
+        "adaptive_tokens_per_request",
+        adapt_report.tokens_per_request,
+    );
+    report.metric(
+        "baseline_tokens_per_request",
+        base_report.tokens_per_request,
+    );
+    report.metric(
+        "adaptive_spread_pruned_branches",
+        stats.spread_pruned_branches as f64,
+    );
+    report.metric(
+        "adaptive_cap_tightened_requests",
+        stats.cap_tightened_requests as f64,
+    );
+    report.metric("adaptive_static_fallbacks", stats.static_fallbacks as f64);
+    report.metric("adaptive_makespan_seconds", makespan(&adapted));
+    report.metric("baseline_makespan_seconds", makespan(&base));
+
+    report.push(bench::run("serve 128 mixed reqs static sart:4", 1, 5, || {
+        std::hint::black_box(serve(None));
+    }));
+    report.push(bench::run("serve 128 mixed reqs adaptive", 1, 5, || {
+        std::hint::black_box(serve(Some(adaptive_cfg())));
+    }));
+
+    report.write().expect("writing BENCH_adaptive.json");
+}

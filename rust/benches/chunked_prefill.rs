@@ -60,6 +60,7 @@ fn serve(chunk: usize, budget: usize) -> sart::coordinator::ServeResult {
         max_new: 224,
         kv: KvConfig::new(KV_TOKENS, 16)
             .with_chunked_prefill(chunk, budget),
+        adaptive: None,
         seed: SEED,
     };
     let trace = templated_trace(&spec(), N_REQUESTS, RATE, SEED, 1.0, 6, 5);

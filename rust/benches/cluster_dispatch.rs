@@ -42,6 +42,7 @@ fn sched_cfg() -> SchedConfig {
         temperature: 1.0,
         max_new: 224,
         kv: KvConfig::new(KV_TOKENS, 16),
+        adaptive: None,
         seed: SEED,
     }
 }

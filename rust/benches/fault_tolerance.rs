@@ -62,6 +62,7 @@ fn sched_cfg() -> SchedConfig {
         max_new: 224,
         kv: KvConfig::new(KV_TOKENS, 16)
             .with_prefix_cache(CACHE_PAGES),
+        adaptive: None,
         seed: SEED,
     }
 }

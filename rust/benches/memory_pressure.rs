@@ -66,6 +66,7 @@ fn serve(stream: bool, preempt: bool) -> ServeResult {
             .with_chunked_prefill(CHUNK, BUDGET)
             .with_stream_admission(stream)
             .with_preemption(preempt),
+        adaptive: None,
         seed: SEED,
     };
     let mut sched = Scheduler::new(

@@ -61,6 +61,7 @@ fn sched_cfg(prefix_cache_pages: usize) -> SchedConfig {
         max_new: 224,
         kv: KvConfig::new(KV_TOKENS, 16)
             .with_prefix_cache(prefix_cache_pages),
+        adaptive: None,
         seed: SEED,
     }
 }

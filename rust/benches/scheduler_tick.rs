@@ -39,6 +39,7 @@ fn serve_once(
         temperature: 1.0,
         max_new: 224,
         kv: KvConfig::new(kv_tokens, 16),
+        adaptive: None,
         seed: 42,
     };
     let mut sched =

@@ -924,6 +924,7 @@ fn merge_incarnations(mut parts: Vec<ServeResult>) -> ServeResult {
         merged.engine_seconds += p.engine_seconds;
         merged.cache_hit_tokens += p.cache_hit_tokens;
         merged.prompt_tokens += p.prompt_tokens;
+        merged.adaptive.merge(p.adaptive);
     }
     merged
 }

@@ -8,7 +8,7 @@
 //! ~4-8k-token responses ≈ T=16 at our ~40-200-token responses).
 
 use crate::cluster::{FaultPlan, LbPolicy, ScaleConfig};
-use crate::coordinator::Policy;
+use crate::coordinator::{AdaptiveConfig, Policy};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -23,6 +23,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "help",
     "gossip-adapt",
     "shutdown",
+    "adaptive",
 ];
 
 /// Minimal `--key value` / `--key=value` / `--flag` parser.
@@ -133,6 +134,9 @@ impl Method {
         let m = args.usize_or("m", (n / 2).max(1))?;
         let alpha = args.f64_or("alpha", 0.5)? as f32;
         let beta = args.usize_or("beta", (n / 2).max(1))?;
+        if m == 0 {
+            bail!("M must be positive (a 0-vote quorum can never finalize)");
+        }
         if m > n {
             bail!("M={m} cannot exceed N={n}");
         }
@@ -248,6 +252,15 @@ pub struct ServeSpec {
     /// swap out the lowest-reward running branches and resume them by
     /// recomputation when pages free up.
     pub kv_preempt: bool,
+    /// Adaptive test-time compute (`--adaptive` plus the `--adaptive-*`
+    /// and `--fast-*` tuning knobs): per-request runtime shrinking of
+    /// N / M / the thinking cap. `None` (the default) is the static
+    /// policy, byte-identical to the pre-adaptive serve.
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Fraction of requests drawn from the *hard* task spec in the mixed
+    /// easy/hard trace (`--hard-share`; 0 = the plain single-dataset
+    /// generators, byte-identical to before).
+    pub hard_share: f64,
     /// Fraction of requests carrying a shared few-shot header
     /// (`--prefix-share`; 0 = the plain trace generators).
     pub prefix_share: f64,
@@ -380,12 +393,89 @@ impl ServeSpec {
             );
         }
         let kv_preempt = args.flag("kv-preempt");
+        let adaptive = if args.flag("adaptive") {
+            let d = AdaptiveConfig::default();
+            let cfg = AdaptiveConfig {
+                spread_tol: args.f64_or("adaptive-spread", d.spread_tol as f64)?
+                    as f32,
+                prune_keep: args.usize_or("adaptive-keep", d.prune_keep)?,
+                tail_pct: args.f64_or("adaptive-tail", d.tail_pct)?,
+                cap_slack: args.f64_or("adaptive-slack", d.cap_slack)?,
+                min_samples: args
+                    .usize_or("adaptive-min-samples", d.min_samples)?,
+                fast_reward: args.f64_or("fast-reward", d.fast_reward as f64)?
+                    as f32,
+                fast_len: args.f64_or("fast-len", d.fast_len)?,
+            };
+            if !(cfg.spread_tol.is_finite() && cfg.spread_tol >= 0.0) {
+                bail!(
+                    "--adaptive-spread must be a non-negative reward \
+                     tolerance, got {}",
+                    cfg.spread_tol
+                );
+            }
+            if cfg.prune_keep == 0 {
+                bail!(
+                    "--adaptive-keep must be at least 1 (a spread prune \
+                     keeping 0 branches would strand the request)"
+                );
+            }
+            if !(cfg.tail_pct > 0.0 && cfg.tail_pct <= 100.0) {
+                bail!(
+                    "--adaptive-tail must be a percentile in (0, 100], \
+                     got {}",
+                    cfg.tail_pct
+                );
+            }
+            if !(cfg.cap_slack.is_finite() && cfg.cap_slack > 0.0) {
+                bail!(
+                    "--adaptive-slack must be a positive length multiplier, \
+                     got {}",
+                    cfg.cap_slack
+                );
+            }
+            if !(cfg.fast_len.is_finite() && cfg.fast_len > 0.0) {
+                bail!(
+                    "--fast-len must be a positive mean completion length, \
+                     got {}",
+                    cfg.fast_len
+                );
+            }
+            Some(cfg)
+        } else {
+            for k in [
+                "adaptive-spread",
+                "adaptive-keep",
+                "adaptive-tail",
+                "adaptive-slack",
+                "adaptive-min-samples",
+                "fast-reward",
+                "fast-len",
+            ] {
+                if args.get(k).is_some() {
+                    bail!(
+                        "--{k} needs the adaptive policy enabled (--adaptive)"
+                    );
+                }
+            }
+            None
+        };
         let prefix_shots = args.usize_or("prefix-shots", 3)?;
         if prefix_share > 0.0 && prefix_shots == 0 {
             bail!(
                 "--prefix-shots must be at least 1 when --prefix-share > 0 \
                  (zero-shot headers are empty, silently degenerating the \
                  prefix workload to a plain trace)"
+            );
+        }
+        let hard_share = args.f64_or("hard-share", 0.0)?;
+        if !(0.0..=1.0).contains(&hard_share) {
+            bail!("--hard-share must be in [0, 1], got {hard_share}");
+        }
+        if hard_share > 0.0 && prefix_share > 0.0 {
+            bail!(
+                "--hard-share and --prefix-share cannot be combined: the \
+                 mixed easy/hard trace has no headered variant"
             );
         }
         Ok(ServeSpec {
@@ -409,6 +499,8 @@ impl ServeSpec {
             max_batched_prefill_tokens,
             kv_stream,
             kv_preempt,
+            adaptive,
+            hard_share,
             prefix_share,
             prefix_templates,
             prefix_shots,
@@ -610,6 +702,12 @@ mod tests {
         assert!(Method::parse("sart:0", &a).is_err());
         let a = args("--m 9");
         assert!(Method::parse("sart:4", &a).is_err());
+        // M = 0 could never reach quorum — reject at parse time for every
+        // method that carries M, not just when a serve later hangs.
+        let a = args("--m 0");
+        let err = Method::parse("sart:4", &a).unwrap_err().to_string();
+        assert!(err.contains("M must be positive"), "unclear error: {err}");
+        assert!(Method::parse("sart-noprune:4", &a).is_err());
     }
 
     #[test]
@@ -632,6 +730,66 @@ mod tests {
         assert_eq!(s.prefix_share, 0.0);
         assert_eq!(s.prefix_templates, 3);
         assert_eq!(s.prefix_shots, 3);
+        assert_eq!(s.adaptive, None, "adaptive policy must default off");
+        assert_eq!(s.hard_share, 0.0, "mixed workload must default off");
+    }
+
+    #[test]
+    fn spec_adaptive_flags() {
+        let s = ServeSpec::from_args(&args("--adaptive")).unwrap();
+        assert_eq!(s.adaptive, Some(AdaptiveConfig::default()));
+        let s = ServeSpec::from_args(&args(
+            "--adaptive --adaptive-spread 0.1 --adaptive-keep 3 \
+             --adaptive-tail 95 --adaptive-slack 1.5 \
+             --adaptive-min-samples 4 --fast-reward 0.7 --fast-len 32",
+        ))
+        .unwrap();
+        let a = s.adaptive.unwrap();
+        assert!((a.spread_tol - 0.1).abs() < 1e-6);
+        assert_eq!(a.prune_keep, 3);
+        assert_eq!(a.tail_pct, 95.0);
+        assert_eq!(a.cap_slack, 1.5);
+        assert_eq!(a.min_samples, 4);
+        assert!((a.fast_reward - 0.7).abs() < 1e-6);
+        assert_eq!(a.fast_len, 32.0);
+        // Tuning knobs without the enabling flag are silent no-ops — reject.
+        assert!(ServeSpec::from_args(&args("--adaptive-keep 3")).is_err());
+        assert!(ServeSpec::from_args(&args("--fast-reward 0.7")).is_err());
+        // Degenerate tunings are caught at parse time.
+        assert!(ServeSpec::from_args(
+            &args("--adaptive --adaptive-keep 0")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(
+            &args("--adaptive --adaptive-tail 0")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(
+            &args("--adaptive --adaptive-tail 101")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(
+            &args("--adaptive --adaptive-slack 0")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(
+            &args("--adaptive --adaptive-spread -0.5")
+        )
+        .is_err());
+        assert!(ServeSpec::from_args(&args("--adaptive --fast-len 0")).is_err());
+    }
+
+    #[test]
+    fn spec_hard_share_flags() {
+        let s = ServeSpec::from_args(&args("--hard-share 0.4")).unwrap();
+        assert_eq!(s.hard_share, 0.4);
+        assert!(ServeSpec::from_args(&args("--hard-share 1.5")).is_err());
+        assert!(ServeSpec::from_args(&args("--hard-share -0.1")).is_err());
+        // The mixed trace has no headered variant.
+        assert!(ServeSpec::from_args(
+            &args("--hard-share 0.4 --prefix-share 0.5")
+        )
+        .is_err());
     }
 
     #[test]

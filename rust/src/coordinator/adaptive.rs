@@ -1,0 +1,241 @@
+//! Adaptive per-request test-time-compute policy.
+//!
+//! SART's branch count `N`, early-stop quorum `M` and per-branch
+//! thinking cap are global CLI constants; the related work (Thinkless,
+//! "Don't Overthink it", Hybrid TTS) says they should be set per
+//! request. [`AdaptiveConfig`] arms three online rules in the scheduler,
+//! all driven by signals the serve loop already computes:
+//!
+//! * **Spread prune-to-k** — at a request's first scored round, if the
+//!   finite PRM rewards of its running branches concentrate (max − min ≤
+//!   `spread_tol`), the branches agree and the extras are redundant:
+//!   keep the top `prune_keep` by reward, prune the rest through the
+//!   ordinary pruning path, and lower the quorum to what can still
+//!   answer. Fewer than two finite rewards (all-NaN, unscored, or an
+//!   empty round) falls back to the static policy — a NaN never drives
+//!   a decision.
+//! * **Cap tightening** — once `min_samples` completion lengths have
+//!   been observed serve-wide, a request whose running branches reach
+//!   the `tail_pct` percentile of that distribution is in the
+//!   over-thinking tail; its per-branch cap tightens to
+//!   `tail × cap_slack` (never above the static cap, never below 1).
+//! * **Easy fast path** — a dataset whose finished requests average a
+//!   first-round reward ≥ `fast_reward` and a completion length ≤
+//!   `fast_len` (after `min_samples` finishes) classifies easy: new
+//!   arrivals route to a 1-branch no-think path (N = M = 1, cap =
+//!   mean length × `cap_slack`) decided at arrival, before admission,
+//!   so the KV reservation shrinks with the branch count. A fast-path
+//!   branch capped without an answer still finalizes through the
+//!   ordinary exhaustion (capped-vote) path — it can never hang on a
+//!   quorum larger than its branch count.
+//!
+//! The layer is decision-only: it consumes no RNG draws and, with
+//! `SchedConfig::adaptive` unset, every per-request knob equals the
+//! static configuration — property-tested byte-identical to the
+//! historical serve (single-engine and R = 2, audit on). Only the SART
+//! policy scores running branches, so the spread and fast-path rules are
+//! inert (static fallback) under policies that never produce per-round
+//! rewards.
+
+/// Knobs of the adaptive layer. `Some(AdaptiveConfig)` on
+/// [`SchedConfig::adaptive`] arms it; `None` (the default) keeps the
+/// static policy byte-for-byte.
+///
+/// [`SchedConfig::adaptive`]: super::SchedConfig::adaptive
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Max spread (max − min) of a request's finite first-round rewards
+    /// for its branches to count as agreeing.
+    pub spread_tol: f32,
+    /// Branches kept (top by reward) when a spread prune fires. ≥ 1 —
+    /// a prune may never leave a request without a live branch.
+    pub prune_keep: usize,
+    /// Percentile of the observed completion-length distribution that
+    /// defines the over-thinking tail, in (0, 100].
+    pub tail_pct: f64,
+    /// Multiplier on the tail length (cap tightening) and on the mean
+    /// easy-dataset length (fast-path cap). > 0.
+    pub cap_slack: f64,
+    /// Observations required before a distribution-driven rule fires:
+    /// completion lengths serve-wide (cap tightening) and finished
+    /// requests per dataset (fast path).
+    pub min_samples: usize,
+    /// Mean first-round reward a dataset must reach to classify easy.
+    pub fast_reward: f32,
+    /// Mean completion length a dataset must stay under to classify
+    /// easy (tokens). > 0.
+    pub fast_len: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            spread_tol: 0.05,
+            prune_keep: 2,
+            tail_pct: 90.0,
+            cap_slack: 1.25,
+            min_samples: 8,
+            fast_reward: 0.55,
+            fast_len: 48.0,
+        }
+    }
+}
+
+/// One adaptive decision, recorded in request order for determinism
+/// tests (same seed ⇒ identical trace ⇒ identical decisions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveDecision {
+    /// External request id (`Request::id`).
+    pub request: usize,
+    pub kind: AdaptiveDecisionKind,
+}
+
+/// What the adaptive layer did to one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptiveDecisionKind {
+    /// Routed to the 1-branch no-think path at arrival (N = M = 1) with
+    /// this per-branch cap.
+    FastPath { cap: usize },
+    /// First-round rewards concentrated: this many surplus branches
+    /// were pruned, keeping the top `prune_keep`.
+    SpreadPrune { pruned: usize },
+    /// Running length reached the over-thinking tail: the per-branch
+    /// cap tightened to this value.
+    CapTighten { cap: usize },
+    /// The first scored round had fewer than two finite rewards
+    /// (all-NaN, unscored, or empty) — the static policy stands.
+    StaticFallback,
+}
+
+/// Counters and the decision log of one serve (or one replica
+/// incarnation — the cluster layer merges them per replica).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdaptiveStats {
+    /// Requests routed to the 1-branch no-think path at arrival.
+    pub fast_path_requests: usize,
+    /// Branches pruned by the spread rule (on top of SART's own
+    /// threshold pruning).
+    pub spread_pruned_branches: usize,
+    /// Requests whose per-branch cap was tightened mid-flight.
+    pub cap_tightened_requests: usize,
+    /// Requests whose first scored round could not produce a spread
+    /// (fewer than two finite rewards) and kept the static policy.
+    pub static_fallbacks: usize,
+    /// Every decision in the order it landed.
+    pub decisions: Vec<AdaptiveDecision>,
+}
+
+impl AdaptiveStats {
+    /// Fold another incarnation's stats into this one (cluster merge;
+    /// decision order follows incarnation order).
+    pub fn merge(&mut self, other: AdaptiveStats) {
+        self.fast_path_requests += other.fast_path_requests;
+        self.spread_pruned_branches += other.spread_pruned_branches;
+        self.cap_tightened_requests += other.cap_tightened_requests;
+        self.static_fallbacks += other.static_fallbacks;
+        self.decisions.extend(other.decisions);
+    }
+
+    /// Nothing recorded — what a policy-off serve must report.
+    pub fn is_empty(&self) -> bool {
+        *self == AdaptiveStats::default()
+    }
+}
+
+/// Running per-dataset aggregates behind the easy classification
+/// (updated at finalization; read at arrival).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DatasetStats {
+    /// Finished requests of this dataset.
+    pub finished: usize,
+    /// Σ / count of mean first-round rewards (finite only).
+    pub reward_sum: f64,
+    pub reward_n: usize,
+    /// Σ / count of harvested completion lengths.
+    pub len_sum: f64,
+    pub len_n: usize,
+}
+
+impl DatasetStats {
+    /// Does this dataset classify easy under `cfg`? Requires
+    /// `min_samples` finishes plus at least one reward and one length
+    /// observation — an unscored dataset can never classify easy.
+    pub fn is_easy(&self, cfg: &AdaptiveConfig) -> bool {
+        self.finished >= cfg.min_samples.max(1)
+            && self.reward_n > 0
+            && self.len_n > 0
+            && self.reward_sum / self.reward_n as f64
+                >= cfg.fast_reward as f64
+            && self.len_sum / self.len_n as f64 <= cfg.fast_len
+    }
+
+    /// Mean harvested completion length (caller checks `len_n > 0`).
+    pub fn mean_len(&self) -> f64 {
+        self.len_sum / self.len_n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = AdaptiveConfig::default();
+        assert!(c.prune_keep >= 1);
+        assert!(c.tail_pct > 0.0 && c.tail_pct <= 100.0);
+        assert!(c.cap_slack > 0.0 && c.fast_len > 0.0);
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = AdaptiveStats {
+            fast_path_requests: 1,
+            spread_pruned_branches: 2,
+            cap_tightened_requests: 0,
+            static_fallbacks: 1,
+            decisions: vec![AdaptiveDecision {
+                request: 0,
+                kind: AdaptiveDecisionKind::StaticFallback,
+            }],
+        };
+        let b = AdaptiveStats {
+            fast_path_requests: 2,
+            spread_pruned_branches: 0,
+            cap_tightened_requests: 3,
+            static_fallbacks: 0,
+            decisions: vec![AdaptiveDecision {
+                request: 7,
+                kind: AdaptiveDecisionKind::FastPath { cap: 32 },
+            }],
+        };
+        a.merge(b);
+        assert_eq!(a.fast_path_requests, 3);
+        assert_eq!(a.spread_pruned_branches, 2);
+        assert_eq!(a.cap_tightened_requests, 3);
+        assert_eq!(a.static_fallbacks, 1);
+        assert_eq!(a.decisions.len(), 2);
+        assert!(!a.is_empty());
+        assert!(AdaptiveStats::default().is_empty());
+    }
+
+    #[test]
+    fn easy_classification_needs_samples_rewards_and_short_lengths() {
+        let cfg = AdaptiveConfig::default();
+        let mut d = DatasetStats::default();
+        assert!(!d.is_easy(&cfg));
+        d.finished = cfg.min_samples;
+        d.reward_sum = 0.9 * cfg.min_samples as f64;
+        d.reward_n = cfg.min_samples;
+        d.len_sum = 20.0 * cfg.min_samples as f64;
+        d.len_n = cfg.min_samples;
+        assert!(d.is_easy(&cfg));
+        // Long chains disqualify, whatever the reward says.
+        d.len_sum = 400.0 * cfg.min_samples as f64;
+        assert!(!d.is_easy(&cfg));
+        // Low rewards disqualify short chains too.
+        d.len_sum = 20.0 * cfg.min_samples as f64;
+        d.reward_sum = 0.1 * cfg.min_samples as f64;
+        assert!(!d.is_easy(&cfg));
+    }
+}

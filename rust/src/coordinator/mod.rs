@@ -7,9 +7,13 @@
 //! same loop as degenerate configurations for a fair comparison; Rebase
 //! has its own tree scheduler in `crate::baselines`.
 
+pub mod adaptive;
 pub mod scheduler;
 pub mod types;
 
+pub use adaptive::{
+    AdaptiveConfig, AdaptiveDecision, AdaptiveDecisionKind, AdaptiveStats,
+};
 pub use scheduler::{
     ClockHandle, DrainItem, KvConfig, LoadSnapshot, SchedConfig, Scheduler,
     ServeResult, StepOutcome,

@@ -55,6 +55,10 @@
 //! byte-identical to `serve` on the same trace: both drive the exact same
 //! step sequence.
 
+use super::adaptive::{
+    AdaptiveConfig, AdaptiveDecision, AdaptiveDecisionKind, AdaptiveStats,
+    DatasetStats,
+};
 use super::types::*;
 use crate::engine::{
     ChunkResult, Engine, PrefillChunkEntry, PrefillEntry, ReplayEntry,
@@ -173,6 +177,11 @@ pub struct SchedConfig {
     pub max_new: usize,
     /// KV budget, paging, prefix cache and pressure knobs.
     pub kv: KvConfig,
+    /// Adaptive test-time-compute policy (`--adaptive`): per-request
+    /// N / M / cap set online from reward spread, the completion-length
+    /// distribution and per-dataset difficulty. `None` (the default)
+    /// reproduces the static policy byte for byte (property-tested).
+    pub adaptive: Option<AdaptiveConfig>,
     pub seed: u64,
 }
 
@@ -184,6 +193,7 @@ impl Default for SchedConfig {
             temperature: 1.0,
             max_new: 224,
             kv: KvConfig::default(),
+            adaptive: None,
             seed: 0,
         }
     }
@@ -207,6 +217,8 @@ pub struct ServeResult {
     /// Σ prompt tokens over all admitted requests — the denominator for
     /// `prefill_tokens_saved_frac` in the prefix bench.
     pub prompt_tokens: usize,
+    /// What the adaptive policy did (empty with `--adaptive` off).
+    pub adaptive: AdaptiveStats,
 }
 
 /// What one [`Scheduler::step`] call did.
@@ -379,6 +391,17 @@ pub struct Scheduler<'e> {
     /// timelines (the byte-identity property test pins this).
     emit_events: bool,
     events: Vec<ServeEvent>,
+    /// Harvested completion lengths serve-wide, in harvest order — the
+    /// distribution behind the adaptive over-thinking-tail rule. Empty
+    /// with `--adaptive` off (audited).
+    adaptive_lengths: Vec<f64>,
+    /// Per-dataset difficulty aggregates behind the easy fast path,
+    /// updated at finalization and read (key lookup only, never
+    /// iterated — decisions stay deterministic) at arrival. Empty with
+    /// `--adaptive` off (audited).
+    dataset_stats: HashMap<String, DatasetStats>,
+    /// Adaptive decision counters + log, exported via [`ServeResult`].
+    adaptive_stats: AdaptiveStats,
     rng: Rng,
 }
 
@@ -436,6 +459,9 @@ impl<'e> Scheduler<'e> {
             audit: false,
             emit_events: false,
             events: Vec::new(),
+            adaptive_lengths: Vec::new(),
+            dataset_stats: HashMap::new(),
+            adaptive_stats: AdaptiveStats::default(),
             rng,
         }
     }
@@ -608,6 +634,39 @@ impl<'e> Scheduler<'e> {
             let idx = self.requests.len();
             self.truths.push(r.question.answer());
             let prompt = r.prompt_tokens();
+            // Adaptive fast path, decided at arrival (before admission,
+            // so the KV reservation shrinks with the branch count): a
+            // dataset whose finished requests classified easy routes to
+            // N = M = 1 with a mean-length-derived cap. Reads only the
+            // per-dataset aggregates — no RNG draw, no iteration order.
+            let mut n_limit = self.cfg.policy.n_branches();
+            let mut m_req = self.cfg.policy.m_required();
+            let mut cap = self.cfg.max_new;
+            let mut fast_path = false;
+            if let Some(acfg) = self.cfg.adaptive {
+                if let Some(ds) = self.dataset_stats.get(&r.dataset) {
+                    if ds.is_easy(&acfg) {
+                        n_limit = 1;
+                        m_req = 1;
+                        cap = ((ds.mean_len() * acfg.cap_slack)
+                            .ceil()
+                            .max(1.0) as usize)
+                            .min(self.cfg.max_new);
+                        fast_path = true;
+                    }
+                }
+            }
+            let mut meta = self.initial_meta();
+            if fast_path {
+                // A 1-branch request must never explore-prune its only
+                // branch; exploit's `n_limit - 1` keeps this at 0.
+                meta.max_num_pruned = 0;
+                self.adaptive_stats.fast_path_requests += 1;
+                self.adaptive_stats.decisions.push(AdaptiveDecision {
+                    request: r.id,
+                    kind: AdaptiveDecisionKind::FastPath { cap },
+                });
+            }
             self.requests.push(RequestState {
                 id: r.id,
                 prompt,
@@ -619,7 +678,7 @@ impl<'e> Scheduler<'e> {
                 prefill_done_at: None,
                 stream_slot: None,
                 finished_at: None,
-                meta: self.initial_meta(),
+                meta,
                 branches: Vec::new(),
                 running: Vec::new(),
                 completed: Vec::new(),
@@ -629,6 +688,13 @@ impl<'e> Scheduler<'e> {
                 expected_cached_tokens: expected,
                 final_answer: None,
                 preemptions: 0,
+                n_limit,
+                m_req,
+                cap,
+                fast_path,
+                spread_checked: false,
+                cap_tightened: false,
+                first_round_reward: None,
             });
             self.request_queue.push_back(idx);
         }
@@ -818,6 +884,7 @@ impl<'e> Scheduler<'e> {
             wall_seconds: 0.0,
             cache_hit_tokens: self.cache_hit_tokens_total,
             prompt_tokens: self.prompt_tokens_total,
+            adaptive: std::mem::take(&mut self.adaptive_stats),
         })
     }
 
@@ -955,6 +1022,7 @@ impl<'e> Scheduler<'e> {
             wall_seconds: 0.0,
             cache_hit_tokens: self.cache_hit_tokens_total,
             prompt_tokens: self.prompt_tokens_total,
+            adaptive: std::mem::take(&mut self.adaptive_stats),
         };
 
         // Cold reset: the next incarnation boots with an empty radix
@@ -976,6 +1044,10 @@ impl<'e> Scheduler<'e> {
         self.table_routed_admissions = 0;
         self.stale_admissions = 0;
         self.preemptions_total = 0;
+        // The restarted incarnation re-learns the workload from scratch,
+        // like the radix cache it boots without.
+        self.adaptive_lengths.clear();
+        self.dataset_stats.clear();
         Ok((items, partial))
     }
 
@@ -1072,11 +1144,10 @@ impl<'e> Scheduler<'e> {
                         .branches
                         .iter()
                         .any(|b| b.kv.is_some());
+                    let cap = self.requests[ridx].cap;
                     let outcome = if has_holder {
                         self.kv.admit(&AdmissionRequest::grow(
-                            prefix,
-                            self.cfg.max_new,
-                            1,
+                            prefix, cap, 1,
                         ))?
                     } else {
                         // The prefix died with its last running sibling;
@@ -1085,7 +1156,7 @@ impl<'e> Scheduler<'e> {
                         // cache its commit interned).
                         self.kv.admit(&AdmissionRequest::monolithic(
                             &self.requests[ridx].prompt,
-                            self.cfg.max_new,
+                            cap,
                             1,
                         ))?
                     };
@@ -1301,19 +1372,23 @@ impl<'e> Scheduler<'e> {
     /// pledges the whole uncovered suffix, streamed pledges only the
     /// first chunk (the pledge then grows per chunk in `pump_prefill`).
     fn try_admit_head(&mut self, ridx: usize) -> Result<AdmissionOutcome> {
-        let n = self.cfg.policy.n_branches();
+        // Per-request effective values: equal to the static config unless
+        // the adaptive layer routed this request to the fast path (then
+        // the reservation shrinks to one branch with a tighter cap).
+        let n = self.requests[ridx].n_limit;
+        let cap = self.requests[ridx].cap;
         let prompt = &self.requests[ridx].prompt;
         let req = if self.cfg.kv.prefill_chunk_tokens == 0 {
-            AdmissionRequest::monolithic(prompt, self.cfg.max_new, n)
+            AdmissionRequest::monolithic(prompt, cap, n)
         } else if self.cfg.kv.stream_admission {
             AdmissionRequest::streamed(
                 prompt,
-                self.cfg.max_new,
+                cap,
                 n,
                 self.cfg.kv.prefill_chunk_tokens,
             )
         } else {
-            AdmissionRequest::chunked(prompt, self.cfg.max_new, n)
+            AdmissionRequest::chunked(prompt, cap, n)
         };
         self.kv.admit(&req)
     }
@@ -1577,7 +1652,7 @@ impl<'e> Scheduler<'e> {
                 let b = &req.branches[bidx];
                 debug_assert_eq!(b.status, BranchStatus::Running);
                 let done = b.generated.last() == Some(&tok::EOS);
-                let capped = b.generated.len() >= self.cfg.max_new;
+                let capped = b.generated.len() >= req.cap;
                 if !(done || capped) {
                     continue;
                 }
@@ -1666,6 +1741,23 @@ impl<'e> Scheduler<'e> {
             self.prm_seqs = seqs;
         }
 
+        // Adaptive over-thinking tail, computed once per round: the
+        // `tail_pct` percentile of every completion length harvested so
+        // far. `None` until `min_samples` observations exist (or with the
+        // adaptive layer off), so the rule cannot fire off noise.
+        let tail = match self.cfg.adaptive {
+            Some(acfg)
+                if self.adaptive_lengths.len()
+                    >= acfg.min_samples.max(1) =>
+            {
+                Some(crate::util::stats::percentile(
+                    &self.adaptive_lengths,
+                    acfg.tail_pct,
+                ))
+            }
+            _ => None,
+        };
+
         for &ridx in involved {
             if self.requests[ridx].is_finished() {
                 continue;
@@ -1691,7 +1783,7 @@ impl<'e> Scheduler<'e> {
                 && self.requests[ridx].meta.phase == PrunePhase::Explore
             {
                 if let Some(alpha_prime) = max_completed_reward {
-                    let n = self.cfg.policy.n_branches();
+                    let n = self.requests[ridx].n_limit;
                     let meta = &mut self.requests[ridx].meta;
                     meta.phase = PrunePhase::Exploit;
                     meta.threshold = alpha_prime;
@@ -1704,6 +1796,17 @@ impl<'e> Scheduler<'e> {
                 completed_now.iter().filter(|&&(r, _)| r == ridx)
             {
                 self.harvest(r, bidx, now)?;
+            }
+
+            // Adaptive spread prune-to-k, evaluated exactly once per
+            // request at its first scored round (whatever the outcome).
+            if self.cfg.adaptive.is_some()
+                && self.cfg.policy.prunes()
+                && !self.requests[ridx].spread_checked
+                && !self.requests[ridx].fast_path
+                && !self.requests[ridx].is_finished()
+            {
+                self.adaptive_spread_check(ridx, now)?;
             }
 
             // Prune low-reward running branches (lines 32-37).
@@ -1736,13 +1839,52 @@ impl<'e> Scheduler<'e> {
                 self.scratch = snapshot;
             }
 
+            // Adaptive cap tightening: a request whose running branches
+            // reach the over-thinking tail gets its per-branch cap pulled
+            // down to `tail × cap_slack` (at most once; takes effect at
+            // the next round's cap classification).
+            if let Some(tail_len) = tail {
+                let req = &self.requests[ridx];
+                if !req.cap_tightened
+                    && !req.is_finished()
+                    && req.running.iter().any(|&b| {
+                        req.branches[b].generated.len() as f64 >= tail_len
+                    })
+                {
+                    let slack = self.cfg.adaptive.unwrap().cap_slack;
+                    let new_cap = ((tail_len * slack).ceil().max(1.0)
+                        as usize)
+                        .min(self.cfg.max_new);
+                    if new_cap < req.cap {
+                        let rid = req.id;
+                        let r = &mut self.requests[ridx];
+                        r.cap = new_cap;
+                        r.cap_tightened = true;
+                        self.adaptive_stats.cap_tightened_requests += 1;
+                        self.adaptive_stats.decisions.push(
+                            AdaptiveDecision {
+                                request: rid,
+                                kind: AdaptiveDecisionKind::CapTighten {
+                                    cap: new_cap,
+                                },
+                            },
+                        );
+                    }
+                }
+            }
+
             // Finalize (lines 38-40): M *answered* completions, or
             // exhaustion — every branch harvested or pruned, so waiting
             // longer cannot produce another answer. Counting answerless
             // (capped) harvests toward M would let junk responses finalize
-            // a request early with nothing to vote on.
-            let n = self.cfg.policy.n_branches();
-            let m = self.cfg.policy.m_required();
+            // a request early with nothing to vote on. `n_limit` / `m_req`
+            // equal the static policy unless the adaptive layer shrank
+            // them — a fast-path request (N = M = 1) whose only branch
+            // capped without an answer exhausts here and finalizes through
+            // the ordinary capped-vote path instead of hanging on an
+            // unreachable quorum.
+            let n = self.requests[ridx].n_limit;
+            let m = self.requests[ridx].m_req;
             let meta = &self.requests[ridx].meta;
             let quorum = meta.num_completed >= m;
             let exhausted = meta.num_harvested + meta.num_pruned >= n;
@@ -1756,6 +1898,88 @@ impl<'e> Scheduler<'e> {
                 self.finalize(ridx, now)?;
             }
         }
+        Ok(())
+    }
+
+    /// Adaptive spread prune-to-k, at a request's first scored round
+    /// (`spread_checked` guards exactly-once). Finite rewards only — an
+    /// all-NaN, unscored or sub-2-sample round records a static fallback
+    /// and changes nothing, so a NaN can never drive a decision. When the
+    /// finite rewards concentrate within `spread_tol`, the branches
+    /// agree: keep the top `prune_keep` by (reward, then branch index),
+    /// prune the rest — surplus scored running branches plus every
+    /// still-queued branch — through the ordinary pruning path, and lower
+    /// the quorum to what the survivors can still deliver. Unscored
+    /// (NaN) *running* branches are left alone: nothing is known about
+    /// them.
+    fn adaptive_spread_check(&mut self, ridx: usize, now: f64) -> Result<()> {
+        let acfg = self.cfg.adaptive.unwrap();
+        let rid = self.requests[ridx].id;
+        self.requests[ridx].spread_checked = true;
+        let mut scored: Vec<(usize, f32)> = {
+            let req = &self.requests[ridx];
+            req.running
+                .iter()
+                .map(|&b| (b, req.branches[b].reward))
+                .filter(|(_, r)| !r.is_nan())
+                .collect()
+        };
+        if !scored.is_empty() {
+            let mean = scored.iter().map(|&(_, r)| r as f64).sum::<f64>()
+                / scored.len() as f64;
+            self.requests[ridx].first_round_reward = Some(mean as f32);
+        }
+        if scored.len() < 2 {
+            self.adaptive_stats.static_fallbacks += 1;
+            self.adaptive_stats.decisions.push(AdaptiveDecision {
+                request: rid,
+                kind: AdaptiveDecisionKind::StaticFallback,
+            });
+            return Ok(());
+        }
+        let max = scored.iter().map(|&(_, r)| r).fold(f32::MIN, f32::max);
+        let min = scored.iter().map(|&(_, r)| r).fold(f32::MAX, f32::min);
+        if max - min > acfg.spread_tol {
+            return Ok(()); // genuine disagreement: explore as configured
+        }
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        let keep = acfg.prune_keep.max(1).min(scored.len());
+        let mut victims: Vec<usize> =
+            scored[keep..].iter().map(|&(b, _)| b).collect();
+        for (b, br) in self.requests[ridx].branches.iter().enumerate() {
+            if br.status == BranchStatus::Queued {
+                victims.push(b);
+            }
+        }
+        victims.sort_unstable();
+        let pruned = victims.len();
+        for bidx in victims {
+            self.terminate_branch(ridx, bidx, BranchStatus::Pruned, now)?;
+            self.requests[ridx].meta.num_pruned += 1;
+            if self.emit_events {
+                self.events.push(ServeEvent::BranchPruned {
+                    request: rid,
+                    branch: bidx,
+                    at: now,
+                });
+            }
+        }
+        if pruned == 0 {
+            return Ok(()); // agreement, but nothing surplus to prune
+        }
+        // The quorum cannot exceed what can still answer: survivors
+        // (scored keeps + unscored running) plus answers already in.
+        let achievable = self.requests[ridx].meta.num_completed
+            + self.requests[ridx].running.len();
+        let req = &mut self.requests[ridx];
+        req.m_req = req.m_req.min(achievable.max(1));
+        self.adaptive_stats.spread_pruned_branches += pruned;
+        self.adaptive_stats.decisions.push(AdaptiveDecision {
+            request: rid,
+            kind: AdaptiveDecisionKind::SpreadPrune { pruned },
+        });
         Ok(())
     }
 
@@ -1794,6 +2018,11 @@ impl<'e> Scheduler<'e> {
             length,
             at: now,
         });
+        if self.cfg.adaptive.is_some() {
+            // Feed the serve-wide completion-length distribution behind
+            // the over-thinking-tail rule.
+            self.adaptive_lengths.push(length as f64);
+        }
         Ok(())
     }
 
@@ -1879,6 +2108,22 @@ impl<'e> Scheduler<'e> {
         req.final_answer = answer;
         req.finished_at = Some(now);
         self.finished_count += 1;
+        if self.cfg.adaptive.is_some() {
+            // Per-dataset difficulty aggregates behind the easy fast
+            // path: mean first-round reward (when the first scored round
+            // produced one) and harvested completion lengths.
+            let req = &self.requests[ridx];
+            let ds = self.dataset_stats.entry(req.dataset.clone()).or_default();
+            ds.finished += 1;
+            if let Some(r) = req.first_round_reward {
+                ds.reward_sum += r as f64;
+                ds.reward_n += 1;
+            }
+            for c in &req.completed {
+                ds.len_sum += c.length as f64;
+                ds.len_n += 1;
+            }
+        }
         if self.emit_events {
             self.events.push(ServeEvent::Finalized {
                 request: self.requests[ridx].id,
@@ -2189,6 +2434,121 @@ impl<'e> Scheduler<'e> {
         }
         if !self.cfg.kv.stream_admission && self.stream_stalled {
             bail!("audit: stream stall flagged with streamed admission off");
+        }
+        // Adaptive-policy structures vs full scans.
+        match self.cfg.adaptive {
+            None => {
+                for (i, r) in self.requests.iter().enumerate() {
+                    if r.n_limit != self.cfg.policy.n_branches()
+                        || r.m_req != self.cfg.policy.m_required()
+                        || r.cap != self.cfg.max_new
+                        || r.fast_path
+                        || r.spread_checked
+                        || r.cap_tightened
+                        || r.first_round_reward.is_some()
+                    {
+                        bail!(
+                            "audit: request {i} carries adaptive decisions \
+                             with the adaptive policy off"
+                        );
+                    }
+                }
+                if !self.adaptive_stats.is_empty()
+                    || !self.adaptive_lengths.is_empty()
+                    || !self.dataset_stats.is_empty()
+                {
+                    bail!(
+                        "audit: adaptive state recorded with the adaptive \
+                         policy off"
+                    );
+                }
+            }
+            Some(_) => {
+                let mut fast_scan = 0usize;
+                for (i, r) in self.requests.iter().enumerate() {
+                    if r.m_req < 1
+                        || r.m_req > r.n_limit
+                        || r.n_limit > self.cfg.policy.n_branches()
+                    {
+                        bail!(
+                            "audit: request {i} violates 1 <= m_req ({}) <= \
+                             n_limit ({}) <= N",
+                            r.m_req,
+                            r.n_limit
+                        );
+                    }
+                    if r.cap < 1 || r.cap > self.cfg.max_new {
+                        bail!(
+                            "audit: request {i} cap {} outside [1, {}]",
+                            r.cap,
+                            self.cfg.max_new
+                        );
+                    }
+                    if !r.branches.is_empty()
+                        && r.branches.len() != r.n_limit
+                    {
+                        bail!(
+                            "audit: request {i} holds {} branches under \
+                             n_limit {}",
+                            r.branches.len(),
+                            r.n_limit
+                        );
+                    }
+                    if r.fast_path {
+                        fast_scan += 1;
+                    }
+                }
+                if fast_scan != self.adaptive_stats.fast_path_requests {
+                    bail!(
+                        "audit: fast_path_requests {} != scanned {fast_scan}",
+                        self.adaptive_stats.fast_path_requests
+                    );
+                }
+                let (mut fp, mut spb, mut ct, mut sf) = (0, 0, 0, 0);
+                for d in &self.adaptive_stats.decisions {
+                    match d.kind {
+                        AdaptiveDecisionKind::FastPath { .. } => fp += 1,
+                        AdaptiveDecisionKind::SpreadPrune { pruned } => {
+                            spb += pruned
+                        }
+                        AdaptiveDecisionKind::CapTighten { .. } => ct += 1,
+                        AdaptiveDecisionKind::StaticFallback => sf += 1,
+                    }
+                }
+                let s = &self.adaptive_stats;
+                if fp != s.fast_path_requests
+                    || spb != s.spread_pruned_branches
+                    || ct != s.cap_tightened_requests
+                    || sf != s.static_fallbacks
+                {
+                    bail!(
+                        "audit: adaptive decision log ({fp}/{spb}/{ct}/{sf}) \
+                         != counters ({}/{}/{}/{})",
+                        s.fast_path_requests,
+                        s.spread_pruned_branches,
+                        s.cap_tightened_requests,
+                        s.static_fallbacks
+                    );
+                }
+                let len_scan: usize =
+                    self.requests.iter().map(|r| r.completed.len()).sum();
+                if len_scan != self.adaptive_lengths.len() {
+                    bail!(
+                        "audit: adaptive length samples {} != harvested \
+                         responses {len_scan}",
+                        self.adaptive_lengths.len()
+                    );
+                }
+                let ds_finished: usize =
+                    self.dataset_stats.values().map(|d| d.finished).sum();
+                if ds_finished != self.finished_count {
+                    bail!(
+                        "audit: dataset-stat finishes {ds_finished} != \
+                         finished_count {}",
+                        self.finished_count
+                    );
+                }
+            }
         }
         self.kv.check_invariants()
     }

@@ -254,6 +254,30 @@ pub struct RequestState {
     /// Branch swap-outs this request absorbed under memory pressure
     /// (each costs a recompute-on-resume; 0 with preemption off).
     pub preemptions: usize,
+    /// Effective branch count for this request. Equals
+    /// `policy.n_branches()` unless the adaptive layer routed the request
+    /// to the fast path at arrival (then 1). Admission, the exploit-phase
+    /// prune cap and the exhaustion check all read this, never the global.
+    pub n_limit: usize,
+    /// Effective early-stop quorum. Equals `policy.m_required()` unless
+    /// adapted (fast path ⇒ 1; spread prune may lower it to what the
+    /// surviving branches can still deliver). Always `1 ≤ m_req ≤ n_limit`.
+    pub m_req: usize,
+    /// Effective per-branch generation cap. Equals `SchedConfig::max_new`
+    /// unless the adaptive layer tightened it (over-thinking tail, fast
+    /// path). Always `1 ≤ cap ≤ max_new`.
+    pub cap: usize,
+    /// Routed to the 1-branch no-think fast path at arrival.
+    pub fast_path: bool,
+    /// The adaptive spread rule already evaluated this request's first
+    /// scored round (it fires at most once, whatever the outcome).
+    pub spread_checked: bool,
+    /// The adaptive layer already tightened `cap` (at most once).
+    pub cap_tightened: bool,
+    /// Mean finite PRM reward of the first scored round — the easy-prompt
+    /// signal fed into per-dataset stats at finalization. `None` until
+    /// scored, or when the first round had no finite reward.
+    pub first_round_reward: Option<f32>,
 }
 
 impl RequestState {

@@ -119,6 +119,16 @@ const HELP: &str = "sart <serve|bench|inspect> [flags]
   --prefix-templates INT / --prefix-shots INT   header pool shape
   --prefill-chunk TOK    stream prompt prefill in TOK-token chunks (0=off)
   --prefill-budget TOK   per-round streamed-prefill budget (default=chunk)
+  --adaptive             adapt N/M/thinking-cap per request at runtime
+  --adaptive-spread F    reward spread below which extra branches prune
+  --adaptive-keep N      branches kept by a spread prune (default 2)
+  --adaptive-tail PCT / --adaptive-slack F   per-request cap = slack x
+                     the PCT-th percentile of finished completion lengths
+  --adaptive-min-samples N   observations before the policy acts
+  --fast-reward F / --fast-len TOK   easy-dataset thresholds for the
+                     1-branch no-think fast path
+  --hard-share F     mixed workload: fraction of requests drawn from
+                     synth-gpqa (the rest from --dataset)
   live serving (listen/replay):
   --addr HOST:PORT   listen/connect address (default 127.0.0.1:8477; :0
                      binds an ephemeral port and prints it)
@@ -171,6 +181,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             mean(|o| o.ttft()),
             mean(|o| o.queue_latency()),
             mean(|o| o.prefill_latency()),
+        );
+    }
+    if !out.adaptive.is_empty() {
+        let a = &out.adaptive;
+        println!(
+            "adaptive: {} fast-path | {} spread-pruned branches | \
+             {} caps tightened | {} static fallbacks",
+            a.fast_path_requests,
+            a.spread_pruned_branches,
+            a.cap_tightened_requests,
+            a.static_fallbacks,
         );
     }
     if out.prompt_tokens > 0 && out.cache_hit_tokens > 0 {
@@ -347,6 +368,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
                     .map(|o| o.cached_prompt_tokens)
                     .sum(),
                 prompt_tokens: 0,
+                adaptive: Default::default(),
                 outcomes: res.outcomes,
             };
             std::fs::write(path, format!("{}\n", run.to_json()))?;

@@ -10,7 +10,9 @@ use crate::cluster::{
     serve_cluster, ClusterConfig, ClusterReport, REPLICA_SEED_STRIDE,
 };
 use crate::config::{EngineChoice, Method, PrmChoice, ServeSpec};
-use crate::coordinator::{ClockHandle, KvConfig, SchedConfig, Scheduler};
+use crate::coordinator::{
+    AdaptiveStats, ClockHandle, KvConfig, SchedConfig, Scheduler,
+};
 use crate::engine::hlo::{DecodeMode, HloEngine};
 use crate::engine::sim::{SimCostModel, SimEngine};
 use crate::engine::Engine;
@@ -19,7 +21,8 @@ use crate::prm::{HloPrm, OraclePrm, PrmScorer};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::clock::{RealClock, SimClock};
 use crate::workload::{
-    batch_trace, poisson_trace, templated_trace, Request, TaskSpec,
+    batch_trace, mixed_trace, poisson_trace, templated_trace, Request,
+    TaskSpec,
 };
 use anyhow::{bail, Context, Result};
 
@@ -38,6 +41,9 @@ pub struct RunOutput {
     pub cache_hit_tokens: usize,
     /// Σ prompt tokens over all admitted requests.
     pub prompt_tokens: usize,
+    /// Adaptive test-time-compute tallies (all zero with `--adaptive`
+    /// off; cluster runs merge over replicas).
+    pub adaptive: AdaptiveStats,
 }
 
 impl RunOutput {
@@ -94,16 +100,46 @@ impl RunOutput {
             Json::Num(self.cache_hit_tokens as f64),
         );
         o.insert("prompt_tokens".into(), Json::Num(self.prompt_tokens as f64));
+        let mut a = BTreeMap::new();
+        a.insert(
+            "fast_path_requests".into(),
+            Json::Num(self.adaptive.fast_path_requests as f64),
+        );
+        a.insert(
+            "spread_pruned_branches".into(),
+            Json::Num(self.adaptive.spread_pruned_branches as f64),
+        );
+        a.insert(
+            "cap_tightened_requests".into(),
+            Json::Num(self.adaptive.cap_tightened_requests as f64),
+        );
+        a.insert(
+            "static_fallbacks".into(),
+            Json::Num(self.adaptive.static_fallbacks as f64),
+        );
+        o.insert("adaptive".into(), Json::Obj(a));
         Json::Obj(o)
     }
 }
 
 /// Generate the workload trace for a spec. A nonzero `--prefix-share`
 /// selects the templated prefix-heavy generator (shared few-shot headers
-/// + per-request questions); at share 0 it degenerates to the plain
-/// Poisson/batch trace, so the two paths can never drift.
+/// + per-request questions); a nonzero `--hard-share` the mixed
+/// easy/hard generator (`--dataset` as the easy side, `synth-gpqa` as
+/// the hard side). At share 0 each degenerates to the plain
+/// Poisson/batch trace, so the paths can never drift.
 pub fn trace_for(spec: &ServeSpec) -> Result<Vec<Request>> {
     let task = TaskSpec::by_name(&spec.dataset)?;
+    if spec.hard_share > 0.0 {
+        return Ok(mixed_trace(
+            &task,
+            &TaskSpec::synth_gpqa(),
+            spec.n_requests,
+            spec.rate,
+            spec.seed,
+            spec.hard_share,
+        ));
+    }
     if spec.prefix_share > 0.0 {
         return Ok(templated_trace(
             &task,
@@ -212,10 +248,18 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
     let engine_desc = engine.describe();
     let label = spec.method.label();
 
-    let (outcomes, timeline, cache_hit_tokens, prompt_tokens) = match spec
-        .method
-    {
-        Method::Rebase { n } => {
+    let (outcomes, timeline, cache_hit_tokens, prompt_tokens, adaptive) =
+        match spec.method {
+            Method::Rebase { n } => {
+                if spec.adaptive.is_some() {
+                    // Rebase has no branch-redundancy knobs for the policy
+                    // to adapt; accepting the flag would silently serve a
+                    // static baseline under an "adaptive" label.
+                    bail!(
+                        "--adaptive is not supported for the rebase \
+                         baseline"
+                    );
+                }
             if spec.prefix_share > 0.0 {
                 // Rebase prefills bare question prompts and ignores
                 // Request headers; serving it a prefix-heavy trace would
@@ -253,7 +297,7 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
                 clock_for(spec),
             );
             let (outcomes, timeline) = sched.serve(trace)?;
-            (outcomes, timeline, 0, 0)
+            (outcomes, timeline, 0, 0, AdaptiveStats::default())
         }
         _ => {
             let mut sched = Scheduler::new(
@@ -264,7 +308,7 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
             );
             let res = sched.serve(trace)?;
             (res.outcomes, res.timeline, res.cache_hit_tokens,
-             res.prompt_tokens)
+             res.prompt_tokens, res.adaptive)
         }
     };
     let report = ServeReport::from_outcomes(&label, &outcomes);
@@ -276,6 +320,7 @@ pub fn run_on_trace(spec: &ServeSpec, trace: &[Request]) -> Result<RunOutput> {
         cluster: None,
         cache_hit_tokens,
         prompt_tokens,
+        adaptive,
     })
 }
 
@@ -300,6 +345,7 @@ pub fn sched_cfg_for(spec: &ServeSpec) -> Result<SchedConfig> {
             )
             .with_stream_admission(spec.kv_stream)
             .with_preemption(spec.kv_preempt),
+        adaptive: spec.adaptive,
         seed: spec.seed,
     })
 }
@@ -355,6 +401,10 @@ fn run_cluster_on_trace(
         res.replica_results.iter().map(|r| r.cache_hit_tokens).sum();
     let prompt_tokens =
         res.replica_results.iter().map(|r| r.prompt_tokens).sum();
+    let mut adaptive = AdaptiveStats::default();
+    for r in &res.replica_results {
+        adaptive.merge(r.adaptive.clone());
+    }
     let cluster = Some(res.report());
     Ok(RunOutput {
         report,
@@ -368,6 +418,7 @@ fn run_cluster_on_trace(
         cluster,
         cache_hit_tokens,
         prompt_tokens,
+        adaptive,
     })
 }
 
@@ -443,6 +494,28 @@ mod tests {
             let out = run(&s).unwrap_or_else(|e| panic!("{m}: {e}"));
             assert_eq!(out.report.n_requests, 8, "{m}");
         }
+    }
+
+    #[test]
+    fn adaptive_mixed_serve_end_to_end() {
+        // --adaptive + --hard-share plumb through spec → trace → scheduler
+        // and every request still finishes, single-engine and clustered.
+        let mut s = spec(
+            "--method sart:4 --adaptive --adaptive-min-samples 2 \
+             --hard-share 0.5",
+        );
+        s.kv_capacity_tokens = 8192;
+        let out = run(&s).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        let json = out.to_json().to_string();
+        assert!(json.contains("fast_path_requests"));
+        let mut c = s.clone();
+        c.replicas = 2;
+        let out = run(&c).unwrap();
+        assert_eq!(out.report.n_requests, 8);
+        // Rebase has nothing for the policy to adapt.
+        let s = spec("--method rebase:4 --adaptive");
+        assert!(run(&s).is_err(), "rebase must reject --adaptive");
     }
 
     #[test]

@@ -437,6 +437,44 @@ pub fn templated_trace(
         .collect()
 }
 
+/// Mixed easy/hard trace: each request draws its task spec at arrival —
+/// `hard` with probability `hard_share`, `easy` otherwise — from a
+/// *forked* decision stream, so at `hard_share = 0` the questions and
+/// arrival times are identical to [`poisson_trace`] (`rate > 0`) /
+/// [`batch_trace`] (`rate == 0`) over `easy` at the same seed
+/// ([`Question::sample`] draws the same number of RNG values whichever
+/// spec it samples from). `Request::dataset` records the chosen spec's
+/// name — the key the adaptive policy's per-dataset statistics learn
+/// under, and what makes same-seed traces carry identical adaptive
+/// decisions.
+pub fn mixed_trace(
+    easy: &TaskSpec,
+    hard: &TaskSpec,
+    n_requests: usize,
+    rate: f64,
+    seed: u64,
+    hard_share: f64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut drng = Rng::new(seed ^ 0x4D15_ED00_CAFE_F00D);
+    let mut t = 0.0;
+    (0..n_requests)
+        .map(|id| {
+            if rate > 0.0 {
+                t += rng.exponential(rate);
+            }
+            let spec = if drng.chance(hard_share) { hard } else { easy };
+            Request {
+                id,
+                question: Question::sample(spec, &mut rng),
+                arrival: t,
+                dataset: spec.name.clone(),
+                header: Vec::new(),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,6 +662,59 @@ mod tests {
         }
         // Arrivals stay sorted.
         for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn mixed_trace_share_zero_matches_plain_traces() {
+        let easy = spec();
+        let hard = TaskSpec::synth_gpqa();
+        let plain = poisson_trace(&easy, 20, 2.0, 11);
+        let mixed = mixed_trace(&easy, &hard, 20, 2.0, 11, 0.0);
+        for (p, m) in plain.iter().zip(&mixed) {
+            assert_eq!(p.question, m.question);
+            assert_eq!(p.arrival, m.arrival);
+            assert_eq!(m.dataset, easy.name);
+        }
+        let batch = batch_trace(&easy, 10, 12);
+        let mixed0 = mixed_trace(&easy, &hard, 10, 0.0, 12, 0.0);
+        for (p, m) in batch.iter().zip(&mixed0) {
+            assert_eq!(p.question, m.question);
+            assert_eq!(m.arrival, 0.0);
+        }
+    }
+
+    #[test]
+    fn mixed_trace_is_deterministic_and_mixes_both_specs() {
+        let easy = spec();
+        let hard = TaskSpec::synth_gpqa();
+        let a = mixed_trace(&easy, &hard, 64, 2.0, 7, 0.5);
+        let b = mixed_trace(&easy, &hard, 64, 2.0, 7, 0.5);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.question, y.question);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.dataset, y.dataset);
+        }
+        let n_hard = a.iter().filter(|r| r.dataset == hard.name).count();
+        assert!(
+            n_hard > 16 && n_hard < 48,
+            "share 0.5 drew {n_hard}/64 hard requests"
+        );
+        // Difficulty rides on the question itself: each request's hop
+        // count must come from its own spec's range.
+        for r in &a {
+            let (lo, hi) = if r.dataset == hard.name {
+                (hard.min_hops, hard.max_hops)
+            } else {
+                (easy.min_hops, easy.max_hops)
+            };
+            let h = r.question.hops as u32;
+            assert!(h >= lo && h <= hi, "{}: hops {h} outside [{lo},{hi}]",
+                    r.dataset);
+        }
+        for w in a.windows(2) {
             assert!(w[1].arrival >= w[0].arrival);
         }
     }

@@ -1,0 +1,506 @@
+//! Integration tests of the adaptive test-time-compute policy layer:
+//! byte-identity with the layer off (the `--adaptive`-absent serve must
+//! be today's serve), NaN/unscored-reward fallback, the fast-path
+//! capped-vote regression, and mixed-workload determinism.
+
+use sart::cluster::{serve_cluster, ClusterConfig, LbPolicy, REPLICA_SEED_STRIDE};
+use sart::coordinator::{
+    AdaptiveConfig, AdaptiveDecisionKind, ClockHandle, KvConfig, Policy,
+    SchedConfig, Scheduler, ServeEvent, ServeResult,
+};
+use sart::engine::sim::{SimCostModel, SimEngine};
+use sart::engine::Engine;
+use sart::prm::{OraclePrm, PrmScorer};
+use sart::prop_assert;
+use sart::testkit::check;
+use sart::tokenizer::Token;
+use sart::util::clock::SimClock;
+use sart::util::rng::Rng;
+use sart::workload::{batch_trace, mixed_trace, poisson_trace, Request, TaskSpec};
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    let n = 1 << rng.below(4); // 1,2,4,8
+    match rng.below(4) {
+        0 => Policy::Vanilla,
+        1 => Policy::SelfConsistency { n },
+        2 => Policy::SartNoPrune { n, m: (n / 2).max(1) },
+        _ => Policy::Sart {
+            n,
+            m: (n / 2).max(1),
+            alpha: (0.3 + 0.4 * rng.f64()) as f32,
+            beta: (n / 2).max(1),
+        },
+    }
+}
+
+/// An armed adaptive config none of whose rules can ever fire: spreads
+/// are >= 0 so a negative tolerance never concentrates, the huge
+/// `min_samples` keeps the tail and fast-path rules unarmed, and any
+/// tightened-cap candidate clamps to the static cap. A serve under this
+/// config must schedule byte-identically to `adaptive: None` — the
+/// decision hooks themselves must not perturb the static policy.
+fn inert_cfg() -> AdaptiveConfig {
+    AdaptiveConfig {
+        spread_tol: -1.0,
+        prune_keep: 1,
+        tail_pct: 99.0,
+        cap_slack: 1.0e9,
+        min_samples: usize::MAX / 2,
+        fast_reward: f32::INFINITY,
+        fast_len: 1.0e12,
+    }
+}
+
+struct Case {
+    policy: Policy,
+    slots: usize,
+    t_round: usize,
+    kv_tokens: usize,
+    seed: u64,
+    spec: TaskSpec,
+    trace: Vec<Request>,
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let policy = random_policy(rng);
+    let slots = 2 + rng.below(14);
+    let n_req = 4 + rng.below(12);
+    let rate = 0.5 + 4.0 * rng.f64();
+    let spec = if rng.chance(0.5) {
+        TaskSpec::synth_gaokao()
+    } else {
+        TaskSpec::synth_gpqa()
+    };
+    let seed = rng.next_u64();
+    // Budget always admits at least one full request (no stalls).
+    let min_pages = 2 + policy.n_branches() * 14 + 4;
+    let kv_tokens = 16 * (min_pages + rng.below(1024));
+    let trace = poisson_trace(&spec, n_req, rate, seed);
+    Case {
+        policy,
+        slots,
+        t_round: 8 + rng.below(24),
+        kv_tokens,
+        seed,
+        spec,
+        trace,
+    }
+}
+
+impl Case {
+    fn sched_cfg(&self, adaptive: Option<AdaptiveConfig>) -> SchedConfig {
+        SchedConfig {
+            policy: self.policy,
+            t_round: self.t_round,
+            temperature: 1.0,
+            max_new: 224,
+            kv: KvConfig::new(self.kv_tokens, 16),
+            adaptive,
+            seed: self.seed,
+        }
+    }
+
+    fn serve(
+        &self,
+        adaptive: Option<AdaptiveConfig>,
+    ) -> Result<ServeResult, String> {
+        let mut engine = SimEngine::new(
+            self.slots,
+            256,
+            self.spec.clone(),
+            SimCostModel::default(),
+        );
+        let mut prm = OraclePrm::new(0.1, self.seed ^ 7);
+        let mut sched = Scheduler::new(
+            self.sched_cfg(adaptive),
+            &mut engine,
+            &mut prm,
+            ClockHandle::Sim(SimClock::new()),
+        );
+        sched.set_audit(true);
+        sched.serve(&self.trace).map_err(|e| e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy-off byte-identity (tentpole acceptance).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_adaptive_off_serve_is_byte_identical() {
+    // `adaptive: None` must be today's serve, and the hooks themselves
+    // must be decision-only: an armed-but-inert config (no rule can
+    // fire) schedules byte-identically — same outcomes, same timeline,
+    // same round count, audit on in both runs.
+    check("adaptive_off_identity", 10, |rng| {
+        let c = random_case(rng);
+        let off = c.serve(None)?;
+        let inert = c.serve(Some(inert_cfg()))?;
+        prop_assert!(off.outcomes == inert.outcomes, "outcomes differ");
+        prop_assert!(
+            off.timeline.points == inert.timeline.points,
+            "timeline differs"
+        );
+        prop_assert!(off.rounds == inert.rounds, "rounds differ");
+        prop_assert!(
+            off.adaptive.is_empty(),
+            "policy-off serve recorded adaptive state"
+        );
+        prop_assert!(
+            inert.adaptive.fast_path_requests == 0
+                && inert.adaptive.spread_pruned_branches == 0
+                && inert.adaptive.cap_tightened_requests == 0,
+            "inert config took a scheduling decision"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_off_cluster_r2_is_byte_identical() {
+    // The same identity through the dispatch layer: a 2-replica cluster
+    // serve with `adaptive: None` vs the inert config, audit on in every
+    // replica — merged outcomes, assignments and per-replica timelines
+    // must all agree, and the off run must report no adaptive state.
+    check("adaptive_off_cluster_r2", 6, |rng| {
+        let c = random_case(rng);
+        let lb = LbPolicy::ALL[rng.below(LbPolicy::ALL.len())];
+        let run = |adaptive: Option<AdaptiveConfig>| {
+            let replicas = 2;
+            let engines: Vec<Box<dyn Engine>> = (0..replicas)
+                .map(|_| {
+                    Box::new(SimEngine::new(
+                        c.slots,
+                        256,
+                        c.spec.clone(),
+                        SimCostModel::default(),
+                    )) as Box<dyn Engine>
+                })
+                .collect();
+            let prms: Vec<Box<dyn PrmScorer>> = (0..replicas)
+                .map(|i| {
+                    let seed =
+                        c.seed ^ (i as u64).wrapping_mul(REPLICA_SEED_STRIDE);
+                    Box::new(OraclePrm::new(0.1, seed ^ 7))
+                        as Box<dyn PrmScorer>
+                })
+                .collect();
+            let ccfg = ClusterConfig {
+                replicas,
+                lb,
+                sched: c.sched_cfg(adaptive),
+                seed: c.seed,
+                audit: true,
+                gossip_rounds: 0,
+                gossip_adapt: false,
+                fault_plan: Default::default(),
+                scale: None,
+            };
+            let (mut engines, mut prms) = (engines, prms);
+            serve_cluster(&ccfg, &mut engines, &mut prms, &c.trace)
+                .map_err(|e| format!("{lb:?}: {e}"))
+        };
+        let off = run(None)?;
+        let inert = run(Some(inert_cfg()))?;
+        prop_assert!(
+            off.outcomes == inert.outcomes,
+            "outcomes diverge under {lb:?}"
+        );
+        prop_assert!(
+            off.assignments == inert.assignments,
+            "assignments diverge under {lb:?}"
+        );
+        for (i, (a, b)) in off
+            .replica_results
+            .iter()
+            .zip(&inert.replica_results)
+            .enumerate()
+        {
+            prop_assert!(
+                a.timeline.points == b.timeline.points,
+                "replica {i} timeline diverges under {lb:?}"
+            );
+            prop_assert!(
+                a.adaptive.is_empty(),
+                "replica {i} recorded adaptive state with the layer off"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// NaN / unscored rewards fall back to the static policy (satellite).
+// ---------------------------------------------------------------------------
+
+/// A PRM that can only produce NaN — the pathological scorer the spread
+/// and easy-classification rules must survive.
+struct NanPrm;
+
+impl PrmScorer for NanPrm {
+    fn score(&mut self, seqs: &[&[Token]]) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![f32::NAN; seqs.len()])
+    }
+
+    fn describe(&self) -> String {
+        "nan-prm".into()
+    }
+}
+
+#[test]
+fn nan_rewards_fall_back_to_static_policy() {
+    // Aggressive adaptive thresholds, but every reward is NaN: the
+    // spread rule must record a static fallback per request (never a
+    // prune), the fast path must never classify a dataset easy (no
+    // finite reward observations exist), and the serve must be
+    // byte-identical to the same scripted serve with the layer off.
+    let spec = TaskSpec::synth_gaokao();
+    let trace = poisson_trace(&spec, 10, 2.0, 99);
+    let run = |adaptive: Option<AdaptiveConfig>| -> ServeResult {
+        let mut engine =
+            SimEngine::new(8, 256, spec.clone(), SimCostModel::default());
+        let mut prm = NanPrm;
+        let cfg = SchedConfig {
+            policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+            t_round: 16,
+            temperature: 1.0,
+            max_new: 224,
+            kv: KvConfig::new(16384, 16),
+            adaptive,
+            seed: 99,
+        };
+        let mut sched = Scheduler::new(
+            cfg,
+            &mut engine,
+            &mut prm,
+            ClockHandle::Sim(SimClock::new()),
+        );
+        sched.set_audit(true);
+        sched.serve(&trace).expect("serve")
+    };
+    // Everything concentrates (tol 1.0 covers the whole reward range),
+    // one sample arms the distribution rules, the fast-path reward bar
+    // sits below any real reward — only the NaN guards stand between
+    // this config and rewriting every request.
+    let aggressive = AdaptiveConfig {
+        spread_tol: 1.0,
+        prune_keep: 1,
+        tail_pct: 50.0,
+        cap_slack: 1.0e9,
+        min_samples: 1,
+        fast_reward: -100.0,
+        fast_len: 1.0e9,
+    };
+    let on = run(Some(aggressive));
+    let off = run(None);
+    assert_eq!(on.outcomes, off.outcomes, "NaN rewards changed scheduling");
+    assert_eq!(
+        on.timeline.points, off.timeline.points,
+        "NaN rewards changed the timeline"
+    );
+    assert_eq!(on.rounds, off.rounds);
+    assert_eq!(on.adaptive.fast_path_requests, 0, "easy off NaN rewards");
+    assert_eq!(on.adaptive.spread_pruned_branches, 0, "pruned off NaN");
+    assert_eq!(on.adaptive.cap_tightened_requests, 0);
+    assert_eq!(
+        on.adaptive.static_fallbacks,
+        trace.len(),
+        "every request must fall back exactly once"
+    );
+    assert!(on
+        .adaptive
+        .decisions
+        .iter()
+        .all(|d| d.kind == AdaptiveDecisionKind::StaticFallback));
+    assert!(off.adaptive.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Fast-path capped-vote regression (satellite).
+// ---------------------------------------------------------------------------
+
+/// 8 warmup requests at t = 0 classify the dataset easy, then 8 late
+/// arrivals route to the 1-branch fast path with a cap far below any
+/// answer-bearing chain. Every one of them must still finalize exactly
+/// once — through the exhaustion (capped-vote) path, never hanging on
+/// the static quorum M = 2 its single branch can't reach.
+fn fast_path_trace() -> (TaskSpec, Vec<Request>) {
+    let spec = TaskSpec::synth_gaokao();
+    let mut trace = batch_trace(&spec, 16, 7);
+    for r in trace.iter_mut().skip(8) {
+        r.arrival = 10_000.0; // long after every warmup finish
+    }
+    (spec, trace)
+}
+
+fn fast_path_cfg() -> AdaptiveConfig {
+    AdaptiveConfig {
+        spread_tol: -1.0, // spread rule inert: isolate the fast path
+        prune_keep: 4,
+        tail_pct: 100.0,
+        cap_slack: 0.05, // fast-path cap ~ 5% of the mean chain: capped
+        min_samples: 4,
+        fast_reward: -1.0, // any scored dataset classifies easy
+        fast_len: 1.0e9,
+    }
+}
+
+fn run_fast_path(kv: KvConfig) -> (ServeResult, Vec<ServeEvent>) {
+    let (spec, trace) = fast_path_trace();
+    let mut engine =
+        SimEngine::new(8, 256, spec, SimCostModel::default());
+    let mut prm = OraclePrm::new(0.1, 7 ^ 7);
+    let cfg = SchedConfig {
+        policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+        t_round: 16,
+        temperature: 1.0,
+        max_new: 224,
+        kv,
+        adaptive: Some(fast_path_cfg()),
+        seed: 7,
+    };
+    let mut sched = Scheduler::new(
+        cfg,
+        &mut engine,
+        &mut prm,
+        ClockHandle::Sim(SimClock::new()),
+    );
+    sched.set_audit(true);
+    let mut events = Vec::new();
+    let res = sched
+        .serve_with(&trace, &mut |ev| events.push(ev))
+        .expect("serve");
+    (res, events)
+}
+
+fn assert_fast_path_finalizes(res: &ServeResult, events: &[ServeEvent]) {
+    assert_eq!(res.outcomes.len(), 16, "lost requests");
+    assert_eq!(
+        res.adaptive.fast_path_requests, 8,
+        "every late arrival must route to the fast path"
+    );
+    let fast_ids: Vec<usize> = res
+        .adaptive
+        .decisions
+        .iter()
+        .filter_map(|d| match d.kind {
+            AdaptiveDecisionKind::FastPath { .. } => Some(d.request),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(fast_ids, (8..16).collect::<Vec<_>>());
+    // Exactly one Finalized event per request — fast-path requests
+    // included (the regression: a capped answerless 1-branch request
+    // once waited forever on the unreachable static quorum).
+    for r in 0..16usize {
+        let finals = events
+            .iter()
+            .filter(|e| {
+                matches!(e, ServeEvent::Finalized { request, .. }
+                         if *request == r)
+            })
+            .count();
+        assert_eq!(finals, 1, "request {r} finalized {finals} times");
+    }
+    let fast_outcomes: Vec<_> = res
+        .outcomes
+        .iter()
+        .filter(|o| fast_ids.contains(&o.id))
+        .collect();
+    assert_eq!(fast_outcomes.len(), 8);
+    for o in &fast_outcomes {
+        assert_eq!(o.branches_started, 1, "fast path started extra branches");
+        assert!(
+            !o.response_lengths.is_empty(),
+            "fast-path request finalized with nothing harvested"
+        );
+    }
+    // The tiny cap truncates ahead of any answer for at least some of
+    // them — the capped-vote path, not the quorum, finalized those.
+    assert!(
+        fast_outcomes.iter().any(|o| o.branches_completed == 0),
+        "no fast-path request exercised the capped answerless path"
+    );
+}
+
+#[test]
+fn fast_path_capped_request_finalizes_via_capped_vote() {
+    let (res, events) = run_fast_path(KvConfig::new(16384, 16));
+    assert_fast_path_finalizes(&res, &events);
+}
+
+#[test]
+fn fast_path_capped_request_finalizes_under_kv_preemption() {
+    // Same regression with the memory-pressure path armed and a budget
+    // tight enough (64 pages; the warmup batch wants far more) that
+    // streamed admission and preemption are both in play.
+    let kv = KvConfig::new(16 * 64, 16)
+        .with_stream_admission(true)
+        .with_preemption(true);
+    let (res, events) = run_fast_path(kv);
+    assert_fast_path_finalizes(&res, &events);
+}
+
+// ---------------------------------------------------------------------------
+// Mixed easy/hard workload determinism (satellite).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_workload_adaptive_serve_is_deterministic() {
+    // Same seed ⇒ identical trace ⇒ identical outcomes AND identical
+    // adaptive decision log, twice over. The decision log is the
+    // sensitive part: it would diverge on any hidden iteration-order or
+    // RNG dependence in the policy layer.
+    let easy = TaskSpec::synth_gaokao();
+    let hard = TaskSpec::synth_gpqa();
+    let cfg = AdaptiveConfig {
+        spread_tol: 2.0, // whole reward range: the spread rule fires often
+        prune_keep: 2,
+        tail_pct: 90.0,
+        cap_slack: 1.25,
+        min_samples: 4,
+        fast_reward: 0.0,
+        fast_len: 256.0,
+    };
+    let run = || -> ServeResult {
+        let trace = mixed_trace(&easy, &hard, 48, 2.0, 1234, 0.5);
+        let mut engine =
+            SimEngine::new(8, 256, easy.clone(), SimCostModel::default());
+        let mut prm = OraclePrm::new(0.1, 1234 ^ 7);
+        let scfg = SchedConfig {
+            policy: Policy::Sart { n: 4, m: 2, alpha: 0.5, beta: 2 },
+            t_round: 16,
+            temperature: 1.0,
+            max_new: 224,
+            kv: KvConfig::new(32768, 16),
+            adaptive: Some(cfg),
+            seed: 1234,
+        };
+        let mut sched = Scheduler::new(
+            scfg,
+            &mut engine,
+            &mut prm,
+            ClockHandle::Sim(SimClock::new()),
+        );
+        sched.set_audit(true);
+        sched.serve(&trace).expect("serve")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.outcomes, b.outcomes, "outcomes diverged across reruns");
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(
+        a.adaptive.decisions, b.adaptive.decisions,
+        "adaptive decisions diverged across reruns"
+    );
+    assert_eq!(a.adaptive.fast_path_requests, b.adaptive.fast_path_requests);
+    assert_eq!(
+        a.adaptive.spread_pruned_branches,
+        b.adaptive.spread_pruned_branches
+    );
+    assert!(
+        !a.adaptive.decisions.is_empty(),
+        "the adaptive layer never acted on the mixed workload"
+    );
+    assert_eq!(a.outcomes.len(), 48, "lost requests");
+}

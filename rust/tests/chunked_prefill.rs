@@ -94,6 +94,7 @@ impl Case {
             kv: KvConfig::new(self.kv_tokens, 16)
                 .with_prefix_cache(self.prefix_cache_pages)
                 .with_chunked_prefill(chunk, budget),
+            adaptive: None,
             seed: self.seed,
         };
         let mut sched = Scheduler::new(
@@ -245,6 +246,7 @@ fn long_cold_headers_overlap_decode_and_cut_worst_round_stall() {
             max_new: 224,
             kv: KvConfig::new(32768, 16)
                 .with_chunked_prefill(chunk, budget),
+            adaptive: None,
             seed: 11,
         };
         let mut sched = Scheduler::new(
@@ -320,6 +322,7 @@ fn warm_headers_skip_streaming_under_cache() {
             kv: KvConfig::new(32768, 16)
                 .with_prefix_cache(64)
                 .with_chunked_prefill(chunk, chunk),
+            adaptive: None,
             seed: 9,
         };
         let mut sched = Scheduler::new(

@@ -31,6 +31,7 @@ fn sched_cfg(seed: u64, kv_tokens: usize, cache_pages: usize) -> SchedConfig {
         max_new: 224,
         kv: KvConfig::new(kv_tokens, 16)
             .with_prefix_cache(cache_pages),
+        adaptive: None,
         seed,
     }
 }

@@ -93,6 +93,7 @@ impl GossipCase {
             max_new: 224,
             kv: KvConfig::new(self.kv_tokens, 16)
                 .with_prefix_cache(self.prefix_cache_pages),
+            adaptive: None,
             seed: self.seed,
         }
     }
@@ -361,6 +362,7 @@ fn stale_gossip_hit_reprefills_and_counts() {
         max_new: 224,
         kv: KvConfig::new(16 * (request_pages + 6), 16)
             .with_prefix_cache(full_a_pages + 1),
+        adaptive: None,
         seed: 42,
     };
     let replicas = 2;

@@ -121,6 +121,7 @@ impl Case {
                 .with_chunked_prefill(self.chunk, self.budget)
                 .with_stream_admission(stream)
                 .with_preemption(preempt),
+            adaptive: None,
             seed: self.seed,
         };
         let mut sched = Scheduler::new(
@@ -223,6 +224,7 @@ fn prop_pressure_knobs_identity_holds_at_cluster_scale() {
                         .with_chunked_prefill(case.chunk, case.budget)
                         .with_stream_admission(stream)
                         .with_preemption(preempt),
+                    adaptive: None,
                     seed: case.seed,
                 },
                 seed: case.seed,
@@ -336,6 +338,7 @@ fn preemption_swaps_out_low_reward_branches_to_admit_the_blocked_request() {
             temperature: 1.0,
             max_new: 224,
             kv: KvConfig::new(16 * cap_pages, 16).with_preemption(preempt),
+            adaptive: None,
             seed: 17,
         };
         let mut sched = Scheduler::new(

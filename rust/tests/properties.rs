@@ -232,6 +232,7 @@ fn prop_scheduler_serves_every_request_exactly_once() {
             temperature: 1.0,
             max_new: 224,
             kv: KvConfig::new(16 * (64 + rng.below(1024)), 16),
+            adaptive: None,
             seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -293,6 +294,7 @@ fn prop_early_stopping_dominates_waiting_for_all() {
                 temperature: 1.0,
                 max_new: 224,
                 kv: KvConfig::new(16384, 16),
+                adaptive: None,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -353,6 +355,7 @@ fn prop_scheduler_audit_matches_fast_path() {
                 temperature: 1.0,
                 max_new: 224,
                 kv: KvConfig::new(kv_tokens, 16),
+                adaptive: None,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -414,6 +417,7 @@ fn prop_event_pump_serve_is_byte_identical() {
                 temperature: 1.0,
                 max_new: 224,
                 kv: KvConfig::new(kv_tokens, 16),
+                adaptive: None,
                 seed,
             };
             let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -548,6 +552,7 @@ impl TemplatedCase {
             max_new: 224,
             kv: KvConfig::new(self.kv_tokens, 16)
                 .with_prefix_cache(self.prefix_cache_pages),
+            adaptive: None,
             seed: self.seed,
         };
         let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -766,6 +771,7 @@ fn case_sched_cfg(c: &ClusterCase) -> SchedConfig {
         temperature: 1.0,
         max_new: 224,
         kv: KvConfig::new(c.kv_tokens, 16),
+        adaptive: None,
         seed: c.seed,
     }
 }
@@ -1046,6 +1052,7 @@ fn affinity_routing_beats_p2c_on_cache_hits() {
                 max_new: 224,
                 kv: KvConfig::new(32768, 16)
                     .with_prefix_cache(24),
+                adaptive: None,
                 seed: 42,
             },
             seed: 42,

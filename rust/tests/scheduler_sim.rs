@@ -36,6 +36,7 @@ fn run(policy: Policy, n_requests: usize, rate: f64, slots: usize,
         temperature: 1.0,
         max_new: 224,
         kv: KvConfig::new(kv_tokens, 16),
+        adaptive: None,
         seed,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -198,6 +199,7 @@ fn prefix_cache_saves_over_30pct_of_prefill_tokens() {
         max_new: 224,
         kv: KvConfig::new(32768, 16)
             .with_prefix_cache(64),
+        adaptive: None,
         seed: 5,
     };
     let mut sched = Scheduler::new(cfg, &mut engine, &mut prm,
@@ -331,6 +333,7 @@ fn toy_cfg(policy: Policy, max_new: usize) -> SchedConfig {
         temperature: 1.0,
         max_new,
         kv: KvConfig::new(4096, 16),
+        adaptive: None,
         seed: 0,
     }
 }

@@ -67,6 +67,16 @@ Gates (bench name → assertions)
   baseline's median admission time, stream-aware admission plus
   reward-driven preemption must have admitted strictly more requests
   than all-or-nothing admission at the same page budget.
+* ``adaptive``: ``adaptive_requests_lost == 0`` and
+  ``baseline_requests_lost == 0`` — neither the adaptive nor the static
+  serve of the mixed workload may drop a request;
+  ``adaptive_vs_static_tokens_ratio < 1.0`` — adapting N/M/caps per
+  request must strictly cut tokens per request on the mixed easy/hard
+  trace; ``adaptive_vs_static_accuracy_delta >= -0.05`` — the token
+  savings may cost at most a marginal accuracy dip; and
+  ``adaptive_fast_path_share > 0`` — the online easy-classifier must
+  route at least one request to the 1-branch no-think fast path
+  (the easy traffic exists by construction).
 * ``scheduler``: no gate; the ``*_us_per_round`` metrics are printed for
   the trajectory record (absolute values are machine-dependent, and CI
   smoke runs are too noisy to assert the 512-vs-64 ratio ≈ 1.0 — see
@@ -313,6 +323,48 @@ def gate_pressure(doc: dict, path: str) -> None:
         )
 
 
+def gate_adaptive(doc: dict, path: str) -> None:
+    for key in ("adaptive_requests_lost", "baseline_requests_lost"):
+        lost = _metric(doc, path, key)
+        if lost != 0.0:
+            _fail(
+                path,
+                f"{key} = {lost:.0f}: the adaptive bench must be loss-free "
+                "on both serves — a fast-path or cap-tightened request that "
+                "never finalizes is a scheduler hang, not a policy choice "
+                "(did a capped answerless request miss the capped-vote "
+                "path?)",
+            )
+    ratio = _metric(doc, path, "adaptive_vs_static_tokens_ratio")
+    if not ratio < 1.0:
+        _fail(
+            path,
+            f"adaptive_vs_static_tokens_ratio = {ratio:.3f}: the adaptive "
+            "policy must strictly cut tokens per request on the mixed "
+            "workload (is the easy-classifier never firing, or spread "
+            "pruning finding no concentrated reward sets?)",
+        )
+    delta = _metric(doc, path, "adaptive_vs_static_accuracy_delta")
+    if not delta >= -0.05:
+        _fail(
+            path,
+            f"adaptive_vs_static_accuracy_delta = {delta:.3f}: the token "
+            "savings may cost at most 5 accuracy points vs static sart "
+            "(is the fast path firing on the hard dataset, or the "
+            "tightened cap clipping honest chains?)",
+        )
+    share = _metric(doc, path, "adaptive_fast_path_share")
+    if not share > 0.0:
+        _fail(
+            path,
+            f"adaptive_fast_path_share = {share:.3f}: the mixed workload "
+            "contains easy traffic by construction, so the online "
+            "classifier must route at least one request to the 1-branch "
+            "fast path (are dataset stats never reaching min_samples, or "
+            "first-round rewards never recorded?)",
+        )
+
+
 GATES = {
     "cluster": gate_cluster,
     "prefix": gate_prefix,
@@ -322,6 +374,7 @@ GATES = {
     "serving": gate_serving,
     "live_faults": gate_live_faults,
     "pressure": gate_pressure,
+    "adaptive": gate_adaptive,
 }
 
 

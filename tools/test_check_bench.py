@@ -371,6 +371,91 @@ class TestPressureGate(CheckBenchCase):
         self.assertIn("pressure_requests_lost", err)
 
 
+def adaptive_metrics(**overrides):
+    metrics = {
+        "adaptive_requests_lost": 0.0,
+        "baseline_requests_lost": 0.0,
+        "adaptive_vs_static_tokens_ratio": 0.7,
+        "adaptive_vs_static_accuracy_delta": -0.01,
+        "adaptive_fast_path_share": 0.4,
+    }
+    metrics.update(overrides)
+    return metrics
+
+
+class TestAdaptiveGate(CheckBenchCase):
+    def test_adaptive_gate_passes_on_good_report(self):
+        doc = report(bench="adaptive", metrics=adaptive_metrics())
+        path = self.write("BENCH_adaptive.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `adaptive`: PASS", out)
+
+    def test_adaptive_gate_fails_on_lost_request_either_side(self):
+        for key in ("adaptive_requests_lost", "baseline_requests_lost"):
+            doc = report(
+                bench="adaptive", metrics=adaptive_metrics(**{key: 1.0})
+            )
+            path = self.write("BENCH_adaptive.json", doc)
+            code, out, err = self.run_main([path])
+            self.assertEqual(code, 1)
+            self.assertIn("gate `adaptive`: FAIL", out)
+            self.assertIn(key, err)
+
+    def test_adaptive_gate_fails_at_tokens_ratio_one(self):
+        # Exactly 1.0 means adapting saved nothing: the headline must be
+        # *strictly* under the static baseline.
+        doc = report(
+            bench="adaptive",
+            metrics=adaptive_metrics(adaptive_vs_static_tokens_ratio=1.0),
+        )
+        path = self.write("BENCH_adaptive.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("adaptive_vs_static_tokens_ratio", err)
+
+    def test_adaptive_gate_fails_below_accuracy_floor(self):
+        doc = report(
+            bench="adaptive",
+            metrics=adaptive_metrics(
+                adaptive_vs_static_accuracy_delta=-0.06
+            ),
+        )
+        path = self.write("BENCH_adaptive.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("adaptive_vs_static_accuracy_delta", err)
+
+    def test_adaptive_gate_allows_accuracy_delta_at_floor(self):
+        doc = report(
+            bench="adaptive",
+            metrics=adaptive_metrics(
+                adaptive_vs_static_accuracy_delta=-0.05
+            ),
+        )
+        path = self.write("BENCH_adaptive.json", doc)
+        code, out, _ = self.run_main([path])
+        self.assertEqual(code, 0)
+        self.assertIn("gate `adaptive`: PASS", out)
+
+    def test_adaptive_gate_fails_on_zero_fast_path_share(self):
+        doc = report(
+            bench="adaptive",
+            metrics=adaptive_metrics(adaptive_fast_path_share=0.0),
+        )
+        path = self.write("BENCH_adaptive.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("adaptive_fast_path_share", err)
+
+    def test_adaptive_gate_fails_on_missing_metric(self):
+        doc = report(bench="adaptive", metrics={})
+        path = self.write("BENCH_adaptive.json", doc)
+        code, _, err = self.run_main([path])
+        self.assertEqual(code, 1)
+        self.assertIn("adaptive_requests_lost", err)
+
+
 class TestRequire(CheckBenchCase):
     def test_require_fails_on_missing_bench(self):
         path = self.write("BENCH_scheduler.json", report())
